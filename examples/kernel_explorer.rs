@@ -1,0 +1,111 @@
+//! Kernel design-space explorer — the paper's *future work* analyses:
+//! how the Opt4GPTQ speedup varies with decode batch size, model width,
+//! and quantization group size, plus an edge-device ablation.
+//!
+//! Run: `cargo run --release --example kernel_explorer`
+
+use opt4gptq::benchkit::Table;
+use opt4gptq::dcusim::kernels::KernelParams;
+use opt4gptq::dcusim::{DcuConfig, Device, GemvKernel};
+use opt4gptq::OptConfig;
+
+fn speedup(device: &Device, p: KernelParams) -> (f64, f64, f64, f64) {
+    let t = |o| device.simulate(&GemvKernel::new(p, o)).seconds;
+    let base = t(OptConfig::BASELINE);
+    (
+        base / t(OptConfig::SMB),
+        base / t(OptConfig::VML),
+        base / t(OptConfig::ILA),
+        base / t(OptConfig::OPT4GPTQ),
+    )
+}
+
+fn main() {
+    let device = Device::z100();
+
+    // ---- batch-size sweep (paper §V: "analyze speedup vs batch size") --
+    let mut t = Table::new(
+        "Opt4GPTQ speedup vs decode batch size (7B shape 4096x4096)",
+        &["batch", "SMB", "VML", "ILA", "Opt4GPTQ"],
+    );
+    for batch in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+        let p = KernelParams { m: batch, k: 4096, n: 4096, group_size: 128 };
+        let (s, v, i, o) = speedup(&device, p);
+        t.row(vec![
+            batch.to_string(),
+            format!("{s:.2}x"),
+            format!("{v:.2}x"),
+            format!("{i:.2}x"),
+            format!("{o:.2}x"),
+        ]);
+    }
+    t.print();
+
+    // ---- model-width sweep ----------------------------------------------
+    let mut t = Table::new(
+        "Opt4GPTQ speedup vs hidden width (batch 32)",
+        &["K=N", "SMB", "VML", "ILA", "Opt4GPTQ"],
+    );
+    for d in [1024usize, 2048, 2560, 4096, 5120, 8192] {
+        let p = KernelParams { m: 32, k: d, n: d, group_size: 128 };
+        let (s, v, i, o) = speedup(&device, p);
+        t.row(vec![
+            d.to_string(),
+            format!("{s:.2}x"),
+            format!("{v:.2}x"),
+            format!("{i:.2}x"),
+            format!("{o:.2}x"),
+        ]);
+    }
+    t.print();
+
+    // ---- group-size ablation ---------------------------------------------
+    let mut t = Table::new(
+        "baseline kernel time vs GPTQ group size (4096x4096, batch 32)",
+        &["group", "µs", "packed MiB/layer"],
+    );
+    for g in [1024usize, 512, 256, 128] {
+        let p = KernelParams { m: 32, k: 4096, n: 4096, group_size: g };
+        let r = device.simulate(&GemvKernel::new(p, OptConfig::BASELINE));
+        t.row(vec![
+            g.to_string(),
+            format!("{:.1}", r.seconds * 1e6),
+            format!("{:.2}", p.min_bytes() as f64 / (1 << 20) as f64),
+        ]);
+    }
+    t.print();
+
+    // ---- act-order (b_q_perm) ablation ------------------------------------
+    // The paper's Algorithm 2 branches on `b_q_perm`; desc_act checkpoints
+    // gather activations, defeating VML and pushing the kernel to the
+    // bandwidth floor.
+    let mut t = Table::new(
+        "act-order (desc_act / b_q_perm) ablation (4096x4096, batch 32)",
+        &["checkpoint", "base µs", "SMB", "VML", "ILA", "Opt4GPTQ"],
+    );
+    for act in [false, true] {
+        let p = KernelParams { m: 32, k: 4096, n: 4096, group_size: 128 };
+        let mk = |o| if act { GemvKernel::with_act_order(p, o) } else { GemvKernel::new(p, o) };
+        let base = device.simulate(&mk(OptConfig::BASELINE)).seconds;
+        let sp = |o| base / device.simulate(&mk(o)).seconds;
+        t.row(vec![
+            if act { "act-order".into() } else { "sequential".to_string() },
+            format!("{:.1}", base * 1e6),
+            format!("{:.2}x", sp(OptConfig::SMB)),
+            format!("{:.2}x", sp(OptConfig::VML)),
+            format!("{:.2}x", sp(OptConfig::ILA)),
+            format!("{:.2}x", sp(OptConfig::OPT4GPTQ)),
+        ]);
+    }
+    t.print();
+
+    // ---- edge-device ablation (generalization claim of §V) ---------------
+    let edge = Device::new(DcuConfig::z100_edge());
+    let p = KernelParams { m: 32, k: 4096, n: 4096, group_size: 128 };
+    let (s, v, i, o) = speedup(&edge, p);
+    println!("\nedge DCU (16 CU, 200 GB/s): SMB {s:.2}x  VML {v:.2}x  ILA {i:.2}x  Opt4 {o:.2}x");
+    let (s2, v2, i2, o2) = speedup(&device, p);
+    println!("Z100    (60 CU,   1 TB/s): SMB {s2:.2}x  VML {v2:.2}x  ILA {i2:.2}x  Opt4 {o2:.2}x");
+    println!("-> the optimizations generalize but compute-bound gains (ILA) shrink");
+    println!("   when bandwidth is the binding constraint, as expected.");
+}

@@ -1,0 +1,33 @@
+//! Regenerate **every figure and table** of the paper's evaluation in one
+//! run: Figure 2 (throughput), Figure 3 (latency), Table I (ARC_C),
+//! Table II (ARC_E), printed next to the paper's reported numbers.
+//!
+//! Run: `cargo run --release --example paper_figures`
+
+use opt4gptq::repro;
+use opt4gptq::trace::arc::ArcSplit;
+
+fn main() -> opt4gptq::Result<()> {
+    println!("Reproducing the Opt4GPTQ evaluation (simulated DCU Z100; see DESIGN.md");
+    println!("for the hardware/dataset substitutions — shapes, not absolute numbers).");
+
+    let grid = repro::serving_grid(32, 2025)?;
+    repro::fig2_table(&grid).print();
+    repro::fig3_table(&grid).print();
+    repro::accuracy_table(ArcSplit::Challenge).print();
+    repro::accuracy_table(ArcSplit::Easy).print();
+
+    let problems = repro::check_fig2_shape(&grid);
+    println!("\n== qualitative shape checks ==");
+    if problems.is_empty() {
+        println!("Figure 2: OK — per-opt ordering ILA > SMB > VML holds for all six");
+        println!("models, the combined Opt4GPTQ gain is largest, and larger models");
+        println!("gain more than smaller ones (13B > 1.8B), as in the paper.");
+    } else {
+        for p in problems {
+            println!("FAILED: {p}");
+        }
+        std::process::exit(1);
+    }
+    Ok(())
+}

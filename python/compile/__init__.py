@@ -1,0 +1,6 @@
+"""Build-time (compile-path) Python for the Opt4GPTQ reproduction.
+
+Nothing in this package runs on the request path: ``aot.py`` lowers the
+JAX/Pallas computations to HLO text once (``make artifacts``) and the rust
+coordinator loads the artifacts via PJRT thereafter.
+"""

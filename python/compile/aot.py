@@ -1,0 +1,180 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the rust runtime.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's backing XLA (xla_extension 0.5.1) rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Outputs (``make artifacts`` -> ``artifacts/``):
+
+* ``tiny_llama_prefill_b1_s64.hlo.txt``  prompt pass (batch 1, 64 slots)
+* ``tiny_llama_decode_b{1,2,4,8}.hlo.txt``  one generation step
+* ``gemm_tiny.hlo.txt``  standalone GPTQ-GEMM (runtime integration test)
+* ``weights.bin``  raw little-endian tensors of the tiny model
+* ``manifest.txt`` line-based description rust parses (model config,
+  tensor table into weights.bin, per-artifact argument/output lists)
+
+Python never runs again after this step.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, quant_ref
+from .kernels.gptq_gemm import gptq_gemm
+
+DECODE_BATCHES = (1, 2, 4, 8)
+PREFILL_SLOTS = 64
+
+_DTYPE_NAMES = {np.dtype(np.float32): "f32", np.dtype(np.uint32): "u32",
+                np.dtype(np.int32): "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def _flatten_named(tree, prefix: str):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(f"{prefix}.{_leaf_name(path)}" if _leaf_name(path) else prefix, leaf)
+            for path, leaf in leaves]
+
+
+def _shape_str(a) -> str:
+    return "x".join(str(d) for d in a.shape) if a.ndim else "scalar"
+
+
+def lower_model(cfg: model.ModelConfig, out_dir: str, seed: int):
+    params = model.init_params(cfg, seed=seed)
+    named_params = _flatten_named(params, "params")
+
+    # ---- weights.bin + tensor table ------------------------------------
+    manifest = []
+    manifest.append(
+        f"model {cfg.name} vocab={cfg.vocab} d_model={cfg.d_model} "
+        f"n_layers={cfg.n_layers} n_heads={cfg.n_heads} d_head={cfg.d_head} "
+        f"d_ff={cfg.d_ff} group_size={cfg.group_size} max_seq={cfg.max_seq} "
+        f"prefill_slots={PREFILL_SLOTS}")
+    manifest.append("weights weights.bin")
+    offset = 0
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for name, arr in named_params:
+            arr = np.ascontiguousarray(arr)
+            raw = arr.tobytes()
+            manifest.append(
+                f"tensor {name} dtype={_DTYPE_NAMES[arr.dtype]} "
+                f"shape={_shape_str(arr)} offset={offset} nbytes={len(raw)}")
+            f.write(raw)
+            offset += len(raw)
+
+    # ---- lower each entry point -----------------------------------------
+    def emit(tag: str, fname: str, fn, args, extra: str = ""):
+        lowered = jax.jit(fn).lower(*[jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), arg) for arg in args])
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest.append(f"artifact {tag} file={fname} {extra}".rstrip())
+        flat = []
+        for prefix, arg in zip(("params", "kv", "lengths", "tokens"), args):
+            flat.extend(_flatten_named(arg, prefix))
+        for i, (name, arr) in enumerate(flat):
+            kind = "weight" if name.startswith("params.") else "input"
+            manifest.append(
+                f"arg {i} kind={kind} name={name} "
+                f"dtype={_DTYPE_NAMES[np.asarray(arr).dtype]} shape={_shape_str(np.asarray(arr))}")
+        outs = jax.eval_shape(fn, *args)
+        for i, (name, sds) in enumerate(_flatten_named(outs, "out")):
+            manifest.append(
+                f"out {i} name={name} dtype={_DTYPE_NAMES[np.dtype(sds.dtype)]} "
+                f"shape={'x'.join(str(d) for d in sds.shape)}")
+        print(f"  lowered {tag} -> {fname} ({len(text)} chars)")
+
+    for b in DECODE_BATCHES:
+        kv = model.init_kv_cache(cfg, b)
+        lengths = np.zeros(b, np.int32)
+        tokens = np.zeros(b, np.int32)
+        emit(f"decode_b{b}", f"tiny_llama_decode_b{b}.hlo.txt",
+             lambda p, k, l, t: model.decode_step(cfg, p, k, l, t),
+             (params, kv, lengths, tokens), extra=f"batch={b}")
+
+    kv = model.init_kv_cache(cfg, 1)
+    emit("prefill_b1_s64", "tiny_llama_prefill_b1_s64.hlo.txt",
+         lambda p, k, l, t: model.prefill(cfg, p, k, l, t),
+         (params, kv, np.zeros(1, np.int32),
+          np.zeros((1, PREFILL_SLOTS), np.int32)),
+         extra=f"batch=1 slots={PREFILL_SLOTS}")
+
+    return manifest
+
+
+def lower_gemm_smoke(out_dir: str, manifest):
+    """Standalone GPTQ-GEMM artifact used by the rust runtime smoke test."""
+    m, k, n, g = 4, 128, 64, 64
+    rng = np.random.default_rng(7)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    qw, s, qz = quant_ref.quantize_and_pack(w, g)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+
+    fn = lambda xx, qq, ss, zz: (gptq_gemm(xx, qq, ss, zz, group_size=g),)
+    lowered = jax.jit(fn).lower(*[jax.ShapeDtypeStruct(a.shape, a.dtype)
+                                  for a in (x, qw, s, qz)])
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, "gemm_tiny.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest.append(f"artifact gemm_tiny file=gemm_tiny.hlo.txt m={m} k={k} n={n} g={g}")
+    # Ship the smoke inputs + expected output so rust can verify numerics.
+    expect = np.asarray(fn(x, qw, s, qz)[0])
+    blob = np.concatenate([x.ravel().view(np.float32),
+                           qw.ravel().view(np.uint32).view(np.float32),
+                           s.ravel(),
+                           qz.ravel().view(np.uint32).view(np.float32),
+                           expect.ravel()])
+    blob.astype(np.float32).tofile(os.path.join(out_dir, "gemm_tiny_io.bin"))
+    manifest.append(f"gemm_smoke_io gemm_tiny_io.bin x={m}x{k} qw={k//8}x{n} "
+                    f"s={k//g}x{n} qz={k//g}x{n//8} out={m}x{n}")
+    print(f"  lowered gemm_tiny -> gemm_tiny.hlo.txt ({len(text)} chars)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--test-config", action="store_true",
+                    help="lower the small TEST config instead of TINY")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = model.TEST if args.test_config else model.TINY
+    print(f"AOT-lowering {cfg.name} ({cfg.params_millions:.1f}M params)")
+    manifest = lower_model(cfg, args.out, args.seed)
+    lower_gemm_smoke(args.out, manifest)
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest with {len(manifest)} lines to {args.out}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels for the Opt4GPTQ reproduction.
+
+The paper's hot spot is the 4-bit GPTQ dequantize-GEMM inside vLLM
+(exllama-style ``gemm_half_q_half``).  ``gptq_gemm`` is the TPU/Pallas
+re-think of that kernel (see DESIGN.md §Hardware-Adaptation); ``ref``
+holds the pure-jnp oracle used by pytest.
+"""
+
+from .gptq_gemm import gptq_gemm  # noqa: F401
+from . import ref  # noqa: F401

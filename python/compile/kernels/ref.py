@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the GPTQ 4-bit dequantize-GEMM kernel.
+
+The packing layout is the repo-wide contract (shared with the rust
+``gptq::pack`` module — see rust/src/gptq/pack.rs):
+
+* ``qweight``: ``uint32[K//8, N]``.  Nibble ``j`` (bits ``4j..4j+4``) of word
+  ``w`` holds the 4-bit code of weight row ``k = 8*w + j``.
+* ``scales``:  ``float32[K//g, N]`` — per-(group, column) scale.
+* ``qzeros``:  ``uint32[K//g, N//8]``.  Nibble ``j`` of word ``w`` in group
+  ``gi`` holds the zero-point of column ``n = 8*w + j``.
+* dequant:     ``W[k, n] = scales[k//g, n] * (code[k, n] - zero[k//g, n])``.
+
+This is the exllama/GPTQ-v1 layout with the ``+1`` zero-point bias removed
+(we store the true zero-point; the bias is a historical artifact that only
+obfuscates tests).
+"""
+
+import jax.numpy as jnp
+
+NIBBLES_PER_WORD = 8
+
+
+def unpack_rows(qweight: jnp.ndarray) -> jnp.ndarray:
+    """uint32[K//8, N] -> int32[K, N]; nibble j of word w -> row 8*w+j."""
+    kw, n = qweight.shape
+    shifts = (4 * jnp.arange(NIBBLES_PER_WORD, dtype=jnp.uint32))[None, :, None]
+    codes = (qweight[:, None, :] >> shifts) & jnp.uint32(0xF)
+    return codes.reshape(kw * NIBBLES_PER_WORD, n).astype(jnp.int32)
+
+
+def unpack_cols(qzeros: jnp.ndarray) -> jnp.ndarray:
+    """uint32[G, N//8] -> int32[G, N]; nibble j of word w -> column 8*w+j."""
+    g, nw = qzeros.shape
+    shifts = (4 * jnp.arange(NIBBLES_PER_WORD, dtype=jnp.uint32))[None, None, :]
+    codes = (qzeros[:, :, None] >> shifts) & jnp.uint32(0xF)
+    return codes.reshape(g, nw * NIBBLES_PER_WORD).astype(jnp.int32)
+
+
+def dequantize(qweight, scales, qzeros, group_size: int) -> jnp.ndarray:
+    """Expand the packed 4-bit tensor to float32[K, N]."""
+    codes = unpack_rows(qweight)                      # [K, N]
+    zeros = unpack_cols(qzeros)                       # [G, N]
+    k = codes.shape[0]
+    gidx = jnp.arange(k) // group_size                # [K]
+    return scales[gidx, :] * (codes - zeros[gidx, :]).astype(scales.dtype)
+
+
+def gptq_gemm_ref(x, qweight, scales, qzeros, group_size: int) -> jnp.ndarray:
+    """Oracle: dense dequant followed by a plain f32 matmul."""
+    w = dequantize(qweight, scales, qzeros, group_size)
+    return jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)

@@ -1,0 +1,226 @@
+"""Layer-2 JAX model: a GPTQ-4bit Llama-style decoder (build-time only).
+
+Every linear layer runs through the Layer-1 Pallas kernel
+(``kernels.gptq_gemm``), so the AOT-lowered HLO exercises the paper's hot
+path end to end.  Two entry points are lowered by ``aot.py``:
+
+* ``prefill``     — full causal pass over a fixed-length (padded) prompt,
+                    returning next-token logits and the populated KV cache;
+* ``decode_step`` — one token per sequence against the KV cache (the
+                    serving hot loop).
+
+The KV cache is carried functionally: each call returns the updated cache
+and the rust engine owns the buffers between calls.  Layer parameters are
+stacked on a leading layer axis and consumed with ``lax.scan`` to keep the
+lowered HLO compact.
+"""
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant_ref
+from .kernels.gptq_gemm import gptq_gemm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of the executable tiny model (not the six paper models —
+    those live in rust/src/models and feed the performance model)."""
+    name: str = "tiny-llama-25m"
+    vocab: int = 256          # byte-level tokenizer => vocab is exactly 256
+    d_model: int = 512
+    n_layers: int = 8
+    n_heads: int = 8
+    d_head: int = 64
+    d_ff: int = 1408
+    group_size: int = 128
+    max_seq: int = 128
+    rope_theta: float = 10000.0
+
+    @property
+    def params_millions(self) -> float:
+        attn = 4 * self.d_model * self.d_model
+        mlp = 3 * self.d_model * self.d_ff
+        emb = 2 * self.vocab * self.d_model
+        return (self.n_layers * (attn + mlp) + emb) / 1e6
+
+
+TINY = ModelConfig()
+# Small config for fast unit tests.
+TEST = ModelConfig(name="test-llama", d_model=128, n_layers=2, n_heads=2,
+                   d_head=64, d_ff=256, group_size=64, max_seq=32)
+
+# Names of the quantized (GPTQ) projections, in flattening order.
+QUANT_LINEARS = ("down", "gate", "up", "wk", "wo", "wq", "wv")
+
+
+def _linear_shapes(cfg: ModelConfig) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {"wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+            "gate": (d, f), "up": (d, f), "down": (f, d)}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, Any]:
+    """Fabricate GPTQ-format weights (numpy pytree, deterministic in seed)."""
+    rng = np.random.default_rng(seed)
+
+    def dense(*shape, scale):
+        return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+    def qlinear(k, n):
+        w = dense(k, n, scale=1.0 / np.sqrt(k))
+        qw, s, qz = quant_ref.quantize_and_pack(w, cfg.group_size)
+        return {"qweight": qw, "scales": s, "qzeros": qz}
+
+    layers = []
+    for _ in range(cfg.n_layers):
+        layer = {name: qlinear(*shape)
+                 for name, shape in _linear_shapes(cfg).items()}
+        layer["attn_norm"] = np.ones(cfg.d_model, np.float32)
+        layer["mlp_norm"] = np.ones(cfg.d_model, np.float32)
+        layers.append(layer)
+    # Stack the per-layer pytrees on a leading layer axis (for lax.scan).
+    stacked = jax.tree_util.tree_map(lambda *xs: np.stack(xs), *layers)
+    return {
+        "embed": dense(cfg.vocab, cfg.d_model, scale=0.02),
+        "layers": stacked,
+        "final_norm": np.ones(cfg.d_model, np.float32),
+        "lm_head": dense(cfg.d_model, cfg.vocab, scale=1.0 / np.sqrt(cfg.d_model)),
+    }
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int) -> Dict[str, np.ndarray]:
+    shape = (cfg.n_layers, batch, cfg.n_heads, cfg.max_seq, cfg.d_head)
+    return {"k": np.zeros(shape, np.float32), "v": np.zeros(shape, np.float32)}
+
+
+def _rmsnorm(x, gamma, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gamma
+
+
+def _qgemm(cfg: ModelConfig, x, lin):
+    """2-D quantized matmul through the Pallas kernel.
+
+    block_n = N: one grid step per quantization group.  On the CPU-PJRT
+    execution path fewer (larger) grid steps dominate performance — the
+    interpret-lowered grid becomes an HLO while-loop (see EXPERIMENTS.md
+    §Perf); on a real TPU this would instead be tiled to VMEM.
+    """
+    n = lin["qweight"].shape[-1]
+    # Measured on the CPU-PJRT path (EXPERIMENTS.md §Perf): block_n = N
+    # (fewer grid steps) wins 1.6x; the full_k variant loses (group-index
+    # gather materializes large intermediates) and stays as an ablation.
+    return gptq_gemm(x, lin["qweight"], lin["scales"], lin["qzeros"],
+                     group_size=cfg.group_size, block_n=n)
+
+
+def _rope(x, positions, theta: float):
+    """Rotary embedding.  x: [B, T, H, Dh]; positions: [B, T] (int32)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # [B, T, half]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _attention(cfg, q, k_cache, v_cache, q_pos, kv_len_mask):
+    """q: [B, T, H, Dh]; caches: [B, H, S, Dh]; kv_len_mask: [B, T, S] bool."""
+    scores = jnp.einsum("bthd,bhsd->bhts", q, k_cache) / np.sqrt(cfg.d_head)
+    scores = jnp.where(kv_len_mask[:, None, :, :], scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bhsd->bthd", probs, v_cache)
+    return out
+
+
+def _layer(cfg: ModelConfig, x, lp, k_cache_l, v_cache_l, positions, kv_mask):
+    """One decoder layer over [B, T, D] given this layer's cache [B,H,S,Dh].
+
+    Writes the new K/V rows at ``positions`` and returns (x, new_k, new_v).
+    """
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    hid = _rmsnorm(x, lp["attn_norm"]).reshape(b * t, d)
+    q = _qgemm(cfg, hid, lp["wq"]).reshape(b, t, h, dh)
+    k = _qgemm(cfg, hid, lp["wk"]).reshape(b, t, h, dh)
+    v = _qgemm(cfg, hid, lp["wv"]).reshape(b, t, h, dh)
+    q = _rope(q, positions, cfg.rope_theta)
+    k = _rope(k, positions, cfg.rope_theta)
+
+    # Scatter the new rows into the cache at per-sequence positions.
+    def scatter(cache_b, rows_b, pos_b):          # [H,S,Dh], [T,H,Dh], [T]
+        def put(c, row_and_pos):
+            row, p = row_and_pos
+            return jax.lax.dynamic_update_slice(c, row[:, None, :], (0, p, 0)), None
+        c, _ = jax.lax.scan(put, cache_b, (rows_b, pos_b))
+        return c
+
+    new_k = jax.vmap(scatter)(k_cache_l, k, positions)
+    new_v = jax.vmap(scatter)(v_cache_l, v, positions)
+
+    att = _attention(cfg, q, new_k, new_v, positions, kv_mask)
+    att = att.reshape(b * t, d)
+    x = x + _qgemm(cfg, att, lp["wo"]).reshape(b, t, d)
+
+    hid2 = _rmsnorm(x, lp["mlp_norm"]).reshape(b * t, d)
+    gate = jax.nn.silu(_qgemm(cfg, hid2, lp["gate"]))
+    up = _qgemm(cfg, hid2, lp["up"])
+    mlp = _qgemm(cfg, gate * up, lp["down"]).reshape(b, t, d)
+    return x + mlp, new_k, new_v
+
+
+def _forward(cfg: ModelConfig, params, kv, tokens, positions, kv_mask):
+    """Shared prefill/decode body.  tokens/positions: [B, T]."""
+    x = params["embed"][tokens]                                   # [B, T, D]
+
+    def step(carry, layer_in):
+        xc = carry
+        lp, kl, vl = layer_in
+        xn, nk, nv = _layer(cfg, xc, lp, kl, vl, positions, kv_mask)
+        return xn, (nk, nv)
+
+    x, (new_k, new_v) = jax.lax.scan(step, x, (params["layers"], kv["k"], kv["v"]))
+    x = _rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("btd,dv->btv", x, params["lm_head"])
+    return logits, {"k": new_k, "v": new_v}
+
+
+def decode_step(cfg: ModelConfig, params, kv, lengths, tokens):
+    """One generation step.
+
+    lengths: i32[B] — number of tokens already in the cache (the new token is
+    written at position ``lengths``).  tokens: i32[B].  Returns
+    (logits f32[B, V], new_kv).
+    """
+    b = tokens.shape[0]
+    positions = lengths[:, None]                                  # [B, 1]
+    s_idx = jnp.arange(cfg.max_seq, dtype=jnp.int32)
+    kv_mask = (s_idx[None, None, :] <= positions[:, :, None])     # [B, 1, S]
+    logits, new_kv = _forward(cfg, params, kv, tokens[:, None], positions, kv_mask)
+    return logits[:, 0, :], new_kv
+
+
+def prefill(cfg: ModelConfig, params, kv, lengths, tokens):
+    """Prompt pass.  tokens: i32[B, S_in] padded; lengths: i32[B] real lens.
+
+    Returns (logits f32[B, V] at each sequence's last real token, new_kv).
+    """
+    b, s_in = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s_in, dtype=jnp.int32)[None, :], (b, s_in))
+    s_idx = jnp.arange(cfg.max_seq, dtype=jnp.int32)
+    # Causal masking is sufficient: padded key rows (t in [lengths, s_in))
+    # are only ever visible to padded *query* rows, whose logits we never
+    # read (we gather at lengths-1 below), and later decode steps mask the
+    # cache by their own lengths.
+    kv_mask = s_idx[None, None, :] <= positions[:, :, None]       # [B, T, S]
+    logits, new_kv = _forward(cfg, params, kv, tokens, positions, kv_mask)
+    last = jnp.take_along_axis(
+        logits, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)
+    return last[:, 0, :], new_kv

@@ -1,0 +1,69 @@
+"""Reference round-to-nearest group quantizer + packing (build-time only).
+
+Mirrors the layout contract in ``kernels/ref.py`` and rust's ``gptq::pack``.
+Used to fabricate GPTQ-format weights for pytest and for the AOT example
+inputs.  The *real* GPTQ algorithm (Hessian + Cholesky error propagation)
+lives in rust (rust/src/gptq/quantize.rs); at build time we only need
+format-correct tensors, not minimal-error ones.
+"""
+
+import numpy as np
+
+NIBBLES_PER_WORD = 8
+QMAX = 15  # 4-bit unsigned codes 0..15
+
+
+def quantize_rtn(w: np.ndarray, group_size: int):
+    """Round-to-nearest asymmetric 4-bit group quantization of f32[K, N].
+
+    Returns (codes u8[K,N], scales f32[K//g,N], zeros u8[K//g,N]).
+    """
+    k, n = w.shape
+    assert k % group_size == 0
+    g = k // group_size
+    wg = w.reshape(g, group_size, n)
+    wmin = wg.min(axis=1)                     # [G, N]
+    wmax = wg.max(axis=1)
+    scale = (wmax - wmin) / QMAX
+    scale = np.where(scale <= 1e-8, 1.0, scale).astype(np.float32)
+    zero = np.clip(np.round(-wmin / scale), 0, QMAX).astype(np.uint8)
+    codes = np.round(wg / scale[:, None, :]) + zero[:, None, :].astype(np.float32)
+    codes = np.clip(codes, 0, QMAX).astype(np.uint8).reshape(k, n)
+    return codes, scale, zero
+
+
+def pack_rows(codes: np.ndarray) -> np.ndarray:
+    """u8[K, N] -> u32[K//8, N]; nibble j of word w holds row 8*w+j."""
+    k, n = codes.shape
+    assert k % NIBBLES_PER_WORD == 0
+    c = codes.reshape(k // NIBBLES_PER_WORD, NIBBLES_PER_WORD, n).astype(np.uint32)
+    shifts = (4 * np.arange(NIBBLES_PER_WORD, dtype=np.uint32))[None, :, None]
+    return (c << shifts).sum(axis=1, dtype=np.uint32)
+
+
+def pack_cols(zeros: np.ndarray) -> np.ndarray:
+    """u8[G, N] -> u32[G, N//8]; nibble j of word w holds column 8*w+j."""
+    g, n = zeros.shape
+    assert n % NIBBLES_PER_WORD == 0
+    z = zeros.reshape(g, n // NIBBLES_PER_WORD, NIBBLES_PER_WORD).astype(np.uint32)
+    shifts = (4 * np.arange(NIBBLES_PER_WORD, dtype=np.uint32))[None, None, :]
+    return (z << shifts).sum(axis=2, dtype=np.uint32)
+
+
+def quantize_and_pack(w: np.ndarray, group_size: int):
+    """f32[K, N] -> (qweight u32[K//8,N], scales f32[G,N], qzeros u32[G,N//8])."""
+    codes, scales, zeros = quantize_rtn(w, group_size)
+    return pack_rows(codes), scales, pack_cols(zeros)
+
+
+def dequantize(qweight, scales, qzeros, group_size: int) -> np.ndarray:
+    """Inverse of quantize_and_pack's packing (numpy mirror of ref.py)."""
+    kw, n = qweight.shape
+    k = kw * NIBBLES_PER_WORD
+    shifts = 4 * np.arange(NIBBLES_PER_WORD, dtype=np.uint32)
+    codes = ((qweight[:, None, :] >> shifts[None, :, None]) & 0xF)
+    codes = codes.reshape(k, n).astype(np.int32)
+    zeros = ((qzeros[:, :, None] >> shifts[None, None, :]) & 0xF)
+    zeros = zeros.reshape(qzeros.shape[0], -1).astype(np.int32)
+    gidx = np.arange(k) // group_size
+    return (scales[gidx, :] * (codes - zeros[gidx, :])).astype(np.float32)

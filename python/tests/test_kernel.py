@@ -1,0 +1,113 @@
+"""Pallas GPTQ-GEMM kernel vs the pure-jnp oracle — the CORE correctness
+signal for Layer 1 (see DESIGN.md)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant_ref
+from compile.kernels.gptq_gemm import gptq_gemm
+from compile.kernels import ref
+
+
+def _make_case(m, k, n, g, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    w = (rng.standard_normal((k, n)) * scale).astype(np.float32)
+    qw, s, qz = quant_ref.quantize_and_pack(w, g)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    return (jnp.array(x), jnp.array(qw), jnp.array(s), jnp.array(qz))
+
+
+@pytest.mark.parametrize("m,k,n,g", [
+    (1, 64, 8, 64),         # single-row decode GEMV, one group
+    (1, 128, 64, 64),       # two groups
+    (4, 128, 64, 128),      # group == K
+    (8, 256, 128, 64),      # multi-block N
+    (16, 512, 256, 128),    # model-sized
+    (64, 512, 1408, 128),   # prefill-sized, non-pow2 N
+    (3, 64, 8, 64),         # odd M
+])
+def test_kernel_matches_ref(m, k, n, g):
+    args = _make_case(m, k, n, g, seed=m * 1000 + n)
+    out = gptq_gemm(*args, group_size=g)
+    expect = ref.gptq_gemm_ref(*args, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_n", [8, 16, 64, 128])
+def test_kernel_block_n_invariance(block_n):
+    """Output must not depend on the N-tile size."""
+    args = _make_case(4, 128, 128, 64, seed=5)
+    base = gptq_gemm(*args, group_size=64, block_n=128)
+    out = gptq_gemm(*args, group_size=64, block_n=block_n)
+    # interpret-mode dot vectorizes differently per tile width; allow the
+    # usual f32 accumulation-order noise
+    np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_kernel_zero_activation():
+    args = _make_case(4, 128, 64, 64, seed=9)
+    x0 = jnp.zeros_like(args[0])
+    out = gptq_gemm(x0, *args[1:], group_size=64)
+    assert np.abs(np.asarray(out)).max() == 0.0
+
+
+def test_kernel_identity_groups():
+    """With scale=1 and zero=0 the kernel computes x @ codes exactly."""
+    k, n, g = 64, 16, 64
+    rng = np.random.default_rng(2)
+    codes = rng.integers(0, 16, size=(k, n)).astype(np.uint8)
+    qw = quant_ref.pack_rows(codes)
+    s = np.ones((k // g, n), np.float32)
+    qz = np.zeros((k // g, n // 8), np.uint32)
+    x = rng.standard_normal((2, k)).astype(np.float32)
+    out = gptq_gemm(jnp.array(x), jnp.array(qw), jnp.array(s), jnp.array(qz),
+                    group_size=g)
+    np.testing.assert_allclose(np.asarray(out), x @ codes.astype(np.float32),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_kernel_large_scale_values():
+    args = _make_case(2, 128, 16, 64, seed=3, scale=100.0)
+    out = gptq_gemm(*args, group_size=64)
+    expect = ref.gptq_gemm_ref(*args, 64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-2)
+
+
+def test_kernel_rejects_bad_shapes():
+    args = _make_case(2, 128, 16, 64, seed=4)
+    with pytest.raises(AssertionError):
+        gptq_gemm(*args, group_size=100)     # g does not divide K
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 9),
+    kg=st.integers(1, 4),             # K = kg * 64
+    nb=st.integers(1, 6),             # N = nb * 8
+    g=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_property_shapes(m, kg, nb, g, seed):
+    """Hypothesis sweep over (M, K, N, group) shapes: kernel == oracle."""
+    k, n = kg * 64, nb * 8
+    args = _make_case(m, k, n, g, seed=seed)
+    out = gptq_gemm(*args, group_size=g, block_n=8)
+    expect = ref.gptq_gemm_ref(*args, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_linearity(seed):
+    """gemm(a*x) == a * gemm(x) — the kernel is linear in activations."""
+    args = _make_case(2, 64, 16, 64, seed=seed)
+    x, rest = args[0], args[1:]
+    out1 = np.asarray(gptq_gemm(2.0 * x, *rest, group_size=64))
+    out2 = 2.0 * np.asarray(gptq_gemm(x, *rest, group_size=64))
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-4)

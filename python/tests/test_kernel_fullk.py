@@ -1,0 +1,53 @@
+"""Tests for the full-K kernel variant (the CPU-execution-path ablation
+kept after the §Perf pass — see EXPERIMENTS.md)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant_ref
+from compile.kernels.gptq_gemm import gptq_gemm
+from compile.kernels import ref
+
+
+def _case(m, k, n, g, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    qw, s, qz = quant_ref.quantize_and_pack(w, g)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    return (jnp.array(x), jnp.array(qw), jnp.array(s), jnp.array(qz))
+
+
+@pytest.mark.parametrize("m,k,n,g", [
+    (1, 64, 8, 64),
+    (4, 128, 64, 64),
+    (8, 512, 1408, 128),   # the model's gate/up shape
+    (64, 512, 512, 128),   # prefill-shaped
+])
+def test_fullk_matches_ref(m, k, n, g):
+    args = _case(m, k, n, g, seed=m + n)
+    out = gptq_gemm(*args, group_size=g, block_n=n, full_k=True)
+    expect = ref.gptq_gemm_ref(*args, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_fullk_equals_tiled():
+    args = _case(4, 256, 64, 64, seed=3)
+    tiled = gptq_gemm(*args, group_size=64, block_n=64)
+    fullk = gptq_gemm(*args, group_size=64, block_n=64, full_k=True)
+    np.testing.assert_allclose(np.asarray(fullk), np.asarray(tiled),
+                               rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 6), kg=st.integers(1, 3), nb=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_fullk_property(m, kg, nb, seed):
+    k, n, g = kg * 64, nb * 8, 64
+    args = _case(m, k, n, g, seed=seed)
+    out = gptq_gemm(*args, group_size=g, block_n=8, full_k=True)
+    expect = ref.gptq_gemm_ref(*args, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-4)

@@ -1,0 +1,108 @@
+"""Layer-2 model tests: shapes, KV-cache semantics, determinism."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+CFG = model.TEST
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, seed=1)
+
+
+def test_param_shapes(params):
+    assert params["embed"].shape == (CFG.vocab, CFG.d_model)
+    lw = params["layers"]["wq"]["qweight"]
+    assert lw.shape == (CFG.n_layers, CFG.d_model // 8, CFG.d_model)
+    assert params["layers"]["down"]["scales"].shape == (
+        CFG.n_layers, CFG.d_ff // CFG.group_size, CFG.d_model)
+
+
+def test_prefill_shapes(params):
+    kv = model.init_kv_cache(CFG, 2)
+    toks = np.zeros((2, 8), np.int32)
+    lens = np.array([8, 5], np.int32)
+    logits, kv2 = model.prefill(CFG, params, kv, jnp.array(lens), jnp.array(toks))
+    assert logits.shape == (2, CFG.vocab)
+    assert kv2["k"].shape == (CFG.n_layers, 2, CFG.n_heads, CFG.max_seq, CFG.d_head)
+
+
+def test_decode_shapes(params):
+    kv = model.init_kv_cache(CFG, 4)
+    logits, kv2 = model.decode_step(
+        CFG, params, kv, jnp.zeros(4, jnp.int32), jnp.zeros(4, jnp.int32))
+    assert logits.shape == (4, CFG.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_prefill_then_decode_matches_longer_prefill(params):
+    """prefill(t0..t3); decode(t4) == prefill(t0..t4) — KV-cache correctness."""
+    toks = np.array([[3, 1, 4, 1, 5, 0, 0, 0]], np.int32)
+    kv_a = model.init_kv_cache(CFG, 1)
+    la, _ = model.prefill(CFG, params, kv_a, jnp.array([5], jnp.int32), jnp.array(toks))
+    kv_b = model.init_kv_cache(CFG, 1)
+    _, kvb = model.prefill(CFG, params, kv_b, jnp.array([4], jnp.int32), jnp.array(toks))
+    lb, _ = model.decode_step(CFG, params, kvb, jnp.array([4], jnp.int32),
+                              jnp.array([5], jnp.int32))
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), rtol=1e-4, atol=1e-4)
+
+
+def test_sequential_decode_matches_prefill(params):
+    """Pure token-by-token decode from scratch == one-shot prefill."""
+    seq = [7, 2, 9, 4]
+    kv = model.init_kv_cache(CFG, 1)
+    logits = None
+    for i, t in enumerate(seq):
+        logits, kv = model.decode_step(CFG, params, kv,
+                                       jnp.array([i], jnp.int32),
+                                       jnp.array([t], jnp.int32))
+    kv_p = model.init_kv_cache(CFG, 1)
+    toks = np.array([seq + [0] * 4], np.int32)
+    lp, _ = model.prefill(CFG, params, kv_p, jnp.array([4], jnp.int32), jnp.array(toks))
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(lp),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_batch_consistency(params):
+    """Each batch lane is independent: b=2 result == two b=1 results."""
+    kv1 = model.init_kv_cache(CFG, 1)
+    l1, _ = model.decode_step(CFG, params, kv1, jnp.array([0], jnp.int32),
+                              jnp.array([11], jnp.int32))
+    l2, _ = model.decode_step(CFG, params, kv1, jnp.array([0], jnp.int32),
+                              jnp.array([23], jnp.int32))
+    kv2 = model.init_kv_cache(CFG, 2)
+    lb, _ = model.decode_step(CFG, params, kv2, jnp.array([0, 0], jnp.int32),
+                              jnp.array([11, 23], jnp.int32))
+    np.testing.assert_allclose(np.asarray(lb[0]), np.asarray(l1[0]), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(lb[1]), np.asarray(l2[0]), rtol=1e-4, atol=1e-4)
+
+
+def test_padding_does_not_leak(params):
+    """Changing tokens beyond `lengths` must not change the logits."""
+    kv = model.init_kv_cache(CFG, 1)
+    t1 = np.array([[5, 6, 7, 0, 0, 0, 0, 0]], np.int32)
+    t2 = np.array([[5, 6, 7, 99, 42, 13, 1, 2]], np.int32)
+    l1, _ = model.prefill(CFG, params, kv, jnp.array([3], jnp.int32), jnp.array(t1))
+    l2, _ = model.prefill(CFG, params, kv, jnp.array([3], jnp.int32), jnp.array(t2))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5, atol=1e-5)
+
+
+def test_determinism(params):
+    kv = model.init_kv_cache(CFG, 1)
+    a, _ = model.decode_step(CFG, params, kv, jnp.array([0], jnp.int32),
+                             jnp.array([1], jnp.int32))
+    b, _ = model.decode_step(CFG, params, kv, jnp.array([0], jnp.int32),
+                             jnp.array([1], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_init_params_deterministic():
+    p1 = model.init_params(CFG, seed=42)
+    p2 = model.init_params(CFG, seed=42)
+    np.testing.assert_array_equal(p1["embed"], p2["embed"])
+    np.testing.assert_array_equal(p1["layers"]["wq"]["qweight"],
+                                  p2["layers"]["wq"]["qweight"])

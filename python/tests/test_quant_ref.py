@@ -1,0 +1,98 @@
+"""Packing / round-to-nearest quantizer unit tests (layout contract)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import quant_ref
+
+
+def test_pack_rows_nibble_order():
+    # row k = 8*w + j lives in bits 4j..4j+4 of word w
+    codes = np.arange(16, dtype=np.uint8).reshape(16, 1) % 16
+    packed = quant_ref.pack_rows(codes)
+    assert packed.shape == (2, 1)
+    assert packed[0, 0] == sum(j << (4 * j) for j in range(8))
+    assert packed[1, 0] == sum(((8 + j) % 16) << (4 * j) for j in range(8))
+
+
+def test_pack_cols_nibble_order():
+    zeros = np.arange(8, dtype=np.uint8).reshape(1, 8)
+    packed = quant_ref.pack_cols(zeros)
+    assert packed.shape == (1, 1)
+    assert packed[0, 0] == sum(j << (4 * j) for j in range(8))
+
+
+def test_roundtrip_exact_codes():
+    """Values that are exactly representable survive quantization exactly."""
+    rng = np.random.default_rng(3)
+    g, k, n = 32, 64, 16
+    scales = rng.uniform(0.5, 2.0, size=(k // g, n)).astype(np.float32)
+    zeros = rng.integers(0, 16, size=(k // g, n)).astype(np.uint8)
+    codes = rng.integers(0, 16, size=(k, n)).astype(np.uint8)
+    # RTN re-derives scale/zero from each group's span; the codes only
+    # round-trip if every (group, column) actually spans 0..15.
+    codes.reshape(k // g, g, n)[:, 0, :] = 0
+    codes.reshape(k // g, g, n)[:, 1, :] = 15
+    gidx = np.arange(k) // g
+    w = scales[gidx] * (codes.astype(np.int32) - zeros[gidx].astype(np.int32))
+    qw, s2, z2 = quant_ref.quantize_and_pack(w.astype(np.float32), g)
+    wd = quant_ref.dequantize(qw, s2, z2, g)
+    np.testing.assert_allclose(wd, w, rtol=1e-4, atol=1e-4)
+
+
+def test_quantize_error_bound():
+    """RTN error is bounded by scale/2 per element."""
+    rng = np.random.default_rng(11)
+    w = rng.standard_normal((256, 32)).astype(np.float32)
+    g = 64
+    codes, scales, zeros = quant_ref.quantize_rtn(w, g)
+    gidx = np.arange(256) // g
+    deq = scales[gidx] * (codes.astype(np.int32) - zeros[gidx].astype(np.int32))
+    err = np.abs(deq - w)
+    bound = scales[gidx] * 0.5 + 1e-6
+    assert (err <= bound).all()
+
+
+def test_constant_group_degenerate():
+    """A constant group has span 0; scale falls back to 1, codes = zero."""
+    w = np.full((64, 8), 3.25, np.float32)
+    codes, scales, zeros = quant_ref.quantize_rtn(w, 64)
+    assert np.isfinite(scales).all()
+    deq = scales[0] * (codes.astype(np.int32) - zeros[0].astype(np.int32))
+    # degenerate groups cannot represent the constant exactly; only require
+    # finiteness and the clip range
+    assert (codes <= 15).all()
+    assert np.isfinite(deq).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    kw=st.integers(1, 8),
+    n=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pack_unpack_roundtrip(kw, n, seed):
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 16, size=(kw * 8, n)).astype(np.uint8)
+    packed = quant_ref.pack_rows(codes)
+    shifts = 4 * np.arange(8, dtype=np.uint32)
+    unpacked = ((packed[:, None, :] >> shifts[None, :, None]) & 0xF)
+    unpacked = unpacked.reshape(kw * 8, n).astype(np.uint8)
+    np.testing.assert_array_equal(unpacked, codes)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    groups=st.integers(1, 4),
+    n=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quantize_dequantize_within_bound(groups, n, seed):
+    g = 32
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(-4, 4, size=(groups * g, n * 8)).astype(np.float32)
+    qw, s, qz = quant_ref.quantize_and_pack(w, g)
+    wd = quant_ref.dequantize(qw, s, qz, g)
+    gidx = np.arange(groups * g) // g
+    assert (np.abs(wd - w) <= s[gidx] * 0.75 + 1e-5).all()

@@ -1,0 +1,89 @@
+//! L3 hot-path microbenchmarks (wall clock): scheduler step, block
+//! manager churn, sampler, f16 GEMV, DCU simulation itself.  These are
+//! the targets of the §Perf optimization pass (EXPERIMENTS.md).
+//!
+//! Run: `cargo bench --bench engine_hotpath`
+
+use opt4gptq::benchkit::bench;
+use opt4gptq::engine::block_manager::BlockManager;
+use opt4gptq::engine::{Engine, EngineConfig, Request, SamplingParams, SimBackend};
+use opt4gptq::eval::numerics::gemv_f16_variant;
+use opt4gptq::gptq::{quantize_rtn, Matrix};
+use opt4gptq::models::by_name;
+use opt4gptq::rng::Rng;
+use opt4gptq::OptConfig;
+
+fn main() {
+    // --- full serving run (the Figure-2 inner loop) --------------------
+    let model = by_name("Llama-2-7B-GPTQ").unwrap();
+    bench("engine: 32-request serving run (sim backend)", 2, 10, || {
+        let be = SimBackend::new(model, OptConfig::OPT4GPTQ, 32);
+        let mut e = Engine::new(
+            EngineConfig { max_batch: 32, total_blocks: 8192, ..Default::default() },
+            be,
+        );
+        let trace = opt4gptq::trace::RequestTrace::generate(32, 1);
+        for r in &trace.requests {
+            e.add_request(Request::new(
+                r.id,
+                r.prompt.clone(),
+                SamplingParams { max_tokens: r.response_len.min(64), ..Default::default() },
+            ));
+        }
+        let _ = e.run().unwrap();
+    });
+
+    // --- block manager churn -------------------------------------------
+    bench("block_manager: 1k alloc/append/free cycles", 2, 20, || {
+        let mut bm = BlockManager::new(4096, 16);
+        let mut rng = Rng::new(7);
+        for i in 0..1000usize {
+            let plen = rng.range_usize(1, 120);
+            let prompt: Vec<u32> = (0..plen).map(|_| rng.next_u32() % 1000).collect();
+            assert!(bm.allocate(i, &prompt));
+            for t in 0..rng.range_usize(0, 40) {
+                if !bm.append_token(i, plen + t + 1) {
+                    break;
+                }
+            }
+            if i >= 16 {
+                bm.free_sequence(i - 16);
+            }
+        }
+    });
+
+    // --- sampler ---------------------------------------------------------
+    let logits: Vec<f32> = {
+        let mut rng = Rng::new(3);
+        (0..32000).map(|_| rng.normal() as f32).collect()
+    };
+    let params = SamplingParams { temperature: 0.8, top_k: 50, ..Default::default() };
+    let mut rng = Rng::new(4);
+    bench("sampler: top-k=50 over 32k logits", 5, 50, || {
+        std::hint::black_box(opt4gptq::engine::sampler::sample(&logits, &params, &mut rng));
+    });
+
+    // --- f16 GEMV (accuracy-harness inner loop) -------------------------
+    let mut wrng = Rng::new(5);
+    let w = Matrix::from_vec(64, 8, wrng.normal_vec_f32(64 * 8, 0.4));
+    let q = quantize_rtn(&w, 64);
+    let x = wrng.normal_vec_f32(64, 1.0);
+    bench("eval: f16 variant GEMV 64x8", 10, 100, || {
+        std::hint::black_box(gemv_f16_variant(&x, &q, OptConfig::OPT4GPTQ, 1));
+    });
+
+    // --- DCU simulation -------------------------------------------------
+    let device = opt4gptq::dcusim::Device::z100();
+    let p = opt4gptq::dcusim::kernels::KernelParams { m: 32, k: 5120, n: 5120, group_size: 128 };
+    bench("dcusim: simulate one 13B GEMM launch", 10, 200, || {
+        std::hint::black_box(device.simulate(&opt4gptq::dcusim::GemvKernel::new(p, OptConfig::BASELINE)));
+    });
+
+    // --- accuracy harness (one model/split) ------------------------------
+    bench("eval: full ARC_C evaluation of one model", 1, 3, || {
+        std::hint::black_box(opt4gptq::eval::accuracy::evaluate(
+            "Qwen1.5-1.8B-Chat-GPTQ-Int4",
+            opt4gptq::trace::arc::ArcSplit::Challenge,
+        ));
+    });
+}

@@ -1,0 +1,32 @@
+//! Regenerates **Figure 2** — inference throughput of vLLM across the six
+//! GPTQ models before/after SMB-Opt, VML-Opt, ILA-Opt and Opt4GPTQ.
+//!
+//! Run: `cargo bench --bench fig2_throughput`
+
+use opt4gptq::benchkit;
+use opt4gptq::repro;
+
+fn main() -> opt4gptq::Result<()> {
+    let t0 = std::time::Instant::now();
+    // Paper setup: one batch of 32 ShareGPT prompts (§IV-B).
+    let grid = repro::serving_grid(32, 2025)?;
+    repro::fig2_table(&grid).print();
+
+    let problems = repro::check_fig2_shape(&grid);
+    if problems.is_empty() {
+        println!("\nshape check: OK (ILA > SMB > VML, combined largest, 13B > 1.8B)");
+    } else {
+        println!("\nshape check FAILED:");
+        for p in &problems {
+            println!("  - {p}");
+        }
+        std::process::exit(1);
+    }
+
+    // Wall-clock of the reproduction itself (simulator throughput).
+    println!(
+        "\nbench wall time: {} (30 engine runs, 6 models x 5 configs)",
+        benchkit::fmt_duration(t0.elapsed().as_secs_f64())
+    );
+    Ok(())
+}

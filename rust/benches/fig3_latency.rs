@@ -1,0 +1,36 @@
+//! Regenerates **Figure 3** — inference latency of vLLM across the six
+//! GPTQ models before/after each optimization.
+//!
+//! Run: `cargo bench --bench fig3_latency`
+
+use opt4gptq::repro;
+
+fn main() -> opt4gptq::Result<()> {
+    let grid = repro::serving_grid(32, 2025)?;
+    repro::fig3_table(&grid).print();
+
+    // Shape assertions specific to the latency figure.
+    let mut failures = Vec::new();
+    for row in &grid {
+        for ci in 1..5 {
+            if row.latency_reduction_pct(ci) <= 0.0 {
+                failures.push(format!(
+                    "{}: config {ci} did not reduce latency",
+                    row.model.name
+                ));
+            }
+        }
+        if row.latency_reduction_pct(4) < row.latency_reduction_pct(1) {
+            failures.push(format!("{}: combined < SMB alone", row.model.name));
+        }
+    }
+    if failures.is_empty() {
+        println!("\nshape check: OK (all configs reduce latency; combined strongest)");
+    } else {
+        for f in &failures {
+            println!("shape check FAILED: {f}");
+        }
+        std::process::exit(1);
+    }
+    Ok(())
+}

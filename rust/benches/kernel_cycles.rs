@@ -1,0 +1,56 @@
+//! Supporting bench: per-kernel simulated cycles behind Figures 2–3 —
+//! every GEMM shape of every paper model, across the five configs.
+//!
+//! Run: `cargo bench --bench kernel_cycles`
+
+use opt4gptq::benchkit::Table;
+use opt4gptq::dcusim::{Device, GemvKernel};
+use opt4gptq::models::PAPER_MODELS;
+use opt4gptq::OptConfig;
+
+fn main() {
+    let device = Device::z100();
+    let batch = 32;
+    let mut t = Table::new(
+        &format!("Per-shape kernel time (µs), decode batch {batch}, {}", device.cfg.name),
+        &["model", "shape (K→N)", "Baseline", "SMB", "VML", "ILA", "Opt4", "speedup", "base bound"],
+    );
+    for model in PAPER_MODELS.iter() {
+        let mut shapes = model.layer_gemms(batch);
+        shapes.dedup();
+        for p in shapes {
+            let mut cells = vec![model.name.to_string(), format!("{}→{}", p.k, p.n)];
+            let mut base = None;
+            let mut bound = "";
+            let mut last = 0.0;
+            for opt in OptConfig::ALL {
+                let r = device.simulate(&GemvKernel::new(p, opt));
+                if base.is_none() {
+                    base = Some(r.seconds);
+                    bound = r.bound;
+                }
+                last = r.seconds;
+                cells.push(format!("{:.1}", r.seconds * 1e6));
+            }
+            cells.push(format!("{:.2}x", base.unwrap() / last));
+            cells.push(bound.to_string());
+            t.row(cells);
+        }
+    }
+    t.print();
+
+    // Roofline summary for the headline shape (13B hidden GEMV).
+    let p = opt4gptq::dcusim::kernels::KernelParams { m: batch, k: 5120, n: 5120, group_size: 128 };
+    println!("\nroofline @ 13B qkv shape (m={batch}):");
+    for opt in OptConfig::ALL {
+        let r = device.simulate(&GemvKernel::new(p, opt));
+        println!(
+            "  {:<10} {:6.2} TFLOPS ({:4.1}% of peak)  {:7.1} GB/s useful  mem-eff {:.2}",
+            r.label,
+            r.achieved_tflops,
+            r.roofline_fraction * 100.0,
+            r.achieved_gbps,
+            r.mem_efficiency
+        );
+    }
+}

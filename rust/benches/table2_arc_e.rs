@@ -1,0 +1,25 @@
+//! Regenerates **Table II** — inference accuracy on ARC_E across the six
+//! models and five kernel configurations.
+//!
+//! Run: `cargo bench --bench table2_arc_e`
+
+use opt4gptq::repro;
+use opt4gptq::trace::arc::ArcSplit;
+
+fn main() {
+    let table = repro::accuracy_table(ArcSplit::Easy);
+    table.print();
+    for (model, _) in repro::PAPER_TABLE2_ARC_E {
+        let results = opt4gptq::eval::accuracy::evaluate(model, ArcSplit::Easy);
+        let base = results[0].accuracy();
+        for r in &results {
+            assert!(
+                (r.accuracy() - base).abs() < 0.01,
+                "{model} {}: drift {:.3}",
+                r.opt.label(),
+                (r.accuracy() - base).abs()
+            );
+        }
+    }
+    println!("\nshape check: OK (all variants within 1pp of baseline)");
+}

@@ -1,0 +1,408 @@
+//! The GPTQ 4-bit dequantize-GEMV/GEMM kernel model (all five paper
+//! variants).
+//!
+//! Geometry (documented in DESIGN.md): each thread block has
+//! `T = SPLIT_K × PAIRS` threads covering a `K_SLAB × N_TILE` tile of the
+//! weight matrix, where `N_TILE = 2 × PAIRS` (each thread owns one half2
+//! column pair) and the K slab is split `SPLIT_K` ways across threads
+//! (each thread accumulates `K_SLAB / SPLIT_K` products).  The grid is
+//! `(K / K_SLAB) × (N / N_TILE) × ceil(M / M_COUNT)`; split-K blocks
+//! accumulate into the same C tile — the atomicAdd the paper's SMB-Opt
+//! targets.
+//!
+//! Per-variant differences (paper §III):
+//! * baseline: every thread atomicAdds its half2 partial per row —
+//!   `SPLIT_K`-way same-address contention inside the block, times the
+//!   K-grid across blocks;
+//! * **SMB**: partials reduced through an LDS accumulator (same-address
+//!   LDS serialization, two barriers), then *one* thread per column pair
+//!   flushes — global atomic count drops by `SPLIT_K`;
+//! * **VML**: the cooperative staging of the activation slab into LDS
+//!   uses half2 loads — half the load/store instructions, same bytes;
+//! * **ILA**: the dequant/accumulate intrinsic sequence (`__hsub2`,
+//!   `__hmul2`, `__hfma2`) is replaced by native VOP3 packed-f16 ops —
+//!   one VALU slot each instead of the compiler's lowering, and the
+//!   enforced VGPR residency lowers the per-thread register count.
+
+use crate::dcusim::isa::{Instr, IsaCostModel};
+use crate::dcusim::lds::{self, LdsPattern};
+use crate::dcusim::memory::{self, AccessPattern, MemTraffic};
+use crate::dcusim::DcuConfig;
+use crate::OptConfig;
+
+/// Block geometry constants (see module docs).
+pub const K_SLAB: usize = 128;
+pub const SPLIT_K: usize = 8;
+pub const PAIRS: usize = 16;
+pub const N_TILE: usize = 2 * PAIRS; // 32 columns
+pub const THREADS: usize = SPLIT_K * PAIRS; // 128
+pub const M_COUNT_MAX: usize = 8;
+
+/// Problem shape of one quantized GEMM call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct KernelParams {
+    /// Rows of the activation matrix (decode: batch size; prefill: tokens).
+    pub m: usize,
+    /// In-features.
+    pub k: usize,
+    /// Out-features.
+    pub n: usize,
+    /// Quantization group size.
+    pub group_size: usize,
+}
+
+impl KernelParams {
+    pub fn flops(&self) -> u64 {
+        2 * self.m as u64 * self.k as u64 * self.n as u64
+    }
+
+    /// Bytes that *must* move for this call (packed weights + activations
+    /// + outputs) — the roofline numerator.
+    pub fn min_bytes(&self) -> u64 {
+        let wq = (self.k / 2 * self.n) as u64; // 4-bit weights
+        let scales = (self.k / self.group_size * self.n * 2) as u64;
+        let zeros = (self.k / self.group_size * self.n / 2) as u64;
+        let act = (self.m * self.k * 2) as u64;
+        let out = (self.m * self.n * 2) as u64;
+        wq + scales + zeros + act + out
+    }
+}
+
+/// Per-block cost summary produced by the kernel model.
+#[derive(Debug, Clone)]
+pub struct BlockWork {
+    pub threads: usize,
+    pub waves: usize,
+    pub lds_bytes: usize,
+    pub vgprs_per_thread: usize,
+    /// Wave-issue cycles for VALU work, summed over the block's waves.
+    pub valu_cycles: u64,
+    /// LDS pipe cycles (issue × conflict factors), per block.
+    pub lds_cycles: u64,
+    /// Memory instruction issue cycles, per block.
+    pub vmem_issue_cycles: u64,
+    /// One-trip dependency latency (staging load -> use), cycles.
+    pub dep_latency: u64,
+    pub mem: MemTraffic,
+    /// Global atomic ops issued by this block.
+    pub atomics_per_block: u64,
+    /// Contending atomic ops per hottest C address *within* this block.
+    pub intra_block_contention: u64,
+}
+
+/// The modelled kernel: shape + optimization toggles.
+#[derive(Debug, Clone, Copy)]
+pub struct GemvKernel {
+    pub params: KernelParams,
+    pub opt: OptConfig,
+    /// Activation-order checkpoints carry `b_q_perm`: the staging loads
+    /// become data-dependent gathers (paper Algorithm 2's perm branch),
+    /// which defeats half2 vectorization and coalescing.
+    pub act_order: bool,
+}
+
+impl GemvKernel {
+    pub fn new(params: KernelParams, opt: OptConfig) -> GemvKernel {
+        assert_eq!(params.k % K_SLAB, 0, "K must be a multiple of {K_SLAB}");
+        assert_eq!(params.n % N_TILE, 0, "N must be a multiple of {N_TILE}");
+        GemvKernel { params, opt, act_order: false }
+    }
+
+    /// Kernel over an act-order (`desc_act`) checkpoint.
+    pub fn with_act_order(params: KernelParams, opt: OptConfig) -> GemvKernel {
+        GemvKernel { act_order: true, ..Self::new(params, opt) }
+    }
+
+    /// Rows processed per block.
+    pub fn m_count(&self) -> usize {
+        self.params.m.min(M_COUNT_MAX)
+    }
+
+    /// Grid dimensions (gk, gn, gm).
+    pub fn grid(&self) -> (usize, usize, usize) {
+        let gk = self.params.k / K_SLAB;
+        let gn = self.params.n / N_TILE;
+        let gm = self.params.m.div_ceil(self.m_count());
+        (gk, gn, gm)
+    }
+
+    pub fn blocks(&self) -> u64 {
+        let (gk, gn, gm) = self.grid();
+        (gk * gn * gm) as u64
+    }
+
+    /// Total atomic ops contending on the hottest single C address across
+    /// the whole grid (the serialization chain the memory controller sees).
+    pub fn hot_address_contention(&self) -> u64 {
+        let (gk, _, _) = self.grid();
+        self.block_contention_per_address() * gk as u64
+    }
+
+    fn block_contention_per_address(&self) -> u64 {
+        if self.opt.smb {
+            1 // one flush per column pair per block
+        } else {
+            SPLIT_K as u64
+        }
+    }
+
+    /// Build the per-block cost summary under the device/ISA models.
+    pub fn block_work(&self, cfg: &DcuConfig, isa: &IsaCostModel) -> BlockWork {
+        let wave = cfg.wavefront as u64;
+        let waves = THREADS / cfg.wavefront;
+        let mc = self.m_count() as u64;
+        let kpt = (K_SLAB / SPLIT_K) as u64; // k-iterations per thread
+
+        let mut valu_instr: u64 = 0; // per-thread VALU slots
+        let mut lds_cycles: u64 = 0;
+        let mut vmem_issue: u64 = 0;
+        let mut mem = MemTraffic::default();
+
+        // ---------------- Phase A: stage activations into LDS -----------
+        // K_SLAB halves per row m, loaded cooperatively.  Wave-level issue
+        // count: 128 half loads need 2 wave-issues (64 lanes each); half2
+        // vectorization (VML) covers them in 1.
+        // Act-order checkpoints gather through b_q_perm: no half2
+        // vectorization possible (Algorithm 2 falls back to scalar loads)
+        // and the accesses stop coalescing.
+        let vectorized = self.opt.vml && !self.act_order;
+        let stage_wave_issues: u64 =
+            mc * (K_SLAB as u64 / wave) / if vectorized { 2 } else { 1 };
+        let stage_instr = if vectorized {
+            Instr::GlobalLoadHalf2
+        } else {
+            Instr::GlobalLoadHalf
+        };
+        vmem_issue += stage_wave_issues.max(1) * isa.issue_cycles(stage_instr, 1);
+        let stage_pattern = if self.act_order {
+            AccessPattern::Gather { elem_bytes: 2 }
+        } else if vectorized {
+            AccessPattern::Strided { elem_bytes: 4, stride_bytes: 4 }
+        } else {
+            AccessPattern::Strided { elem_bytes: 2, stride_bytes: 2 }
+        };
+        // Transactions: per row m, one wave-front sweep over K_SLAB halves.
+        let waves_touching = (K_SLAB as u64 * if vectorized { 1 } else { 2 } / 2).div_ceil(wave);
+        mem.read_transactions +=
+            mc * waves_touching * memory::transactions_per_wave(stage_pattern, wave);
+        mem.read_bytes_useful += mc * (K_SLAB as u64) * 2;
+        // VML pays 2 extra VALU (low2half/high2half splits) per load.
+        if vectorized {
+            valu_instr += 2 * stage_wave_issues.max(1);
+        }
+        // LDS writes for the staged slab (unit stride, conflict-free).
+        let lds_writes = mc * K_SLAB as u64 / THREADS as u64;
+        lds_cycles += lds_writes
+            * lds::access_cycles(cfg, LdsPattern::Strided { stride_words: 1 }, wave)
+            * waves as u64;
+        // Barrier after staging.
+        valu_instr += 0;
+        let mut barriers: u64 = 1;
+
+        // ---------------- Phase B: dequantize + accumulate --------------
+        // Weight loads per thread: 2 qweight words per column × 2 columns
+        // (kpt=16 rows span 2 packed words), 1 scales half2, 1 qzeros word.
+        let weight_loads: u64 = 4 + 1 + 1;
+        vmem_issue += weight_loads * isa.issue_cycles(Instr::GlobalLoadWord, 1);
+        // qweight layout is row-major [K/8, N]: within one packed k-row,
+        // the block's N_TILE consecutive columns are contiguous (128 B =
+        // 2 transactions); the block touches K_SLAB/8 packed rows.
+        let qw_words_per_block = (K_SLAB / 8 * N_TILE) as u64;
+        let row_txns = ((N_TILE * 4) as u64).div_ceil(memory::TRANSACTION_BYTES);
+        mem.read_transactions += (K_SLAB / 8) as u64 * row_txns;
+        mem.read_bytes_useful += qw_words_per_block * 4;
+        // scales + zeros (amortized per group; K_SLAB <= group_size here).
+        mem.read_transactions += 2;
+        mem.read_bytes_useful += (N_TILE * 2 + N_TILE / 2) as u64;
+
+        // Dequant per (k, pair): unpack 4 VALU; then packed sub2 + mul2.
+        let sub2 = if self.opt.ila { Instr::NativeAddF16 } else { Instr::CompilerHadd2 };
+        let mul2 = if self.opt.ila { Instr::NativeAddF16 } else { Instr::CompilerHadd2 };
+        let fma2 = if self.opt.ila { Instr::NativeMadF16 } else { Instr::CompilerHfma2 };
+        let unpack_valu = 4 * kpt;
+        valu_instr += unpack_valu;
+        let dequant_packed = kpt; // one sub2+mul2 pair per k
+        let dequant_cycles_per_thread = dequant_packed
+            * (isa.issue_cycles(sub2, 1) + isa.issue_cycles(mul2, 1))
+            / isa.issue_cycles(Instr::Valu, 1).max(1);
+        valu_instr += dequant_cycles_per_thread;
+        // LDS broadcast reads of the staged activation + fma per (m, k).
+        let lds_reads = mc * kpt;
+        lds_cycles += lds_reads
+            * lds::access_cycles(cfg, LdsPattern::Broadcast, wave)
+            * waves as u64;
+        let fma_cycles_per_thread =
+            mc * kpt * isa.issue_cycles(fma2, 1) / isa.issue_cycles(Instr::Valu, 1).max(1);
+        valu_instr += fma_cycles_per_thread;
+        // Loop/address overhead.
+        valu_instr += 8 + kpt;
+
+        // ---------------- Phase C: write back ---------------------------
+        let atomics_per_block: u64;
+        if self.opt.smb {
+            // LDS same-address accumulation (SPLIT_K-way serialization per
+            // column pair), two barriers, then one flush per pair per m by
+            // the designated thread (paper Algorithm 1: single-threaded
+            // writes).
+            lds_cycles += mc
+                * lds::access_cycles(cfg, LdsPattern::SameAddressAccumulate, SPLIT_K as u64)
+                * waves as u64;
+            barriers += 2;
+            atomics_per_block = mc * PAIRS as u64;
+        } else {
+            // Every thread atomicAdds its half2 partial per row.
+            atomics_per_block = mc * THREADS as u64;
+        }
+        vmem_issue += atomics_per_block / THREADS as u64 * isa.issue_cycles(Instr::GlobalAtomicAdd, 1)
+            + 1;
+        mem.atomic_ops += atomics_per_block;
+        // Atomics to the block's output tile coalesce in L2: the DRAM
+        // traffic is one cache line per row (N_TILE f16 = 64 B); the
+        // *serialization* cost is priced by the machine's atomic terms.
+        mem.write_transactions += mc;
+        mem.write_bytes_useful += mc * N_TILE as u64 * 2;
+
+        valu_instr += barriers * isa.barrier_cost / isa.issue_cycles(Instr::Valu, 1).max(1);
+
+        // VALU wave-issue cycles over the block.
+        let valu_cycles = valu_instr * isa.issue_cycles(Instr::Valu, 1) * waves as u64;
+
+        // One-trip dependency latency: staging load -> LDS -> dequant load.
+        let dep_latency = cfg.mem_latency_cycles + cfg.lds_latency_cycles + cfg.mem_latency_cycles;
+
+        // ILA's register-residency constraint lowers VGPR pressure.
+        let vgprs = if self.opt.ila { 64 } else { 84 };
+
+        BlockWork {
+            threads: THREADS,
+            waves,
+            lds_bytes: self.m_count() * K_SLAB * 2 + if self.opt.smb { PAIRS * 4 * self.m_count() } else { 0 },
+            vgprs_per_thread: vgprs,
+            valu_cycles,
+            lds_cycles,
+            vmem_issue_cycles: vmem_issue,
+            dep_latency,
+            mem,
+            atomics_per_block,
+            intra_block_contention: self.block_contention_per_address(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> KernelParams {
+        KernelParams { m: 1, k: 4096, n: 4096, group_size: 128 }
+    }
+
+    #[test]
+    fn grid_covers_problem() {
+        let k = GemvKernel::new(params(), OptConfig::BASELINE);
+        let (gk, gn, gm) = k.grid();
+        assert_eq!(gk * K_SLAB, 4096);
+        assert_eq!(gn * N_TILE, 4096);
+        assert_eq!(gm, 1);
+    }
+
+    #[test]
+    fn smb_cuts_global_atomics_by_split_factor() {
+        let cfg = DcuConfig::z100();
+        let isa = IsaCostModel::default();
+        let base = GemvKernel::new(params(), OptConfig::BASELINE).block_work(&cfg, &isa);
+        let smb = GemvKernel::new(params(), OptConfig::SMB).block_work(&cfg, &isa);
+        assert_eq!(base.atomics_per_block / smb.atomics_per_block, SPLIT_K as u64);
+        assert!(smb.lds_cycles > base.lds_cycles, "SMB pays LDS serialization");
+    }
+
+    #[test]
+    fn vml_cuts_staging_issue() {
+        let cfg = DcuConfig::z100();
+        let isa = IsaCostModel::default();
+        let base = GemvKernel::new(params(), OptConfig::BASELINE).block_work(&cfg, &isa);
+        let vml = GemvKernel::new(params(), OptConfig::VML).block_work(&cfg, &isa);
+        assert!(vml.vmem_issue_cycles < base.vmem_issue_cycles);
+        // same useful bytes either way
+        assert_eq!(vml.mem.read_bytes_useful, base.mem.read_bytes_useful);
+    }
+
+    #[test]
+    fn ila_cuts_valu_cycles() {
+        let cfg = DcuConfig::z100();
+        let isa = IsaCostModel::default();
+        let base = GemvKernel::new(params(), OptConfig::BASELINE).block_work(&cfg, &isa);
+        let ila = GemvKernel::new(params(), OptConfig::ILA).block_work(&cfg, &isa);
+        assert!(
+            (ila.valu_cycles as f64) < 0.8 * base.valu_cycles as f64,
+            "ILA should cut VALU cycles substantially: {} vs {}",
+            ila.valu_cycles,
+            base.valu_cycles
+        );
+        assert!(ila.vgprs_per_thread < base.vgprs_per_thread);
+    }
+
+    #[test]
+    fn hot_address_contention_scales_with_split_k_grid() {
+        let p1 = KernelParams { m: 1, k: 4096, n: 4096, group_size: 128 };
+        let p2 = KernelParams { m: 1, k: 8192, n: 4096, group_size: 128 };
+        let k1 = GemvKernel::new(p1, OptConfig::BASELINE).hot_address_contention();
+        let k2 = GemvKernel::new(p2, OptConfig::BASELINE).hot_address_contention();
+        assert_eq!(k2, 2 * k1);
+    }
+
+    #[test]
+    fn min_bytes_is_quarter_of_fp16_weights() {
+        let p = params();
+        let fp16_weights = (p.k * p.n * 2) as u64;
+        assert!(p.min_bytes() < fp16_weights / 3, "4-bit packing ~4x smaller");
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple")]
+    fn rejects_unaligned_shapes() {
+        GemvKernel::new(KernelParams { m: 1, k: 100, n: 64, group_size: 50 },
+                        OptConfig::BASELINE);
+    }
+}
+
+#[cfg(test)]
+mod act_order_tests {
+    use super::*;
+    use crate::dcusim::Device;
+
+    #[test]
+    fn act_order_defeats_vml() {
+        // With b_q_perm gathers, VML's speedup over baseline must vanish
+        // (Algorithm 2 falls back to scalar gathered loads).
+        let d = Device::z100();
+        let p = KernelParams { m: 32, k: 4096, n: 4096, group_size: 128 };
+        let base = d.simulate(&GemvKernel::with_act_order(p, OptConfig::BASELINE)).seconds;
+        let vml = d.simulate(&GemvKernel::with_act_order(p, OptConfig::VML)).seconds;
+        assert!((vml / base - 1.0).abs() < 0.005, "VML must be neutral under act-order");
+        // ILA cannot hurt, but its compute savings are largely hidden
+        // behind the gather-inflated bandwidth floor — act-order makes
+        // the kernel memory-bound.
+        let ila = d.simulate(&GemvKernel::with_act_order(p, OptConfig::ILA)).seconds;
+        assert!(ila <= base);
+        let ila_seq = d.simulate(&GemvKernel::new(p, OptConfig::ILA)).seconds;
+        let base_seq = d.simulate(&GemvKernel::new(p, OptConfig::BASELINE)).seconds;
+        assert!(
+            base_seq / ila_seq > base / ila,
+            "ILA's relative gain must shrink under act-order"
+        );
+    }
+
+    #[test]
+    fn act_order_costs_bandwidth() {
+        let d = Device::z100();
+        let p = KernelParams { m: 8, k: 4096, n: 4096, group_size: 128 };
+        let seq = d.simulate(&GemvKernel::new(p, OptConfig::BASELINE));
+        let act = d.simulate(&GemvKernel::with_act_order(p, OptConfig::BASELINE));
+        assert!(
+            act.total_read_transactions > seq.total_read_transactions,
+            "gathers must generate more transactions"
+        );
+        assert!(act.seconds >= seq.seconds);
+    }
+}

@@ -1,0 +1,12 @@
+//! Kernel programs for the simulator.
+//!
+//! [`GemvKernel`] is the paper's GPTQ dequantize-GEMM (the vLLM/exllama
+//! `gemm_half_q_half` family) expressed as per-block instruction and
+//! memory-traffic counts, with the three optimizations as toggles
+//! ([`crate::OptConfig`]).  The counts follow the kernel structure in the
+//! paper's Algorithms 1–3; the geometry constants are documented in
+//! DESIGN.md §Per-experiment-index.
+
+pub mod gemv;
+
+pub use gemv::{GemvKernel, KernelParams};

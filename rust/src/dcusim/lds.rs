@@ -1,0 +1,81 @@
+//! LDS (shared-memory) model: bank conflicts and same-address
+//! serialization — the costs SMB-Opt trades global atomics against.
+
+use super::DcuConfig;
+
+/// Access pattern of a wavefront-wide LDS access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LdsPattern {
+    /// Lane i accesses word (base + i*stride_words) — conflict-free when
+    /// stride is odd / unit.
+    Strided { stride_words: u64 },
+    /// All lanes read the same word — broadcast, conflict-free on GCN.
+    Broadcast,
+    /// All lanes *accumulate into* the same word — full serialization
+    /// (the SMB shared accumulator before the tree/sequential reduction).
+    SameAddressAccumulate,
+}
+
+/// Cycles of extra serialization (multiplier on the base issue cost) a
+/// wavefront access suffers from bank conflicts.
+pub fn conflict_factor(cfg: &DcuConfig, pattern: LdsPattern, wavefront: u64) -> u64 {
+    let banks = cfg.lds_banks as u64;
+    match pattern {
+        LdsPattern::Strided { stride_words } => {
+            if stride_words == 0 {
+                return 1; // broadcast-like
+            }
+            // lanes hitting the same bank: gcd-based cyclic collision
+            let g = gcd(stride_words % banks, banks);
+            if g == 0 { 1 } else { (wavefront.min(banks) / (banks / g.max(1))).max(1) }
+        }
+        LdsPattern::Broadcast => 1,
+        LdsPattern::SameAddressAccumulate => wavefront,
+    }
+}
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if a == 0 { b } else { gcd(b % a, a) }
+}
+
+/// Cycles one wavefront LDS access occupies the LDS pipe: one issue slot
+/// multiplied by the conflict serialization factor (the access *latency*
+/// is hidden by other waves and priced in the machine's dependency term).
+pub fn access_cycles(cfg: &DcuConfig, pattern: LdsPattern, wavefront: u64) -> u64 {
+    conflict_factor(cfg, pattern, wavefront)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_stride_is_conflict_free() {
+        let cfg = DcuConfig::z100();
+        assert_eq!(conflict_factor(&cfg, LdsPattern::Strided { stride_words: 1 }, 64), 1);
+    }
+
+    #[test]
+    fn power_of_two_stride_conflicts() {
+        let cfg = DcuConfig::z100();
+        let f32_stride = conflict_factor(&cfg, LdsPattern::Strided { stride_words: 32 }, 64);
+        assert!(f32_stride >= 32, "stride-32 over 32 banks must serialize, got {f32_stride}");
+    }
+
+    #[test]
+    fn broadcast_free_same_address_accumulate_serializes() {
+        let cfg = DcuConfig::z100();
+        assert_eq!(conflict_factor(&cfg, LdsPattern::Broadcast, 64), 1);
+        assert_eq!(conflict_factor(&cfg, LdsPattern::SameAddressAccumulate, 64), 64);
+    }
+
+    #[test]
+    fn lds_serialization_far_cheaper_than_global_atomics() {
+        // The core SMB-Opt economics: a 64-way LDS serialization must cost
+        // far less than a 64-way global atomic chain.
+        let cfg = DcuConfig::z100();
+        let lds = access_cycles(&cfg, LdsPattern::SameAddressAccumulate, 64);
+        let global = super::super::memory::atomic_chain_cycles(&cfg, 64);
+        assert!(lds * 4 < global, "lds={lds} global={global}");
+    }
+}

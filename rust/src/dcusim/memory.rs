@@ -1,0 +1,134 @@
+//! Global-memory model: coalescing, transaction counting, atomic
+//! contention chains, and the device bandwidth bound.
+
+use super::DcuConfig;
+
+/// Access pattern of one wavefront-wide global access, used to compute
+/// the number of memory transactions it generates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessPattern {
+    /// Lane i accesses base + i*stride_bytes (unit-stride when
+    /// `stride == elem_size`).
+    Strided { elem_bytes: u64, stride_bytes: u64 },
+    /// Every lane hits the same address (broadcast / same-word atomic).
+    SameAddress { elem_bytes: u64 },
+    /// Data-dependent gather (e.g. `b_q_perm` activation reordering).
+    Gather { elem_bytes: u64 },
+}
+
+pub const TRANSACTION_BYTES: u64 = 64;
+
+/// Number of memory transactions a 64-lane wavefront access generates.
+pub fn transactions_per_wave(pattern: AccessPattern, wavefront: u64) -> u64 {
+    match pattern {
+        AccessPattern::Strided { elem_bytes, stride_bytes } => {
+            let span = stride_bytes.max(elem_bytes) * (wavefront - 1) + elem_bytes;
+            span.div_ceil(TRANSACTION_BYTES).max(1)
+        }
+        AccessPattern::SameAddress { .. } => 1,
+        AccessPattern::Gather { .. } => wavefront, // worst-case: one per lane
+    }
+}
+
+/// Aggregate global-memory traffic of one thread block.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemTraffic {
+    /// Read transactions issued by the block.
+    pub read_transactions: u64,
+    /// Bytes actually needed (useful bytes, for roofline/efficiency).
+    pub read_bytes_useful: u64,
+    /// Write/atomic transactions.
+    pub write_transactions: u64,
+    pub write_bytes_useful: u64,
+    /// Number of global atomic operations (each serializes per address).
+    pub atomic_ops: u64,
+}
+
+impl MemTraffic {
+    pub fn total_transaction_bytes(&self) -> u64 {
+        (self.read_transactions + self.write_transactions) * TRANSACTION_BYTES
+    }
+
+    pub fn add(&mut self, other: &MemTraffic) {
+        self.read_transactions += other.read_transactions;
+        self.read_bytes_useful += other.read_bytes_useful;
+        self.write_transactions += other.write_transactions;
+        self.write_bytes_useful += other.write_bytes_useful;
+        self.atomic_ops += other.atomic_ops;
+    }
+}
+
+/// Atomic contention: `ops_per_address` operations target each hot
+/// address; they serialize at the memory controller.  Returns the length
+/// of the serialization chain in cycles — a *global* critical-path bound
+/// that batching/occupancy cannot hide.
+pub fn atomic_chain_cycles(cfg: &DcuConfig, ops_per_address: u64) -> u64 {
+    ops_per_address.saturating_mul(cfg.atomic_service_cycles)
+}
+
+/// Device-level bandwidth bound: cycles to move `bytes` at full HBM rate.
+pub fn bandwidth_cycles(cfg: &DcuConfig, bytes: u64) -> f64 {
+    bytes as f64 / cfg.mem_bw_bytes * cfg.clock_hz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_stride_half_coalesces() {
+        // 64 lanes × 2B contiguous = 128 B = 2 transactions of 64 B.
+        let t = transactions_per_wave(
+            AccessPattern::Strided { elem_bytes: 2, stride_bytes: 2 }, 64);
+        assert_eq!(t, 2);
+    }
+
+    #[test]
+    fn unit_stride_word_coalesces() {
+        // 64 lanes × 4B contiguous = 256 B = 4 transactions.
+        let t = transactions_per_wave(
+            AccessPattern::Strided { elem_bytes: 4, stride_bytes: 4 }, 64);
+        assert_eq!(t, 4);
+    }
+
+    #[test]
+    fn vectorized_half2_halves_instructions_not_bytes() {
+        // One half2 access by 32 lanes covers the same 128 B:
+        let t = transactions_per_wave(
+            AccessPattern::Strided { elem_bytes: 4, stride_bytes: 4 }, 32);
+        assert_eq!(t, 2);
+    }
+
+    #[test]
+    fn large_stride_wastes_transactions() {
+        let t = transactions_per_wave(
+            AccessPattern::Strided { elem_bytes: 2, stride_bytes: 256 }, 64);
+        assert!(t > 60, "strided-by-256B should be ~1 transaction per lane, got {t}");
+    }
+
+    #[test]
+    fn gather_is_worst_case() {
+        let t = transactions_per_wave(AccessPattern::Gather { elem_bytes: 2 }, 64);
+        assert_eq!(t, 64);
+    }
+
+    #[test]
+    fn same_address_is_single_transaction() {
+        let t = transactions_per_wave(AccessPattern::SameAddress { elem_bytes: 4 }, 64);
+        assert_eq!(t, 1);
+    }
+
+    #[test]
+    fn atomic_chain_scales_with_contention() {
+        let cfg = DcuConfig::z100();
+        assert!(atomic_chain_cycles(&cfg, 128) > 10 * atomic_chain_cycles(&cfg, 8));
+    }
+
+    #[test]
+    fn bandwidth_bound_sane() {
+        let cfg = DcuConfig::z100();
+        // 1 GB at 1 TB/s = 1 ms = ~1.32M cycles.
+        let cyc = bandwidth_cycles(&cfg, 1 << 30);
+        assert!((cyc - 1.32e9 * ((1u64 << 30) as f64 / 1e12)).abs() < 1e3);
+    }
+}

@@ -1,0 +1,111 @@
+//! Kernel launch report: the quantities the paper's evaluation reasons
+//! about (time, bound breakdown, memory efficiency, roofline position).
+
+use super::kernels::gemv::BlockWork;
+use super::kernels::GemvKernel;
+use super::machine::SimOutcome;
+use super::DcuConfig;
+
+#[derive(Debug, Clone)]
+pub struct KernelReport {
+    pub label: String,
+    pub cycles: f64,
+    pub seconds: f64,
+    /// Which resource bound won (for the §Perf iteration log).
+    pub bound: &'static str,
+    pub outcome: SimOutcome,
+    pub blocks: u64,
+    pub occupancy_blocks: usize,
+    pub total_atomics: u64,
+    pub total_read_transactions: u64,
+    pub achieved_tflops: f64,
+    pub achieved_gbps: f64,
+    /// useful bytes / transaction bytes.
+    pub mem_efficiency: f64,
+    /// fraction of device peak f16 throughput achieved.
+    pub roofline_fraction: f64,
+}
+
+impl KernelReport {
+    pub fn build(
+        cfg: &DcuConfig,
+        kernel: &GemvKernel,
+        block: &BlockWork,
+        outcome: SimOutcome,
+    ) -> KernelReport {
+        let seconds = outcome.cycles / cfg.clock_hz;
+        let blocks = kernel.blocks();
+        let flops = kernel.params.flops() as f64;
+        let useful_bytes =
+            (block.mem.read_bytes_useful + block.mem.write_bytes_useful) as f64 * blocks as f64;
+        let transaction_bytes = block.mem.total_transaction_bytes() as f64 * blocks as f64;
+        // Peak packed-f16 rate: 2 ops/lane/cycle × lanes × CUs × 2 (fma).
+        let peak_flops = cfg.clock_hz
+            * (cfg.compute_units * cfg.simds_per_cu * 16) as f64
+            * 2.0
+            * 2.0;
+
+        let bounds = [
+            ("compute", outcome.compute_bound_cycles),
+            ("lds", outcome.lds_bound_cycles),
+            ("vmem-issue", outcome.vmem_issue_cycles),
+            ("bandwidth", outcome.bandwidth_cycles),
+            ("atomic-chain", outcome.atomic_chain_cycles),
+            ("atomic-throughput", outcome.atomic_throughput_cycles),
+        ];
+        let bound = bounds
+            .iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap()
+            .0;
+
+        KernelReport {
+            label: kernel.opt.label().to_string(),
+            cycles: outcome.cycles,
+            seconds,
+            bound,
+            outcome,
+            blocks,
+            occupancy_blocks: outcome.blocks_per_cu,
+            total_atomics: block.mem.atomic_ops * blocks,
+            total_read_transactions: block.mem.read_transactions * blocks,
+            achieved_tflops: flops / seconds / 1e12,
+            achieved_gbps: useful_bytes / seconds / 1e9,
+            mem_efficiency: (useful_bytes / transaction_bytes).min(1.0),
+            roofline_fraction: (flops / seconds) / peak_flops,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dcusim::kernels::KernelParams;
+    use crate::dcusim::Device;
+    use crate::OptConfig;
+
+    #[test]
+    fn bound_is_one_of_the_known_resources() {
+        let d = Device::z100();
+        let r = d.simulate(&GemvKernel::new(
+            KernelParams { m: 1, k: 4096, n: 4096, group_size: 128 },
+            OptConfig::BASELINE,
+        ));
+        assert!(
+            ["compute", "lds", "vmem-issue", "bandwidth", "atomic-chain", "atomic-throughput"]
+                .contains(&r.bound)
+        );
+    }
+
+    #[test]
+    fn roofline_fraction_below_one() {
+        let d = Device::z100();
+        for opt in OptConfig::ALL {
+            let r = d.simulate(&GemvKernel::new(
+                KernelParams { m: 8, k: 4096, n: 4096, group_size: 128 },
+                opt,
+            ));
+            assert!(r.roofline_fraction < 1.0, "{}: {}", r.label, r.roofline_fraction);
+        }
+    }
+}

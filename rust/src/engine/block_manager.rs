@@ -1,0 +1,278 @@
+//! Paged KV-cache block manager (the PagedAttention memory layer).
+//!
+//! KV storage is carved into fixed-size blocks of `block_size` tokens;
+//! each sequence owns a block table mapping its logical positions onto
+//! physical blocks.  Blocks are reference-counted so identical prompt
+//! prefixes can share physical blocks (prefix caching); copy-on-write is
+//! not needed here (no beam search), but freeing, reuse and the
+//! out-of-memory/preemption path are fully modelled — they shape the
+//! scheduler behaviour the paper's throughput runs exercise.
+
+use std::collections::HashMap;
+
+/// Physical block id.
+pub type BlockId = usize;
+
+#[derive(Debug, Clone)]
+struct Block {
+    refcount: usize,
+    /// Hash of the full token prefix this block completes (prefix cache
+    /// key); None for blocks still being filled.
+    prefix_hash: Option<u64>,
+}
+
+/// Allocator + per-sequence block tables.
+#[derive(Debug)]
+pub struct BlockManager {
+    pub block_size: usize,
+    blocks: Vec<Block>,
+    free: Vec<BlockId>,
+    /// prefix hash -> physical block (prefix cache).
+    prefix_index: HashMap<u64, BlockId>,
+    /// sequence id -> block table.
+    tables: HashMap<usize, Vec<BlockId>>,
+    /// Cache hit statistics.
+    pub prefix_hits: usize,
+}
+
+impl BlockManager {
+    pub fn new(total_blocks: usize, block_size: usize) -> BlockManager {
+        assert!(block_size > 0 && total_blocks > 0);
+        BlockManager {
+            block_size,
+            blocks: (0..total_blocks)
+                .map(|_| Block { refcount: 0, prefix_hash: None })
+                .collect(),
+            free: (0..total_blocks).rev().collect(),
+            prefix_index: HashMap::new(),
+            tables: HashMap::new(),
+            prefix_hits: 0,
+        }
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn blocks_needed(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Can a sequence of `tokens` tokens be admitted right now?
+    pub fn can_allocate(&self, tokens: usize) -> bool {
+        self.blocks_needed(tokens) <= self.free.len()
+    }
+
+    /// Allocate the block table for a new sequence's prompt, reusing
+    /// prefix-cached blocks for fully-filled prefix blocks.
+    pub fn allocate(&mut self, seq_id: usize, prompt: &[u32]) -> bool {
+        assert!(!self.tables.contains_key(&seq_id), "sequence already allocated");
+        let needed = self.blocks_needed(prompt.len().max(1));
+        let mut table = Vec::with_capacity(needed);
+        let mut rollback = Vec::new();
+        let mut hasher: u64 = 0xcbf2_9ce4_8422_2325;
+        for bi in 0..needed {
+            let start = bi * self.block_size;
+            let end = ((bi + 1) * self.block_size).min(prompt.len());
+            let full = end - start == self.block_size;
+            let key = if full {
+                for &t in &prompt[start..end] {
+                    hasher ^= t as u64;
+                    hasher = hasher.wrapping_mul(0x100_0000_01b3);
+                }
+                Some(hasher)
+            } else {
+                None
+            };
+            if let Some(k) = key {
+                if let Some(&b) = self.prefix_index.get(&k) {
+                    self.blocks[b].refcount += 1;
+                    self.prefix_hits += 1;
+                    table.push(b);
+                    continue;
+                }
+            }
+            match self.free.pop() {
+                Some(b) => {
+                    self.blocks[b].refcount = 1;
+                    self.blocks[b].prefix_hash = key;
+                    if let Some(k) = key {
+                        self.prefix_index.insert(k, b);
+                    }
+                    table.push(b);
+                    rollback.push(b);
+                }
+                None => {
+                    // Roll back everything taken so far.
+                    for &b in table.iter() {
+                        self.release_block(b);
+                    }
+                    return false;
+                }
+            }
+        }
+        self.tables.insert(seq_id, table);
+        true
+    }
+
+    /// Append one generated token; allocates a fresh block at block
+    /// boundaries.  Returns false when out of blocks (caller preempts).
+    pub fn append_token(&mut self, seq_id: usize, total_tokens: usize) -> bool {
+        let needed = self.blocks_needed(total_tokens);
+        let table = self.tables.get_mut(&seq_id).expect("unknown sequence");
+        debug_assert!(needed >= table.len());
+        if needed == table.len() {
+            return true;
+        }
+        match self.free.pop() {
+            Some(b) => {
+                self.blocks[b].refcount = 1;
+                self.blocks[b].prefix_hash = None;
+                table.push(b);
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn release_block(&mut self, b: BlockId) {
+        let blk = &mut self.blocks[b];
+        assert!(blk.refcount > 0, "double free of block {b}");
+        blk.refcount -= 1;
+        if blk.refcount == 0 {
+            if let Some(k) = blk.prefix_hash.take() {
+                self.prefix_index.remove(&k);
+            }
+            self.free.push(b);
+        }
+    }
+
+    /// Free a sequence's entire table (finish or preemption).
+    pub fn free_sequence(&mut self, seq_id: usize) {
+        if let Some(table) = self.tables.remove(&seq_id) {
+            for b in table {
+                self.release_block(b);
+            }
+        }
+    }
+
+    pub fn table(&self, seq_id: usize) -> Option<&[BlockId]> {
+        self.tables.get(&seq_id).map(|t| t.as_slice())
+    }
+
+    /// Invariant check used by property tests: refcounts, free list and
+    /// tables must be mutually consistent.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut counted: HashMap<BlockId, usize> = HashMap::new();
+        for table in self.tables.values() {
+            for &b in table {
+                *counted.entry(b).or_default() += 1;
+            }
+        }
+        for (b, blk) in self.blocks.iter().enumerate() {
+            let c = counted.get(&b).copied().unwrap_or(0);
+            if blk.refcount != c {
+                return Err(format!("block {b}: refcount {} != table refs {c}", blk.refcount));
+            }
+            let in_free = self.free.contains(&b);
+            if (blk.refcount == 0) != in_free {
+                return Err(format!("block {b}: refcount {} vs free-list {in_free}", blk.refcount));
+            }
+        }
+        let used: usize = self.blocks.iter().filter(|b| b.refcount > 0).count();
+        if used + self.free.len() != self.blocks.len() {
+            return Err("used + free != total".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_and_free_roundtrip() {
+        let mut bm = BlockManager::new(16, 4);
+        assert!(bm.allocate(1, &[1, 2, 3, 4, 5]));
+        assert_eq!(bm.table(1).unwrap().len(), 2);
+        assert_eq!(bm.free_blocks(), 14);
+        bm.free_sequence(1);
+        assert_eq!(bm.free_blocks(), 16);
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn append_allocates_at_boundaries() {
+        let mut bm = BlockManager::new(8, 4);
+        assert!(bm.allocate(1, &[1, 2, 3]));
+        assert_eq!(bm.table(1).unwrap().len(), 1);
+        assert!(bm.append_token(1, 4)); // fills block 0
+        assert_eq!(bm.table(1).unwrap().len(), 1);
+        assert!(bm.append_token(1, 5)); // needs block 1
+        assert_eq!(bm.table(1).unwrap().len(), 2);
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn out_of_memory_reported_and_rolled_back() {
+        let mut bm = BlockManager::new(2, 4);
+        assert!(bm.allocate(1, &[1, 1, 1, 1, 2, 2, 2, 2])); // uses both blocks
+        // different content -> no prefix sharing -> must fail
+        assert!(!bm.allocate(2, &[9, 9, 9, 9, 8, 8, 8, 8]));
+        assert!(bm.table(2).is_none());
+        bm.check_invariants().unwrap();
+        bm.free_sequence(1);
+        assert!(bm.allocate(2, &[9, 9, 9, 9, 8, 8, 8, 8]));
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefix_sharing_reuses_full_blocks() {
+        let mut bm = BlockManager::new(16, 4);
+        let prompt: Vec<u32> = (0..8).collect();
+        assert!(bm.allocate(1, &prompt));
+        let before = bm.free_blocks();
+        assert!(bm.allocate(2, &prompt));
+        // Both full blocks shared: no new blocks consumed.
+        assert_eq!(bm.free_blocks(), before);
+        assert_eq!(bm.prefix_hits, 2);
+        assert_eq!(bm.table(1).unwrap(), bm.table(2).unwrap());
+        bm.check_invariants().unwrap();
+        // Freeing one keeps the shared blocks alive for the other.
+        bm.free_sequence(1);
+        bm.check_invariants().unwrap();
+        assert!(bm.table(2).is_some());
+        bm.free_sequence(2);
+        assert_eq!(bm.free_blocks(), 16);
+    }
+
+    #[test]
+    fn divergent_prompts_do_not_share() {
+        let mut bm = BlockManager::new(16, 4);
+        assert!(bm.allocate(1, &[1, 2, 3, 4]));
+        assert!(bm.allocate(2, &[1, 2, 3, 9]));
+        assert_ne!(bm.table(1).unwrap(), bm.table(2).unwrap());
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn partial_tail_block_is_private() {
+        let mut bm = BlockManager::new(16, 4);
+        assert!(bm.allocate(1, &[1, 2, 3, 4, 5])); // 1 full + 1 partial
+        assert!(bm.allocate(2, &[1, 2, 3, 4, 5]));
+        let t1 = bm.table(1).unwrap();
+        let t2 = bm.table(2).unwrap();
+        assert_eq!(t1[0], t2[0], "full prefix block shared");
+        assert_ne!(t1[1], t2[1], "partial tail must be private");
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "already allocated")]
+    fn double_allocate_panics() {
+        let mut bm = BlockManager::new(4, 4);
+        bm.allocate(1, &[1]);
+        bm.allocate(1, &[1]);
+    }
+}

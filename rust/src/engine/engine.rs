@@ -1,0 +1,302 @@
+//! The engine step loop: schedule → execute → sample → account.
+
+use std::collections::HashMap;
+
+use crate::rng::Rng;
+use crate::Result;
+
+use super::backend::{Backend, DecodeEntry};
+use super::metrics::Metrics;
+use super::request::{Request, RequestOutput};
+use super::sampler;
+use super::scheduler::{ScheduledWork, Scheduler};
+use super::sequence::SeqState;
+use super::EngineConfig;
+
+/// Result of a full engine run.
+#[derive(Debug, Clone)]
+pub struct EngineReport {
+    pub outputs: Vec<RequestOutput>,
+    pub metrics: Metrics,
+}
+
+/// The serving engine: owns the scheduler and a backend.
+pub struct Engine<B: Backend> {
+    pub cfg: EngineConfig,
+    pub scheduler: Scheduler,
+    pub backend: B,
+    /// Virtual (sim) or accumulated-wall (PJRT) clock, seconds.
+    pub clock: f64,
+    pub metrics: Metrics,
+    rngs: HashMap<usize, Rng>,
+    outputs: Vec<RequestOutput>,
+}
+
+impl<B: Backend> Engine<B> {
+    pub fn new(mut cfg: EngineConfig, backend: B) -> Engine<B> {
+        cfg.max_batch = cfg.max_batch.min(backend.max_batch());
+        cfg.max_seq_len = cfg.max_seq_len.min(backend.max_seq_len());
+        Engine {
+            scheduler: Scheduler::new(cfg),
+            backend,
+            clock: 0.0,
+            metrics: Metrics::default(),
+            rngs: HashMap::new(),
+            outputs: Vec::new(),
+            cfg,
+        }
+    }
+
+    pub fn add_request(&mut self, req: Request) {
+        self.rngs.insert(req.id, Rng::new(req.sampling.seed ^ req.id as u64));
+        self.metrics.prompt_tokens += req.prompt.len();
+        self.scheduler.add_request(&req);
+    }
+
+    /// Run one engine step.  Returns false when there is no work left.
+    pub fn step(&mut self) -> Result<bool> {
+        match self.scheduler.schedule() {
+            ScheduledWork::Idle => Ok(false),
+            ScheduledWork::Prefills(ids) => {
+                self.metrics.prefill_steps += 1;
+                for id in ids {
+                    self.run_prefill(id)?;
+                }
+                self.metrics.engine_steps += 1;
+                Ok(true)
+            }
+            ScheduledWork::Decode(ids) => {
+                self.run_decode(ids)?;
+                self.metrics.engine_steps += 1;
+                self.metrics.decode_steps += 1;
+                Ok(true)
+            }
+        }
+    }
+
+    /// Drive to completion; returns outputs + metrics.
+    pub fn run(&mut self) -> Result<EngineReport> {
+        while self.step()? {}
+        self.metrics.elapsed = self.clock;
+        self.metrics.preemptions = self.scheduler.preemption_count;
+        Ok(EngineReport { outputs: std::mem::take(&mut self.outputs), metrics: self.metrics.clone() })
+    }
+
+    fn run_prefill(&mut self, id: usize) -> Result<()> {
+        let (slot, prompt) = {
+            let seq = &self.scheduler.seqs[&id];
+            (seq.slot, seq.effective_prompt())
+        };
+        let (logits, secs) = self.backend.prefill(slot, &prompt)?;
+        self.clock += secs;
+        // Sample the first generated token from the prefill logits.
+        let token = {
+            let seq = self.scheduler.seqs.get_mut(&id).unwrap();
+            let rng = self.rngs.get_mut(&id).unwrap();
+            let t = sampler::sample(&logits, &seq.sampling, rng);
+            seq.generated.push(t);
+            if seq.first_token_time.is_none() {
+                seq.first_token_time = Some(self.clock);
+                self.metrics.ttfts.push(self.clock - seq.arrival);
+            }
+            t
+        };
+        let _ = token;
+        self.metrics.output_tokens += 1;
+        if !self.scheduler.append_token(id) {
+            // Self-preempted: will re-run later; nothing else to do.
+            return Ok(());
+        }
+        self.scheduler.promote_to_running(id);
+        self.maybe_finish(id);
+        Ok(())
+    }
+
+    fn run_decode(&mut self, ids: Vec<usize>) -> Result<()> {
+        let entries: Vec<DecodeEntry> = ids
+            .iter()
+            .map(|id| {
+                let s = &self.scheduler.seqs[id];
+                DecodeEntry { slot: s.slot, position: s.position(), token: s.last_token() }
+            })
+            .collect();
+        let (rows, secs) = self.backend.decode(&entries)?;
+        debug_assert_eq!(rows.len(), ids.len());
+        self.clock += secs;
+        self.metrics.decode_batch_sum += ids.len();
+        for (id, logits) in ids.into_iter().zip(rows) {
+            // The sequence may have been preempted by an earlier seq in
+            // this same loop (KV exhaustion); skip it then.
+            if self.scheduler.seqs[&id].state != SeqState::Running {
+                continue;
+            }
+            let seq = self.scheduler.seqs.get_mut(&id).unwrap();
+            let rng = self.rngs.get_mut(&id).unwrap();
+            let t = sampler::sample(&logits, &seq.sampling, rng);
+            seq.generated.push(t);
+            self.metrics.output_tokens += 1;
+            if !self.scheduler.append_token(id) {
+                continue;
+            }
+            self.maybe_finish(id);
+        }
+        Ok(())
+    }
+
+    fn maybe_finish(&mut self, id: usize) {
+        let done = {
+            let seq = &self.scheduler.seqs[&id];
+            seq.is_done(self.cfg.max_seq_len)
+        };
+        if let Some(reason) = done {
+            let slot = self.scheduler.finish(id);
+            self.backend.release(slot);
+            let seq = &self.scheduler.seqs[&id];
+            let latency = self.clock - seq.arrival;
+            self.metrics.latencies.push(latency);
+            self.outputs.push(RequestOutput {
+                id,
+                prompt_len: seq.prompt.len(),
+                tokens: seq.generated.clone(),
+                finish: reason,
+                ttft: seq.first_token_time.unwrap_or(self.clock) - seq.arrival,
+                latency,
+                preemptions: seq.preemptions,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::backend::SimBackend;
+    use crate::engine::request::{FinishReason, SamplingParams};
+    use crate::models::by_name;
+    use crate::OptConfig;
+
+    fn engine(max_batch: usize) -> Engine<SimBackend> {
+        let m = by_name("Llama-2-7B-GPTQ").unwrap();
+        let be = SimBackend::new(m, OptConfig::BASELINE, max_batch);
+        Engine::new(
+            EngineConfig { max_batch, total_blocks: 2048, ..Default::default() },
+            be,
+        )
+    }
+
+    fn req(id: usize, plen: usize, gen: usize) -> Request {
+        Request::new(
+            id,
+            vec![3; plen],
+            SamplingParams { max_tokens: gen, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn single_request_completes_exactly() {
+        let mut e = engine(4);
+        e.add_request(req(0, 10, 7));
+        let report = e.run().unwrap();
+        assert_eq!(report.outputs.len(), 1);
+        let out = &report.outputs[0];
+        assert_eq!(out.tokens.len(), 7);
+        assert_eq!(out.finish, FinishReason::MaxTokens);
+        assert!(out.ttft > 0.0 && out.latency >= out.ttft);
+        assert_eq!(report.metrics.output_tokens, 7);
+    }
+
+    #[test]
+    fn batch_of_requests_all_complete() {
+        let mut e = engine(8);
+        let mut expected = 0;
+        for i in 0..16 {
+            let gen = 4 + i % 5;
+            expected += gen;
+            e.add_request(req(i, 8 + i, gen));
+        }
+        let report = e.run().unwrap();
+        assert_eq!(report.outputs.len(), 16);
+        assert_eq!(report.metrics.output_tokens, expected);
+        assert!(report.metrics.throughput() > 0.0);
+        e.scheduler.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn continuous_batching_interleaves() {
+        // More requests than batch: some must wait, all finish, and the
+        // mean decode batch must exceed 1 (they really ran together).
+        let mut e = engine(4);
+        for i in 0..8 {
+            e.add_request(req(i, 16, 32));
+        }
+        let report = e.run().unwrap();
+        assert_eq!(report.outputs.len(), 8);
+        assert!(report.metrics.mean_decode_batch() > 1.5,
+                "mean decode batch {}", report.metrics.mean_decode_batch());
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let run = || {
+            let mut e = engine(4);
+            for i in 0..6 {
+                e.add_request(Request::new(
+                    i,
+                    vec![1; 10],
+                    SamplingParams { max_tokens: 10, temperature: 0.9, top_k: 20, seed: 4, ..Default::default() },
+                ));
+            }
+            let r = e.run().unwrap();
+            (r.metrics.elapsed, r.outputs.iter().map(|o| o.tokens.clone()).collect::<Vec<_>>())
+        };
+        let (t1, toks1) = run();
+        let (t2, toks2) = run();
+        assert_eq!(t1, t2);
+        assert_eq!(toks1, toks2);
+    }
+
+    #[test]
+    fn preemption_path_still_completes_everything() {
+        // Tiny KV pool forces preemptions.
+        let m = by_name("Llama-2-7B-GPTQ").unwrap();
+        let be = SimBackend::new(m, OptConfig::BASELINE, 4);
+        let mut e = Engine::new(
+            EngineConfig {
+                max_batch: 4,
+                block_size: 4,
+                total_blocks: 40,
+                max_seq_len: 128,
+                max_prefills_per_step: 4,
+            },
+            be,
+        );
+        for i in 0..6 {
+            // distinct prompts: no prefix sharing, maximal KV pressure
+            let mut r = req(i, 12, 30);
+            r.prompt = vec![i as u32 + 1; 12];
+            e.add_request(r);
+        }
+        let report = e.run().unwrap();
+        assert_eq!(report.outputs.len(), 6);
+        for o in &report.outputs {
+            assert_eq!(o.tokens.len(), 30, "req {} generated {}", o.id, o.tokens.len());
+        }
+        assert!(report.metrics.preemptions > 0, "this config must preempt");
+        e.scheduler.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn optimized_config_yields_higher_throughput() {
+        let m = by_name("LLaMa-13B-GPTQ").unwrap();
+        let mut results = Vec::new();
+        for opt in [OptConfig::BASELINE, OptConfig::OPT4GPTQ] {
+            let be = SimBackend::new(m, opt, 32);
+            let mut e = Engine::new(EngineConfig::default(), be);
+            for i in 0..32 {
+                e.add_request(req(i, 32, 16));
+            }
+            results.push(e.run().unwrap().metrics.throughput());
+        }
+        assert!(results[1] > results[0], "opt {} <= base {}", results[1], results[0]);
+    }
+}

@@ -1,0 +1,100 @@
+//! Serving metrics: the quantities Figures 2–3 report.
+
+/// Aggregated over one engine run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// Virtual (SimBackend) or wall (PjrtBackend) seconds elapsed.
+    pub elapsed: f64,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+    pub engine_steps: usize,
+    pub prefill_steps: usize,
+    pub decode_steps: usize,
+    pub preemptions: usize,
+    /// Sum of decode batch sizes (for mean batch occupancy).
+    pub decode_batch_sum: usize,
+    /// Per-request end-to-end latencies, seconds.
+    pub latencies: Vec<f64>,
+    /// Per-request time-to-first-token, seconds.
+    pub ttfts: Vec<f64>,
+}
+
+impl Metrics {
+    /// Generation throughput, tokens/s (the paper's Figure 2 metric).
+    pub fn throughput(&self) -> f64 {
+        if self.elapsed <= 0.0 {
+            return 0.0;
+        }
+        self.output_tokens as f64 / self.elapsed
+    }
+
+    /// Total throughput including prompt processing (vLLM also reports
+    /// this as "total tokens/s").
+    pub fn total_throughput(&self) -> f64 {
+        if self.elapsed <= 0.0 {
+            return 0.0;
+        }
+        (self.prompt_tokens + self.output_tokens) as f64 / self.elapsed
+    }
+
+    /// Mean end-to-end request latency, seconds (the Figure 3 metric).
+    pub fn mean_latency(&self) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        self.latencies.iter().sum::<f64>() / self.latencies.len() as f64
+    }
+
+    pub fn p95_latency(&self) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.latencies.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        crate::benchkit::percentile(&xs, 0.95)
+    }
+
+    pub fn mean_ttft(&self) -> f64 {
+        if self.ttfts.is_empty() {
+            return 0.0;
+        }
+        self.ttfts.iter().sum::<f64>() / self.ttfts.len() as f64
+    }
+
+    pub fn mean_decode_batch(&self) -> f64 {
+        if self.decode_steps == 0 {
+            return 0.0;
+        }
+        self.decode_batch_sum as f64 / self.decode_steps as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let m = Metrics { elapsed: 2.0, output_tokens: 100, prompt_tokens: 60, ..Default::default() };
+        assert_eq!(m.throughput(), 50.0);
+        assert_eq!(m.total_throughput(), 80.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.throughput(), 0.0);
+        assert_eq!(m.mean_latency(), 0.0);
+        assert_eq!(m.p95_latency(), 0.0);
+    }
+
+    #[test]
+    fn latency_stats() {
+        let m = Metrics {
+            latencies: vec![1.0, 2.0, 3.0],
+            ..Default::default()
+        };
+        assert!((m.mean_latency() - 2.0).abs() < 1e-12);
+        assert!(m.p95_latency() >= 2.0);
+    }
+}

@@ -1,0 +1,59 @@
+//! vLLM-style serving engine (the Layer-3 coordinator).
+//!
+//! Reproduces the serving stack the paper measures *through*: paged
+//! KV-cache management ([`block_manager`]), continuous batching with a
+//! prefill/decode scheduler ([`scheduler`]), sampling ([`sampler`]), and
+//! an engine step loop ([`engine`]) driving a pluggable [`backend`]:
+//!
+//! * [`backend::SimBackend`] — advances a *virtual clock* using the
+//!   [`crate::perfmodel`] step times of a paper model under a chosen
+//!   [`crate::OptConfig`]; used to regenerate Figures 2–3;
+//! * [`crate::runtime::PjrtBackend`] — real token generation through the
+//!   AOT-compiled tiny model on the PJRT CPU client (wall clock).
+//!
+//! The engine is deliberately single-threaded and deterministic: given a
+//! trace and a seed, every scheduling decision replays exactly.
+
+pub mod backend;
+pub mod block_manager;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod sampler;
+pub mod scheduler;
+pub mod sequence;
+pub mod tokenizer;
+
+pub use backend::{Backend, DecodeEntry, SimBackend};
+pub use engine::{Engine, EngineReport};
+pub use metrics::Metrics;
+pub use request::{FinishReason, Request, RequestOutput, SamplingParams};
+pub use scheduler::{Scheduler, SchedulerConfig};
+pub use sequence::{SeqState, Sequence};
+
+/// Engine-level configuration (vLLM flag analogues).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Maximum sequences decoded together (the paper uses batch 32).
+    pub max_batch: usize,
+    /// KV block size in tokens (vLLM default 16).
+    pub block_size: usize,
+    /// Total KV blocks available (device memory analogue).
+    pub total_blocks: usize,
+    /// Max model context (prompt + generation).
+    pub max_seq_len: usize,
+    /// Max prefills admitted per engine step.
+    pub max_prefills_per_step: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            max_batch: 32,
+            block_size: 16,
+            total_blocks: 4096,
+            max_seq_len: 2048,
+            max_prefills_per_step: 4,
+        }
+    }
+}

@@ -1,0 +1,79 @@
+//! Request / response types of the serving API.
+
+/// Sampling configuration for one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingParams {
+    /// 0.0 = greedy.
+    pub temperature: f32,
+    /// 0 = disabled.
+    pub top_k: usize,
+    pub max_tokens: usize,
+    /// Stop at this token id (None = run to max_tokens).
+    pub stop_token: Option<u32>,
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 0.0, top_k: 0, max_tokens: 128, stop_token: None, seed: 0 }
+    }
+}
+
+/// An inference request submitted to the engine.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: usize,
+    pub prompt: Vec<u32>,
+    pub sampling: SamplingParams,
+    /// Virtual arrival time (seconds); 0 for batch workloads.
+    pub arrival: f64,
+}
+
+impl Request {
+    pub fn new(id: usize, prompt: Vec<u32>, sampling: SamplingParams) -> Request {
+        Request { id, prompt, sampling, arrival: 0.0 }
+    }
+}
+
+/// Why a sequence finished.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    MaxTokens,
+    StopToken,
+    /// Context window exhausted.
+    LengthCap,
+}
+
+/// Completed request, as returned by [`crate::engine::Engine`].
+#[derive(Debug, Clone)]
+pub struct RequestOutput {
+    pub id: usize,
+    pub prompt_len: usize,
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    /// Virtual/wall seconds from arrival to first generated token.
+    pub ttft: f64,
+    /// Virtual/wall seconds from arrival to completion.
+    pub latency: f64,
+    /// Number of times this sequence was preempted and recomputed.
+    pub preemptions: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_sampling_is_greedy() {
+        let s = SamplingParams::default();
+        assert_eq!(s.temperature, 0.0);
+        assert_eq!(s.top_k, 0);
+    }
+
+    #[test]
+    fn request_carries_prompt() {
+        let r = Request::new(1, vec![1, 2, 3], SamplingParams::default());
+        assert_eq!(r.prompt.len(), 3);
+        assert_eq!(r.arrival, 0.0);
+    }
+}

@@ -1,0 +1,344 @@
+//! Continuous-batching scheduler (vLLM-style).
+//!
+//! Policy, mirroring vLLM v0's core loop:
+//!
+//! 1. Prefill-priority admission: while there is batch room, a free
+//!    backend slot and enough KV blocks, admit waiting (or preempted)
+//!    sequences — up to `max_prefills_per_step` per step.
+//! 2. Otherwise decode every running sequence as one batch.
+//! 3. On KV exhaustion while appending a generated token, preempt the
+//!    most recently arrived running sequence (recompute semantics: its
+//!    blocks are freed and it re-prefills later with its generated
+//!    tokens folded into the prompt).
+
+use std::collections::{HashMap, VecDeque};
+
+use super::block_manager::BlockManager;
+use super::request::Request;
+use super::sequence::{SeqState, Sequence};
+use super::EngineConfig;
+
+pub type SchedulerConfig = EngineConfig;
+
+/// What the engine should run this step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScheduledWork {
+    /// Run these sequences' prompts (then they join the decode batch).
+    Prefills(Vec<usize>),
+    /// Decode one token for each of these sequences.
+    Decode(Vec<usize>),
+    /// Nothing runnable (all queues empty).
+    Idle,
+}
+
+#[derive(Debug)]
+pub struct Scheduler {
+    pub cfg: SchedulerConfig,
+    pub blocks: BlockManager,
+    pub seqs: HashMap<usize, Sequence>,
+    waiting: VecDeque<usize>,
+    running: Vec<usize>,
+    free_slots: Vec<usize>,
+    pub preemption_count: usize,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Scheduler {
+        Scheduler {
+            blocks: BlockManager::new(cfg.total_blocks, cfg.block_size),
+            seqs: HashMap::new(),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            free_slots: (0..cfg.max_batch).rev().collect(),
+            preemption_count: 0,
+            cfg,
+        }
+    }
+
+    pub fn add_request(&mut self, req: &Request) {
+        let seq = Sequence::new(req);
+        self.waiting.push_back(seq.id);
+        self.seqs.insert(seq.id, seq);
+    }
+
+    pub fn num_waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn num_running(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.running.is_empty()
+    }
+
+    /// Decide the next step's work.
+    pub fn schedule(&mut self) -> ScheduledWork {
+        // Admission: prefill while there is room.
+        let mut prefills = Vec::new();
+        while prefills.len() < self.cfg.max_prefills_per_step
+            && self.running.len() + prefills.len() < self.cfg.max_batch
+            && !self.free_slots.is_empty()
+        {
+            let Some(&cand) = self.waiting.front() else { break };
+            let prompt = self.seqs[&cand].effective_prompt();
+            if prompt.len() + 1 > self.cfg.max_seq_len {
+                // Oversized request: reject by finishing immediately.
+                self.waiting.pop_front();
+                let seq = self.seqs.get_mut(&cand).unwrap();
+                seq.state = SeqState::Finished;
+                continue;
+            }
+            if !self.blocks.can_allocate(prompt.len() + 1) {
+                break; // no KV room; decode instead (frees blocks later)
+            }
+            self.waiting.pop_front();
+            assert!(self.blocks.allocate(cand, &prompt));
+            let slot = self.free_slots.pop().unwrap();
+            let seq = self.seqs.get_mut(&cand).unwrap();
+            seq.slot = slot;
+            seq.state = SeqState::Prefilling;
+            prefills.push(cand);
+        }
+        if !prefills.is_empty() {
+            return ScheduledWork::Prefills(prefills);
+        }
+        if !self.running.is_empty() {
+            return ScheduledWork::Decode(self.running.clone());
+        }
+        if !self.waiting.is_empty() {
+            // Nothing running, yet the head of the queue cannot be
+            // admitted: only possible when the prompt alone exceeds KV
+            // capacity.  Reject it to guarantee progress.
+            let id = self.waiting.pop_front().unwrap();
+            self.seqs.get_mut(&id).unwrap().state = SeqState::Finished;
+            return self.schedule();
+        }
+        ScheduledWork::Idle
+    }
+
+    /// Mark a prefilled sequence as part of the decode batch.
+    pub fn promote_to_running(&mut self, id: usize) {
+        let seq = self.seqs.get_mut(&id).expect("unknown seq");
+        debug_assert_eq!(seq.state, SeqState::Prefilling);
+        seq.state = SeqState::Running;
+        self.running.push(id);
+    }
+
+    /// Reserve KV room for one appended token; preempts the youngest
+    /// other running sequence on exhaustion.  Returns false if `id`
+    /// itself had to be preempted (no other victim available).
+    pub fn append_token(&mut self, id: usize) -> bool {
+        loop {
+            let total = self.seqs[&id].total_tokens();
+            if self.blocks.append_token(id, total) {
+                return true;
+            }
+            // Out of blocks: preempt the most recent *other* running seq.
+            let victim = self
+                .running
+                .iter()
+                .copied()
+                .filter(|&v| v != id)
+                .max_by_key(|&v| {
+                    // youngest = largest arrival, break ties by id
+                    let s = &self.seqs[&v];
+                    (s.arrival.to_bits(), s.id)
+                });
+            match victim {
+                Some(v) => self.preempt(v),
+                None => {
+                    self.preempt(id);
+                    return false;
+                }
+            }
+        }
+    }
+
+    fn preempt(&mut self, id: usize) {
+        self.running.retain(|&r| r != id);
+        self.blocks.free_sequence(id);
+        let seq = self.seqs.get_mut(&id).expect("unknown seq");
+        if seq.slot != usize::MAX {
+            self.free_slots.push(seq.slot);
+        }
+        seq.preempt();
+        self.preemption_count += 1;
+        // Preempted sequences go to the *front*: they already hold
+        // generated tokens and should resume first (vLLM recompute).
+        self.waiting.push_front(id);
+    }
+
+    /// Finish a sequence: free its KV blocks and backend slot.
+    pub fn finish(&mut self, id: usize) -> usize {
+        self.running.retain(|&r| r != id);
+        self.blocks.free_sequence(id);
+        let seq = self.seqs.get_mut(&id).expect("unknown seq");
+        let slot = seq.slot;
+        if slot != usize::MAX {
+            self.free_slots.push(slot);
+        }
+        seq.slot = usize::MAX;
+        seq.state = SeqState::Finished;
+        slot
+    }
+
+    /// Property-test hook: internal queues must be consistent.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        self.blocks.check_invariants()?;
+        for &id in &self.running {
+            let s = &self.seqs[&id];
+            if s.state != SeqState::Running {
+                return Err(format!("running seq {id} in state {:?}", s.state));
+            }
+            if s.slot == usize::MAX {
+                return Err(format!("running seq {id} has no slot"));
+            }
+        }
+        let mut slots: Vec<usize> = self
+            .running
+            .iter()
+            .map(|id| self.seqs[id].slot)
+            .chain(self.free_slots.iter().copied())
+            .collect();
+        // prefilling seqs also hold slots
+        for s in self.seqs.values() {
+            if s.state == SeqState::Prefilling {
+                slots.push(s.slot);
+            }
+        }
+        slots.sort_unstable();
+        slots.dedup();
+        if slots.len()
+            != self.running.len()
+                + self.free_slots.len()
+                + self
+                    .seqs
+                    .values()
+                    .filter(|s| s.state == SeqState::Prefilling)
+                    .count()
+        {
+            return Err("slot leak or double assignment".into());
+        }
+        if self.running.len() > self.cfg.max_batch {
+            return Err("decode batch exceeds max_batch".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::request::SamplingParams;
+
+    fn cfg() -> SchedulerConfig {
+        SchedulerConfig {
+            max_batch: 4,
+            block_size: 4,
+            total_blocks: 16,
+            max_seq_len: 64,
+            max_prefills_per_step: 2,
+        }
+    }
+
+    fn req(id: usize, prompt_len: usize, max_tokens: usize) -> Request {
+        Request::new(
+            id,
+            vec![7; prompt_len],
+            SamplingParams { max_tokens, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn admits_up_to_max_prefills() {
+        let mut s = Scheduler::new(cfg());
+        for i in 0..3 {
+            s.add_request(&req(i, 4, 4));
+        }
+        match s.schedule() {
+            ScheduledWork::Prefills(p) => assert_eq!(p, vec![0, 1]),
+            w => panic!("expected prefills, got {w:?}"),
+        }
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn decodes_after_promotion() {
+        let mut s = Scheduler::new(cfg());
+        s.add_request(&req(0, 4, 4));
+        let ScheduledWork::Prefills(p) = s.schedule() else { panic!() };
+        for id in p {
+            s.seqs.get_mut(&id).unwrap().generated.push(1);
+            assert!(s.append_token(id));
+            s.promote_to_running(id);
+        }
+        // no more waiting -> decode
+        match s.schedule() {
+            ScheduledWork::Decode(d) => assert_eq!(d, vec![0]),
+            w => panic!("expected decode, got {w:?}"),
+        }
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oversized_prompt_is_rejected_not_deadlocked() {
+        let mut s = Scheduler::new(cfg());
+        s.add_request(&req(0, 100, 4)); // exceeds max_seq_len
+        assert_eq!(s.schedule(), ScheduledWork::Idle);
+        assert_eq!(s.seqs[&0].state, SeqState::Finished);
+    }
+
+    #[test]
+    fn kv_exhaustion_preempts_youngest() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_batch: 2,
+            block_size: 4,
+            total_blocks: 4,
+            max_seq_len: 64,
+            max_prefills_per_step: 2,
+        });
+        // Distinct prompt contents so the prefix cache cannot share blocks.
+        let mut r0 = req(0, 7, 30);
+        r0.prompt = vec![1; 7];
+        let mut r1 = req(1, 7, 30);
+        r1.prompt = vec![2; 7];
+        s.add_request(&Request { arrival: 0.0, ..r0 });
+        s.add_request(&Request { arrival: 1.0, ..r1 });
+        let ScheduledWork::Prefills(p) = s.schedule() else { panic!() };
+        assert_eq!(p.len(), 2);
+        for id in p {
+            s.seqs.get_mut(&id).unwrap().generated.push(1);
+            assert!(s.append_token(id));
+            s.promote_to_running(id);
+        }
+        // Each seq has 8 tokens in 2 blocks; all 4 blocks used.  The next
+        // append on seq 0 must preempt seq 1 (younger).
+        s.seqs.get_mut(&0).unwrap().generated.push(2);
+        assert!(s.append_token(0));
+        assert_eq!(s.seqs[&1].state, SeqState::Preempted);
+        assert_eq!(s.num_running(), 1);
+        assert_eq!(s.preemption_count, 1);
+        s.check_invariants().unwrap();
+        // Preempted sequence re-queues at the front with its tokens.
+        assert_eq!(s.num_waiting(), 1);
+        assert_eq!(s.seqs[&1].effective_prompt().len(), 8);
+    }
+
+    #[test]
+    fn finish_releases_slot_and_blocks() {
+        let mut s = Scheduler::new(cfg());
+        s.add_request(&req(0, 4, 4));
+        let ScheduledWork::Prefills(_) = s.schedule() else { panic!() };
+        let free_before = s.blocks.free_blocks();
+        s.promote_to_running(0);
+        s.finish(0);
+        assert!(s.blocks.free_blocks() > free_before);
+        assert_eq!(s.num_running(), 0);
+        s.check_invariants().unwrap();
+        // slot can be reused
+        s.add_request(&req(5, 4, 4));
+        assert!(matches!(s.schedule(), ScheduledWork::Prefills(_)));
+    }
+}

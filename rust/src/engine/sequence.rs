@@ -1,0 +1,162 @@
+//! Per-sequence state tracked by the scheduler.
+
+use super::request::{Request, SamplingParams};
+
+/// Lifecycle of a sequence inside the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqState {
+    /// In the waiting queue (not yet prefilling).
+    Waiting,
+    /// Admitted: KV allocated, prompt not yet run.
+    Prefilling,
+    /// In the decode batch.
+    Running,
+    /// Evicted under memory pressure; will re-prefill from scratch.
+    Preempted,
+    Finished,
+}
+
+/// A request plus its generation state.
+#[derive(Debug, Clone)]
+pub struct Sequence {
+    pub id: usize,
+    pub prompt: Vec<u32>,
+    pub generated: Vec<u32>,
+    pub sampling: SamplingParams,
+    pub state: SeqState,
+    /// Backend slot while Running (dense-KV backends), usize::MAX if none.
+    pub slot: usize,
+    pub arrival: f64,
+    pub first_token_time: Option<f64>,
+    pub finish_time: Option<f64>,
+    pub preemptions: usize,
+}
+
+impl Sequence {
+    pub fn new(req: &Request) -> Sequence {
+        Sequence {
+            id: req.id,
+            prompt: req.prompt.clone(),
+            generated: Vec::new(),
+            sampling: req.sampling,
+            state: SeqState::Waiting,
+            slot: usize::MAX,
+            arrival: req.arrival,
+            first_token_time: None,
+            finish_time: None,
+            preemptions: 0,
+        }
+    }
+
+    /// Total tokens currently materialized in the KV cache.
+    pub fn total_tokens(&self) -> usize {
+        self.prompt.len() + self.generated.len()
+    }
+
+    /// The token fed to the next decode step.
+    pub fn last_token(&self) -> u32 {
+        *self
+            .generated
+            .last()
+            .or_else(|| self.prompt.last())
+            .expect("sequence cannot be empty")
+    }
+
+    /// Context length (position of the next token).
+    pub fn position(&self) -> usize {
+        self.total_tokens()
+    }
+
+    pub fn is_done(&self, max_seq_len: usize) -> Option<super::request::FinishReason> {
+        use super::request::FinishReason;
+        if let Some(stop) = self.sampling.stop_token {
+            if self.generated.last() == Some(&stop) {
+                return Some(FinishReason::StopToken);
+            }
+        }
+        if self.generated.len() >= self.sampling.max_tokens {
+            return Some(FinishReason::MaxTokens);
+        }
+        if self.total_tokens() >= max_seq_len {
+            return Some(FinishReason::LengthCap);
+        }
+        None
+    }
+
+    /// Reset for recompute after preemption: generated tokens are kept
+    /// (they are re-prefilled as part of the new prompt pass).
+    pub fn preempt(&mut self) {
+        self.state = SeqState::Preempted;
+        self.slot = usize::MAX;
+        self.preemptions += 1;
+    }
+
+    /// The effective prompt for (re-)prefill: original prompt plus
+    /// whatever was already generated before preemption.
+    pub fn effective_prompt(&self) -> Vec<u32> {
+        let mut p = self.prompt.clone();
+        p.extend_from_slice(&self.generated);
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::request::{FinishReason, Request};
+
+    fn seq(max_tokens: usize) -> Sequence {
+        let req = Request::new(
+            0,
+            vec![1, 2, 3],
+            SamplingParams { max_tokens, ..Default::default() },
+        );
+        Sequence::new(&req)
+    }
+
+    #[test]
+    fn lifecycle_counters() {
+        let mut s = seq(4);
+        assert_eq!(s.total_tokens(), 3);
+        assert_eq!(s.last_token(), 3);
+        s.generated.push(9);
+        assert_eq!(s.total_tokens(), 4);
+        assert_eq!(s.last_token(), 9);
+        assert_eq!(s.position(), 4);
+    }
+
+    #[test]
+    fn finishes_at_max_tokens() {
+        let mut s = seq(2);
+        assert!(s.is_done(100).is_none());
+        s.generated.extend([5, 6]);
+        assert_eq!(s.is_done(100), Some(FinishReason::MaxTokens));
+    }
+
+    #[test]
+    fn finishes_at_stop_token() {
+        let mut s = seq(10);
+        s.sampling.stop_token = Some(0);
+        s.generated.push(7);
+        assert!(s.is_done(100).is_none());
+        s.generated.push(0);
+        assert_eq!(s.is_done(100), Some(FinishReason::StopToken));
+    }
+
+    #[test]
+    fn finishes_at_length_cap() {
+        let mut s = seq(100);
+        s.generated.extend([1, 2, 3, 4, 5]);
+        assert_eq!(s.is_done(8), Some(FinishReason::LengthCap));
+    }
+
+    #[test]
+    fn preemption_preserves_generated_tokens() {
+        let mut s = seq(10);
+        s.generated.extend([4, 5]);
+        s.preempt();
+        assert_eq!(s.state, SeqState::Preempted);
+        assert_eq!(s.effective_prompt(), vec![1, 2, 3, 4, 5]);
+        assert_eq!(s.preemptions, 1);
+    }
+}

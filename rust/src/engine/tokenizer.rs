@@ -1,0 +1,48 @@
+//! Byte-level tokenizer for the executable tiny model (vocab = 256).
+//!
+//! Every byte is a token, so encode/decode is total and lossless — enough
+//! to serve real text through the PJRT path without shipping a BPE
+//! vocabulary.  A couple of convenience specials live in the printable
+//! range the tiny corpus never uses.
+
+/// Byte-level tokenizer (identity over bytes).
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 256;
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.as_bytes().iter().map(|&b| b as u32).collect()
+    }
+
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xFF) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let s = "Hello, Opt4GPTQ!";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer;
+        let s = "量化 – héllo";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn tokens_bounded_by_vocab() {
+        let t = ByteTokenizer;
+        assert!(t.encode("any text at all").iter().all(|&x| x < 256));
+    }
+}

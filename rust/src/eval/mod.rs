@@ -1,0 +1,21 @@
+//! Accuracy evaluation (paper Tables I–II).
+//!
+//! * [`numerics`] — the GPTQ GEMV executed in *variant-faithful* binary16
+//!   arithmetic: fused (`__hfma2`) vs non-fused (`v_mad_f16`) multiply-
+//!   accumulate, per-thread partial accumulation, and the combination
+//!   order of split-K partials (atomic arrival order vs the SMB LDS
+//!   reduction);
+//! * [`accuracy`] — the ARC-style harness: scores each question's four
+//!   options through the quantized head and checks the argmax.
+//!
+//! The paper's finding is that accuracies fluctuate *within one
+//! percentage point, with no consistent direction*, across the kernel
+//! variants.  Those fluctuations are rounding/order artifacts on
+//! questions whose top-two option scores nearly tie; this harness
+//! reproduces exactly that mechanism.
+
+pub mod accuracy;
+pub mod numerics;
+
+pub use accuracy::{evaluate, AccuracyResult};
+pub use numerics::{gemv_f16_variant, VariantNumerics};

@@ -1,0 +1,206 @@
+//! Variant-faithful fp16 execution of the GPTQ GEMV.
+//!
+//! Models the numeric (not performance) semantics of the five kernel
+//! configurations:
+//!
+//! | config    | multiply-accumulate        | partial combination order    |
+//! |-----------|----------------------------|------------------------------|
+//! | Baseline  | fused `__hfma2`            | atomic arrival (schedule-dependent) |
+//! | SMB-Opt   | fused `__hfma2`            | LDS reduction, thread order  |
+//! | VML-Opt   | fused `__hfma2`            | atomic arrival (different schedule) |
+//! | ILA-Opt   | non-fused `v_mad_f16`      | atomic arrival (different schedule) |
+//! | Opt4GPTQ  | non-fused `v_mad_f16`      | LDS reduction, thread order  |
+//!
+//! "Atomic arrival order" is nondeterministic on real hardware (warp
+//! scheduling); we model it as a deterministic pseudo-random permutation
+//! seeded by the (config, call) pair — the honest simulator analogue of
+//! re-running the experiment on a machine whose schedule shifted.
+
+use crate::f16::{self, F16};
+use crate::gptq::{pack, QuantizedTensor};
+use crate::rng::{hash64, Rng};
+use crate::OptConfig;
+
+/// Split-K factor of the modelled kernel (see `dcusim::kernels::gemv`).
+pub const SPLIT_K: usize = 8;
+
+/// Numeric behaviour derived from an [`OptConfig`].
+#[derive(Debug, Clone, Copy)]
+pub struct VariantNumerics {
+    /// Non-fused MAD (product rounded before add) — the ILA path.
+    pub non_fused: bool,
+    /// Deterministic LDS-reduction order instead of arrival order.
+    pub ordered_reduction: bool,
+    /// Schedule seed (distinct per config: different binaries schedule
+    /// differently even when arithmetic is identical).
+    pub schedule_seed: u64,
+}
+
+impl VariantNumerics {
+    pub fn of(opt: OptConfig) -> VariantNumerics {
+        VariantNumerics {
+            non_fused: opt.ila,
+            ordered_reduction: opt.smb,
+            schedule_seed: hash64(opt.label()),
+        }
+    }
+}
+
+/// `y[N] = x[K] · deq(Q)[K, N]` in variant-faithful fp16.
+///
+/// `call_seed` identifies the call (e.g. question id) so arrival-order
+/// nondeterminism is deterministic per (config, call).
+pub fn gemv_f16_variant(
+    x: &[f32],
+    q: &QuantizedTensor,
+    opt: OptConfig,
+    call_seed: u64,
+) -> Vec<f32> {
+    let v = VariantNumerics::of(opt);
+    let k = q.k;
+    let n = q.n;
+    assert_eq!(x.len(), k);
+    let codes = pack::unpack_rows(&q.qweight, k / pack::NIBBLES_PER_WORD, n);
+    let zeros = pack::unpack_cols(&q.qzeros, q.groups(), n / pack::NIBBLES_PER_WORD);
+    let xh: Vec<F16> = x.iter().map(|&v| F16::from_f32(v)).collect();
+
+    // Perf (§Perf item 3): (code - zero) ∈ [-15, 15] — precompute the 31
+    // exact f16 encodings once instead of a float conversion per weight,
+    // cache the per-(group, col) scale conversion, and reuse one
+    // permutation buffer across columns.
+    let diff_f16: [F16; 31] =
+        std::array::from_fn(|i| F16::from_f64(i as f64 - 15.0));
+    let mut scale_cache: Vec<F16> = Vec::with_capacity(q.groups());
+    let mut order: Vec<usize> = (0..SPLIT_K).collect();
+
+    let mut out = Vec::with_capacity(n);
+    for col in 0..n {
+        scale_cache.clear();
+        scale_cache.extend(
+            (0..q.groups()).map(|gi| F16::from_f32(q.scales[gi * n + col])),
+        );
+        // Per-thread partials: thread j owns the strided slice k ≡ j.
+        let mut partials = [F16::ZERO; SPLIT_K];
+        for (j, partial) in partials.iter_mut().enumerate() {
+            let mut acc = F16::ZERO;
+            let mut kk = j;
+            while kk < k {
+                let gi = kk / q.group_size;
+                // Dequant in f16: w = scale * (code - zero), as the
+                // kernel's __hsub2/__hmul2 sequence computes it.
+                let code = codes[kk * n + col] as i32;
+                let zero = zeros[gi * n + col] as i32;
+                let w = f16::mul(scale_cache[gi], diff_f16[(code - zero + 15) as usize]);
+                acc = if v.non_fused {
+                    f16::mad(xh[kk], w, acc)
+                } else {
+                    f16::fma(xh[kk], w, acc)
+                };
+                kk += SPLIT_K;
+            }
+            *partial = acc;
+        }
+        // Combine the partials.
+        for (i, o) in order.iter_mut().enumerate() {
+            *o = i;
+        }
+        if !v.ordered_reduction {
+            let mut rng = Rng::new(v.schedule_seed ^ call_seed.wrapping_mul(0x9E37) ^ col as u64);
+            rng.shuffle(&mut order);
+        }
+        let mut total = F16::ZERO;
+        for &j in order.iter() {
+            total = f16::add(total, partials[j]);
+        }
+        out.push(total.to_f32());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gptq::{quantize_rtn, Matrix};
+    use crate::rng::Rng;
+
+    fn quantized_head(k: usize, n: usize, seed: u64) -> QuantizedTensor {
+        assert_eq!(n % 8, 0, "packed layout needs N % 8 == 0");
+        let mut rng = Rng::new(seed);
+        let w = Matrix::from_vec(k, n, rng.normal_vec_f32(k * n, 0.5));
+        quantize_rtn(&w, k.min(64))
+    }
+
+    #[test]
+    fn close_to_f32_reference() {
+        let q = quantized_head(64, 8, 1);
+        let mut rng = Rng::new(2);
+        let x = rng.normal_vec_f32(64, 1.0);
+        let f32_ref = crate::gptq::gemv_f32(&x, &q);
+        for opt in crate::OptConfig::ALL {
+            let y = gemv_f16_variant(&x, &q, opt, 0);
+            for (a, b) in y.iter().zip(&f32_ref) {
+                assert!((a - b).abs() < 0.05 * b.abs().max(1.0),
+                        "{}: {a} vs {b}", opt.label());
+            }
+        }
+    }
+
+    #[test]
+    fn variants_differ_slightly_but_not_wildly() {
+        let q = quantized_head(64, 8, 3);
+        let mut rng = Rng::new(4);
+        let mut any_diff = false;
+        for call in 0..50u64 {
+            let x = rng.normal_vec_f32(64, 1.0);
+            let base = gemv_f16_variant(&x, &q, crate::OptConfig::BASELINE, call);
+            for opt in [crate::OptConfig::SMB, crate::OptConfig::ILA, crate::OptConfig::OPT4GPTQ] {
+                let y = gemv_f16_variant(&x, &q, opt, call);
+                for (a, b) in y.iter().zip(&base) {
+                    if a != b {
+                        any_diff = true;
+                    }
+                    assert!((a - b).abs() < 0.02 * b.abs().max(1.0));
+                }
+            }
+        }
+        assert!(any_diff, "numeric variants must not be bitwise identical");
+    }
+
+    #[test]
+    fn deterministic_per_config_and_call() {
+        let q = quantized_head(64, 8, 5);
+        let mut rng = Rng::new(6);
+        let x = rng.normal_vec_f32(64, 1.0);
+        let a = gemv_f16_variant(&x, &q, crate::OptConfig::VML, 7);
+        let b = gemv_f16_variant(&x, &q, crate::OptConfig::VML, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn smb_is_schedule_independent() {
+        // Ordered reduction: same result regardless of call seed.
+        let q = quantized_head(64, 8, 8);
+        let mut rng = Rng::new(9);
+        let x = rng.normal_vec_f32(64, 1.0);
+        let a = gemv_f16_variant(&x, &q, crate::OptConfig::SMB, 1);
+        let b = gemv_f16_variant(&x, &q, crate::OptConfig::SMB, 2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn baseline_is_schedule_dependent() {
+        // Arrival order differs across calls; some outputs must differ.
+        let q = quantized_head(256, 8, 10);
+        let mut rng = Rng::new(11);
+        let mut diffs = 0;
+        for call in 0..20u64 {
+            let x = rng.normal_vec_f32(256, 1.0);
+            let a = gemv_f16_variant(&x, &q, crate::OptConfig::BASELINE, call);
+            let b = gemv_f16_variant(&x, &q, crate::OptConfig::BASELINE, call + 1000);
+            if a != b {
+                diffs += 1;
+            }
+        }
+        assert!(diffs > 0, "arrival order must matter sometimes");
+    }
+}

@@ -1,0 +1,303 @@
+//! Software IEEE-754 binary16 with *controlled rounding*.
+//!
+//! The accuracy study (paper Tables I–II) hinges on the numeric differences
+//! between kernel variants:
+//!
+//! * the stock CUDA intrinsic `__hfma2` is a **fused** multiply-add (one
+//!   rounding of `a*b+c`);
+//! * the paper's ILA-Opt replaces it with the GCN `v_mad_f16` instruction,
+//!   which on gfx9-class parts is a **non-fused** MAD (the product is
+//!   rounded to f16 before the add);
+//! * SMB-Opt changes the **accumulation order** (per-thread partials are
+//!   reduced through shared memory before one atomic flush, instead of
+//!   per-thread atomics arriving in scheduler order).
+//!
+//! A `half`-crate dependency would not give us fused-vs-non-fused control,
+//! so we implement binary16 directly.  All arithmetic is computed exactly
+//! in f64 (binary16 products are exact in f64; sums of two halves are
+//! exact; the fused `a*b+c` is exact except astronomically rare sticky-bit
+//! cases) and rounded **once** to half precision with round-to-nearest-even.
+
+/// IEEE-754 binary16 value (bit pattern).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct F16(pub u16);
+
+pub const F16_MAX: f64 = 65504.0;
+const EXP_BIAS: i32 = 15;
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const ONE: F16 = F16(0x3C00);
+    pub const INFINITY: F16 = F16(0x7C00);
+    pub const NEG_INFINITY: F16 = F16(0xFC00);
+    pub const NAN: F16 = F16(0x7E00);
+
+    /// Round an f64 to binary16 with a single round-to-nearest-even.
+    ///
+    /// This deliberately avoids the usual double-rounding through f32.
+    pub fn from_f64(x: f64) -> F16 {
+        if x.is_nan() {
+            return F16::NAN;
+        }
+        let sign: u16 = if x.is_sign_negative() { 0x8000 } else { 0 };
+        let mag = x.abs();
+        if mag == 0.0 {
+            return F16(sign);
+        }
+        // Threshold for rounding to infinity: halfway between 65504
+        // (f16::MAX) and the next representable step (65536).
+        if mag >= 65520.0 {
+            return F16(sign | 0x7C00);
+        }
+        // Unbiased exponent of the f64 magnitude.
+        let e2 = {
+            let bits = mag.to_bits();
+            let raw = ((bits >> 52) & 0x7FF) as i32;
+            // inputs here are far from f64-subnormal range
+            raw - 1023
+        };
+        // Quantum exponent: normals have a 10-bit mantissa at exponent e,
+        // subnormals sit at fixed quantum 2^-24.
+        let e = e2.max(-14);
+        let quantum_exp = e - 10;
+        // Exact power-of-two scaling, then round ties-to-even.
+        // (pow2 via exponent bits: ~6x faster than f64::powi on the
+        // accuracy-harness hot path, see EXPERIMENTS.md §Perf.)
+        let m = mag * pow2(-quantum_exp);
+        let r = m.round_ties_even() as u64;
+        debug_assert!(r <= 2048);
+        if e2 < -14 {
+            // Subnormal (or rounds up into the smallest normal at r==1024).
+            if r >= 1024 {
+                return F16(sign | 0x0400);
+            }
+            return F16(sign | r as u16);
+        }
+        if r == 2048 {
+            // Mantissa overflow bumps the exponent.
+            let exp_field = (e + 1 + EXP_BIAS) as u16;
+            if exp_field >= 31 {
+                return F16(sign | 0x7C00);
+            }
+            return F16(sign | (exp_field << 10));
+        }
+        let exp_field = (e + EXP_BIAS) as u16;
+        F16(sign | (exp_field << 10) | (r as u16 - 1024))
+    }
+
+    pub fn from_f32(x: f32) -> F16 {
+        F16::from_f64(x as f64)
+    }
+
+    pub fn to_f64(self) -> f64 {
+        let sign = if self.0 & 0x8000 != 0 { -1.0 } else { 1.0 };
+        let exp = ((self.0 >> 10) & 0x1F) as i32;
+        let mant = (self.0 & 0x3FF) as f64;
+        match exp {
+            0 => sign * mant * pow2(-24),
+            31 => {
+                if mant == 0.0 {
+                    sign * f64::INFINITY
+                } else {
+                    f64::NAN
+                }
+            }
+            _ => sign * (1024.0 + mant) * pow2(exp - EXP_BIAS - 10),
+        }
+    }
+
+    pub fn to_f32(self) -> f32 {
+        self.to_f64() as f32
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x3FF) != 0
+    }
+
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+}
+
+/// Exact power of two via exponent bits (valid for |e| < 1022 — far
+/// beyond any exponent binary16 arithmetic can produce).
+#[inline]
+fn pow2(e: i32) -> f64 {
+    debug_assert!((-1022..1024).contains(&e));
+    f64::from_bits(((e + 1023) as u64) << 52)
+}
+
+/// `a + b`, one rounding (hardware `v_add_f16` / `__hadd`).
+pub fn add(a: F16, b: F16) -> F16 {
+    F16::from_f64(a.to_f64() + b.to_f64())
+}
+
+/// `a * b`, one rounding (hardware `v_mul_f16`).
+pub fn mul(a: F16, b: F16) -> F16 {
+    F16::from_f64(a.to_f64() * b.to_f64())
+}
+
+/// Fused `a*b + c`, one rounding — the CUDA `__hfma` semantics the
+/// baseline kernel's intrinsics lower to.
+pub fn fma(a: F16, b: F16, c: F16) -> F16 {
+    // The product of two binary16 values is exact in f64 (22 mantissa
+    // bits); the subsequent add is correct to f64, and the final single
+    // rounding gives fused semantics (double-rounding cases require >53
+    // significant bits and are unreachable with binary16 inputs).
+    F16::from_f64(a.to_f64() * b.to_f64() + c.to_f64())
+}
+
+/// Non-fused MAD: product rounded to f16, then the add rounded again —
+/// the GCN `v_mad_f16` semantics ILA-Opt's inline assembly executes.
+pub fn mad(a: F16, b: F16, c: F16) -> F16 {
+    add(mul(a, b), c)
+}
+
+/// Element-wise packed half2 FMA (the `__hfma2` / `v_pk_fma_f16` shape the
+/// paper's kernel uses: two lanes per instruction).
+pub fn fma2(a: [F16; 2], b: [F16; 2], c: [F16; 2]) -> [F16; 2] {
+    [fma(a[0], b[0], c[0]), fma(a[1], b[1], c[1])]
+}
+
+/// Packed half2 add (`__hadd2` / `v_add_f16` pair).
+pub fn add2(a: [F16; 2], b: [F16; 2]) -> [F16; 2] {
+    [add(a[0], b[0]), add(a[1], b[1])]
+}
+
+/// Sum a slice sequentially in half precision (one rounding per step) —
+/// models a single thread's accumulator loop.
+pub fn sum_sequential(xs: &[F16]) -> F16 {
+    let mut acc = F16::ZERO;
+    for &x in xs {
+        acc = add(acc, x);
+    }
+    acc
+}
+
+/// Sum in the given order — models nondeterministic atomicAdd arrival
+/// order (the order is the schedule, not the data layout).
+pub fn sum_in_order(xs: &[F16], order: &[usize]) -> F16 {
+    let mut acc = F16::ZERO;
+    for &i in order {
+        acc = add(acc, xs[i]);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_finite_halves() {
+        // Exhaustive: every finite f16 must round-trip through f64.
+        for bits in 0u16..=0xFFFF {
+            let h = F16(bits);
+            if h.is_nan() {
+                continue;
+            }
+            let back = F16::from_f64(h.to_f64());
+            assert_eq!(back.0, bits, "bits={bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn known_encodings() {
+        assert_eq!(F16::from_f64(1.0).0, 0x3C00);
+        assert_eq!(F16::from_f64(-2.0).0, 0xC000);
+        assert_eq!(F16::from_f64(65504.0).0, 0x7BFF);
+        assert_eq!(F16::from_f64(65520.0).0, 0x7C00); // rounds to +inf
+        assert_eq!(F16::from_f64(6.103515625e-05).0, 0x0400); // min normal
+        assert_eq!(F16::from_f64(5.960464477539063e-08).0, 0x0001); // min subnormal
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16; ties
+        // to even must pick 1.0 (even mantissa).
+        assert_eq!(F16::from_f64(1.0 + f64::powi(2.0, -11)).0, 0x3C00);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9: even is 1+2^-9.
+        assert_eq!(F16::from_f64(1.0 + 3.0 * f64::powi(2.0, -11)).0, 0x3C02);
+    }
+
+    #[test]
+    fn subnormal_rounding() {
+        let q = f64::powi(2.0, -24);
+        assert_eq!(F16::from_f64(0.5 * q).0, 0x0000); // tie to even -> 0
+        assert_eq!(F16::from_f64(0.75 * q).0, 0x0001);
+        assert_eq!(F16::from_f64(1.5 * q).0, 0x0002); // tie to even -> 2
+    }
+
+    #[test]
+    fn fused_vs_mad_differ() {
+        // a = 1 + 2^-10, b = 1 - 2^-11:
+        // exact a*b = 1 + 2^-11 - 2^-21, which rounds DOWN to 1.0 in f16
+        // (just below the halfway point).  With c = -1:
+        //   mad   : round(a*b) + c = 1.0 - 1.0 = 0
+        //   fused : round(a*b + c) = round(2^-11 - 2^-21) ≈ 2^-11
+        let a = F16::from_f64(1.0 + f64::powi(2.0, -10));
+        let b = F16::from_f64(1.0 - f64::powi(2.0, -11));
+        let c = F16::from_f64(-1.0);
+        let fused = fma(a, b, c).to_f64();
+        let madded = mad(a, b, c).to_f64();
+        assert_eq!(madded, 0.0, "product must round to exactly 1.0");
+        assert!(fused > 0.0, "fused keeps the residual, got {fused}");
+        assert!((fused - f64::powi(2.0, -11)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn addition_is_correctly_rounded() {
+        // 2048 + 1 = 2049 is not representable (quantum is 2 there);
+        // 2049 is halfway and ties-to-even picks 2048 (even mantissa 0).
+        assert_eq!(add(F16::from_f64(2048.0), F16::ONE).to_f64(), 2048.0);
+        // 2048 + 3 = 2051, halfway between 2050 (odd mantissa) and 2052
+        // (even mantissa): ties-to-even picks 2052.
+        assert_eq!(add(F16::from_f64(2048.0), F16::from_f64(3.0)).to_f64(), 2052.0);
+    }
+
+    #[test]
+    fn accumulation_order_matters() {
+        // Big + many smalls: sequential order loses the smalls one by one,
+        // pairing the smalls first retains them.
+        let xs: Vec<F16> = std::iter::once(F16::from_f64(2048.0))
+            .chain(std::iter::repeat(F16::ONE).take(64))
+            .collect();
+        let fwd = sum_sequential(&xs).to_f64();
+        let rev: Vec<usize> = (0..xs.len()).rev().collect();
+        let bwd = sum_in_order(&xs, &rev).to_f64();
+        assert_ne!(fwd, bwd, "fwd={fwd} bwd={bwd}");
+        assert_eq!(fwd, 2048.0); // each +1 is individually absorbed
+        assert_eq!(bwd, 2112.0); // smalls first: 64 + 2048
+    }
+
+    #[test]
+    fn overflow_saturates_to_inf() {
+        let big = F16::from_f64(60000.0);
+        assert!(add(big, big).is_infinite());
+        assert!(mul(big, big).is_infinite());
+    }
+
+    #[test]
+    fn nan_propagates() {
+        assert!(F16::from_f64(f64::NAN).is_nan());
+        assert!(add(F16::NAN, F16::ONE).is_nan());
+    }
+
+    #[test]
+    fn signed_zero() {
+        assert_eq!(F16::from_f64(-0.0).0, 0x8000);
+        assert_eq!(F16::from_f64(0.0).0, 0x0000);
+    }
+
+    #[test]
+    fn matches_native_f32_conversion_smoke() {
+        // Sanity vs rust's own f32 rounding for values where a single
+        // rounding through f32 is exact (f32 round-trips all f16 exactly).
+        for i in 0..1000 {
+            let x = (i as f64) * 0.37 - 185.0;
+            let via64 = F16::from_f64(x);
+            // reference: round via f32-representable check
+            assert!((via64.to_f64() - x).abs() <= (x.abs() * f64::powi(2.0, -11)).max(f64::powi(2.0, -24)) + 1e-12);
+        }
+    }
+}

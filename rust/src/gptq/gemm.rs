@@ -1,0 +1,136 @@
+//! Dense CPU reference for the quantized GEMM/GEMV (f32).
+//!
+//! This is the *correctness* oracle on the rust side (mirroring
+//! `python/compile/kernels/ref.py`); the performance-modelled kernel lives
+//! in `dcusim::kernels`, and the f16-faithful numerics used by the
+//! accuracy study live in `eval::numerics`.
+
+use super::pack;
+use super::quantize::QuantizedTensor;
+use super::Matrix;
+
+/// Expand a packed tensor to a dense f32 matrix `W[K, N]`.
+pub fn dequantize(q: &QuantizedTensor) -> Matrix {
+    let (k, n, g) = (q.k, q.n, q.group_size);
+    let codes = pack::unpack_rows(&q.qweight, k / pack::NIBBLES_PER_WORD, n);
+    let zeros = pack::unpack_cols(&q.qzeros, q.groups(), n / pack::NIBBLES_PER_WORD);
+    let mut w = Matrix::zeros(k, n);
+    for kk in 0..k {
+        let gi = kk / g;
+        // Act-order: packed row kk stores original in-feature perm[kk].
+        let dst = q.perm.as_ref().map_or(kk, |p| p[kk]);
+        for col in 0..n {
+            let code = codes[kk * n + col] as i32;
+            let zero = zeros[gi * n + col] as i32;
+            let scale = q.scales[gi * n + col];
+            w.data[dst * n + col] = scale * (code - zero) as f32;
+        }
+    }
+    w
+}
+
+/// `y[N] = x[K] · deq(Q)[K, N]` — single-row (decode) GEMV.
+pub fn gemv_f32(x: &[f32], q: &QuantizedTensor) -> Vec<f32> {
+    assert_eq!(x.len(), q.k);
+    let n = q.n;
+    let g = q.group_size;
+    let codes = pack::unpack_rows(&q.qweight, q.k / pack::NIBBLES_PER_WORD, n);
+    let zeros = pack::unpack_cols(&q.qzeros, q.groups(), n / pack::NIBBLES_PER_WORD);
+    let mut y = vec![0.0f32; n];
+    for kk in 0..q.k {
+        // Act-order: gather the activation through b_q_perm (the load
+        // pattern the paper's Algorithm 2 branches on).
+        let xv = x[q.perm.as_ref().map_or(kk, |p| p[kk])];
+        if xv == 0.0 {
+            continue;
+        }
+        let gi = kk / g;
+        let crow = &codes[kk * n..(kk + 1) * n];
+        let zrow = &zeros[gi * n..(gi + 1) * n];
+        let srow = &q.scales[gi * n..(gi + 1) * n];
+        for col in 0..n {
+            y[col] += xv * srow[col] * (crow[col] as i32 - zrow[col] as i32) as f32;
+        }
+    }
+    y
+}
+
+/// `Y[M, N] = X[M, K] · deq(Q)` — batched GEMM.
+pub fn gemm_f32(x: &Matrix, q: &QuantizedTensor) -> Matrix {
+    assert_eq!(x.cols, q.k);
+    let mut out = Matrix::zeros(x.rows, q.n);
+    for m in 0..x.rows {
+        let y = gemv_f32(x.row(m), q);
+        out.data[m * q.n..(m + 1) * q.n].copy_from_slice(&y);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gptq::quantize::{quantize_rtn, QMAX};
+    use crate::rng::Rng;
+
+    fn random_quantized(k: usize, n: usize, g: usize, seed: u64) -> (Matrix, QuantizedTensor) {
+        let mut rng = Rng::new(seed);
+        let w = Matrix::from_vec(k, n, rng.normal_vec_f32(k * n, 1.0));
+        let q = quantize_rtn(&w, g);
+        (w, q)
+    }
+
+    #[test]
+    fn gemv_matches_dense_dequant_matmul() {
+        let (_, q) = random_quantized(128, 24, 64, 1);
+        let mut rng = Rng::new(2);
+        let x = rng.normal_vec_f32(128, 1.0);
+        let y = gemv_f32(&x, &q);
+        let wq = dequantize(&q);
+        for col in 0..q.n {
+            let mut expect = 0.0f32;
+            for kk in 0..q.k {
+                expect += x[kk] * wq.at(kk, col);
+            }
+            assert!((y[col] - expect).abs() < 1e-3, "col {col}: {} vs {expect}", y[col]);
+        }
+    }
+
+    #[test]
+    fn gemm_rows_are_independent_gemvs() {
+        let (_, q) = random_quantized(64, 16, 64, 3);
+        let mut rng = Rng::new(4);
+        let x = Matrix::from_vec(3, 64, rng.normal_vec_f32(3 * 64, 1.0));
+        let out = gemm_f32(&x, &q);
+        for m in 0..3 {
+            let y = gemv_f32(x.row(m), &q);
+            assert_eq!(out.row(m), &y[..]);
+        }
+    }
+
+    #[test]
+    fn dequantize_respects_grid() {
+        let (_, q) = random_quantized(64, 8, 32, 5);
+        let w = dequantize(&q);
+        // every dequantized value must be scale * integer in [-zero, 15-zero]
+        let zeros = pack::unpack_cols(&q.qzeros, q.groups(), 1);
+        for kk in 0..q.k {
+            let gi = kk / q.group_size;
+            for col in 0..q.n {
+                let s = q.scales[gi * q.n + col];
+                let z = zeros[gi * q.n + col] as i32;
+                let steps = w.at(kk, col) / s;
+                let nearest = steps.round();
+                assert!((steps - nearest).abs() < 1e-3);
+                let code = nearest as i32 + z;
+                assert!((0..=QMAX).contains(&code));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_activation_gives_zero_output() {
+        let (_, q) = random_quantized(64, 8, 64, 6);
+        let y = gemv_f32(&vec![0.0; 64], &q);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+}

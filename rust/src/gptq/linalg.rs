@@ -1,0 +1,196 @@
+//! Small dense linear algebra needed by the GPTQ algorithm (f64).
+//!
+//! GPTQ needs: `H = 2 XᵀX + λI` (symmetric positive definite), `H⁻¹`, and
+//! the **upper** Cholesky factor of `H⁻¹` whose rows drive the error
+//! propagation.  Sizes are the layer in-feature counts (≤ a few thousand),
+//! so straightforward O(n³) loops are fine.
+
+/// Cholesky decomposition `A = L Lᵀ` (lower-triangular, row-major n×n).
+/// Returns `None` if `A` is not positive definite.
+pub fn cholesky_lower(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + j] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Invert a lower-triangular matrix in place (forward substitution).
+pub fn invert_lower(l: &[f64], n: usize) -> Vec<f64> {
+    let mut inv = vec![0.0f64; n * n];
+    for i in 0..n {
+        inv[i * n + i] = 1.0 / l[i * n + i];
+        for j in 0..i {
+            let mut sum = 0.0;
+            for k in j..i {
+                sum += l[i * n + k] * inv[k * n + j];
+            }
+            inv[i * n + j] = -sum / l[i * n + i];
+        }
+    }
+    inv
+}
+
+/// Inverse of an SPD matrix via Cholesky: `A⁻¹ = L⁻ᵀ L⁻¹`.
+pub fn invert_spd(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    let l = cholesky_lower(a, n)?;
+    let linv = invert_lower(&l, n);
+    // A^{-1} = L^{-T} L^{-1}; entry (i,j) = sum_k linv[k,i] * linv[k,j]
+    let mut inv = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = 0.0;
+            for k in i.max(j)..n {
+                sum += linv[k * n + i] * linv[k * n + j];
+            }
+            inv[i * n + j] = sum;
+            inv[j * n + i] = sum;
+        }
+    }
+    Some(inv)
+}
+
+/// Upper Cholesky factor `U` with `A = Uᵀ U` (what GPTQ's error
+/// propagation indexes): computed as the transpose of the lower factor of
+/// the *reversed* matrix trick is unnecessary — we use `A = L Lᵀ` and
+/// return `U = Lᵀ`.
+pub fn cholesky_upper(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    let l = cholesky_lower(a, n)?;
+    let mut u = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            u[j * n + i] = l[i * n + j];
+        }
+    }
+    Some(u)
+}
+
+/// `C = AᵀA` for row-major A (rows m, cols n) -> n×n.
+pub fn gram(a: &[f32], m: usize, n: usize) -> Vec<f64> {
+    assert_eq!(a.len(), m * n);
+    let mut g = vec![0.0f64; n * n];
+    for r in 0..m {
+        let row = &a[r * n..(r + 1) * n];
+        for i in 0..n {
+            let ai = row[i] as f64;
+            if ai == 0.0 {
+                continue;
+            }
+            for j in i..n {
+                g[i * n + j] += ai * row[j] as f64;
+            }
+        }
+    }
+    for i in 0..n {
+        for j in 0..i {
+            g[i * n + j] = g[j * n + i];
+        }
+    }
+    g
+}
+
+/// Max |A·A⁻¹ − I| — used by tests to validate inversion accuracy.
+pub fn inverse_residual(a: &[f64], inv: &[f64], n: usize) -> f64 {
+    let mut worst = 0.0f64;
+    for i in 0..n {
+        for j in 0..n {
+            let mut sum = 0.0;
+            for k in 0..n {
+                sum += a[i * n + k] * inv[k * n + j];
+            }
+            let expect = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((sum - expect).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let m: Vec<f32> = (0..(2 * n * n)).map(|_| rng.normal() as f32).collect();
+        let mut g = gram(&m, 2 * n, n);
+        for i in 0..n {
+            g[i * n + i] += 0.5; // damping for conditioning
+        }
+        g
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let n = 16;
+        let a = random_spd(n, 1);
+        let l = cholesky_lower(&a, n).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let mut sum = 0.0;
+                for k in 0..n {
+                    sum += l[i * n + k] * l[j * n + k];
+                }
+                assert!((sum - a[i * n + j]).abs() < 1e-8, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        // [[1, 2], [2, 1]] has eigenvalues 3 and -1.
+        let a = vec![1.0, 2.0, 2.0, 1.0];
+        assert!(cholesky_lower(&a, 2).is_none());
+    }
+
+    #[test]
+    fn spd_inverse_accurate() {
+        let n = 24;
+        let a = random_spd(n, 2);
+        let inv = invert_spd(&a, n).unwrap();
+        assert!(inverse_residual(&a, &inv, n) < 1e-6);
+    }
+
+    #[test]
+    fn upper_factor_reconstructs() {
+        let n = 12;
+        let a = random_spd(n, 3);
+        let u = cholesky_upper(&a, n).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let mut sum = 0.0;
+                for k in 0..n {
+                    sum += u[k * n + i] * u[k * n + j];
+                }
+                assert!((sum - a[i * n + j]).abs() < 1e-8);
+            }
+        }
+        // strictly upper: entries below the diagonal are zero
+        for i in 0..n {
+            for j in 0..i {
+                assert_eq!(u[i * n + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_matches_naive() {
+        let a: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 3x2
+        let g = gram(&a, 3, 2);
+        assert_eq!(g, vec![35.0, 44.0, 44.0, 56.0]);
+    }
+}

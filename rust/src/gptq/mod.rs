@@ -1,0 +1,70 @@
+//! GPTQ 4-bit quantization substrate.
+//!
+//! Everything the paper *depends on* but does not contribute: the GPTQ
+//! one-shot quantization algorithm itself (Frantar et al., 2022 — Hessian
+//! accumulation from calibration activations plus Cholesky-based error
+//! propagation), the 4-bit packing layout shared with the Python/Pallas
+//! layer, and a dense CPU reference for the quantized GEMM.
+//!
+//! Layout contract (identical to `python/compile/quant_ref.py` and
+//! `python/compile/kernels/ref.py`):
+//!
+//! * `qweight: u32[K/8, N]` — nibble `j` of word `w` holds row `8w + j`;
+//! * `scales:  f32[K/g, N]`;
+//! * `qzeros:  u32[K/g, N/8]` — nibble `j` of word `w` holds column `8w+j`;
+//! * `W[k,n] = scales[k/g, n] * (code[k,n] - zero[k/g, n])`.
+
+pub mod gemm;
+pub mod linalg;
+pub mod pack;
+pub mod quantize;
+
+pub use gemm::{dequantize, gemm_f32, gemv_f32};
+pub use pack::{pack_cols, pack_rows, unpack_cols, unpack_rows, NIBBLES_PER_WORD};
+pub use quantize::{
+    quantize_gptq, quantize_rtn, reconstruction_error, GptqConfig, QuantizedTensor,
+};
+
+/// A dense row-major f32 matrix (minimal, no external crates).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Frobenius norm of (self - other).
+    pub fn frob_dist(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    }
+}

@@ -1,0 +1,124 @@
+//! 4-bit nibble packing (the exllama-style GPTQ storage layout).
+
+pub const NIBBLES_PER_WORD: usize = 8;
+
+/// Pack codes `u8[K, N]` (values 0..=15) into `u32[K/8, N]`:
+/// nibble `j` (bits `4j..4j+4`) of word `w` holds row `8w + j`.
+pub fn pack_rows(codes: &[u8], k: usize, n: usize) -> Vec<u32> {
+    assert_eq!(codes.len(), k * n);
+    assert_eq!(k % NIBBLES_PER_WORD, 0, "K must be a multiple of 8");
+    let kw = k / NIBBLES_PER_WORD;
+    let mut out = vec![0u32; kw * n];
+    for w in 0..kw {
+        for j in 0..NIBBLES_PER_WORD {
+            let row = w * NIBBLES_PER_WORD + j;
+            for col in 0..n {
+                let c = codes[row * n + col] as u32;
+                debug_assert!(c <= 0xF);
+                out[w * n + col] |= c << (4 * j);
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_rows`].
+pub fn unpack_rows(qweight: &[u32], kw: usize, n: usize) -> Vec<u8> {
+    assert_eq!(qweight.len(), kw * n);
+    let k = kw * NIBBLES_PER_WORD;
+    let mut out = vec![0u8; k * n];
+    for w in 0..kw {
+        for col in 0..n {
+            let word = qweight[w * n + col];
+            for j in 0..NIBBLES_PER_WORD {
+                out[(w * NIBBLES_PER_WORD + j) * n + col] = ((word >> (4 * j)) & 0xF) as u8;
+            }
+        }
+    }
+    out
+}
+
+/// Pack zero-points `u8[G, N]` into `u32[G, N/8]`:
+/// nibble `j` of word `w` holds column `8w + j`.
+pub fn pack_cols(zeros: &[u8], g: usize, n: usize) -> Vec<u32> {
+    assert_eq!(zeros.len(), g * n);
+    assert_eq!(n % NIBBLES_PER_WORD, 0, "N must be a multiple of 8");
+    let nw = n / NIBBLES_PER_WORD;
+    let mut out = vec![0u32; g * nw];
+    for gi in 0..g {
+        for w in 0..nw {
+            let mut word = 0u32;
+            for j in 0..NIBBLES_PER_WORD {
+                let z = zeros[gi * n + w * NIBBLES_PER_WORD + j] as u32;
+                debug_assert!(z <= 0xF);
+                word |= z << (4 * j);
+            }
+            out[gi * nw + w] = word;
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_cols`].
+pub fn unpack_cols(qzeros: &[u32], g: usize, nw: usize) -> Vec<u8> {
+    assert_eq!(qzeros.len(), g * nw);
+    let n = nw * NIBBLES_PER_WORD;
+    let mut out = vec![0u8; g * n];
+    for gi in 0..g {
+        for w in 0..nw {
+            let word = qzeros[gi * nw + w];
+            for j in 0..NIBBLES_PER_WORD {
+                out[gi * n + w * NIBBLES_PER_WORD + j] = ((word >> (4 * j)) & 0xF) as u8;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn pack_rows_nibble_order() {
+        // Single column, rows 0..16 hold codes 0..16 (mod 16).
+        let codes: Vec<u8> = (0..16).map(|i| (i % 16) as u8).collect();
+        let packed = pack_rows(&codes, 16, 1);
+        assert_eq!(packed.len(), 2);
+        let expect0: u32 = (0..8).map(|j| (j as u32) << (4 * j)).sum();
+        assert_eq!(packed[0], expect0);
+    }
+
+    #[test]
+    fn pack_cols_nibble_order() {
+        let zeros: Vec<u8> = (0..8).collect();
+        let packed = pack_cols(&zeros, 1, 8);
+        let expect: u32 = (0..8).map(|j| (j as u32) << (4 * j)).sum();
+        assert_eq!(packed, vec![expect]);
+    }
+
+    #[test]
+    fn roundtrip_rows() {
+        let mut rng = Rng::new(1);
+        let (k, n) = (64, 24);
+        let codes: Vec<u8> = (0..k * n).map(|_| rng.below(16) as u8).collect();
+        let packed = pack_rows(&codes, k, n);
+        assert_eq!(unpack_rows(&packed, k / 8, n), codes);
+    }
+
+    #[test]
+    fn roundtrip_cols() {
+        let mut rng = Rng::new(2);
+        let (g, n) = (5, 32);
+        let zeros: Vec<u8> = (0..g * n).map(|_| rng.below(16) as u8).collect();
+        let packed = pack_cols(&zeros, g, n);
+        assert_eq!(unpack_cols(&packed, g, n / 8), zeros);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 8")]
+    fn pack_rows_rejects_bad_k() {
+        pack_rows(&[0u8; 12], 12, 1);
+    }
+}

@@ -1,0 +1,85 @@
+//! # opt4gptq
+//!
+//! Reproduction of **Opt4GPTQ: Co-Optimizing Memory and Computation for
+//! 4-bit GPTQ Quantized LLM Inference on Heterogeneous Platforms**
+//! (CS.DC 2025).
+//!
+//! The paper optimizes the 4-bit GPTQ dequantize-GEMM kernel inside the
+//! vLLM serving system for the HYGON DCU Z100 accelerator via three
+//! techniques — shared-memory buffering (SMB-Opt), vectorized memory
+//! loading (VML-Opt) and inline GCN/VOP3 assembly (ILA-Opt) — and reports
+//! end-to-end serving throughput/latency/accuracy across six GPTQ models.
+//!
+//! This crate is the Layer-3 rust coordinator of a three-layer stack (see
+//! `DESIGN.md`):
+//!
+//! * [`engine`] — a vLLM-style serving engine (paged KV cache, continuous
+//!   batching, prefill/decode scheduling, sampling, metrics);
+//! * [`runtime`] — PJRT CPU client that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes real token generation;
+//! * [`gptq`] — the GPTQ quantization substrate (packing, RTN and the full
+//!   Hessian/Cholesky GPTQ algorithm, quantized CPU GEMM reference);
+//! * [`dcusim`] — a cycle-approximate simulator of the DCU Z100 class of
+//!   GPGPU accelerators plus the paper's five kernel variants;
+//! * [`perfmodel`] — maps simulated kernel cycles onto per-model serving
+//!   throughput/latency (regenerates the paper's Figures 2–3);
+//! * [`eval`] — the ARC-style accuracy harness with variant-faithful fp16
+//!   numerics (regenerates Tables I–II);
+//! * [`models`], [`trace`] — the six paper model architectures and the
+//!   ShareGPT/ARC-like synthetic workloads.
+
+pub mod benchkit;
+pub mod cli;
+pub mod dcusim;
+pub mod engine;
+pub mod eval;
+pub mod f16;
+pub mod gptq;
+pub mod models;
+pub mod perfmodel;
+pub mod qcheck;
+pub mod repro;
+pub mod rng;
+pub mod runtime;
+pub mod trace;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// The paper's four optimization configurations plus the baseline; every
+/// figure/table is a sweep over these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct OptConfig {
+    /// SMB-Opt: shared-memory buffering of partial sums, single-thread
+    /// atomic flush per block (paper Algorithm 1).
+    pub smb: bool,
+    /// VML-Opt: half2 vectorized global loads of the activation matrix
+    /// (paper Algorithm 2).
+    pub vml: bool,
+    /// ILA-Opt: inline `v_mad_f16`/`v_add_f16` GCN assembly replacing the
+    /// compiler-lowered intrinsics (paper Algorithm 3).
+    pub ila: bool,
+}
+
+impl OptConfig {
+    pub const BASELINE: OptConfig = OptConfig { smb: false, vml: false, ila: false };
+    pub const SMB: OptConfig = OptConfig { smb: true, vml: false, ila: false };
+    pub const VML: OptConfig = OptConfig { smb: false, vml: true, ila: false };
+    pub const ILA: OptConfig = OptConfig { smb: false, vml: false, ila: true };
+    pub const OPT4GPTQ: OptConfig = OptConfig { smb: true, vml: true, ila: true };
+
+    /// The five configurations in the order the paper reports them.
+    pub const ALL: [OptConfig; 5] =
+        [Self::BASELINE, Self::SMB, Self::VML, Self::ILA, Self::OPT4GPTQ];
+
+    pub fn label(&self) -> &'static str {
+        match (self.smb, self.vml, self.ila) {
+            (false, false, false) => "Baseline",
+            (true, false, false) => "SMB-Opt",
+            (false, true, false) => "VML-Opt",
+            (false, false, true) => "ILA-Opt",
+            (true, true, true) => "Opt4GPTQ",
+            _ => "custom",
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! `opt4gptq` CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   serve        serve a synthetic trace with the PJRT tiny model
+//!   simulate     run a serving simulation of a paper model on the DCU sim
+//!   kernel       simulate one GPTQ-GEMM shape across all five configs
+//!   accuracy     regenerate Tables I/II (ARC_C / ARC_E)
+//!   figures      regenerate Figures 2-3 + Tables I-II (all experiments)
+//!   quantize     demo: GPTQ-quantize a random layer, report error vs RTN
+
+use opt4gptq::benchkit::Table;
+use opt4gptq::cli::Args;
+use opt4gptq::engine::Backend as _;
+use opt4gptq::dcusim::kernels::KernelParams;
+use opt4gptq::dcusim::{Device, GemvKernel};
+use opt4gptq::engine::{Engine, EngineConfig, Request, SamplingParams, SimBackend};
+use opt4gptq::eval::accuracy::evaluate;
+use opt4gptq::gptq::{quantize_gptq, quantize_rtn, reconstruction_error, GptqConfig, Matrix};
+use opt4gptq::models::{by_name, PAPER_MODELS};
+use opt4gptq::rng::Rng;
+use opt4gptq::runtime::PjrtBackend;
+use opt4gptq::trace::arc::ArcSplit;
+use opt4gptq::trace::RequestTrace;
+use opt4gptq::OptConfig;
+
+fn main() -> opt4gptq::Result<()> {
+    let args = Args::parse();
+    match args.subcommand() {
+        Some("serve") => cmd_serve(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("kernel") => cmd_kernel(&args),
+        Some("accuracy") => cmd_accuracy(&args),
+        Some("quantize") => cmd_quantize(&args),
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}");
+            usage();
+            std::process::exit(2);
+        }
+        None => {
+            usage();
+            Ok(())
+        }
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "usage: opt4gptq <serve|simulate|kernel|accuracy|quantize> [options]
+  serve     --artifacts DIR --requests N --max-tokens N [--temperature T]
+  simulate  --model NAME --requests N [--opt baseline|smb|vml|ila|opt4gptq]
+  kernel    --m M --k K --n N [--group G]
+  accuracy  --model NAME [--split arc_c|arc_e]
+  quantize  --k K --n N --group G"
+    );
+}
+
+fn parse_opt(s: &str) -> OptConfig {
+    match s {
+        "baseline" => OptConfig::BASELINE,
+        "smb" => OptConfig::SMB,
+        "vml" => OptConfig::VML,
+        "ila" => OptConfig::ILA,
+        "opt4gptq" | "all" => OptConfig::OPT4GPTQ,
+        other => panic!("unknown opt config {other:?}"),
+    }
+}
+
+fn cmd_serve(args: &Args) -> opt4gptq::Result<()> {
+    let dir = args.get_or("artifacts", "artifacts");
+    let n = args.get_usize("requests", 8);
+    let max_tokens = args.get_usize("max-tokens", 16);
+    let temperature = args.get_f64("temperature", 0.0) as f32;
+
+    println!("loading PJRT backend from {dir}/ ...");
+    let mut backend = PjrtBackend::load(dir)?;
+    backend.warmup()?;
+    println!(
+        "tiny model: vocab={} layers={} heads={} max_seq={}",
+        backend.dims.vocab, backend.dims.n_layers, backend.dims.n_heads, backend.dims.max_seq
+    );
+    let max_batch = backend.max_batch();
+    let mut engine = Engine::new(
+        EngineConfig { max_batch, max_seq_len: backend.max_seq_len(), ..Default::default() },
+        backend,
+    );
+
+    let trace = RequestTrace::generate_with(
+        n,
+        42,
+        opt4gptq::trace::sharegpt::TraceConfig {
+            prompt_max: 48,
+            response_max: 32,
+            vocab: 256,
+            ..Default::default()
+        },
+    );
+    for r in &trace.requests {
+        engine.add_request(Request::new(
+            r.id,
+            r.prompt.clone(),
+            SamplingParams {
+                max_tokens: r.response_len.min(max_tokens),
+                temperature,
+                top_k: 40,
+                seed: r.id as u64,
+                ..Default::default()
+            },
+        ));
+    }
+    let report = engine.run()?;
+    println!(
+        "served {} requests: {:.1} tok/s gen, {:.1} tok/s total, mean latency {:.3}s, mean TTFT {:.3}s, mean batch {:.2}",
+        report.outputs.len(),
+        report.metrics.throughput(),
+        report.metrics.total_throughput(),
+        report.metrics.mean_latency(),
+        report.metrics.mean_ttft(),
+        report.metrics.mean_decode_batch(),
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> opt4gptq::Result<()> {
+    let model_name = args.get_or("model", "Llama-2-7B-GPTQ");
+    let model = by_name(model_name)
+        .unwrap_or_else(|| panic!("unknown model {model_name:?}; see --help"));
+    let n = args.get_usize("requests", 32);
+    let opts: Vec<OptConfig> = match args.get("opt") {
+        Some(o) => vec![parse_opt(o)],
+        None => OptConfig::ALL.to_vec(),
+    };
+    let trace = RequestTrace::generate(n, 2025);
+    let mut table = Table::new(
+        &format!("{model_name} — simulated serving ({n} requests, batch 32)"),
+        &["config", "tok/s", "vs base", "mean lat (s)", "lat vs base"],
+    );
+    let mut base: Option<(f64, f64)> = None;
+    for opt in opts {
+        let be = SimBackend::new(model, opt, 32);
+        let mut engine = Engine::new(EngineConfig::default(), be);
+        for r in &trace.requests {
+            engine.add_request(Request::new(
+                r.id,
+                r.prompt.clone(),
+                SamplingParams { max_tokens: r.response_len, ..Default::default() },
+            ));
+        }
+        let report = engine.run()?;
+        let tput = report.metrics.throughput();
+        let lat = report.metrics.mean_latency();
+        let b = *base.get_or_insert((tput, lat));
+        table.row(vec![
+            opt.label().to_string(),
+            format!("{tput:.1}"),
+            format!("{:+.2}%", (tput / b.0 - 1.0) * 100.0),
+            format!("{lat:.3}"),
+            format!("{:+.2}%", (lat / b.1 - 1.0) * 100.0),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_kernel(args: &Args) -> opt4gptq::Result<()> {
+    let p = KernelParams {
+        m: args.get_usize("m", 1),
+        k: args.get_usize("k", 4096),
+        n: args.get_usize("n", 4096),
+        group_size: args.get_usize("group", 128),
+    };
+    let device = Device::z100();
+    let mut table = Table::new(
+        &format!("GPTQ GEMV m={} k={} n={} g={} on {}", p.m, p.k, p.n, p.group_size, device.cfg.name),
+        &["config", "µs", "speedup", "bound", "atomics", "occupancy", "mem eff"],
+    );
+    let mut base = None;
+    for opt in OptConfig::ALL {
+        let r = device.simulate(&GemvKernel::new(p, opt));
+        let b = *base.get_or_insert(r.seconds);
+        table.row(vec![
+            r.label.clone(),
+            format!("{:.2}", r.seconds * 1e6),
+            format!("{:.3}x", b / r.seconds),
+            r.bound.to_string(),
+            r.total_atomics.to_string(),
+            r.occupancy_blocks.to_string(),
+            format!("{:.2}", r.mem_efficiency),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_accuracy(args: &Args) -> opt4gptq::Result<()> {
+    let splits: Vec<ArcSplit> = match args.get("split") {
+        Some("arc_c") => vec![ArcSplit::Challenge],
+        Some("arc_e") => vec![ArcSplit::Easy],
+        _ => vec![ArcSplit::Challenge, ArcSplit::Easy],
+    };
+    let models: Vec<&str> = match args.get("model") {
+        Some(m) => vec![by_name(m).expect("unknown model").name],
+        None => PAPER_MODELS.iter().map(|m| m.name).collect(),
+    };
+    for split in splits {
+        let mut table = Table::new(
+            &format!("Inference accuracy on {}", split.label()),
+            &["model", "Baseline", "SMB-Opt", "VML-Opt", "ILA-Opt", "Opt4GPTQ"],
+        );
+        for model in &models {
+            let results = evaluate(model, split);
+            let mut row = vec![model.to_string()];
+            row.extend(results.iter().map(|r| format!("{:.2}%", r.accuracy() * 100.0)));
+            table.row(row);
+        }
+        table.print();
+    }
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> opt4gptq::Result<()> {
+    let k = args.get_usize("k", 512);
+    let n = args.get_usize("n", 128);
+    let g = args.get_usize("group", 128);
+    let mut rng = Rng::new(args.get_u64("seed", 0));
+    let w = Matrix::from_vec(k, n, rng.normal_vec_f32(k * n, 1.0));
+    // Correlated calibration activations (where GPTQ shines).
+    let s = 512;
+    let mut x = Matrix::zeros(s, k);
+    let basis = Matrix::from_vec(16, k, rng.normal_vec_f32(16 * k, 1.0));
+    for i in 0..s {
+        let coef = rng.normal_vec_f32(16, 1.0);
+        for j in 0..k {
+            let mut acc = 0.0;
+            for (c, &cv) in coef.iter().enumerate() {
+                acc += cv * basis.at(c, j);
+            }
+            x.data[i * k + j] = acc + 0.05 * rng.normal() as f32;
+        }
+    }
+    let rtn = quantize_rtn(&w, g);
+    let gptq = quantize_gptq(w.clone(), &x, GptqConfig { group_size: g, percdamp: 0.01, act_order: false });
+    let e_rtn = reconstruction_error(&x, &w, &rtn);
+    let e_gptq = reconstruction_error(&x, &w, &gptq);
+    println!("layer {k}x{n}, group {g}:");
+    println!("  RTN  reconstruction error ‖XW - XQ‖_F = {e_rtn:.4}");
+    println!("  GPTQ reconstruction error ‖XW - XQ‖_F = {e_gptq:.4}  ({:.1}% lower)",
+             (1.0 - e_gptq / e_rtn) * 100.0);
+    println!("  packed size: {} bytes ({}x smaller than f32)",
+             gptq.packed_bytes(), k * n * 4 / gptq.packed_bytes());
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! Architectures of the six GPTQ models the paper evaluates.
+//!
+//! The throughput/latency figures' per-model variation is driven entirely
+//! by the transformer dimensions (which GEMM shapes run, how many times,
+//! per token); we reproduce those dims exactly from the public model
+//! cards.  Weights are *not* needed for the performance study — the
+//! executable tiny model used by the PJRT path is described by the AOT
+//! manifest instead (see [`crate::runtime`]).
+
+use crate::dcusim::kernels::KernelParams;
+
+/// Transformer architecture (decoder-only, Llama/Qwen style).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    /// KV heads (GQA when < n_heads, e.g. Llama-3).
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    /// GPTQ group size of the public checkpoints (128 for all six).
+    pub group_size: usize,
+}
+
+impl ModelSpec {
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.d_head
+    }
+
+    /// Approximate parameter count (billions), for reporting.
+    pub fn params_b(&self) -> f64 {
+        let attn = self.d_model * self.d_model * 2
+            + self.d_model * self.kv_dim() * 2;
+        let mlp = 3 * self.d_model * self.d_ff;
+        let emb = 2 * self.vocab * self.d_model;
+        (self.n_layers * (attn + mlp) + emb) as f64 / 1e9
+    }
+
+    /// The quantized GEMM shapes one token's decode step runs **per
+    /// layer** (the kernel calls the paper's optimizations accelerate).
+    pub fn layer_gemms(&self, m: usize) -> Vec<KernelParams> {
+        let d = self.d_model;
+        let g = self.group_size;
+        vec![
+            KernelParams { m, k: d, n: d, group_size: g },            // wq
+            KernelParams { m, k: d, n: self.kv_dim(), group_size: g }, // wk
+            KernelParams { m, k: d, n: self.kv_dim(), group_size: g }, // wv
+            KernelParams { m, k: d, n: d, group_size: g },            // wo
+            KernelParams { m, k: d, n: self.d_ff, group_size: g },    // gate
+            KernelParams { m, k: d, n: self.d_ff, group_size: g },    // up
+            KernelParams { m, k: self.d_ff, n: d, group_size: g },    // down
+        ]
+    }
+
+    /// Bytes of packed GPTQ weights per layer (drives cache/bandwidth).
+    pub fn layer_weight_bytes(&self) -> u64 {
+        self.layer_gemms(1).iter().map(|p| p.min_bytes() - (p.m * (p.k + p.n) * 2) as u64).sum()
+    }
+}
+
+/// The six models of the paper's evaluation, in the paper's order
+/// (Figures 2–3 and Tables I–II iterate Qwen-4B, Qwen-1.8B, LLaMa-13B,
+/// CodeLlama-7B, Llama-2-7B, Meta-Llama-3-8B).
+pub const PAPER_MODELS: [ModelSpec; 6] = [
+    ModelSpec {
+        name: "Qwen1.5-4B-Chat-GPTQ-Int4",
+        n_layers: 40, d_model: 2560, n_heads: 20, n_kv_heads: 20,
+        d_head: 128, d_ff: 6912, vocab: 151936, group_size: 128,
+    },
+    ModelSpec {
+        name: "Qwen1.5-1.8B-Chat-GPTQ-Int4",
+        n_layers: 24, d_model: 2048, n_heads: 16, n_kv_heads: 16,
+        d_head: 128, d_ff: 5504, vocab: 151936, group_size: 128,
+    },
+    ModelSpec {
+        name: "LLaMa-13B-GPTQ",
+        n_layers: 40, d_model: 5120, n_heads: 40, n_kv_heads: 40,
+        d_head: 128, d_ff: 13824, vocab: 32000, group_size: 128,
+    },
+    ModelSpec {
+        name: "CodeLlama-7B-GPTQ",
+        n_layers: 32, d_model: 4096, n_heads: 32, n_kv_heads: 32,
+        d_head: 128, d_ff: 11008, vocab: 32016, group_size: 128,
+    },
+    ModelSpec {
+        name: "Llama-2-7B-GPTQ",
+        n_layers: 32, d_model: 4096, n_heads: 32, n_kv_heads: 32,
+        d_head: 128, d_ff: 11008, vocab: 32000, group_size: 128,
+    },
+    ModelSpec {
+        name: "Meta-Llama-3-8B-GPTQ",
+        n_layers: 32, d_model: 4096, n_heads: 32, n_kv_heads: 8,
+        d_head: 128, d_ff: 14336, vocab: 128256, group_size: 128,
+    },
+];
+
+pub fn by_name(name: &str) -> Option<&'static ModelSpec> {
+    PAPER_MODELS.iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_model_names() {
+        let approx: Vec<(f64, f64)> = PAPER_MODELS
+            .iter()
+            .map(|m| (m.params_b(), expected(m.name)))
+            .collect();
+        for ((got, want), m) in approx.iter().zip(PAPER_MODELS.iter()) {
+            assert!(
+                (got - want).abs() / want < 0.20,
+                "{}: computed {got:.2}B vs nominal {want}B",
+                m.name
+            );
+        }
+        fn expected(name: &str) -> f64 {
+            if name.contains("13B") { 13.0 }
+            else if name.contains("1.8B") { 1.8 }
+            else if name.contains("8B") { 8.0 }
+            else if name.contains("7B") { 6.7 }
+            else { 3.9 }
+        }
+    }
+
+    #[test]
+    fn gemm_shapes_align_with_kernel_constraints() {
+        use crate::dcusim::kernels::gemv::{K_SLAB, N_TILE};
+        for m in PAPER_MODELS {
+            for p in m.layer_gemms(1) {
+                assert_eq!(p.k % K_SLAB, 0, "{}: K={} not /{K_SLAB}", m.name, p.k);
+                assert_eq!(p.n % N_TILE, 0, "{}: N={} not /{N_TILE}", m.name, p.n);
+                assert_eq!(p.k % p.group_size, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn llama3_uses_gqa() {
+        let m = by_name("Meta-Llama-3-8B-GPTQ").unwrap();
+        assert_eq!(m.n_kv_heads, 8);
+        assert_eq!(m.kv_dim(), 1024);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("LLaMa-13B-GPTQ").is_some());
+        assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn thirteen_b_has_most_gemm_work() {
+        let work = |m: &ModelSpec| -> u64 {
+            m.layer_gemms(1).iter().map(|p| p.flops()).sum::<u64>() * m.n_layers as u64
+        };
+        let m13 = by_name("LLaMa-13B-GPTQ").unwrap();
+        for m in PAPER_MODELS.iter() {
+            if m.name != m13.name {
+                assert!(work(m13) > work(m), "{}", m.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Minimal property-based testing kit (proptest is not available offline).
+//!
+//! Seeded generators + a runner that, on failure, reports the seed and the
+//! case index so the exact input can be replayed deterministically.  Used
+//! by `rust/tests/properties.rs` for the coordinator/gptq/f16 invariants.
+
+use crate::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 100, seed: 0x7461_c0de } // deterministic default
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs; panics with replay info on
+/// the first failure.
+pub fn check<T, G, P>(name: &str, cfg: Config, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let mut rng = Rng::new(cfg.seed.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed at case {case} (seed {:#x}):\n  input: {input:?}\n  {msg}",
+                cfg.seed.wrapping_add(case as u64)
+            );
+        }
+    }
+}
+
+/// Convenience: assert-style helper for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            "trivial",
+            Config { cases: 17, seed: 1 },
+            |r| r.below(100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"fails\"")]
+    fn failing_property_reports() {
+        check(
+            "fails",
+            Config { cases: 10, seed: 2 },
+            |r| r.below(100),
+            |&x| ensure(x < 10, format!("{x} >= 10")),
+        );
+    }
+}

@@ -1,0 +1,249 @@
+//! [`crate::engine::Backend`] implementation over the PJRT runtime:
+//! real token generation with the AOT-compiled tiny GPTQ Llama.
+//!
+//! KV layout: the HLO decode artifacts operate on a dense batched cache
+//! `f32[L, B, H, S, D]` whose lane `b` is the engine's backend *slot*;
+//! the engine's paged block tables map onto dense per-slot regions here
+//! (the tiny model's contexts fit comfortably; the paging machinery is
+//! still exercised and tested at the scheduler level).
+//!
+//! Perf (EXPERIMENTS.md §Perf): the decode hot path keeps the batched KV
+//! cache as PJRT **literals handed from step output to step input** —
+//! zero host-side KV copies while decoding.  Only a prefill (one per
+//! request) re-materializes the host mirror to splice the new sequence's
+//! cache into its lane.  `execute_b`/device-resident buffers are not
+//! usable here: xla_extension 0.5.1's `execute_b` aborts on tuple-rooted
+//! executables (`shape_util.cc pointer_size > 0` check), documented as a
+//! platform limitation.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context};
+
+use crate::engine::backend::{Backend, DecodeEntry};
+use crate::Result;
+
+use super::client::Runtime;
+
+/// Dimensions of the tiny model, read from the manifest.
+#[derive(Debug, Clone, Copy)]
+pub struct TinyDims {
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub max_seq: usize,
+    pub prefill_slots: usize,
+}
+
+/// PJRT-backed engine backend.
+pub struct PjrtBackend {
+    pub runtime: Runtime,
+    pub dims: TinyDims,
+    max_batch: usize,
+    /// Batched KV cache literals `[L, B, H, S, D]` (k, v), handed from
+    /// decode output to decode input without touching the host.
+    kv_lit: Option<(xla::Literal, xla::Literal)>,
+    /// Host mirrors, used only when splicing a prefilled sequence in.
+    mirror_k: Vec<f32>,
+    mirror_v: Vec<f32>,
+    /// True when `kv_lit` is newer than the mirrors.
+    mirror_stale: bool,
+    /// Wall seconds spent inside PJRT execute calls (perf accounting).
+    pub execute_seconds: f64,
+    pub execute_calls: usize,
+}
+
+impl PjrtBackend {
+    pub fn load(artifacts_dir: &str) -> Result<PjrtBackend> {
+        let runtime = Runtime::load(artifacts_dir)?;
+        let m = &runtime.manifest;
+        let dims = TinyDims {
+            vocab: m.model_dim("vocab")?,
+            n_layers: m.model_dim("n_layers")?,
+            n_heads: m.model_dim("n_heads")?,
+            d_head: m.model_dim("d_head")?,
+            max_seq: m.model_dim("max_seq")?,
+            prefill_slots: m.model_dim("prefill_slots")?,
+        };
+        let decode_batches = m.decode_batches();
+        if decode_batches.is_empty() {
+            bail!("no decode artifacts in manifest");
+        }
+        let max_batch = *decode_batches.last().unwrap();
+        let total = dims.n_layers * max_batch * dims.n_heads * dims.max_seq * dims.d_head;
+        Ok(PjrtBackend {
+            runtime,
+            dims,
+            max_batch,
+            kv_lit: None,
+            mirror_k: vec![0.0; total],
+            mirror_v: vec![0.0; total],
+            mirror_stale: false,
+            execute_seconds: 0.0,
+            execute_calls: 0,
+        })
+    }
+
+    /// Pre-compile all artifacts (avoids first-request latency spikes).
+    pub fn warmup(&mut self) -> Result<()> {
+        let tags: Vec<String> = self
+            .runtime
+            .manifest
+            .artifacts
+            .iter()
+            .map(|a| a.tag.clone())
+            .filter(|t| t == &format!("decode_b{}", self.max_batch) || t.starts_with("prefill_"))
+            .collect();
+        for tag in tags {
+            self.runtime.executable(&tag)?;
+        }
+        Ok(())
+    }
+
+    fn layer_stride(&self) -> usize {
+        self.dims.n_heads * self.dims.max_seq * self.dims.d_head
+    }
+
+    fn kv_dims(&self) -> [usize; 5] {
+        [self.dims.n_layers, self.max_batch, self.dims.n_heads, self.dims.max_seq, self.dims.d_head]
+    }
+
+    /// Refresh host mirrors from the literals if they are stale.
+    fn refresh_mirrors(&mut self) -> Result<()> {
+        if self.mirror_stale {
+            let (k, v) = self.kv_lit.as_ref().expect("stale without literals");
+            self.mirror_k = k.to_vec::<f32>()?;
+            self.mirror_v = v.to_vec::<f32>()?;
+            self.mirror_stale = false;
+        }
+        Ok(())
+    }
+
+    /// Splice a single-sequence cache `[L, 1, H, S, D]` into lane `slot`
+    /// of the host mirrors, then rebuild the batch literals.
+    fn splice_slot(&mut self, slot: usize, kk: &[f32], vv: &[f32]) -> Result<()> {
+        let ls = self.layer_stride();
+        let b = self.max_batch;
+        assert!(slot < b);
+        assert_eq!(kk.len(), self.dims.n_layers * ls);
+        for l in 0..self.dims.n_layers {
+            let dst = (l * b + slot) * ls;
+            self.mirror_k[dst..dst + ls].copy_from_slice(&kk[l * ls..(l + 1) * ls]);
+            self.mirror_v[dst..dst + ls].copy_from_slice(&vv[l * ls..(l + 1) * ls]);
+        }
+        let dims = self.kv_dims();
+        self.kv_lit = Some((
+            Runtime::f32_literal(&self.mirror_k, &dims)?,
+            Runtime::f32_literal(&self.mirror_v, &dims)?,
+        ));
+        Ok(())
+    }
+
+    fn timed_execute(
+        &mut self,
+        tag: &str,
+        inputs: &HashMap<String, xla::Literal>,
+    ) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let outs = self.runtime.execute(tag, inputs)?;
+        self.execute_seconds += t0.elapsed().as_secs_f64();
+        self.execute_calls += 1;
+        Ok(outs)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn max_seq_len(&self) -> usize {
+        self.dims.max_seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.dims.vocab
+    }
+
+    fn prefill(&mut self, slot: usize, tokens: &[u32]) -> Result<(Vec<f32>, f64)> {
+        let t0 = Instant::now();
+        let d = self.dims;
+        if tokens.is_empty() || tokens.len() > d.prefill_slots {
+            bail!("prefill length {} outside 1..={}", tokens.len(), d.prefill_slots);
+        }
+        let mut padded = vec![0i32; d.prefill_slots];
+        for (i, &t) in tokens.iter().enumerate() {
+            padded[i] = t as i32;
+        }
+        let slot_len = self.layer_stride() * d.n_layers;
+        let kv1_dims = [d.n_layers, 1, d.n_heads, d.max_seq, d.d_head];
+        let mut inputs = HashMap::new();
+        inputs.insert("kv.k".into(), Runtime::f32_literal(&vec![0.0; slot_len], &kv1_dims)?);
+        inputs.insert("kv.v".into(), Runtime::f32_literal(&vec![0.0; slot_len], &kv1_dims)?);
+        inputs.insert("lengths".into(), Runtime::i32_literal(&[tokens.len() as i32], &[1])?);
+        inputs.insert("tokens".into(), Runtime::i32_literal(&padded, &[1, d.prefill_slots])?);
+
+        let outs = self.timed_execute("prefill_b1_s64", &inputs)?;
+        let (logits, kk, vv) = unpack3(outs)?;
+        let logits_row = logits.to_vec::<f32>()?;
+        self.refresh_mirrors()?;
+        let kk = kk.to_vec::<f32>()?;
+        let vv = vv.to_vec::<f32>()?;
+        self.splice_slot(slot, &kk, &vv)?;
+        Ok((logits_row, t0.elapsed().as_secs_f64()))
+    }
+
+    fn decode(&mut self, batch: &[DecodeEntry]) -> Result<(Vec<Vec<f32>>, f64)> {
+        let t0 = Instant::now();
+        let d = self.dims;
+        let b = self.max_batch;
+        assert!(!batch.is_empty() && batch.len() <= b);
+        // Lanes are slots; idle lanes run masked at position 0.
+        let mut lengths = vec![0i32; b];
+        let mut tokens = vec![0i32; b];
+        for e in batch {
+            assert!(e.slot < b, "slot {} out of range", e.slot);
+            lengths[e.slot] = e.position as i32;
+            tokens[e.slot] = e.token as i32;
+        }
+        if self.kv_lit.is_none() {
+            let dims = self.kv_dims();
+            self.kv_lit = Some((
+                Runtime::f32_literal(&self.mirror_k, &dims)?,
+                Runtime::f32_literal(&self.mirror_v, &dims)?,
+            ));
+        }
+        let (kv_k, kv_v) = self.kv_lit.take().unwrap();
+        let mut inputs = HashMap::new();
+        inputs.insert("kv.k".into(), kv_k);
+        inputs.insert("kv.v".into(), kv_v);
+        inputs.insert("lengths".into(), Runtime::i32_literal(&lengths, &[b])?);
+        inputs.insert("tokens".into(), Runtime::i32_literal(&tokens, &[b])?);
+
+        let tag = format!("decode_b{b}");
+        let outs = self.timed_execute(&tag, &inputs)?;
+        let (logits, new_k, new_v) = unpack3(outs)?;
+        // Hand the updated cache straight to the next step (no host copy).
+        self.kv_lit = Some((new_k, new_v));
+        self.mirror_stale = true;
+
+        let all_logits = logits.to_vec::<f32>()?;
+        let rows = batch
+            .iter()
+            .map(|e| all_logits[e.slot * d.vocab..(e.slot + 1) * d.vocab].to_vec())
+            .collect();
+        Ok((rows, t0.elapsed().as_secs_f64()))
+    }
+}
+
+fn unpack3(mut outs: Vec<xla::Literal>) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
+    if outs.len() != 3 {
+        bail!("expected 3 outputs (logits, kv.k, kv.v), got {}", outs.len());
+    }
+    let v = outs.pop().unwrap();
+    let k = outs.pop().unwrap();
+    let logits = outs.pop().unwrap();
+    Ok((logits, k, v))
+}

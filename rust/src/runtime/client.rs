@@ -1,0 +1,123 @@
+//! PJRT client wrapper: weight literals + compiled executables.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::Result;
+
+use super::manifest::{self, Manifest};
+
+/// Owns the PJRT CPU client, the tiny model's weight literals (loaded
+/// once from `weights.bin`) and the compiled executables (compiled
+/// lazily, cached per artifact tag).
+pub struct Runtime {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    pub client: xla::PjRtClient,
+    weights: HashMap<String, xla::Literal>,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load manifest + weights from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading {}/manifest.txt (run `make artifacts`)", dir.display()))?;
+        let manifest = manifest::parse(&text)?;
+        let blob = std::fs::read(dir.join(&manifest.weights_file))
+            .with_context(|| format!("reading {}", manifest.weights_file))?;
+
+        let mut weights = HashMap::new();
+        for t in &manifest.tensors {
+            let raw = blob
+                .get(t.offset..t.offset + t.nbytes)
+                .with_context(|| format!("tensor {} out of bounds in weights.bin", t.name))?;
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                t.dtype.element_type(),
+                &t.shape,
+                raw,
+            )?;
+            weights.insert(t.name.clone(), lit);
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { dir, manifest, client, weights, exes: HashMap::new() })
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact tag.
+    pub fn executable(&mut self, tag: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(tag) {
+            let art = self.manifest.artifact(tag)?.clone();
+            let path = self.dir.join(&art.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.exes.insert(tag.to_string(), exe);
+        }
+        Ok(&self.exes[tag])
+    }
+
+    /// Execute an artifact: `inputs` supplies the non-weight arguments by
+    /// manifest name; weights come from the cache.  Returns the flattened
+    /// tuple outputs.
+    pub fn execute(
+        &mut self,
+        tag: &str,
+        inputs: &HashMap<String, xla::Literal>,
+    ) -> Result<Vec<xla::Literal>> {
+        self.executable(tag)?; // ensure compiled before borrowing weights
+        let art = self.manifest.artifact(tag)?.clone();
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(art.args.len());
+        for a in &art.args {
+            let lit = if a.is_weight {
+                self.weights
+                    .get(&a.name)
+                    .with_context(|| format!("weight {} not loaded", a.name))?
+            } else {
+                inputs
+                    .get(&a.name)
+                    .with_context(|| format!("input {} not supplied for {tag}", a.name))?
+            };
+            args.push(lit);
+        }
+        let exe = &self.exes[tag];
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: single tuple output.
+        Ok(result.to_tuple()?)
+    }
+
+    /// Access a loaded weight literal by name.
+    pub fn weight_literal(&self, name: &str) -> Result<&xla::Literal> {
+        self.weights
+            .get(name)
+            .with_context(|| format!("weight {name} not loaded"))
+    }
+
+    /// Convenience: build an f32 literal.
+    pub fn f32_literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            dims,
+            bytes,
+        )?)
+    }
+
+    /// Convenience: build an i32 literal.
+    pub fn i32_literal(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            dims,
+            bytes,
+        )?)
+    }
+}

@@ -1,0 +1,300 @@
+//! Parser for `artifacts/manifest.txt` (written by `python/compile/aot.py`).
+//!
+//! Line-based format, one record per line:
+//! ```text
+//! model <name> vocab=256 d_model=512 ... prefill_slots=64
+//! weights weights.bin
+//! tensor <name> dtype=f32 shape=8x512 offset=0 nbytes=16384
+//! artifact <tag> file=<file> [batch=N] [slots=N] ...
+//! arg <i> kind=weight|input name=<n> dtype=<d> shape=<s>
+//! out <i> name=<n> dtype=<d> shape=<s>
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context};
+
+use crate::Result;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    U32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "u32" => Dtype::U32,
+            "i32" => Dtype::I32,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+
+    pub fn element_type(&self) -> xla::ElementType {
+        match self {
+            Dtype::F32 => xla::ElementType::F32,
+            Dtype::U32 => xla::ElementType::U32,
+            Dtype::I32 => xla::ElementType::S32,
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        4
+    }
+}
+
+/// A tensor stored in `weights.bin`.
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// One argument of an artifact's entry computation.
+#[derive(Debug, Clone)]
+pub struct ArgMeta {
+    pub index: usize,
+    pub is_weight: bool,
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+/// One output of an artifact (flattened tuple order).
+#[derive(Debug, Clone)]
+pub struct OutMeta {
+    pub index: usize,
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+/// One lowered HLO entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub tag: String,
+    pub file: String,
+    pub attrs: HashMap<String, String>,
+    pub args: Vec<ArgMeta>,
+    pub outs: Vec<OutMeta>,
+}
+
+impl ArtifactMeta {
+    pub fn attr_usize(&self, key: &str) -> Option<usize> {
+        self.attrs.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+/// The full parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model_name: String,
+    pub model_attrs: HashMap<String, usize>,
+    pub weights_file: String,
+    pub tensors: Vec<TensorMeta>,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn model_dim(&self, key: &str) -> Result<usize> {
+        self.model_attrs
+            .get(key)
+            .copied()
+            .with_context(|| format!("manifest model line missing {key}"))
+    }
+
+    pub fn artifact(&self, tag: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.tag == tag)
+            .with_context(|| format!("artifact {tag:?} not in manifest"))
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&TensorMeta> {
+        self.tensors
+            .iter()
+            .find(|t| t.name == name)
+            .with_context(|| format!("tensor {name:?} not in manifest"))
+    }
+
+    /// Decode artifact tags present, sorted by batch size.
+    pub fn decode_batches(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.tag.starts_with("decode_b"))
+            .filter_map(|a| a.attr_usize("batch"))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+fn kv_pairs(parts: &[&str]) -> HashMap<String, String> {
+    parts
+        .iter()
+        .filter_map(|p| p.split_once('='))
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+fn parse_shape(s: &str) -> Vec<usize> {
+    if s == "scalar" {
+        return vec![];
+    }
+    s.split('x').map(|d| d.parse().expect("bad shape dim")).collect()
+}
+
+/// Parse manifest text.
+pub fn parse(text: &str) -> Result<Manifest> {
+    let mut model_name = String::new();
+    let mut model_attrs = HashMap::new();
+    let mut weights_file = String::new();
+    let mut tensors = Vec::new();
+    let mut artifacts: Vec<ArtifactMeta> = Vec::new();
+
+    for (lineno, line) in text.lines().enumerate() {
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.is_empty() {
+            continue;
+        }
+        let ctx = || format!("manifest line {}: {line:?}", lineno + 1);
+        match parts[0] {
+            "model" => {
+                model_name = parts.get(1).with_context(ctx)?.to_string();
+                for (k, v) in kv_pairs(&parts[2..]) {
+                    if let Ok(n) = v.parse::<usize>() {
+                        model_attrs.insert(k, n);
+                    }
+                }
+            }
+            "weights" => weights_file = parts.get(1).with_context(ctx)?.to_string(),
+            "tensor" => {
+                let kv = kv_pairs(&parts[2..]);
+                tensors.push(TensorMeta {
+                    name: parts.get(1).with_context(ctx)?.to_string(),
+                    dtype: Dtype::parse(kv.get("dtype").with_context(ctx)?)?,
+                    shape: parse_shape(kv.get("shape").with_context(ctx)?),
+                    offset: kv.get("offset").with_context(ctx)?.parse()?,
+                    nbytes: kv.get("nbytes").with_context(ctx)?.parse()?,
+                });
+            }
+            "artifact" => {
+                let kv = kv_pairs(&parts[2..]);
+                artifacts.push(ArtifactMeta {
+                    tag: parts.get(1).with_context(ctx)?.to_string(),
+                    file: kv.get("file").cloned().unwrap_or_default(),
+                    attrs: kv,
+                    args: Vec::new(),
+                    outs: Vec::new(),
+                });
+            }
+            "arg" => {
+                let kv = kv_pairs(&parts[2..]);
+                let art = artifacts.last_mut().with_context(|| "arg before artifact")?;
+                art.args.push(ArgMeta {
+                    index: parts.get(1).with_context(ctx)?.parse()?,
+                    is_weight: kv.get("kind").map(|k| k == "weight").unwrap_or(false),
+                    name: kv.get("name").with_context(ctx)?.clone(),
+                    dtype: Dtype::parse(kv.get("dtype").with_context(ctx)?)?,
+                    shape: parse_shape(kv.get("shape").with_context(ctx)?),
+                });
+            }
+            "out" => {
+                let kv = kv_pairs(&parts[2..]);
+                let art = artifacts.last_mut().with_context(|| "out before artifact")?;
+                art.outs.push(OutMeta {
+                    index: parts.get(1).with_context(ctx)?.parse()?,
+                    name: kv.get("name").with_context(ctx)?.clone(),
+                    dtype: Dtype::parse(kv.get("dtype").with_context(ctx)?)?,
+                    shape: parse_shape(kv.get("shape").with_context(ctx)?),
+                });
+            }
+            // informational records (smoke-test blobs etc.)
+            _ => {}
+        }
+    }
+    if model_name.is_empty() {
+        bail!("manifest has no model line");
+    }
+    Ok(Manifest { model_name, model_attrs, weights_file, tensors, artifacts })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+model tiny vocab=256 d_model=64 n_layers=2 n_heads=2 d_head=32 d_ff=128 group_size=64 max_seq=32 prefill_slots=16
+weights weights.bin
+tensor params.embed dtype=f32 shape=256x64 offset=0 nbytes=65536
+tensor params.layers.wq.qweight dtype=u32 shape=2x8x64 offset=65536 nbytes=4096
+artifact decode_b1 file=d1.hlo.txt batch=1
+arg 0 kind=weight name=params.embed dtype=f32 shape=256x64
+arg 1 kind=input name=kv.k dtype=f32 shape=2x1x2x32x32
+out 0 name=out.0 dtype=f32 shape=1x256
+artifact decode_b4 file=d4.hlo.txt batch=4
+arg 0 kind=weight name=params.embed dtype=f32 shape=256x64
+out 0 name=out.0 dtype=f32 shape=4x256
+";
+
+    #[test]
+    fn parses_model_line() {
+        let m = parse(SAMPLE).unwrap();
+        assert_eq!(m.model_name, "tiny");
+        assert_eq!(m.model_dim("vocab").unwrap(), 256);
+        assert_eq!(m.model_dim("prefill_slots").unwrap(), 16);
+        assert!(m.model_dim("nonexistent").is_err());
+    }
+
+    #[test]
+    fn parses_tensors() {
+        let m = parse(SAMPLE).unwrap();
+        let t = m.tensor("params.layers.wq.qweight").unwrap();
+        assert_eq!(t.dtype, Dtype::U32);
+        assert_eq!(t.shape, vec![2, 8, 64]);
+        assert_eq!(t.offset, 65536);
+    }
+
+    #[test]
+    fn parses_artifacts_with_args_and_outs() {
+        let m = parse(SAMPLE).unwrap();
+        let a = m.artifact("decode_b1").unwrap();
+        assert_eq!(a.file, "d1.hlo.txt");
+        assert_eq!(a.attr_usize("batch"), Some(1));
+        assert_eq!(a.args.len(), 2);
+        assert!(a.args[0].is_weight);
+        assert!(!a.args[1].is_weight);
+        assert_eq!(a.outs[0].shape, vec![1, 256]);
+    }
+
+    #[test]
+    fn decode_batches_sorted() {
+        let m = parse(SAMPLE).unwrap();
+        assert_eq!(m.decode_batches(), vec![1, 4]);
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // Integration hook: when `make artifacts` has run, check the real
+        // manifest round-trips.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.txt");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = parse(&text).unwrap();
+            assert!(!m.tensors.is_empty());
+            assert!(m.artifact("prefill_b1_s64").is_ok());
+            assert!(!m.decode_batches().is_empty());
+        }
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(parse("").is_err());
+    }
+}

@@ -1,0 +1,23 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and runs
+//! real token generation on the CPU PJRT client.
+//!
+//! HLO **text** is the interchange format — jax ≥ 0.5 serializes protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md).
+//!
+//! * [`manifest`] parses the line-based `artifacts/manifest.txt` the AOT
+//!   step writes (tensor table into `weights.bin`, per-artifact argument
+//!   order, model dims);
+//! * [`client`] owns the PJRT client, the weight literals and the
+//!   compiled executables;
+//! * [`backend`] implements [`crate::engine::Backend`] on top — the
+//!   engine serves the tiny GPTQ Llama end-to-end through it.
+
+pub mod backend;
+pub mod client;
+pub mod manifest;
+
+pub use backend::PjrtBackend;
+pub use client::Runtime;
+pub use manifest::{ArtifactMeta, Dtype, Manifest, TensorMeta};

@@ -1,0 +1,157 @@
+//! ARC-style multiple-choice question sets (synthetic).
+//!
+//! The accuracy harness ([`crate::eval`]) scores each question by running
+//! a GPTQ-quantized scoring head in variant-faithful fp16 arithmetic; a
+//! question is "answered correctly" when the argmax over the four option
+//! scores hits the label.  Question *difficulty* (how close the top two
+//! option scores are) is what makes some questions flip under the tiny
+//! numeric perturbations the kernel variants introduce — exactly the
+//! <1 pp fluctuation behaviour the paper's Tables I–II report.
+
+use crate::rng::{hash64, Rng};
+
+/// ARC has a Challenge split (hard) and an Easy split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArcSplit {
+    Challenge,
+    Easy,
+}
+
+impl ArcSplit {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArcSplit::Challenge => "ARC_C",
+            ArcSplit::Easy => "ARC_E",
+        }
+    }
+
+    /// Official test-split sizes (Clark et al., 2018).
+    pub fn size(&self) -> usize {
+        match self {
+            ArcSplit::Challenge => 1172,
+            ArcSplit::Easy => 2376,
+        }
+    }
+}
+
+/// One four-option question: an embedded "stem" feature vector plus the
+/// gold label.  `margin` encodes how decisively a competent model should
+/// separate the gold option from the runner-up (small margin ⇒ the
+/// question sits near the model's decision boundary).
+#[derive(Debug, Clone)]
+pub struct ArcQuestion {
+    pub id: usize,
+    /// Stem feature vector (activation input to the scoring head).
+    pub features: Vec<f32>,
+    pub label: usize,
+    /// Decision margin in score units; near-zero margins flip easily.
+    pub margin: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArcDataset {
+    pub split: ArcSplit,
+    pub questions: Vec<ArcQuestion>,
+}
+
+impl ArcDataset {
+    /// Build the split for a given model: per-model difficulty is encoded
+    /// in the margin distribution so that the *baseline* accuracy matches
+    /// the paper's Table I/II baseline for that model (the generator is
+    /// calibrated against `eval::accuracy`'s scoring rule).
+    ///
+    /// `feature_dim` is the scoring head's K (multiple of 64).
+    pub fn generate(split: ArcSplit, model_name: &str, feature_dim: usize) -> ArcDataset {
+        let n = split.size();
+        let seed = hash64(model_name) ^ hash64(split.label());
+        let mut rng = Rng::new(seed);
+        let target = baseline_target(split, model_name);
+        let mut questions = Vec::with_capacity(n);
+        for id in 0..n {
+            let mut r = rng.fork(id as u64);
+            let features = r.normal_vec_f32(feature_dim, 1.0);
+            let label = r.below(4) as usize;
+            // A fraction `target` of questions get a clearly positive
+            // margin; the rest get a negative one (model prefers a wrong
+            // option).  Margins are concentrated near zero so a sliver of
+            // questions sits within fp16-rounding distance of flipping.
+            let correct = r.chance(target);
+            let magnitude = (r.f64().powf(1.5) * 0.12 + 0.0004) as f32;
+            let margin = if correct { magnitude } else { -magnitude };
+            questions.push(ArcQuestion { id, features, label, margin });
+        }
+        ArcDataset { split, questions }
+    }
+}
+
+/// Paper Table I/II baseline accuracies (fractions) per model and split.
+pub fn baseline_target(split: ArcSplit, model_name: &str) -> f64 {
+    let table: &[(&str, f64, f64)] = &[
+        // (model, ARC_C, ARC_E) — Tables I and II, "Baseline" column.
+        ("Meta-Llama-3-8B-GPTQ", 0.7525, 0.8730),
+        ("Llama-2-7B-GPTQ", 0.3559, 0.4780),
+        ("CodeLlama-7B-GPTQ", 0.2781, 0.2751),
+        ("LLaMa-13B-GPTQ", 0.3932, 0.5079),
+        ("Qwen1.5-1.8B-Chat-GPTQ-Int4", 0.4881, 0.6949),
+        ("Qwen1.5-4B-Chat-GPTQ-Int4", 0.5627, 0.7019),
+    ];
+    for (name, c, e) in table {
+        if *name == model_name {
+            return match split {
+                ArcSplit::Challenge => *c,
+                ArcSplit::Easy => *e,
+            };
+        }
+    }
+    0.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_sizes_match_arc() {
+        assert_eq!(ArcSplit::Challenge.size(), 1172);
+        assert_eq!(ArcSplit::Easy.size(), 2376);
+    }
+
+    #[test]
+    fn deterministic_per_model() {
+        let a = ArcDataset::generate(ArcSplit::Challenge, "Llama-2-7B-GPTQ", 64);
+        let b = ArcDataset::generate(ArcSplit::Challenge, "Llama-2-7B-GPTQ", 64);
+        assert_eq!(a.questions.len(), b.questions.len());
+        assert_eq!(a.questions[10].label, b.questions[10].label);
+        assert_eq!(a.questions[10].features, b.questions[10].features);
+    }
+
+    #[test]
+    fn different_models_get_different_questions() {
+        let a = ArcDataset::generate(ArcSplit::Easy, "Llama-2-7B-GPTQ", 64);
+        let b = ArcDataset::generate(ArcSplit::Easy, "CodeLlama-7B-GPTQ", 64);
+        assert_ne!(a.questions[0].features, b.questions[0].features);
+    }
+
+    #[test]
+    fn margin_sign_rate_tracks_target() {
+        let d = ArcDataset::generate(ArcSplit::Easy, "Meta-Llama-3-8B-GPTQ", 64);
+        let positive = d.questions.iter().filter(|q| q.margin > 0.0).count();
+        let rate = positive as f64 / d.questions.len() as f64;
+        let target = baseline_target(ArcSplit::Easy, "Meta-Llama-3-8B-GPTQ");
+        assert!((rate - target).abs() < 0.03, "rate {rate} vs target {target}");
+    }
+
+    #[test]
+    fn some_questions_sit_near_the_boundary() {
+        let d = ArcDataset::generate(ArcSplit::Challenge, "LLaMa-13B-GPTQ", 64);
+        let near = d.questions.iter().filter(|q| q.margin.abs() < 0.002).count();
+        assert!(near > 0, "need near-boundary questions for fp16 flips");
+        assert!(near < d.questions.len() / 10);
+    }
+
+    #[test]
+    fn labels_are_valid_options() {
+        let d = ArcDataset::generate(ArcSplit::Easy, "Qwen1.5-4B-Chat-GPTQ-Int4", 64);
+        assert!(d.questions.iter().all(|q| q.label < 4));
+    }
+}

@@ -1,0 +1,15 @@
+//! Synthetic workloads standing in for the paper's datasets.
+//!
+//! * [`sharegpt`] — request traces with ShareGPT-like prompt/response
+//!   length distributions (throughput/latency evaluation, Figures 2–3);
+//! * [`arc`] — ARC-style multiple-choice question sets (accuracy
+//!   evaluation, Tables I–II).
+//!
+//! Both are deterministic in their seeds; DESIGN.md documents them as the
+//! substitutions for `ShareGPT_V3_unfiltered_cleaned_split` and ARC_C/E.
+
+pub mod arc;
+pub mod sharegpt;
+
+pub use arc::{ArcDataset, ArcQuestion, ArcSplit};
+pub use sharegpt::{RequestTrace, TraceRequest};

@@ -1,0 +1,154 @@
+//! ShareGPT-like request trace generator.
+//!
+//! The published ShareGPT_V3 length statistics are roughly log-normal:
+//! prompts with a median around ~35 tokens and a heavy tail into the
+//! hundreds, responses with a median around ~150 tokens and tails past
+//! 1k.  The vLLM benchmark (and the paper's §IV-B setup) samples prompts
+//! from that distribution and generates until each response completes;
+//! the throughput number is total generated tokens over wall time for a
+//! 32-prompt batch.
+
+use crate::rng::Rng;
+
+/// One serving request of the trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceRequest {
+    pub id: usize,
+    /// Prompt token ids (synthetic, uniform over the tokenizer range).
+    pub prompt: Vec<u32>,
+    /// Number of tokens the "conversation" answer has — the generation
+    /// length the serving engine must produce.
+    pub response_len: usize,
+}
+
+/// A deterministic batch of requests.
+#[derive(Debug, Clone)]
+pub struct RequestTrace {
+    pub requests: Vec<TraceRequest>,
+    pub seed: u64,
+}
+
+/// Length-distribution parameters (log-normal, clamped).
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    pub prompt_mu: f64,
+    pub prompt_sigma: f64,
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    pub response_mu: f64,
+    pub response_sigma: f64,
+    pub response_min: usize,
+    pub response_max: usize,
+    pub vocab: u32,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        // Medians: e^3.6 ≈ 36 prompt tokens, e^5.0 ≈ 148 response tokens.
+        TraceConfig {
+            prompt_mu: 3.6,
+            prompt_sigma: 0.9,
+            prompt_min: 4,
+            prompt_max: 1024,
+            response_mu: 5.0,
+            response_sigma: 0.7,
+            response_min: 8,
+            response_max: 1024,
+            vocab: 32000,
+        }
+    }
+}
+
+impl RequestTrace {
+    /// Generate `n` requests with ShareGPT-like lengths.
+    pub fn generate(n: usize, seed: u64) -> RequestTrace {
+        Self::generate_with(n, seed, TraceConfig::default())
+    }
+
+    pub fn generate_with(n: usize, seed: u64, cfg: TraceConfig) -> RequestTrace {
+        let mut rng = Rng::new(seed);
+        let mut requests = Vec::with_capacity(n);
+        for id in 0..n {
+            let mut r = rng.fork(id as u64);
+            let plen = (r.lognormal(cfg.prompt_mu, cfg.prompt_sigma) as usize)
+                .clamp(cfg.prompt_min, cfg.prompt_max);
+            let rlen = (r.lognormal(cfg.response_mu, cfg.response_sigma) as usize)
+                .clamp(cfg.response_min, cfg.response_max);
+            let prompt = (0..plen).map(|_| r.next_u32() % cfg.vocab).collect();
+            requests.push(TraceRequest { id, prompt, response_len: rlen });
+        }
+        RequestTrace { requests, seed }
+    }
+
+    pub fn total_prompt_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.prompt.len()).sum()
+    }
+
+    pub fn total_response_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.response_len).sum()
+    }
+
+    /// Mean context length while decoding (used by the perf model for the
+    /// attention-bandwidth term): prompt + half the response, averaged.
+    pub fn mean_decode_context(&self) -> f64 {
+        let s: f64 = self
+            .requests
+            .iter()
+            .map(|r| r.prompt.len() as f64 + r.response_len as f64 / 2.0)
+            .sum();
+        s / self.requests.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = RequestTrace::generate(32, 7);
+        let b = RequestTrace::generate(32, 7);
+        assert_eq!(a.requests, b.requests);
+        let c = RequestTrace::generate(32, 8);
+        assert_ne!(a.requests, c.requests);
+    }
+
+    #[test]
+    fn lengths_within_bounds() {
+        let cfg = TraceConfig::default();
+        let t = RequestTrace::generate(500, 1);
+        for r in &t.requests {
+            assert!((cfg.prompt_min..=cfg.prompt_max).contains(&r.prompt.len()));
+            assert!((cfg.response_min..=cfg.response_max).contains(&r.response_len));
+        }
+    }
+
+    #[test]
+    fn medians_look_sharegpt_like() {
+        let t = RequestTrace::generate(2000, 2);
+        let mut plens: Vec<usize> = t.requests.iter().map(|r| r.prompt.len()).collect();
+        let mut rlens: Vec<usize> = t.requests.iter().map(|r| r.response_len).collect();
+        plens.sort_unstable();
+        rlens.sort_unstable();
+        let pmed = plens[plens.len() / 2];
+        let rmed = rlens[rlens.len() / 2];
+        assert!((20..=60).contains(&pmed), "prompt median {pmed}");
+        assert!((100..=220).contains(&rmed), "response median {rmed}");
+        // heavy tail: p95 >> median
+        assert!(plens[plens.len() * 95 / 100] > 3 * pmed);
+    }
+
+    #[test]
+    fn responses_longer_than_prompts_on_average() {
+        let t = RequestTrace::generate(1000, 3);
+        assert!(t.total_response_tokens() > t.total_prompt_tokens());
+    }
+
+    #[test]
+    fn per_request_fork_is_order_independent() {
+        // Request #5 must be identical whether we generate 10 or 100.
+        let a = RequestTrace::generate(10, 9);
+        let b = RequestTrace::generate(100, 9);
+        assert_eq!(a.requests[5], b.requests[5]);
+    }
+}

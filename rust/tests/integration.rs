@@ -1,0 +1,174 @@
+//! Cross-module integration tests: GPTQ substrate ↔ engine ↔ simulator ↔
+//! reproduction drivers (no PJRT — see `e2e_pjrt.rs` for that).
+
+use opt4gptq::dcusim::kernels::KernelParams;
+use opt4gptq::dcusim::{Device, GemvKernel};
+use opt4gptq::engine::{Engine, EngineConfig, Request, SamplingParams, SimBackend};
+use opt4gptq::eval::accuracy::evaluate;
+use opt4gptq::eval::numerics::gemv_f16_variant;
+use opt4gptq::gptq::{
+    dequantize, gemv_f32, quantize_gptq, quantize_rtn, GptqConfig, Matrix,
+};
+use opt4gptq::models::{by_name, PAPER_MODELS};
+use opt4gptq::rng::Rng;
+use opt4gptq::trace::arc::ArcSplit;
+use opt4gptq::trace::RequestTrace;
+use opt4gptq::OptConfig;
+
+/// GPTQ-quantized weights flow through all three numeric paths
+/// consistently: dense dequant, f32 GEMV, and variant-f16 GEMV.
+#[test]
+fn gptq_tensor_flows_through_all_numeric_paths() {
+    let mut rng = Rng::new(1);
+    let (k, n, g) = (128, 16, 64);
+    let w = Matrix::from_vec(k, n, rng.normal_vec_f32(k * n, 0.5));
+    let x_cal = Matrix::from_vec(64, k, rng.normal_vec_f32(64 * k, 1.0));
+    let q = quantize_gptq(w.clone(), &x_cal, GptqConfig { group_size: g, percdamp: 0.01, act_order: false });
+
+    let act = rng.normal_vec_f32(k, 1.0);
+    let dense = dequantize(&q);
+    let via_gemv = gemv_f32(&act, &q);
+    let via_f16 = gemv_f16_variant(&act, &q, OptConfig::BASELINE, 0);
+
+    for col in 0..n {
+        let mut expect = 0.0f32;
+        for kk in 0..k {
+            expect += act[kk] * dense.at(kk, col);
+        }
+        assert!((via_gemv[col] - expect).abs() < 1e-3);
+        // f16 path within ~1% of f32 for this scale of problem
+        assert!(
+            (via_f16[col] - expect).abs() < 0.05 * expect.abs().max(1.0),
+            "col {col}: f16 {} vs f32 {expect}",
+            via_f16[col]
+        );
+    }
+}
+
+/// The serving engine is agnostic to model identity but sensitive to its
+/// cost: a bigger model must serve the same trace strictly slower.
+#[test]
+fn engine_times_scale_with_model_cost() {
+    let trace = RequestTrace::generate(8, 9);
+    let run = |name: &str| {
+        let model = by_name(name).unwrap();
+        let backend = SimBackend::new(model, OptConfig::BASELINE, 8);
+        let mut e = Engine::new(
+            EngineConfig { max_batch: 8, total_blocks: 8192, ..Default::default() },
+            backend,
+        );
+        for r in &trace.requests {
+            e.add_request(Request::new(
+                r.id,
+                r.prompt.clone(),
+                SamplingParams { max_tokens: r.response_len.min(32), ..Default::default() },
+            ));
+        }
+        e.run().unwrap().metrics.elapsed
+    };
+    let small = run("Qwen1.5-1.8B-Chat-GPTQ-Int4");
+    let big = run("LLaMa-13B-GPTQ");
+    assert!(big > 2.0 * small, "13B {big} vs 1.8B {small}");
+}
+
+/// Kernel-level gains must survive to engine-level throughput for every
+/// model (the Amdahl filter of the perf model keeps them positive).
+#[test]
+fn kernel_gains_survive_to_serving_for_all_models() {
+    let trace = RequestTrace::generate(8, 4);
+    for model in PAPER_MODELS.iter() {
+        let mut tputs = Vec::new();
+        for opt in [OptConfig::BASELINE, OptConfig::OPT4GPTQ] {
+            let backend = SimBackend::new(model, opt, 8);
+            let mut e = Engine::new(
+                EngineConfig { max_batch: 8, total_blocks: 8192, ..Default::default() },
+                backend,
+            );
+            for r in &trace.requests {
+                e.add_request(Request::new(
+                    r.id,
+                    r.prompt.clone(),
+                    SamplingParams { max_tokens: r.response_len.min(24), ..Default::default() },
+                ));
+            }
+            tputs.push(e.run().unwrap().metrics.throughput());
+        }
+        let gain = tputs[1] / tputs[0] - 1.0;
+        assert!(
+            gain > 0.10 && gain < 1.5,
+            "{}: end-to-end gain {:.1}% out of plausible band",
+            model.name,
+            gain * 100.0
+        );
+    }
+}
+
+/// The decode-GEMV simulation must be monotone in every problem dim.
+#[test]
+fn simulator_monotonicity() {
+    let d = Device::z100();
+    let t = |m, k, n| {
+        d.simulate(&GemvKernel::new(
+            KernelParams { m, k, n, group_size: 128 },
+            OptConfig::BASELINE,
+        ))
+        .seconds
+    };
+    assert!(t(1, 4096, 4096) < t(1, 8192, 4096));
+    assert!(t(1, 4096, 4096) < t(1, 4096, 8192));
+    assert!(t(1, 4096, 4096) < t(64, 4096, 4096));
+}
+
+/// Accuracy evaluation composes with every model and both splits without
+/// drifting more than the paper's 1 pp.
+#[test]
+fn accuracy_grid_within_one_point_everywhere() {
+    for model in PAPER_MODELS.iter() {
+        for split in [ArcSplit::Challenge, ArcSplit::Easy] {
+            let results = evaluate(model.name, split);
+            assert_eq!(results.len(), 5);
+            let base = results[0].accuracy();
+            for r in &results {
+                assert!(
+                    (r.accuracy() - base).abs() < 0.01,
+                    "{} {:?} {}: {:.4} vs {:.4}",
+                    model.name,
+                    split,
+                    r.opt.label(),
+                    r.accuracy(),
+                    base
+                );
+            }
+        }
+    }
+}
+
+/// RTN grids are a valid starting point for every model's layer shapes.
+#[test]
+fn quantization_covers_model_layer_shapes() {
+    let mut rng = Rng::new(12);
+    // use scaled-down versions of each model's K dims (same divisibility)
+    for model in PAPER_MODELS.iter().take(3) {
+        for p in model.layer_gemms(1) {
+            // scaled-down K, snapped to the group size
+            let k = ((p.k / 8).max(128) / 64) * 64;
+            let n = 16;
+            let w = Matrix::from_vec(k, n, rng.normal_vec_f32(k * n, 1.0));
+            let q = quantize_rtn(&w, 64);
+            assert_eq!(q.k, k);
+            let deq = dequantize(&q);
+            assert!(deq.frob_dist(&w) / (k as f64 * n as f64).sqrt() < 0.2);
+        }
+    }
+}
+
+/// Reproduction drivers run end to end on a reduced workload.
+#[test]
+fn repro_drivers_compose() {
+    let grid = opt4gptq::repro::serving_grid(6, 11).unwrap();
+    assert_eq!(grid.len(), 6);
+    let problems = opt4gptq::repro::check_fig2_shape(&grid);
+    assert!(problems.is_empty(), "{problems:?}");
+    let t = opt4gptq::repro::fig2_table(&grid).render();
+    assert!(t.contains("Qwen1.5-4B-Chat-GPTQ-Int4"));
+}

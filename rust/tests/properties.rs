@@ -1,0 +1,292 @@
+//! Property-based tests (homegrown `qcheck` kit, proptest-style) on the
+//! coordinator and substrate invariants:
+//!
+//! * block-manager refcount/free-list consistency under arbitrary
+//!   alloc/append/free interleavings;
+//! * scheduler slot/queue consistency under random request streams,
+//!   including the preemption path;
+//! * GPTQ pack/unpack as exact inverses on arbitrary codes;
+//! * f16 rounding invariants (monotonicity, idempotence);
+//! * engine conservation: every admitted request finishes exactly once
+//!   with exactly `max_tokens` tokens.
+
+use opt4gptq::engine::block_manager::BlockManager;
+use opt4gptq::engine::{Engine, EngineConfig, Request, SamplingParams, SimBackend};
+use opt4gptq::f16::{self, F16};
+use opt4gptq::gptq::{pack, quantize_rtn, Matrix};
+use opt4gptq::models::by_name;
+use opt4gptq::qcheck::{check, ensure, Config};
+use opt4gptq::rng::Rng;
+use opt4gptq::OptConfig;
+
+#[test]
+fn prop_block_manager_invariants_hold_under_chaos() {
+    #[derive(Debug)]
+    struct Ops(Vec<(u8, usize, usize)>); // (op, seq, len)
+
+    check(
+        "block_manager chaos",
+        Config { cases: 60, seed: 0xb10c },
+        |r| {
+            let n = r.range_usize(5, 60);
+            Ops((0..n)
+                .map(|_| (r.below(3) as u8, r.range_usize(0, 9), r.range_usize(1, 70)))
+                .collect())
+        },
+        |Ops(ops)| {
+            let mut bm = BlockManager::new(32, 4);
+            let mut live: Vec<Option<usize>> = vec![None; 10]; // seq -> tokens
+            for (i, &(op, seq, len)) in ops.iter().enumerate() {
+                match op {
+                    0 => {
+                        if live[seq].is_none() {
+                            let prompt: Vec<u32> =
+                                (0..len).map(|j| (seq * 1000 + j * 7 + i) as u32).collect();
+                            if bm.allocate(seq, &prompt) {
+                                live[seq] = Some(len);
+                            }
+                        }
+                    }
+                    1 => {
+                        if let Some(t) = live[seq] {
+                            if bm.append_token(seq, t + 1) {
+                                live[seq] = Some(t + 1);
+                            }
+                        }
+                    }
+                    _ => {
+                        if live[seq].take().is_some() {
+                            bm.free_sequence(seq);
+                        }
+                    }
+                }
+                bm.check_invariants()?;
+            }
+            // free everything: the pool must be whole again
+            for (seq, t) in live.iter().enumerate() {
+                if t.is_some() {
+                    bm.free_sequence(seq);
+                }
+            }
+            bm.check_invariants()?;
+            ensure(bm.free_blocks() == 32, format!("leak: {} free of 32", bm.free_blocks()))
+        },
+    );
+}
+
+#[test]
+fn prop_pack_unpack_roundtrip() {
+    check(
+        "pack/unpack inverse",
+        Config { cases: 100, seed: 0x9ac4 },
+        |r| {
+            let kw = r.range_usize(1, 8);
+            let n = r.range_usize(1, 24);
+            let codes: Vec<u8> = (0..kw * 8 * n).map(|_| r.below(16) as u8).collect();
+            (kw, n, codes)
+        },
+        |(kw, n, codes)| {
+            let packed = pack::pack_rows(codes, kw * 8, *n);
+            ensure(
+                pack::unpack_rows(&packed, *kw, *n) == *codes,
+                "row pack/unpack mismatch",
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_zeros_pack_unpack_roundtrip() {
+    check(
+        "cols pack/unpack inverse",
+        Config { cases: 100, seed: 0x2e05 },
+        |r| {
+            let g = r.range_usize(1, 6);
+            let nw = r.range_usize(1, 8);
+            let zeros: Vec<u8> = (0..g * nw * 8).map(|_| r.below(16) as u8).collect();
+            (g, nw, zeros)
+        },
+        |(g, nw, zeros)| {
+            let packed = pack::pack_cols(zeros, *g, nw * 8);
+            ensure(
+                pack::unpack_cols(&packed, *g, *nw) == *zeros,
+                "col pack/unpack mismatch",
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_rtn_error_bounded() {
+    check(
+        "RTN quantization error <= scale/2 + eps",
+        Config { cases: 40, seed: 0x47e0 },
+        |r| {
+            let groups = r.range_usize(1, 4);
+            let n = r.range_usize(1, 3) * 8;
+            let g = 32;
+            let std = 0.2 + 3.0 * r.f32();
+            let w = Matrix::from_vec(groups * g, n, r.normal_vec_f32(groups * g * n, std));
+            (g, w)
+        },
+        |(g, w)| {
+            let q = quantize_rtn(w, *g);
+            let deq = opt4gptq::gptq::dequantize(&q);
+            for kk in 0..w.rows {
+                let gi = kk / g;
+                for col in 0..w.cols {
+                    let err = (w.at(kk, col) - deq.at(kk, col)).abs();
+                    let bound = q.scales[gi * w.cols + col] * 0.5 + 1e-4;
+                    if err > bound {
+                        return Err(format!("err {err} > bound {bound} at ({kk},{col})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_f16_roundtrip_and_monotone() {
+    check(
+        "f16 conversions",
+        Config { cases: 200, seed: 0xf16 },
+        |r| (r.f64() * 100000.0 - 50000.0, r.f64() * 2.0 - 1.0),
+        |&(big, small)| {
+            // idempotence: converting a converted value is exact
+            let h = F16::from_f64(big);
+            if !h.is_infinite() {
+                ensure(F16::from_f64(h.to_f64()).0 == h.0, "idempotence")?;
+            }
+            // monotonicity on a pair
+            let a = F16::from_f64(small);
+            let b = F16::from_f64(small + 0.25);
+            ensure(a.to_f64() <= b.to_f64(), "monotonicity")?;
+            // addition commutes
+            ensure(f16::add(a, b).0 == f16::add(b, a).0, "commutativity")
+        },
+    );
+}
+
+#[test]
+fn prop_engine_conservation() {
+    // Every admitted request finishes exactly once with exactly
+    // max_tokens generated, regardless of batch/blocks/trace shape —
+    // including configurations that force preemption.
+    check(
+        "engine conservation",
+        Config { cases: 25, seed: 0xe27 },
+        |r| {
+            let n_req = r.range_usize(1, 12);
+            let max_batch = r.range_usize(1, 6);
+            let total_blocks = r.range_usize(24, 200);
+            let reqs: Vec<(usize, usize)> = (0..n_req)
+                .map(|_| (r.range_usize(1, 30), r.range_usize(1, 20)))
+                .collect();
+            (max_batch, total_blocks, reqs)
+        },
+        |(max_batch, total_blocks, reqs)| {
+            let model = by_name("Qwen1.5-1.8B-Chat-GPTQ-Int4").unwrap();
+            let backend = SimBackend::new(model, OptConfig::OPT4GPTQ, *max_batch);
+            let mut e = Engine::new(
+                EngineConfig {
+                    max_batch: *max_batch,
+                    block_size: 4,
+                    total_blocks: *total_blocks,
+                    max_seq_len: 256,
+                    max_prefills_per_step: 2,
+                },
+                backend,
+            );
+            let mut rng = Rng::new(1);
+            for (i, &(plen, gen)) in reqs.iter().enumerate() {
+                let prompt: Vec<u32> = (0..plen).map(|_| rng.next_u32() % 500).collect();
+                e.add_request(Request::new(
+                    i,
+                    prompt,
+                    SamplingParams { max_tokens: gen, ..Default::default() },
+                ));
+            }
+            let report = e.run().map_err(|er| er.to_string())?;
+            ensure(report.outputs.len() == reqs.len(), format!(
+                "finished {} of {}", report.outputs.len(), reqs.len()))?;
+            for out in &report.outputs {
+                let want = reqs[out.id].1;
+                ensure(
+                    out.tokens.len() == want,
+                    format!("req {}: {} tokens, wanted {want}", out.id, out.tokens.len()),
+                )?;
+            }
+            e.scheduler.check_invariants()?;
+            ensure(
+                report.metrics.output_tokens == reqs.iter().map(|r| r.1).sum::<usize>(),
+                "token accounting",
+            )
+        },
+    );
+}
+
+#[test]
+fn prop_sampler_top_k_support() {
+    check(
+        "sampler stays in top-k support",
+        Config { cases: 50, seed: 0x5a3 },
+        |r| {
+            let n = r.range_usize(4, 100);
+            let k = r.range_usize(1, n.min(10));
+            let logits: Vec<f32> = (0..n).map(|_| r.normal() as f32).collect();
+            (k, logits, r.next_u64())
+        },
+        |(k, logits, seed)| {
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+            let allowed: std::collections::HashSet<u32> =
+                idx[..*k].iter().map(|&i| i as u32).collect();
+            let p = SamplingParams { temperature: 1.0, top_k: *k, ..Default::default() };
+            let mut rng = Rng::new(*seed);
+            for _ in 0..20 {
+                let t = opt4gptq::engine::sampler::sample(logits, &p, &mut rng);
+                if !allowed.contains(&t) {
+                    return Err(format!("sampled {t} outside top-{k}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sim_speedup_structure_generalizes() {
+    // For arbitrary kernel-aligned shapes: every optimization helps, the
+    // combined config is fastest, ILA ≥ VML.
+    check(
+        "sim speedup structure",
+        Config { cases: 30, seed: 0xd1c },
+        |r| {
+            let m = [1usize, 2, 4, 8, 16, 32][r.below(6) as usize];
+            let k = r.range_usize(2, 40) * 256;
+            let n = r.range_usize(2, 40) * 256;
+            (m, k, n)
+        },
+        |&(m, k, n)| {
+            let d = opt4gptq::dcusim::Device::z100();
+            let p = opt4gptq::dcusim::kernels::KernelParams { m, k, n, group_size: 128 };
+            let t = |o| {
+                d.simulate(&opt4gptq::dcusim::GemvKernel::new(p, o)).seconds
+            };
+            let base = t(OptConfig::BASELINE);
+            let (smb, vml, ila, opt4) = (
+                t(OptConfig::SMB),
+                t(OptConfig::VML),
+                t(OptConfig::ILA),
+                t(OptConfig::OPT4GPTQ),
+            );
+            ensure(smb < base, format!("SMB {smb} !< {base}"))?;
+            ensure(vml <= base, format!("VML {vml} !<= {base}"))?;
+            ensure(ila < base, format!("ILA {ila} !< {base}"))?;
+            ensure(opt4 <= smb.min(vml).min(ila), "combined must be fastest")?;
+            ensure(ila <= vml, "ILA must beat VML")
+        },
+    );
+}
