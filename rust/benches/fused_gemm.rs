@@ -1,0 +1,160 @@
+//! Fused dequant-GEMM vs the dense oracle, decode and prefill shapes.
+//!
+//! The oracle (`gptq::gemm`) re-materializes the dense `K×N` weight
+//! matrix on every call; the fused path (`gptq::fused`) unpacks nibbles
+//! on the fly per tile.  Headline number: the 4096×4096, group-128,
+//! M = 1 decode GEMV, where the fused kernel must be ≥ 10× faster
+//! (this bench exits non-zero if it is not, like the figure benches'
+//! shape checks).
+//!
+//! Run: `cargo bench --bench fused_gemm`
+
+use opt4gptq::benchkit::{bench, fmt_duration, Table};
+use opt4gptq::gptq::{gemm_f32, gemm_fused, gemv_f32, gemv_fused, quantize_rtn, Matrix};
+use opt4gptq::rng::Rng;
+
+struct Case {
+    label: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+    group: usize,
+    act_order: bool,
+    /// The acceptance floor applies only to the headline decode shape.
+    required_speedup: Option<f64>,
+}
+
+fn main() {
+    let cases = [
+        Case {
+            label: "decode M=1 4096x4096 g128",
+            m: 1,
+            k: 4096,
+            n: 4096,
+            group: 128,
+            act_order: false,
+            required_speedup: Some(10.0),
+        },
+        Case {
+            label: "decode M=1 4096x4096 g128 act-order",
+            m: 1,
+            k: 4096,
+            n: 4096,
+            group: 128,
+            act_order: true,
+            required_speedup: None,
+        },
+        Case {
+            label: "decode M=1 4096x4096 g64",
+            m: 1,
+            k: 4096,
+            n: 4096,
+            group: 64,
+            act_order: false,
+            required_speedup: None,
+        },
+        Case {
+            label: "prefill M=64 2048x2048 g128",
+            m: 64,
+            k: 2048,
+            n: 2048,
+            group: 128,
+            act_order: false,
+            required_speedup: None,
+        },
+        Case {
+            label: "batch M=8 4096x4096 g128",
+            m: 8,
+            k: 4096,
+            n: 4096,
+            group: 128,
+            act_order: false,
+            required_speedup: None,
+        },
+    ];
+
+    let mut table = Table::new(
+        "fused dequant-GEMM vs dense oracle (wall clock)",
+        &["shape", "oracle p50", "fused p50", "speedup", "max |Δ|", "required"],
+    );
+    let mut failures = Vec::new();
+
+    for case in &cases {
+        let mut rng = Rng::new(0xf05e_d000 ^ case.k as u64 ^ (case.m as u64) << 32);
+        let w = Matrix::from_vec(
+            case.k,
+            case.n,
+            rng.normal_vec_f32(case.k * case.n, 1.0 / (case.k as f32).sqrt()),
+        );
+        let mut q = quantize_rtn(&w, case.group);
+        if case.act_order {
+            let mut perm: Vec<usize> = (0..case.k).collect();
+            rng.shuffle(&mut perm);
+            q = q.with_perm(perm);
+        }
+        let x = Matrix::from_vec(
+            case.m,
+            case.k,
+            rng.normal_vec_f32(case.m * case.k, 1.0 / (case.k as f32).sqrt()),
+        );
+
+        // Correctness first: a fast wrong kernel is not a speedup.
+        let (want, got) = if case.m == 1 {
+            (gemv_f32(x.row(0), &q), gemv_fused(x.row(0), &q))
+        } else {
+            (gemm_f32(&x, &q).data, gemm_fused(&x, &q).data)
+        };
+        let max_diff =
+            want.iter().zip(&got).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-3, "{}: parity broken, max diff {max_diff}", case.label);
+
+        let iters = if case.m >= 8 { 3 } else { 5 };
+        let oracle = if case.m == 1 {
+            bench(&format!("oracle {}", case.label), 1, iters, || {
+                std::hint::black_box(gemv_f32(x.row(0), &q));
+            })
+        } else {
+            bench(&format!("oracle {}", case.label), 1, iters, || {
+                std::hint::black_box(gemm_f32(&x, &q));
+            })
+        };
+        let fused = if case.m == 1 {
+            bench(&format!("fused  {}", case.label), 1, iters, || {
+                std::hint::black_box(gemv_fused(x.row(0), &q));
+            })
+        } else {
+            bench(&format!("fused  {}", case.label), 1, iters, || {
+                std::hint::black_box(gemm_fused(&x, &q));
+            })
+        };
+
+        let speedup = oracle.p50 / fused.p50;
+        if let Some(floor) = case.required_speedup {
+            if speedup < floor {
+                failures.push(format!(
+                    "{}: {speedup:.2}x is below the required {floor:.0}x",
+                    case.label
+                ));
+            }
+        }
+        table.row(vec![
+            case.label.to_string(),
+            fmt_duration(oracle.p50),
+            fmt_duration(fused.p50),
+            format!("{speedup:.2}x"),
+            format!("{max_diff:.2e}"),
+            case.required_speedup.map_or("-".into(), |f| format!(">= {f:.0}x")),
+        ]);
+    }
+
+    table.print();
+    if failures.is_empty() {
+        println!("\nshape check: OK (headline decode shape meets the >=10x floor)");
+    } else {
+        println!("\nshape check FAILED:");
+        for f in &failures {
+            println!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+}

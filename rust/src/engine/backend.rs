@@ -9,8 +9,11 @@
 //!   deterministically (the throughput/latency figures do not depend on
 //!   token *identity*, only counts — lengths are forced via
 //!   `max_tokens` exactly as vLLM's benchmark_throughput does);
-//! * [`crate::runtime::PjrtBackend`] — the AOT tiny model, real logits,
-//!   wall-clock timings.
+//! * [`super::cpu_backend::CpuBackend`] — a real tiny quantized
+//!   transformer executed in-crate through the fused dequant-GEMM
+//!   kernels, real logits, wall-clock timings;
+//! * `PjrtBackend` (feature `pjrt`) — the AOT tiny model on the PJRT CPU
+//!   client, real logits, wall-clock timings.
 
 use crate::models::ModelSpec;
 use crate::perfmodel::PerfModel;
@@ -23,7 +26,10 @@ use crate::Result;
 pub struct DecodeEntry {
     /// Backend slot the sequence occupies.
     pub slot: usize,
-    /// Number of tokens already in the KV cache.
+    /// Sequence length *counting the fed token* (the engine passes
+    /// `Sequence::position()` = prompt + generated): the cache holds
+    /// `position - 1` earlier tokens and the fed token's K/V entry lands
+    /// at index `position - 1`.
     pub position: usize,
     /// The token to feed.
     pub token: u32,

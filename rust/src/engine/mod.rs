@@ -8,7 +8,10 @@
 //! * [`backend::SimBackend`] — advances a *virtual clock* using the
 //!   [`crate::perfmodel`] step times of a paper model under a chosen
 //!   [`crate::OptConfig`]; used to regenerate Figures 2–3;
-//! * [`crate::runtime::PjrtBackend`] — real token generation through the
+//! * [`cpu_backend::CpuBackend`] — real token generation through a tiny
+//!   quantized transformer executed in-crate by the fused dequant-GEMM
+//!   kernels ([`crate::gptq::fused`]), wall clock;
+//! * `PjrtBackend` (feature `pjrt`) — real token generation through the
 //!   AOT-compiled tiny model on the PJRT CPU client (wall clock).
 //!
 //! The engine is deliberately single-threaded and deterministic: given a
@@ -16,6 +19,7 @@
 
 pub mod backend;
 pub mod block_manager;
+pub mod cpu_backend;
 pub mod engine;
 pub mod metrics;
 pub mod request;
@@ -25,6 +29,7 @@ pub mod sequence;
 pub mod tokenizer;
 
 pub use backend::{Backend, DecodeEntry, SimBackend};
+pub use cpu_backend::{CpuBackend, CpuModelConfig};
 pub use engine::{Engine, EngineReport};
 pub use metrics::Metrics;
 pub use request::{FinishReason, Request, RequestOutput, SamplingParams};

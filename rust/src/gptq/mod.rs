@@ -4,7 +4,10 @@
 //! one-shot quantization algorithm itself (Frantar et al., 2022 — Hessian
 //! accumulation from calibration activations plus Cholesky-based error
 //! propagation), the 4-bit packing layout shared with the Python/Pallas
-//! layer, and a dense CPU reference for the quantized GEMM.
+//! layer, a dense CPU reference for the quantized GEMM ([`gemm`], the
+//! correctness oracle) and the fused dequantize-on-the-fly fast path
+//! ([`fused`], the kernel [`crate::engine::cpu_backend::CpuBackend`]
+//! serves through).
 //!
 //! Layout contract (identical to `python/compile/quant_ref.py` and
 //! `python/compile/kernels/ref.py`):
@@ -14,11 +17,13 @@
 //! * `qzeros:  u32[K/g, N/8]` — nibble `j` of word `w` holds column `8w+j`;
 //! * `W[k,n] = scales[k/g, n] * (code[k,n] - zero[k/g, n])`.
 
+pub mod fused;
 pub mod gemm;
 pub mod linalg;
 pub mod pack;
 pub mod quantize;
 
+pub use fused::{gemm_fused, gemv_fused};
 pub use gemm::{dequantize, gemm_f32, gemv_f32};
 pub use pack::{pack_cols, pack_rows, unpack_cols, unpack_rows, NIBBLES_PER_WORD};
 pub use quantize::{

@@ -33,6 +33,22 @@ impl QuantizedTensor {
         self.k / self.group_size
     }
 
+    /// Attach an activation-order permutation (`b_q_perm`) to this
+    /// tensor: packed row `r` is reinterpreted as original in-feature
+    /// `perm[r]`.  Used by the parity tests and benches to exercise the
+    /// act-order gather path without paying a full GPTQ quantization.
+    pub fn with_perm(mut self, perm: Vec<usize>) -> QuantizedTensor {
+        assert_eq!(perm.len(), self.k, "perm must cover all K in-features");
+        let mut sorted = perm.clone();
+        sorted.sort_unstable();
+        assert!(
+            sorted.iter().enumerate().all(|(i, &p)| i == p),
+            "perm must be a permutation of 0..K"
+        );
+        self.perm = Some(perm);
+        self
+    }
+
     /// Bytes of the packed representation (weights + scales + zeros).
     pub fn packed_bytes(&self) -> usize {
         self.qweight.len() * 4 + self.scales.len() * 4 + self.qzeros.len() * 4

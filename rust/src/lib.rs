@@ -14,11 +14,18 @@
 //! `DESIGN.md`):
 //!
 //! * [`engine`] — a vLLM-style serving engine (paged KV cache, continuous
-//!   batching, prefill/decode scheduling, sampling, metrics);
+//!   batching, prefill/decode scheduling, sampling, metrics) over three
+//!   pluggable backends: the simulated DCU ([`engine::SimBackend`]), the
+//!   in-crate fused-kernel transformer ([`engine::CpuBackend`]) and the
+//!   PJRT artifact runtime (feature `pjrt`);
 //! * [`runtime`] — PJRT CPU client that loads the AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) and executes real token generation;
+//!   artifacts (`artifacts/*.hlo.txt`) and executes real token generation
+//!   (the manifest parser is always built; the xla-backed client needs
+//!   the `pjrt` feature);
 //! * [`gptq`] — the GPTQ quantization substrate (packing, RTN and the full
-//!   Hessian/Cholesky GPTQ algorithm, quantized CPU GEMM reference);
+//!   Hessian/Cholesky GPTQ algorithm, the quantized CPU GEMM oracle in
+//!   [`gptq::gemm`], and the cache-blocked fused dequantize-GEMM fast
+//!   path in [`gptq::fused`] that unpacks nibbles on the fly);
 //! * [`dcusim`] — a cycle-approximate simulator of the DCU Z100 class of
 //!   GPGPU accelerators plus the paper's five kernel variants;
 //! * [`perfmodel`] — maps simulated kernel cycles onto per-model serving

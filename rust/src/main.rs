@@ -1,7 +1,9 @@
 //! `opt4gptq` CLI — the Layer-3 leader entrypoint.
 //!
 //! Subcommands:
-//!   serve        serve a synthetic trace with the PJRT tiny model
+//!   serve        serve a synthetic trace with a real executable backend
+//!                (default: the in-crate fused-kernel cpu transformer;
+//!                `--backend pjrt` needs the `pjrt` build feature)
 //!   simulate     run a serving simulation of a paper model on the DCU sim
 //!   kernel       simulate one GPTQ-GEMM shape across all five configs
 //!   accuracy     regenerate Tables I/II (ARC_C / ARC_E)
@@ -10,15 +12,16 @@
 
 use opt4gptq::benchkit::Table;
 use opt4gptq::cli::Args;
-use opt4gptq::engine::Backend as _;
 use opt4gptq::dcusim::kernels::KernelParams;
 use opt4gptq::dcusim::{Device, GemvKernel};
-use opt4gptq::engine::{Engine, EngineConfig, Request, SamplingParams, SimBackend};
+use opt4gptq::engine::{
+    Backend, CpuBackend, CpuModelConfig, Engine, EngineConfig, Request, SamplingParams,
+    SimBackend,
+};
 use opt4gptq::eval::accuracy::evaluate;
 use opt4gptq::gptq::{quantize_gptq, quantize_rtn, reconstruction_error, GptqConfig, Matrix};
 use opt4gptq::models::{by_name, PAPER_MODELS};
 use opt4gptq::rng::Rng;
-use opt4gptq::runtime::PjrtBackend;
 use opt4gptq::trace::arc::ArcSplit;
 use opt4gptq::trace::RequestTrace;
 use opt4gptq::OptConfig;
@@ -46,7 +49,9 @@ fn main() -> opt4gptq::Result<()> {
 fn usage() {
     eprintln!(
         "usage: opt4gptq <serve|simulate|kernel|accuracy|quantize> [options]
-  serve     --artifacts DIR --requests N --max-tokens N [--temperature T]
+  serve     --backend cpu|pjrt --requests N --max-tokens N [--temperature T]
+            (cpu: in-crate fused-kernel transformer; pjrt: --artifacts DIR,
+             needs the `pjrt` build feature)
   simulate  --model NAME --requests N [--opt baseline|smb|vml|ila|opt4gptq]
   kernel    --m M --k K --n N [--group G]
   accuracy  --model NAME [--split arc_c|arc_e]
@@ -66,11 +71,31 @@ fn parse_opt(s: &str) -> OptConfig {
 }
 
 fn cmd_serve(args: &Args) -> opt4gptq::Result<()> {
-    let dir = args.get_or("artifacts", "artifacts");
-    let n = args.get_usize("requests", 8);
-    let max_tokens = args.get_usize("max-tokens", 16);
-    let temperature = args.get_f64("temperature", 0.0) as f32;
+    match args.get_or("backend", "cpu") {
+        "cpu" => {
+            let cfg = CpuModelConfig {
+                seed: args.get_u64("seed", CpuModelConfig::default().seed),
+                ..Default::default()
+            };
+            println!(
+                "cpu backend: in-crate fused-kernel transformer (vocab={} layers={} d_model={} group={})",
+                cfg.vocab, cfg.n_layers, cfg.d_model, cfg.group_size
+            );
+            let backend = CpuBackend::new(cfg)?;
+            serve_with(backend, args)
+        }
+        "pjrt" => cmd_serve_pjrt(args),
+        other => {
+            eprintln!("unknown backend {other:?} (expected cpu|pjrt)");
+            std::process::exit(2);
+        }
+    }
+}
 
+#[cfg(feature = "pjrt")]
+fn cmd_serve_pjrt(args: &Args) -> opt4gptq::Result<()> {
+    use opt4gptq::runtime::PjrtBackend;
+    let dir = args.get_or("artifacts", "artifacts");
     println!("loading PJRT backend from {dir}/ ...");
     let mut backend = PjrtBackend::load(dir)?;
     backend.warmup()?;
@@ -78,11 +103,30 @@ fn cmd_serve(args: &Args) -> opt4gptq::Result<()> {
         "tiny model: vocab={} layers={} heads={} max_seq={}",
         backend.dims.vocab, backend.dims.n_layers, backend.dims.n_heads, backend.dims.max_seq
     );
-    let max_batch = backend.max_batch();
-    let mut engine = Engine::new(
-        EngineConfig { max_batch, max_seq_len: backend.max_seq_len(), ..Default::default() },
-        backend,
+    serve_with(backend, args)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_serve_pjrt(_args: &Args) -> opt4gptq::Result<()> {
+    eprintln!(
+        "the pjrt backend is not compiled in: vendor an `xla` crate next to \
+         vendor/anyhow, add it as a dependency of the `pjrt` feature (see \
+         Cargo.toml), and build with --features pjrt; or use `--backend cpu` \
+         for the in-crate executable path"
     );
+    std::process::exit(2);
+}
+
+/// Drive the engine over a ShareGPT-like trace on any executable backend.
+fn serve_with<B: Backend>(backend: B, args: &Args) -> opt4gptq::Result<()> {
+    let n = args.get_usize("requests", 8);
+    let max_tokens = args.get_usize("max-tokens", 16);
+    let temperature = args.get_f64("temperature", 0.0) as f32;
+    let max_batch = backend.max_batch();
+    let max_seq_len = backend.max_seq_len();
+    let vocab = backend.vocab() as u32;
+    let mut engine =
+        Engine::new(EngineConfig { max_batch, max_seq_len, ..Default::default() }, backend);
 
     let trace = RequestTrace::generate_with(
         n,
@@ -90,7 +134,7 @@ fn cmd_serve(args: &Args) -> opt4gptq::Result<()> {
         opt4gptq::trace::sharegpt::TraceConfig {
             prompt_max: 48,
             response_max: 32,
-            vocab: 256,
+            vocab,
             ..Default::default()
         },
     );

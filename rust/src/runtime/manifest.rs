@@ -33,6 +33,7 @@ impl Dtype {
         })
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn element_type(&self) -> xla::ElementType {
         match self {
             Dtype::F32 => xla::ElementType::F32,

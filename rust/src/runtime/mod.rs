@@ -14,10 +14,18 @@
 //! * [`backend`] implements [`crate::engine::Backend`] on top — the
 //!   engine serves the tiny GPTQ Llama end-to-end through it.
 
+// The manifest parser is dependency-free and always available (the AOT
+// artifact format is part of the repo contract); the PJRT client and the
+// backend over it need the `xla` bindings crate, which is not available
+// offline — they are gated behind the `pjrt` feature (see Cargo.toml).
+#[cfg(feature = "pjrt")]
 pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
+#[cfg(feature = "pjrt")]
 pub use client::Runtime;
 pub use manifest::{ArtifactMeta, Dtype, Manifest, TensorMeta};

@@ -1,0 +1,163 @@
+//! Engine integration across execution backends: the same seed and trace
+//! through `SimBackend` (virtual clock, synthetic logits) and
+//! `CpuBackend` (real fused-kernel math) must give deterministic,
+//! reproducible per-request token counts and monotone metrics — with no
+//! panics on the preemption/slot-release paths.
+
+use opt4gptq::engine::{
+    Backend, CpuBackend, CpuModelConfig, Engine, EngineConfig, Request, SamplingParams,
+    SimBackend,
+};
+use opt4gptq::models::by_name;
+use opt4gptq::OptConfig;
+
+type Workload = Vec<(Vec<u32>, usize)>;
+
+/// Light trace: six short requests (vocab-256 safe prompts).
+fn light_workload() -> Workload {
+    (0..6usize)
+        .map(|i| {
+            let plen = 5 + 3 * i;
+            let prompt: Vec<u32> = (0..plen).map(|j| ((i * 41 + j * 7) % 256) as u32).collect();
+            (prompt, 4 + i % 5)
+        })
+        .collect()
+}
+
+/// Heavy trace: long generations with distinct prompts (no prefix
+/// sharing), sized so the cramped config *must* preempt.
+fn heavy_workload() -> Workload {
+    (0..5usize)
+        .map(|i| {
+            let prompt: Vec<u32> = (0..12).map(|j| ((i * 53 + j * 11 + 1) % 256) as u32).collect();
+            (prompt, 22 + i)
+        })
+        .collect()
+}
+
+fn run_engine<B: Backend>(
+    backend: B,
+    cfg: EngineConfig,
+    workload: &Workload,
+) -> (Vec<(usize, Vec<u32>)>, usize) {
+    let mut e = Engine::new(cfg, backend);
+    for (i, (prompt, max_tokens)) in workload.iter().enumerate() {
+        e.add_request(Request::new(
+            i,
+            prompt.clone(),
+            SamplingParams {
+                max_tokens: *max_tokens,
+                temperature: 0.7,
+                top_k: 16,
+                seed: 9,
+                ..Default::default()
+            },
+        ));
+    }
+    let report = e.run().unwrap();
+    e.scheduler.check_invariants().unwrap();
+    assert!(report.metrics.elapsed >= 0.0);
+    assert_eq!(
+        report.metrics.output_tokens,
+        workload.iter().map(|(_, g)| *g).sum::<usize>(),
+        "token accounting must be exact"
+    );
+    // Metrics monotonicity: every request's latency bounds its TTFT.
+    for o in &report.outputs {
+        assert!(o.ttft >= 0.0 && o.latency >= o.ttft, "req {}: ttft/latency order", o.id);
+    }
+    let mut outs: Vec<(usize, Vec<u32>)> =
+        report.outputs.iter().map(|o| (o.id, o.tokens.clone())).collect();
+    outs.sort();
+    (outs, report.metrics.preemptions)
+}
+
+fn roomy() -> EngineConfig {
+    EngineConfig { max_batch: 4, total_blocks: 512, max_seq_len: 128, ..Default::default() }
+}
+
+/// Tiny KV pool: 26 blocks of 4 tokens cannot hold four of the heavy
+/// trace's ~34-token sequences at once — forces preemption/recompute.
+fn cramped() -> EngineConfig {
+    EngineConfig {
+        max_batch: 4,
+        block_size: 4,
+        total_blocks: 26,
+        max_seq_len: 128,
+        max_prefills_per_step: 4,
+    }
+}
+
+fn cpu_backend() -> CpuBackend {
+    CpuBackend::new(CpuModelConfig { max_batch: 4, max_seq: 128, ..Default::default() }).unwrap()
+}
+
+fn sim_backend() -> SimBackend {
+    SimBackend::new(by_name("Llama-2-7B-GPTQ").unwrap(), OptConfig::OPT4GPTQ, 4)
+}
+
+#[test]
+fn cpu_backend_run_is_deterministic() {
+    let w = light_workload();
+    let (a, _) = run_engine(cpu_backend(), roomy(), &w);
+    let (b, _) = run_engine(cpu_backend(), roomy(), &w);
+    assert_eq!(a, b, "identical seed + trace must replay token-for-token");
+}
+
+#[test]
+fn sim_and_cpu_backends_agree_on_token_counts() {
+    let w = light_workload();
+    let (sim, _) = run_engine(sim_backend(), roomy(), &w);
+    let (cpu, _) = run_engine(cpu_backend(), roomy(), &w);
+    assert_eq!(sim.len(), cpu.len());
+    for ((sid, stoks), (cid, ctoks)) in sim.iter().zip(&cpu) {
+        assert_eq!(sid, cid);
+        // Logits differ across backends (synthetic vs real math), but the
+        // forced generation lengths are a backend-independent contract.
+        assert_eq!(stoks.len(), ctoks.len(), "req {sid}: token count diverges");
+    }
+}
+
+#[test]
+fn cpu_backend_survives_preemption_and_slot_release() {
+    let w = heavy_workload();
+    let (a, preemptions) = run_engine(cpu_backend(), cramped(), &w);
+    assert!(preemptions > 0, "this config must preempt to prove the recompute path");
+    // Preemption changes scheduling, not accounting (run_engine already
+    // pinned exact totals); replay must also be stable.
+    let (b, _) = run_engine(cpu_backend(), cramped(), &w);
+    assert_eq!(a, b);
+    // And the sim backend under the identical squeeze preempts too,
+    // finishing with the same per-request counts.
+    let (sim, sim_pre) = run_engine(sim_backend(), cramped(), &w);
+    assert!(sim_pre > 0);
+    for ((_, c), (_, s)) in a.iter().zip(&sim) {
+        assert_eq!(c.len(), s.len());
+    }
+}
+
+#[test]
+fn greedy_cpu_serving_is_deterministic_across_engine_configs() {
+    // Greedy sampling through real logits: decode *batching* differs
+    // between configs, but each sequence's math is independent (dense
+    // per-slot KV, row-independent fused GEMM), so outputs must match
+    // token-for-token.
+    let run = |cfg: EngineConfig| {
+        let mut e = Engine::new(cfg, cpu_backend());
+        for (i, (prompt, _)) in light_workload().into_iter().enumerate() {
+            e.add_request(Request::new(
+                i,
+                prompt,
+                SamplingParams { max_tokens: 6, ..Default::default() },
+            ));
+        }
+        let report = e.run().unwrap();
+        let mut outs: Vec<(usize, Vec<u32>)> =
+            report.outputs.iter().map(|o| (o.id, o.tokens.clone())).collect();
+        outs.sort();
+        outs
+    };
+    let a = run(roomy());
+    let b = run(EngineConfig { max_batch: 2, ..roomy() });
+    assert_eq!(a, b, "greedy decoding must not depend on batch composition");
+}

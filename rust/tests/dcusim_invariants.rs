@@ -1,0 +1,104 @@
+//! dcusim invariants across the five optimization configs.
+//!
+//! The paper's optimizations change *how* bytes move and instructions
+//! issue, never *what* must move: for a fixed `KernelParams`, every
+//! variant owes the same minimum traffic (packed weights + activations +
+//! outputs) and the same flops, and SMB's whole effect on the write path
+//! is to divide the per-block global atomics by exactly `SPLIT_K`.
+
+use opt4gptq::dcusim::isa::IsaCostModel;
+use opt4gptq::dcusim::kernels::gemv::SPLIT_K;
+use opt4gptq::dcusim::kernels::KernelParams;
+use opt4gptq::dcusim::{DcuConfig, Device, GemvKernel};
+use opt4gptq::OptConfig;
+
+fn shapes() -> Vec<KernelParams> {
+    vec![
+        KernelParams { m: 1, k: 4096, n: 4096, group_size: 128 },
+        KernelParams { m: 8, k: 2048, n: 2560, group_size: 64 },
+        KernelParams { m: 32, k: 5120, n: 13824, group_size: 128 },
+        KernelParams { m: 64, k: 4096, n: 11008, group_size: 128 },
+    ]
+}
+
+#[test]
+fn min_bytes_and_flops_identical_across_all_variants() {
+    let cfg = DcuConfig::z100();
+    let isa = IsaCostModel::default();
+    for p in shapes() {
+        let kernels: Vec<GemvKernel> =
+            OptConfig::ALL.iter().map(|&o| GemvKernel::new(p, o)).collect();
+        // The roofline numerator is a property of the shape alone.
+        let min_bytes: Vec<u64> = kernels.iter().map(|k| k.params.min_bytes()).collect();
+        let flops: Vec<u64> = kernels.iter().map(|k| k.params.flops()).collect();
+        assert!(min_bytes.windows(2).all(|w| w[0] == w[1]), "{p:?}: min_bytes {min_bytes:?}");
+        assert!(flops.windows(2).all(|w| w[0] == w[1]), "{p:?}: flops {flops:?}");
+
+        // The *useful* bytes each variant's block actually accounts for
+        // must also agree — optimizations may change transaction counts
+        // and issue cycles, never the useful traffic.
+        let useful: Vec<u64> = kernels
+            .iter()
+            .map(|k| {
+                let bw = k.block_work(&cfg, &isa);
+                bw.mem.read_bytes_useful + bw.mem.write_bytes_useful
+            })
+            .collect();
+        assert!(
+            useful.windows(2).all(|w| w[0] == w[1]),
+            "{p:?}: useful bytes diverge across variants: {useful:?}"
+        );
+    }
+}
+
+#[test]
+fn smb_reduces_block_atomics_by_exactly_split_k() {
+    let cfg = DcuConfig::z100();
+    let isa = IsaCostModel::default();
+    for p in shapes() {
+        let base = GemvKernel::new(p, OptConfig::BASELINE).block_work(&cfg, &isa);
+        for smb_opt in [OptConfig::SMB, OptConfig::OPT4GPTQ] {
+            let smb = GemvKernel::new(p, smb_opt).block_work(&cfg, &isa);
+            assert_eq!(
+                base.atomics_per_block,
+                smb.atomics_per_block * SPLIT_K as u64,
+                "{p:?} {}: atomics {} vs {}",
+                smb_opt.label(),
+                base.atomics_per_block,
+                smb.atomics_per_block
+            );
+        }
+        // Non-SMB variants keep the baseline atomic count.
+        for other in [OptConfig::VML, OptConfig::ILA] {
+            let bw = GemvKernel::new(p, other).block_work(&cfg, &isa);
+            assert_eq!(bw.atomics_per_block, base.atomics_per_block, "{p:?} {}", other.label());
+        }
+    }
+}
+
+#[test]
+fn simulated_reports_stay_internally_consistent() {
+    // The per-variant reports must expose the same problem-level totals
+    // the invariants above pin, end to end through Device::simulate.
+    let d = Device::z100();
+    for p in shapes() {
+        let reports: Vec<_> =
+            OptConfig::ALL.iter().map(|&o| d.simulate(&GemvKernel::new(p, o))).collect();
+        for r in &reports {
+            assert!(r.seconds > 0.0 && r.seconds.is_finite());
+            assert!(r.mem_efficiency > 0.0 && r.mem_efficiency <= 1.0);
+        }
+        // Identical flops + differing seconds ⇒ achieved tflops ordering
+        // must invert the seconds ordering.
+        for w in reports.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            assert_eq!(
+                (a.seconds < b.seconds),
+                (a.achieved_tflops > b.achieved_tflops),
+                "{p:?}: {} vs {}",
+                a.label,
+                b.label
+            );
+        }
+    }
+}

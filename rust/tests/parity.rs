@@ -1,0 +1,150 @@
+//! Cross-layer parity harness: the fused dequantize-GEMM fast path
+//! (`gptq::fused`) pinned against the dense oracle
+//! (`gptq::gemm::{gemv_f32, gemm_f32}`) over a seeded shape sweep —
+//! K ∈ {64, 128, 4096}, N ∈ {8, 32, 256}, group ∈ {32, 64, 128},
+//! M ∈ {1, 8, 64}, with and without act-order (`b_q_perm`).
+//!
+//! Tensors are synthesized directly in the packed layout (random codes,
+//! zeros, scales, permutation): parity must hold for *every* valid
+//! packed tensor, not just those a particular quantizer emits, and it
+//! keeps the 4096-row shapes affordable (a real act-order GPTQ pass is
+//! O(K³) in the Cholesky).  Activations are scaled by 1/√K so outputs
+//! stay O(1) and the 1e-3 tolerance measures implementation divergence,
+//! not accumulated f32 noise.
+
+use opt4gptq::gptq::{gemm_f32, gemm_fused, gemv_f32, gemv_fused, pack, Matrix, QuantizedTensor};
+use opt4gptq::rng::Rng;
+
+const KS: [usize; 3] = [64, 128, 4096];
+const NS: [usize; 3] = [8, 32, 256];
+const GROUPS: [usize; 3] = [32, 64, 128];
+const MS: [usize; 3] = [1, 8, 64];
+const TOL: f32 = 1e-3;
+
+/// Unoptimized-build budget: the oracle re-unpacks the full K×N matrix
+/// per GEMV row, so cases are capped at ~9M element-ops each.  Skips are
+/// counted and reported — nothing is dropped silently.
+const MAX_ELEMS: usize = 9_000_000;
+
+/// Build a random valid packed tensor directly in the storage layout.
+fn synth_tensor(k: usize, n: usize, g: usize, act_order: bool, rng: &mut Rng) -> QuantizedTensor {
+    let codes: Vec<u8> = (0..k * n).map(|_| rng.below(16) as u8).collect();
+    let groups = k / g;
+    let zeros: Vec<u8> = (0..groups * n).map(|_| rng.below(16) as u8).collect();
+    let scales: Vec<f32> = (0..groups * n).map(|_| 0.01 + 0.1 * rng.f32()).collect();
+    let q = QuantizedTensor {
+        k,
+        n,
+        group_size: g,
+        qweight: pack::pack_rows(&codes, k, n),
+        scales,
+        qzeros: pack::pack_cols(&zeros, groups, n),
+        perm: None,
+    };
+    if act_order {
+        let mut perm: Vec<usize> = (0..k).collect();
+        rng.shuffle(&mut perm);
+        q.with_perm(perm)
+    } else {
+        q
+    }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+fn shape_sweep() -> Vec<(usize, usize, usize, bool)> {
+    let mut shapes = Vec::new();
+    for &k in &KS {
+        for &n in &NS {
+            for &g in &GROUPS {
+                if g > k || k % g != 0 {
+                    continue;
+                }
+                for act_order in [false, true] {
+                    shapes.push((k, n, g, act_order));
+                }
+            }
+        }
+    }
+    shapes
+}
+
+#[test]
+fn fused_gemv_matches_oracle_over_sweep() {
+    let mut rng = Rng::new(0x9a11_17ee);
+    let mut cases = 0;
+    for (k, n, g, act_order) in shape_sweep() {
+        let q = synth_tensor(k, n, g, act_order, &mut rng);
+        let std = 1.0 / (k as f32).sqrt();
+        let x = rng.normal_vec_f32(k, std);
+        let got = gemv_fused(&x, &q);
+        let want = gemv_f32(&x, &q);
+        let diff = max_abs_diff(&got, &want);
+        assert!(
+            diff < TOL,
+            "gemv k={k} n={n} g={g} act_order={act_order}: max diff {diff}"
+        );
+        cases += 1;
+    }
+    assert!(cases >= 40, "sweep unexpectedly small: {cases} cases");
+}
+
+#[test]
+fn fused_gemm_matches_oracle_over_sweep() {
+    let mut rng = Rng::new(0x6e33_a271);
+    let (mut cases, mut skipped) = (0, 0);
+    for (k, n, g, act_order) in shape_sweep() {
+        for &m in &MS {
+            if m * k * n > MAX_ELEMS {
+                skipped += 1;
+                continue;
+            }
+            let q = synth_tensor(k, n, g, act_order, &mut rng);
+            let std = 1.0 / (k as f32).sqrt();
+            let x = Matrix::from_vec(m, k, rng.normal_vec_f32(m * k, std));
+            let got = gemm_fused(&x, &q);
+            let want = gemm_f32(&x, &q);
+            let diff = max_abs_diff(&got.data, &want.data);
+            assert!(
+                diff < TOL,
+                "gemm m={m} k={k} n={n} g={g} act_order={act_order}: max diff {diff}"
+            );
+            cases += 1;
+        }
+    }
+    println!("gemm parity: {cases} cases checked, {skipped} oversized cases skipped (> {MAX_ELEMS} element-ops; the shapes themselves are covered at smaller M)");
+    assert!(cases >= 100, "sweep unexpectedly small: {cases} cases");
+}
+
+#[test]
+fn fused_gemm_rows_equal_fused_gemv_rows() {
+    // The batched path must be bitwise row-equivalent to the single-row
+    // path (rows of an M-block share weight passes but not accumulators).
+    let mut rng = Rng::new(0x70_0b5);
+    for act_order in [false, true] {
+        let q = synth_tensor(128, 32, 64, act_order, &mut rng);
+        let x = Matrix::from_vec(11, 128, rng.normal_vec_f32(11 * 128, 0.1));
+        let out = gemm_fused(&x, &q);
+        for mi in 0..x.rows {
+            let y = gemv_fused(x.row(mi), &q);
+            assert_eq!(out.row(mi), &y[..], "row {mi} act_order={act_order}");
+        }
+    }
+}
+
+#[test]
+fn sparse_activations_agree_with_oracle() {
+    // The fused kernel short-circuits all-zero 8-row spans; parity must
+    // survive highly sparse inputs (and exact zeros).
+    let mut rng = Rng::new(0x51a3);
+    let q = synth_tensor(256, 32, 64, false, &mut rng);
+    let mut x = vec![0.0f32; 256];
+    for _ in 0..10 {
+        x[rng.range_usize(0, 255)] = rng.normal() as f32 * 0.1;
+    }
+    let diff = max_abs_diff(&gemv_fused(&x, &q), &gemv_f32(&x, &q));
+    assert!(diff < TOL, "sparse parity diff {diff}");
+}

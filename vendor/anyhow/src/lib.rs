@@ -1,0 +1,138 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network access and no vendored registry,
+//! so this path dependency provides the (small) slice of anyhow's API the
+//! repo uses: [`Error`], [`Result`], the [`anyhow!`]/[`bail!`] macros and
+//! the [`Context`] extension trait.  Errors are stored as rendered
+//! strings — backtraces, downcasting and error chains are out of scope
+//! for this codebase, which only ever formats its errors.
+
+use std::fmt;
+
+/// A rendered error message (anyhow::Error analogue).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (anyhow::Error::msg analogue).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Wrap with context, outermost first (mirrors anyhow's rendering of
+    /// `context: source`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`; that keeps this blanket `?`-conversion coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result` analogue.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to `Result`/`Option` failures (anyhow::Context analogue).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`] (anyhow::bail analogue).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<usize> {
+        let n: usize = s.parse()?; // via the blanket From<E>
+        if n == 0 {
+            bail!("zero is not allowed (got {s:?})");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_and_bail() {
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+        let e = parse("0").unwrap_err();
+        assert!(e.to_string().contains("zero is not allowed"));
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let o: Option<i32> = None;
+        let e = o.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+
+        let r: std::result::Result<i32, String> = Err("inner".into());
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        assert_eq!(anyhow!("plain").to_string(), "plain");
+        assert_eq!(anyhow!("n = {}", 3).to_string(), "n = 3");
+        assert_eq!(anyhow!(String::from("owned")).to_string(), "owned");
+    }
+}
