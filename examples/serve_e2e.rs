@@ -6,14 +6,17 @@
 //!
 //! * `--backend cpu` (default) — the in-crate tiny quantized transformer
 //!   executed through the fused dequant-GEMM kernels
-//!   ([`opt4gptq::gptq::fused`]); no artifacts, no external crates;
+//!   ([`opt4gptq::gptq::fused`]) over physically-paged KV storage
+//!   ([`opt4gptq::engine::kv`]) addressed by the engine's block tables;
+//!   no artifacts, no external crates;
 //! * `--backend pjrt` — the AOT-compiled tiny GPTQ Llama through the PJRT
 //!   CPU client (requires `make artifacts` and building with
 //!   `--features pjrt`), proving the three-layer composition:
 //!   Pallas GPTQ kernel (L1) -> jax model lowered to HLO (L2)
 //!   -> rust engine + PJRT runtime (L3), Python nowhere at runtime.
 //!
-//! Run: `cargo run --release --example serve_e2e [-- --requests 8 --max-tokens 24]`
+//! Run: `cargo run --release --example serve_e2e \
+//!        [-- --requests 8 --max-tokens 24 --blocks 256 --block-size 16]`
 
 use opt4gptq::cli::Args;
 use opt4gptq::engine::tokenizer::ByteTokenizer;
@@ -83,14 +86,19 @@ fn serve_pjrt(_args: &Args) -> opt4gptq::Result<()> {
 fn serve<B: Backend>(backend: B, args: &Args, label: &str) -> opt4gptq::Result<()> {
     let n_requests = args.get_usize("requests", 8);
     let max_tokens = args.get_usize("max-tokens", 24);
+    // Engine::new hands this geometry to Backend::bind_kv, so the paged
+    // backend's physical block pool is exactly what the block manager
+    // allocates tables over.
+    let total_blocks = args.get_usize("blocks", 256);
+    let block_size = args.get_usize("block-size", 16);
     let tok = ByteTokenizer;
     let max_batch = backend.max_batch();
     let mut engine = Engine::new(
         EngineConfig {
             max_batch,
             max_seq_len: backend.max_seq_len(),
-            block_size: 16,
-            total_blocks: 256,
+            block_size,
+            total_blocks,
             max_prefills_per_step: 2,
         },
         backend,
@@ -135,5 +143,6 @@ fn serve<B: Backend>(backend: B, args: &Args, label: &str) -> opt4gptq::Result<(
     println!("mean latency:      {:.3}s   p95: {:.3}s", m.mean_latency(), m.p95_latency());
     println!("mean TTFT:         {:.3}s", m.mean_ttft());
     println!("mean decode batch: {:.2}", m.mean_decode_batch());
+    println!("prefix-cache hits: {}", engine.scheduler.blocks.prefix_hits);
     Ok(())
 }

@@ -7,10 +7,18 @@
 //! (this bench exits non-zero if it is not, like the figure benches'
 //! shape checks).
 //!
+//! A second section pits the scoped-thread column-split parallel path
+//! against the serial path on the same headline decode shape: the
+//! parallel path must never be slower there (best-of-N, exits non-zero
+//! on regression) and must stay bit-identical.
+//!
 //! Run: `cargo bench --bench fused_gemm`
 
 use opt4gptq::benchkit::{bench, fmt_duration, Table};
-use opt4gptq::gptq::{gemm_f32, gemm_fused, gemv_f32, gemv_fused, quantize_rtn, Matrix};
+use opt4gptq::gptq::{
+    fused_threads, gemm_f32, gemm_fused, gemv_f32, gemv_fused, gemv_fused_threads, quantize_rtn,
+    Matrix,
+};
 use opt4gptq::rng::Rng;
 
 struct Case {
@@ -148,8 +156,50 @@ fn main() {
     }
 
     table.print();
+
+    // ---- parallel vs serial fused path, headline decode shape ----
+    let (k, n, group) = (4096usize, 4096usize, 128usize);
+    let mut rng = Rng::new(0x9a7a_11e1);
+    let w = Matrix::from_vec(k, n, rng.normal_vec_f32(k * n, 1.0 / (k as f32).sqrt()));
+    let q = quantize_rtn(&w, group);
+    let x = rng.normal_vec_f32(k, 1.0 / (k as f32).sqrt());
+    let workers = fused_threads(1, k, n);
+
+    // Bit-exactness first (always checkable): a racy fast path is not a
+    // speedup.  Force 2 workers for the parity check even on one core.
+    let serial_y = gemv_fused_threads(&x, &q, 1);
+    let parallel_y = gemv_fused_threads(&x, &q, workers.max(2));
+    assert_eq!(serial_y, parallel_y, "column split changed the numerics");
+
+    if workers > 1 {
+        let serial = bench("fused serial   M=1 4096x4096 g128", 2, 7, || {
+            std::hint::black_box(gemv_fused_threads(&x, &q, 1));
+        });
+        let parallel =
+            bench(&format!("fused parallel M=1 4096x4096 g128 (t={workers})"), 2, 7, || {
+                std::hint::black_box(gemv_fused_threads(&x, &q, workers));
+            });
+        // Best-of-N comparison: scheduling noise must not fail the floor.
+        let par_speedup = serial.min / parallel.min;
+        println!(
+            "\nparallel column split: serial p50 {} vs parallel p50 {}  ({:.2}x best-of)",
+            fmt_duration(serial.p50),
+            fmt_duration(parallel.p50),
+            par_speedup
+        );
+        if par_speedup < 1.0 {
+            failures.push(format!(
+                "parallel fused GEMV is slower than serial at N=4096: {par_speedup:.2}x"
+            ));
+        }
+    } else {
+        // One core: fused_threads correctly refuses to split, so there
+        // is no parallel path to race — nothing to assert.
+        println!("\nparallel column split: skipped (single-core machine, auto-split stays serial)");
+    }
+
     if failures.is_empty() {
-        println!("\nshape check: OK (headline decode shape meets the >=10x floor)");
+        println!("\nshape check: OK (headline >=10x floor; parallel >= serial at N=4096)");
     } else {
         println!("\nshape check FAILED:");
         for f in &failures {

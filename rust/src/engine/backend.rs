@@ -1,19 +1,36 @@
 //! Execution backends for the engine.
 //!
 //! [`Backend`] abstracts "run a prefill / a decode step and tell me how
-//! long it took".  The engine's scheduling, paging and sampling logic is
-//! identical over both implementations:
+//! long it took" over a **paged KV contract**: every unit of work arrives
+//! as a descriptor carrying the sequence's physical block table and
+//! context length, so the memory layout the scheduler reasons about is
+//! the same one the backend's kernels read and write.  There is no dense
+//! per-slot cache anywhere — a backend that materializes K/V does so in a
+//! [`super::kv::PagedKvCache`] addressed through the tables it is handed.
+//!
+//! The engine's scheduling, paging and sampling logic is identical over
+//! all implementations:
 //!
 //! * [`SimBackend`] — the six paper models on the simulated DCU: step
 //!   durations come from [`crate::perfmodel`], logits are synthesized
 //!   deterministically (the throughput/latency figures do not depend on
 //!   token *identity*, only counts — lengths are forced via
-//!   `max_tokens` exactly as vLLM's benchmark_throughput does);
+//!   `max_tokens` exactly as vLLM's benchmark_throughput does); block
+//!   tables are accepted and ignored (no physical KV);
 //! * [`super::cpu_backend::CpuBackend`] — a real tiny quantized
 //!   transformer executed in-crate through the fused dequant-GEMM
-//!   kernels, real logits, wall-clock timings;
+//!   kernels over physically-paged K/V storage, real logits, wall-clock
+//!   timings;
 //! * `PjrtBackend` (feature `pjrt`) — the AOT tiny model on the PJRT CPU
-//!   client, real logits, wall-clock timings.
+//!   client; its HLO artifacts operate on dense lanes, so it maps
+//!   sequence ids onto lanes internally.
+//!
+//! Lifecycle: the engine announces the paged-KV geometry once via
+//! [`Backend::bind_kv`], then streams [`PrefillDesc`]/[`DecodeDesc`]
+//! work, and after every step returns physically-freed blocks through
+//! [`Backend::release_blocks`] (debug builds poison them — see
+//! [`super::kv`]) and retired sequence ids through
+//! [`Backend::release_seq`].
 
 use crate::models::ModelSpec;
 use crate::perfmodel::PerfModel;
@@ -21,21 +38,37 @@ use crate::rng::Rng;
 use crate::OptConfig;
 use crate::Result;
 
-/// One sequence's contribution to a decode batch.
+use super::block_manager::BlockId;
+
+/// One sequence's prefill work: run the whole prompt, writing K/V
+/// through the block table.
 #[derive(Debug, Clone, Copy)]
-pub struct DecodeEntry {
-    /// Backend slot the sequence occupies.
-    pub slot: usize,
-    /// Sequence length *counting the fed token* (the engine passes
-    /// `Sequence::position()` = prompt + generated): the cache holds
-    /// `position - 1` earlier tokens and the fed token's K/V entry lands
-    /// at index `position - 1`.
-    pub position: usize,
-    /// The token to feed.
-    pub token: u32,
+pub struct PrefillDesc<'a> {
+    /// Engine-wide sequence id (stable across preemptions; the unit
+    /// [`Backend::release_seq`] later retires).
+    pub seq_id: usize,
+    /// The prompt tokens; token `i`'s K/V entry lands at position `i`.
+    pub tokens: &'a [u32],
+    /// Physical block table covering at least `tokens.len()` positions.
+    pub block_table: &'a [BlockId],
 }
 
-/// A model execution backend.
+/// One sequence's contribution to a decode batch.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeDesc<'a> {
+    /// Engine-wide sequence id.
+    pub seq_id: usize,
+    /// Tokens already materialized in the KV cache: the fed token's K/V
+    /// entry lands at position `context_len` and attention covers
+    /// positions `0..=context_len`.
+    pub context_len: usize,
+    /// The token to feed.
+    pub token: u32,
+    /// Physical block table covering at least `context_len + 1` positions.
+    pub block_table: &'a [BlockId],
+}
+
+/// A model execution backend (paged-KV batch contract — see module docs).
 pub trait Backend {
     /// Max sequences decodable in one step.
     fn max_batch(&self) -> usize;
@@ -43,16 +76,27 @@ pub trait Backend {
     fn max_seq_len(&self) -> usize;
     fn vocab(&self) -> usize;
 
-    /// Run the prompt for the sequence in `slot`; returns (next-token
-    /// logits, elapsed seconds).
-    fn prefill(&mut self, slot: usize, tokens: &[u32]) -> Result<(Vec<f32>, f64)>;
+    /// Announce the paged-KV geometry before any work is scheduled.
+    /// Backends owning physical K/V storage size their block pool here;
+    /// simulated/dense-lane backends may ignore it.
+    fn bind_kv(&mut self, _total_blocks: usize, _block_size: usize) {}
+
+    /// Run one sequence's prompt; returns (next-token logits, elapsed
+    /// seconds).
+    fn prefill(&mut self, req: PrefillDesc<'_>) -> Result<(Vec<f32>, f64)>;
 
     /// Run one decode step; returns one logits row per entry plus the
     /// elapsed seconds for the whole batch.
-    fn decode(&mut self, batch: &[DecodeEntry]) -> Result<(Vec<Vec<f32>>, f64)>;
+    fn decode(&mut self, batch: &[DecodeDesc<'_>]) -> Result<(Vec<Vec<f32>>, f64)>;
 
-    /// Slot released (sequence finished or preempted).
-    fn release(&mut self, _slot: usize) {}
+    /// Blocks whose refcount reached zero since the last step: the
+    /// memory is returned to the allocator, and paged backends may
+    /// recycle or poison it (no live table references these ids).
+    fn release_blocks(&mut self, _blocks: &[BlockId]) {}
+
+    /// A sequence finished or was preempted; backends holding
+    /// per-sequence state (e.g. dense lane maps) drop it here.
+    fn release_seq(&mut self, _seq_id: usize) {}
 }
 
 /// Simulated backend: paper model × optimization config on the DCU model.
@@ -105,16 +149,18 @@ impl Backend for SimBackend {
         self.sim_vocab
     }
 
-    fn prefill(&mut self, _slot: usize, tokens: &[u32]) -> Result<(Vec<f32>, f64)> {
-        let secs = self.perf.prefill_seconds(self.model, tokens.len().max(1), self.opt);
+    fn prefill(&mut self, req: PrefillDesc<'_>) -> Result<(Vec<f32>, f64)> {
+        let secs = self.perf.prefill_seconds(self.model, req.tokens.len().max(1), self.opt);
         let logits = self.fake_logits(self.sim_vocab);
         Ok((logits, secs))
     }
 
-    fn decode(&mut self, batch: &[DecodeEntry]) -> Result<(Vec<Vec<f32>>, f64)> {
+    fn decode(&mut self, batch: &[DecodeDesc<'_>]) -> Result<(Vec<Vec<f32>>, f64)> {
         assert!(!batch.is_empty());
-        let mean_ctx =
-            batch.iter().map(|e| e.position as f64).sum::<f64>() / batch.len() as f64;
+        // `context_len + 1` counts the fed token, matching the sequence
+        // length the perf model's attention term is parameterized on.
+        let mean_ctx = batch.iter().map(|e| (e.context_len + 1) as f64).sum::<f64>()
+            / batch.len() as f64;
         let secs =
             self.perf
                 .decode_step_seconds(self.model, batch.len(), mean_ctx.max(1.0), self.opt);
@@ -128,15 +174,17 @@ mod tests {
     use super::*;
     use crate::models::by_name;
 
+    fn decode_desc(seq_id: usize, context_len: usize) -> DecodeDesc<'static> {
+        DecodeDesc { seq_id, context_len, token: 1, block_table: &[] }
+    }
+
     #[test]
     fn sim_backend_times_scale_with_batch() {
         let m = by_name("Llama-2-7B-GPTQ").unwrap();
         let mut b = SimBackend::new(m, OptConfig::BASELINE, 32);
-        let one = [DecodeEntry { slot: 0, position: 50, token: 1 }];
+        let one = [decode_desc(0, 49)];
         let (_, t1) = b.decode(&one).unwrap();
-        let many: Vec<DecodeEntry> = (0..32)
-            .map(|i| DecodeEntry { slot: i, position: 50, token: 1 })
-            .collect();
+        let many: Vec<DecodeDesc> = (0..32).map(|i| decode_desc(i, 49)).collect();
         let (rows, t32) = b.decode(&many).unwrap();
         assert_eq!(rows.len(), 32);
         assert!(t32 > t1, "batch-32 step should cost more: {t32} vs {t1}");
@@ -148,8 +196,7 @@ mod tests {
         let m = by_name("LLaMa-13B-GPTQ").unwrap();
         let mut base = SimBackend::new(m, OptConfig::BASELINE, 32);
         let mut opt = SimBackend::new(m, OptConfig::OPT4GPTQ, 32);
-        let batch: Vec<DecodeEntry> =
-            (0..32).map(|i| DecodeEntry { slot: i, position: 100, token: 1 }).collect();
+        let batch: Vec<DecodeDesc> = (0..32).map(|i| decode_desc(i, 99)).collect();
         let (_, tb) = base.decode(&batch).unwrap();
         let (_, to) = opt.decode(&batch).unwrap();
         assert!(to < tb);
@@ -159,8 +206,14 @@ mod tests {
     fn prefill_longer_prompts_cost_more() {
         let m = by_name("Qwen1.5-4B-Chat-GPTQ-Int4").unwrap();
         let mut b = SimBackend::new(m, OptConfig::BASELINE, 32);
-        let (_, t_short) = b.prefill(0, &vec![1; 16]).unwrap();
-        let (_, t_long) = b.prefill(0, &vec![1; 512]).unwrap();
+        let short = vec![1u32; 16];
+        let long = vec![1u32; 512];
+        let (_, t_short) = b
+            .prefill(PrefillDesc { seq_id: 0, tokens: &short, block_table: &[] })
+            .unwrap();
+        let (_, t_long) = b
+            .prefill(PrefillDesc { seq_id: 0, tokens: &long, block_table: &[] })
+            .unwrap();
         assert!(t_long > t_short);
     }
 }

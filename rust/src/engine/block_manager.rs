@@ -33,6 +33,15 @@ pub struct BlockManager {
     tables: HashMap<usize, Vec<BlockId>>,
     /// Cache hit statistics.
     pub prefix_hits: usize,
+    /// Blocks whose refcount reached zero since the last
+    /// [`BlockManager::take_released`] drain.  The engine forwards these
+    /// to [`crate::engine::Backend::release_blocks`] at the end of each
+    /// step — before any of them can be re-allocated by the next
+    /// `schedule()` — so paged backends can poison/recycle the memory.
+    freed_log: Vec<BlockId>,
+    /// Sequence ids fully freed (finished or preempted) since the last
+    /// drain; forwarded to [`crate::engine::Backend::release_seq`].
+    released_seqs: Vec<usize>,
 }
 
 impl BlockManager {
@@ -47,7 +56,17 @@ impl BlockManager {
             prefix_index: HashMap::new(),
             tables: HashMap::new(),
             prefix_hits: 0,
+            freed_log: Vec::new(),
+            released_seqs: Vec::new(),
         }
+    }
+
+    /// Drain the release logs: (physically freed blocks, retired
+    /// sequence ids).  Callers must drain before re-allocating the freed
+    /// blocks if they mirror block contents elsewhere (the engine drains
+    /// once per step, after execution and before the next `schedule()`).
+    pub fn take_released(&mut self) -> (Vec<BlockId>, Vec<usize>) {
+        (std::mem::take(&mut self.freed_log), std::mem::take(&mut self.released_seqs))
     }
 
     pub fn free_blocks(&self) -> usize {
@@ -69,7 +88,6 @@ impl BlockManager {
         assert!(!self.tables.contains_key(&seq_id), "sequence already allocated");
         let needed = self.blocks_needed(prompt.len().max(1));
         let mut table = Vec::with_capacity(needed);
-        let mut rollback = Vec::new();
         let mut hasher: u64 = 0xcbf2_9ce4_8422_2325;
         for bi in 0..needed {
             let start = bi * self.block_size;
@@ -94,16 +112,25 @@ impl BlockManager {
             }
             match self.free.pop() {
                 Some(b) => {
+                    // Reclaimed within this drain window: the block must
+                    // leave the freed log (see append_token).
+                    self.freed_log.retain(|&x| x != b);
                     self.blocks[b].refcount = 1;
                     self.blocks[b].prefix_hash = key;
                     if let Some(k) = key {
                         self.prefix_index.insert(k, b);
                     }
                     table.push(b);
-                    rollback.push(b);
                 }
                 None => {
-                    // Roll back everything taken so far.
+                    // Out of memory: roll back everything this call took.
+                    // `release_block` handles both cases uniformly —
+                    // prefix-shared blocks drop back to their prior
+                    // refcount, and freshly-taken blocks (including ones
+                    // just entered into the prefix index above) return
+                    // to the free list with their index entry removed,
+                    // so no dangling prefix entry can survive a failed
+                    // allocation (`check_invariants` pins this).
                     for &b in table.iter() {
                         self.release_block(b);
                     }
@@ -126,6 +153,11 @@ impl BlockManager {
         }
         match self.free.pop() {
             Some(b) => {
+                // A block freed earlier in this drain window is being
+                // handed to a new owner: it must leave the freed log, or
+                // the end-of-step drain would report (and debug-poison)
+                // a block a live table references.
+                self.freed_log.retain(|&x| x != b);
                 self.blocks[b].refcount = 1;
                 self.blocks[b].prefix_hash = None;
                 table.push(b);
@@ -144,12 +176,14 @@ impl BlockManager {
                 self.prefix_index.remove(&k);
             }
             self.free.push(b);
+            self.freed_log.push(b);
         }
     }
 
     /// Free a sequence's entire table (finish or preemption).
     pub fn free_sequence(&mut self, seq_id: usize) {
         if let Some(table) = self.tables.remove(&seq_id) {
+            self.released_seqs.push(seq_id);
             for b in table {
                 self.release_block(b);
             }
@@ -182,6 +216,31 @@ impl BlockManager {
         let used: usize = self.blocks.iter().filter(|b| b.refcount > 0).count();
         if used + self.free.len() != self.blocks.len() {
             return Err("used + free != total".into());
+        }
+        // The prefix cache may only point at live blocks that still carry
+        // the hash they were indexed under (a failed allocation's
+        // rollback must not leave entries dangling at freed blocks).
+        for (&k, &b) in &self.prefix_index {
+            let blk = &self.blocks[b];
+            if blk.refcount == 0 {
+                return Err(format!("prefix index {k:#x} points at freed block {b}"));
+            }
+            if blk.prefix_hash != Some(k) {
+                return Err(format!(
+                    "prefix index {k:#x} -> block {b} carrying hash {:?}",
+                    blk.prefix_hash
+                ));
+            }
+        }
+        // And every indexed hash on a live block must be findable.
+        for (b, blk) in self.blocks.iter().enumerate() {
+            if blk.refcount > 0 {
+                if let Some(k) = blk.prefix_hash {
+                    if self.prefix_index.get(&k) != Some(&b) {
+                        return Err(format!("block {b} hash {k:#x} missing from prefix index"));
+                    }
+                }
+            }
         }
         Ok(())
     }
@@ -274,5 +333,78 @@ mod tests {
         let mut bm = BlockManager::new(4, 4);
         bm.allocate(1, &[1]);
         bm.allocate(1, &[1]);
+    }
+
+    #[test]
+    fn oom_rollback_leaves_no_dangling_prefix_entry() {
+        let mut bm = BlockManager::new(3, 4);
+        assert!(bm.allocate(1, &[1, 1, 1, 1, 2, 2, 2, 2])); // 2 full blocks
+        // Seq 2 needs 3 blocks: its first full block is allocated *and*
+        // prefix-indexed before the pool runs dry on the second — the
+        // rollback must also retract that index entry.
+        assert!(!bm.allocate(2, &[5, 5, 5, 5, 6, 6, 6, 6, 7, 7, 7, 7]));
+        assert!(bm.table(2).is_none());
+        assert_eq!(bm.free_blocks(), 1);
+        bm.check_invariants().unwrap();
+        // A later identical prompt must take a *fresh* block, not "hit"
+        // the rolled-back (freed) one through a stale index entry.
+        let hits_before = bm.prefix_hits;
+        assert!(bm.allocate(3, &[5, 5, 5, 5]));
+        assert_eq!(bm.prefix_hits, hits_before, "prefix hit on a rolled-back block");
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oom_rollback_keeps_shared_prefix_blocks_alive() {
+        let mut bm = BlockManager::new(3, 4);
+        let prompt: Vec<u32> = (0..8).collect();
+        assert!(bm.allocate(1, &prompt));
+        // Seq 2 shares both full blocks, then fails on its private tail.
+        let mut longer: Vec<u32> = prompt.clone();
+        longer.extend([9, 9, 9, 9, 8]); // 4 blocks total > 3 available
+        assert!(!bm.allocate(2, &longer));
+        bm.check_invariants().unwrap();
+        // Seq 1's shared blocks survived the rollback untouched.
+        assert_eq!(bm.table(1).unwrap().len(), 2);
+        assert!(bm.allocate(3, &prompt), "prefix cache must still serve the survivor");
+        assert!(bm.prefix_hits >= 4);
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn release_logs_report_physical_frees_once() {
+        let mut bm = BlockManager::new(8, 4);
+        let prompt: Vec<u32> = (0..8).collect();
+        assert!(bm.allocate(1, &prompt));
+        assert!(bm.allocate(2, &prompt)); // fully shared
+        bm.take_released(); // discard allocation-era noise (none expected)
+        bm.free_sequence(1);
+        let (freed, seqs) = bm.take_released();
+        assert!(freed.is_empty(), "shared blocks are not physically free yet");
+        assert_eq!(seqs, vec![1]);
+        bm.free_sequence(2);
+        let (freed, seqs) = bm.take_released();
+        assert_eq!(freed.len(), 2, "last reference frees both blocks");
+        assert_eq!(seqs, vec![2]);
+        let (freed, seqs) = bm.take_released();
+        assert!(freed.is_empty() && seqs.is_empty(), "drain must not repeat");
+    }
+
+    #[test]
+    fn reused_block_leaves_the_freed_log_before_the_drain() {
+        // Free a sequence and re-allocate its block within the same
+        // drain window (exactly what preempt-then-retry does inside one
+        // engine step): the drain must NOT report the reused block, or
+        // the backend would poison memory a live table references.
+        let mut bm = BlockManager::new(1, 4);
+        assert!(bm.allocate(1, &[1, 2, 3]));
+        let b = bm.table(1).unwrap()[0];
+        bm.free_sequence(1);
+        assert!(bm.allocate(2, &[7, 8, 9]));
+        assert_eq!(bm.table(2).unwrap()[0], b, "the single block must be reused");
+        let (freed, seqs) = bm.take_released();
+        assert!(freed.is_empty(), "reused block must not be reported as freed: {freed:?}");
+        assert_eq!(seqs, vec![1]);
+        bm.check_invariants().unwrap();
     }
 }

@@ -1,27 +1,32 @@
 //! In-crate executable backend: a real tiny quantized transformer run
-//! entirely through the fused CPU kernels.
+//! entirely through the fused CPU kernels over physically-paged K/V.
 //!
 //! Unlike [`super::backend::SimBackend`] (virtual clock, synthesized
 //! logits) and the PJRT path (external AOT artifacts), [`CpuBackend`]
 //! executes genuine math end-to-end with no artifacts and no external
 //! crates: embeddings → `n_layers` pre-norm blocks (multi-head causal
-//! attention over a dense per-slot KV cache + SiLU-gated MLP) → quantized
+//! attention over a **paged** KV cache + SiLU-gated MLP) → quantized
 //! lm_head.  Every projection is a 4-bit GPTQ tensor evaluated through
 //! [`crate::gptq::fused`] — decode steps exercise the `M = batch` fused
 //! GEMM path, prefills the `M = prompt_len` path, and the per-layer
 //! output projection carries a real act-order (`b_q_perm`) checkpoint so
 //! the gather branch runs on every token.
 //!
+//! KV layout: a [`PagedKvCache`] pool `[n_blocks × block_size × n_layers
+//! × d_model]` per cache side, addressed exclusively through the block
+//! tables the engine hands down in [`PrefillDesc`]/[`DecodeDesc`] — the
+//! same tables [`super::block_manager::BlockManager`] allocates, so a
+//! prefix-cache hit aliases real memory here and attention walks the
+//! table block-by-block (there is no dense `(layer, slot, pos)` array
+//! and no notion of a backend slot).  Blocks the allocator retires come
+//! back through [`Backend::release_blocks`]; debug builds poison them
+//! with NaN so a read through a stale table fails parity tests loudly.
+//!
 //! The engine's scheduler/block-manager/sampler stack drives this backend
 //! exactly as it drives the simulated one; `rust/tests/backend_integration.rs`
 //! pins the cross-backend behaviour (determinism, preemption survival,
-//! exact token accounting) and the KV-cache consistency of
-//! prefill-vs-decode.
-//!
-//! KV layout: dense `f32[n_layers, max_batch, max_seq, d_model]` per
-//! cache side, lane = engine backend slot (same convention as the PJRT
-//! backend); the engine's paged block tables map onto these dense
-//! regions.
+//! exact token accounting, physical prefix sharing) and the KV-cache
+//! consistency of prefill-vs-decode.
 
 use std::time::Instant;
 
@@ -33,7 +38,13 @@ use crate::gptq::{
 use crate::rng::Rng;
 use crate::Result;
 
-use super::backend::{Backend, DecodeEntry};
+use super::backend::{Backend, DecodeDesc, PrefillDesc};
+use super::block_manager::BlockId;
+use super::kv::PagedKvCache;
+
+/// Block size used when the backend is driven directly (tests, examples)
+/// before/without an engine calling [`Backend::bind_kv`].
+pub const DEFAULT_BLOCK_SIZE: usize = 16;
 
 /// Architecture of the tiny executable model (all dims kernel-aligned:
 /// multiples of 8 for the packed layout, `group_size` dividing both
@@ -47,6 +58,8 @@ pub struct CpuModelConfig {
     pub d_ff: usize,
     pub group_size: usize,
     pub max_seq: usize,
+    /// Max sequences decoded together (a compute-batch cap; KV capacity
+    /// is whatever the bound block pool holds, not `max_batch × max_seq`).
     pub max_batch: usize,
     /// Weight-synthesis seed: two backends with the same config produce
     /// bit-identical logits.
@@ -89,6 +102,14 @@ struct LayerWeights {
     w_down: QuantizedTensor,
 }
 
+/// One sequence's span of work inside a forward pass: `tokens[i]` lands
+/// at position `start + i` of the table-addressed cache.
+struct SeqSpan<'a> {
+    table: &'a [BlockId],
+    start: usize,
+    tokens: &'a [u32],
+}
+
 /// Fused-kernel CPU execution backend (see module docs).
 pub struct CpuBackend {
     pub cfg: CpuModelConfig,
@@ -96,17 +117,12 @@ pub struct CpuBackend {
     pos: Matrix,
     layers: Vec<LayerWeights>,
     lm_head: QuantizedTensor,
-    k_cache: Vec<f32>,
-    v_cache: Vec<f32>,
+    kv: PagedKvCache,
 }
 
 fn quantized(rng: &mut Rng, k: usize, n: usize, g: usize, std: f32) -> QuantizedTensor {
     let w = Matrix::from_vec(k, n, rng.normal_vec_f32(k * n, std));
     quantize_rtn(&w, g)
-}
-
-fn kv_offset(cfg: &CpuModelConfig, layer: usize, slot: usize, pos: usize) -> usize {
-    ((layer * cfg.max_batch + slot) * cfg.max_seq + pos) * cfg.d_model
 }
 
 impl CpuBackend {
@@ -171,38 +187,82 @@ impl CpuBackend {
         }
         let lm_head = quantized(&mut rng, d, cfg.vocab, cfg.group_size, proj_std);
 
-        let cache_len = cfg.n_layers * cfg.max_batch * cfg.max_seq * d;
         Ok(CpuBackend {
             cfg,
             embed,
             pos,
             layers,
             lm_head,
-            k_cache: vec![0.0; cache_len],
-            v_cache: vec![0.0; cache_len],
+            // Empty pool; grown by bind_kv or on demand (direct use).
+            kv: PagedKvCache::new(0, DEFAULT_BLOCK_SIZE, cfg.n_layers, d),
         })
     }
 
-    /// Run one batch of `(slot, position, token)` rows through all
-    /// layers, writing each row's K/V at its position and attending
-    /// causally over `0..=position`.  Returns the final-norm hidden
-    /// states, `[rows, d_model]`.
-    fn forward(&mut self, rows: &[(usize, usize, u32)]) -> Result<Matrix> {
-        let cfg = self.cfg;
-        let d = cfg.d_model;
-        let t = rows.len();
+    /// Read-only view of the paged K/V pool (tests inspect physical
+    /// sharing through this).
+    pub fn kv(&self) -> &PagedKvCache {
+        &self.kv
+    }
 
-        let mut h = Matrix::zeros(t, d);
-        for (i, &(slot, pos, tok)) in rows.iter().enumerate() {
+    /// Check a span's tokens and table before any math runs.
+    fn validate_span(&self, span: &SeqSpan<'_>) -> Result<()> {
+        let cfg = &self.cfg;
+        let bs = self.kv.block_size();
+        let end = span.start + span.tokens.len();
+        if end > cfg.max_seq {
+            bail!("positions {}..{} exceed max_seq {}", span.start, end, cfg.max_seq);
+        }
+        if end.div_ceil(bs) > span.table.len() {
+            bail!(
+                "block table of {} blocks (x{bs} tokens) cannot address position {}",
+                span.table.len(),
+                end - 1
+            );
+        }
+        // Blocks holding already-materialized context will be *read* by
+        // attention and must exist in the pool; blocks that are only
+        // written may still grow it (direct-use auto-sizing).  A context
+        // id past the pool means a corrupt table, not a growth request.
+        let context_blocks = span.start.div_ceil(bs).min(span.table.len());
+        for &blk in &span.table[..context_blocks] {
+            if blk >= self.kv.n_blocks() {
+                bail!(
+                    "context block {blk} outside the {}-block pool (corrupt table?)",
+                    self.kv.n_blocks()
+                );
+            }
+        }
+        for &tok in span.tokens {
             if tok as usize >= cfg.vocab {
                 bail!("token {tok} outside vocab {}", cfg.vocab);
             }
-            if slot >= cfg.max_batch {
-                bail!("slot {slot} outside max_batch {}", cfg.max_batch);
-            }
-            if pos >= cfg.max_seq {
-                bail!("position {pos} outside max_seq {}", cfg.max_seq);
-            }
+        }
+        Ok(())
+    }
+
+    /// Run every span's tokens through all layers in one batch, writing
+    /// each token's K/V through its span's block table and attending
+    /// causally over the span's `0..=position` prefix.  Returns the
+    /// final-norm hidden states, one row per token (spans concatenated
+    /// in order).
+    fn forward(&mut self, spans: &[SeqSpan<'_>]) -> Result<Matrix> {
+        let cfg = self.cfg;
+        let d = cfg.d_model;
+        for span in spans {
+            self.validate_span(span)?;
+        }
+        // Flattened (span, position, token) rows.
+        let rows: Vec<(usize, usize, u32)> = spans
+            .iter()
+            .enumerate()
+            .flat_map(|(si, s)| {
+                s.tokens.iter().enumerate().map(move |(i, &tok)| (si, s.start + i, tok))
+            })
+            .collect();
+        let t = rows.len();
+
+        let mut h = Matrix::zeros(t, d);
+        for (i, &(_, pos, tok)) in rows.iter().enumerate() {
             for c in 0..d {
                 h.data[i * d + c] = self.embed.at(tok as usize, c) + self.pos.at(pos, c);
             }
@@ -215,19 +275,16 @@ impl CpuBackend {
                 let lw = &self.layers[li];
                 (gemm_fused(&a, &lw.wq), gemm_fused(&a, &lw.wk), gemm_fused(&a, &lw.wv))
             };
-            for (i, &(slot, pos, _)) in rows.iter().enumerate() {
-                let off = kv_offset(&cfg, li, slot, pos);
-                self.k_cache[off..off + d].copy_from_slice(km.row(i));
-                self.v_cache[off..off + d].copy_from_slice(vm.row(i));
+            for (i, &(si, pos, _)) in rows.iter().enumerate() {
+                self.kv.write(spans[si].table, pos, li, km.row(i), vm.row(i));
             }
             let mut att = Matrix::zeros(t, d);
-            for (i, &(slot, pos, _)) in rows.iter().enumerate() {
+            for (i, &(si, pos, _)) in rows.iter().enumerate() {
                 attend(
                     &cfg,
-                    &self.k_cache,
-                    &self.v_cache,
+                    &self.kv,
+                    spans[si].table,
                     li,
-                    slot,
                     qm.row(i),
                     pos + 1,
                     &mut att.data[i * d..(i + 1) * d],
@@ -264,44 +321,41 @@ impl Backend for CpuBackend {
         self.cfg.vocab
     }
 
-    fn prefill(&mut self, slot: usize, tokens: &[u32]) -> Result<(Vec<f32>, f64)> {
+    fn bind_kv(&mut self, total_blocks: usize, block_size: usize) {
+        self.kv = PagedKvCache::new(total_blocks, block_size, self.cfg.n_layers, self.cfg.d_model);
+    }
+
+    fn prefill(&mut self, req: PrefillDesc<'_>) -> Result<(Vec<f32>, f64)> {
         let t0 = Instant::now();
-        if tokens.is_empty() {
+        if req.tokens.is_empty() {
             bail!("cannot prefill an empty prompt");
         }
-        if tokens.len() > self.cfg.max_seq {
-            bail!("prompt of {} tokens exceeds max_seq {}", tokens.len(), self.cfg.max_seq);
-        }
-        let rows: Vec<(usize, usize, u32)> =
-            tokens.iter().enumerate().map(|(i, &tok)| (slot, i, tok)).collect();
-        let hidden = self.forward(&rows)?;
-        let logits = gemv_fused(hidden.row(tokens.len() - 1), &self.lm_head);
+        let hidden = self.forward(&[SeqSpan { table: req.block_table, start: 0, tokens: req.tokens }])?;
+        let logits = gemv_fused(hidden.row(req.tokens.len() - 1), &self.lm_head);
         Ok((logits, t0.elapsed().as_secs_f64()))
     }
 
-    fn decode(&mut self, batch: &[DecodeEntry]) -> Result<(Vec<Vec<f32>>, f64)> {
+    fn decode(&mut self, batch: &[DecodeDesc<'_>]) -> Result<(Vec<Vec<f32>>, f64)> {
         let t0 = Instant::now();
         assert!(!batch.is_empty());
-        let mut rows = Vec::with_capacity(batch.len());
-        for e in batch {
-            // The engine's `position` counts the fed token, whose cache
-            // index is therefore `position - 1`.
-            if e.position == 0 {
-                bail!("decode position must count the fed token (got 0)");
-            }
-            rows.push((e.slot, e.position - 1, e.token));
-        }
-        let hidden = self.forward(&rows)?;
+        // The fed token's K/V entry lands at `context_len`, one past the
+        // `context_len` tokens already materialized through the table.
+        let fed: Vec<[u32; 1]> = batch.iter().map(|e| [e.token]).collect();
+        let spans: Vec<SeqSpan<'_>> = batch
+            .iter()
+            .zip(&fed)
+            .map(|(e, tok)| SeqSpan { table: e.block_table, start: e.context_len, tokens: tok })
+            .collect();
+        let hidden = self.forward(&spans)?;
         let logits = gemm_fused(&hidden, &self.lm_head);
         let v = self.cfg.vocab;
         let out = (0..batch.len()).map(|i| logits.data[i * v..(i + 1) * v].to_vec()).collect();
         Ok((out, t0.elapsed().as_secs_f64()))
     }
 
-    fn release(&mut self, _slot: usize) {
-        // Positions are fully overwritten on slot reuse (prefill rewrites
-        // 0..prompt_len and decodes extend monotonically), so no wipe is
-        // needed; keeping stale lanes also mirrors the PJRT backend.
+    fn release_blocks(&mut self, blocks: &[BlockId]) {
+        // Returned memory: debug builds poison it (stale reads -> NaN).
+        self.kv.release_blocks(blocks);
     }
 }
 
@@ -331,32 +385,38 @@ fn add_assign(a: &mut Matrix, b: &Matrix) {
 }
 
 /// Multi-head causal attention for one query row over the cached
-/// `0..ctx` positions of `(layer, slot)`; accumulates into `out`
-/// (zeroed by the caller).
-#[allow(clippy::too_many_arguments)]
+/// `0..ctx` positions addressed through `table`, walking the paged pool
+/// block-by-block; accumulates into `out` (zeroed by the caller).
 fn attend(
     cfg: &CpuModelConfig,
-    k_cache: &[f32],
-    v_cache: &[f32],
+    kv: &PagedKvCache,
+    table: &[BlockId],
     layer: usize,
-    slot: usize,
     qv: &[f32],
     ctx: usize,
     out: &mut [f32],
 ) {
-    let d = cfg.d_model;
     let hd = cfg.d_head();
     let scale = 1.0 / (hd as f32).sqrt();
-    let base = (layer * cfg.max_batch + slot) * cfg.max_seq * d;
+    let bs = kv.block_size();
     let mut scores = vec![0.0f32; ctx];
     for head in 0..cfg.n_heads {
         let hoff = head * hd;
         let qh = &qv[hoff..hoff + hd];
+        // Score pass: table-ordered block walk over the K pool.
         let mut max_s = f32::NEG_INFINITY;
-        for (p, s) in scores.iter_mut().enumerate() {
-            let krow = &k_cache[base + p * d + hoff..base + p * d + hoff + hd];
-            *s = qh.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
-            max_s = max_s.max(*s);
+        let mut p = 0;
+        'k_walk: for &blk in table {
+            for pb in 0..bs {
+                if p >= ctx {
+                    break 'k_walk;
+                }
+                let kh = &kv.k_row(blk, pb, layer)[hoff..hoff + hd];
+                let s = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
+                scores[p] = s;
+                max_s = max_s.max(s);
+                p += 1;
+            }
         }
         let mut denom = 0.0f32;
         for s in scores.iter_mut() {
@@ -364,11 +424,20 @@ fn attend(
             denom += *s;
         }
         let inv = 1.0 / denom;
-        for (p, &sw) in scores.iter().enumerate() {
-            let w = sw * inv;
-            let vrow = &v_cache[base + p * d + hoff..base + p * d + hoff + hd];
-            for (o, &vv) in out[hoff..hoff + hd].iter_mut().zip(vrow) {
-                *o += w * vv;
+        // Value pass: same walk over the V pool.
+        let oh = &mut out[hoff..hoff + hd];
+        let mut p = 0;
+        'v_walk: for &blk in table {
+            for pb in 0..bs {
+                if p >= ctx {
+                    break 'v_walk;
+                }
+                let w = scores[p] * inv;
+                let vh = &kv.v_row(blk, pb, layer)[hoff..hoff + hd];
+                for (o, &vv) in oh.iter_mut().zip(vh) {
+                    *o += w * vv;
+                }
+                p += 1;
             }
         }
     }
@@ -382,6 +451,10 @@ mod tests {
         CpuBackend::new(CpuModelConfig::default()).unwrap()
     }
 
+    fn prefill_desc<'a>(tokens: &'a [u32], table: &'a [BlockId]) -> PrefillDesc<'a> {
+        PrefillDesc { seq_id: 0, tokens, block_table: table }
+    }
+
     fn max_diff(a: &[f32], b: &[f32]) -> f32 {
         a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
     }
@@ -391,19 +464,32 @@ mod tests {
         let mut a = backend();
         let mut b = backend();
         let prompt = [10u32, 250, 3, 77];
-        let (la, _) = a.prefill(0, &prompt).unwrap();
-        let (lb, _) = b.prefill(0, &prompt).unwrap();
+        let (la, _) = a.prefill(prefill_desc(&prompt, &[0])).unwrap();
+        let (lb, _) = b.prefill(prefill_desc(&prompt, &[0])).unwrap();
         assert_eq!(la, lb, "same config must give bit-identical logits");
         assert_eq!(la.len(), 256);
         assert!(la.iter().all(|v| v.is_finite()));
     }
 
     #[test]
+    fn logits_do_not_depend_on_physical_block_placement() {
+        // The same tokens through a *different* physical table must give
+        // bit-identical logits: attention order is positional, not
+        // physical (the property block-table scatter relies on).
+        let mut a = backend();
+        let mut b = backend();
+        let prompt: Vec<u32> = (0..40).map(|i| (i * 3) as u32).collect(); // 3 blocks of 16
+        let (la, _) = a.prefill(prefill_desc(&prompt, &[0, 1, 2])).unwrap();
+        let (lb, _) = b.prefill(prefill_desc(&prompt, &[7, 2, 5])).unwrap();
+        assert_eq!(la, lb, "physical placement leaked into the math");
+    }
+
+    #[test]
     fn different_seed_different_logits() {
         let mut a = backend();
         let mut b = CpuBackend::new(CpuModelConfig { seed: 99, ..Default::default() }).unwrap();
-        let (la, _) = a.prefill(0, &[1, 2, 3]).unwrap();
-        let (lb, _) = b.prefill(0, &[1, 2, 3]).unwrap();
+        let (la, _) = a.prefill(prefill_desc(&[1, 2, 3], &[0])).unwrap();
+        let (lb, _) = b.prefill(prefill_desc(&[1, 2, 3], &[0])).unwrap();
         assert_ne!(la, lb);
     }
 
@@ -413,45 +499,103 @@ mod tests {
         // reproduce prefill(p[..n]) exactly (same math, same cache).
         let prompt = [10u32, 20, 30, 40, 50];
         let mut a = backend();
-        let (logits_full, _) = a.prefill(0, &prompt).unwrap();
+        let (logits_full, _) = a.prefill(prefill_desc(&prompt, &[0])).unwrap();
 
         let mut b = backend();
-        let (_, _) = b.prefill(1, &prompt[..4]).unwrap();
+        let (_, _) = b.prefill(prefill_desc(&prompt[..4], &[1])).unwrap();
         let (rows, _) = b
-            .decode(&[DecodeEntry { slot: 1, position: 5, token: 50 }])
+            .decode(&[DecodeDesc { seq_id: 0, context_len: 4, token: 50, block_table: &[1] }])
             .unwrap();
         let diff = max_diff(&logits_full, &rows[0]);
         assert!(diff < 1e-4, "prefill-vs-decode max diff {diff}");
     }
 
     #[test]
-    fn batch_lanes_are_independent() {
+    fn batch_sequences_are_independent() {
         let mut be = backend();
-        be.prefill(0, &[1, 2, 3]).unwrap();
-        be.prefill(1, &[9, 8, 7, 6]).unwrap();
+        be.prefill(prefill_desc(&[1, 2, 3], &[0])).unwrap();
+        be.prefill(prefill_desc(&[9, 8, 7, 6], &[1])).unwrap();
         let (single, _) = be
-            .decode(&[DecodeEntry { slot: 0, position: 4, token: 3 }])
+            .decode(&[DecodeDesc { seq_id: 0, context_len: 3, token: 3, block_table: &[0] }])
             .unwrap();
-        // Redo slot 0's cache state, then decode both lanes together.
-        be.prefill(0, &[1, 2, 3]).unwrap();
+        // Redo seq 0's cache state, then decode both sequences together.
+        be.prefill(prefill_desc(&[1, 2, 3], &[0])).unwrap();
         let (both, _) = be
             .decode(&[
-                DecodeEntry { slot: 0, position: 4, token: 3 },
-                DecodeEntry { slot: 1, position: 5, token: 6 },
+                DecodeDesc { seq_id: 0, context_len: 3, token: 3, block_table: &[0] },
+                DecodeDesc { seq_id: 1, context_len: 4, token: 6, block_table: &[1] },
             ])
             .unwrap();
-        assert_eq!(single[0], both[0], "lane 0 must not see lane 1");
+        assert_eq!(single[0], both[0], "seq 0 must not see seq 1");
+    }
+
+    #[test]
+    fn shared_prefix_block_is_physically_shared() {
+        // Two tables sharing their first BlockId read/write the same
+        // memory: prefilling B after A leaves A's block contents intact
+        // (identical prefix -> identical K/V) and produces identical
+        // logits for identical prompts.
+        let mut be = backend();
+        let prompt: Vec<u32> = (0..16).map(|i| (7 * i + 1) as u32).collect(); // exactly 1 block
+        let mut full = prompt.clone();
+        full.push(200);
+        let (la, _) = be.prefill(prefill_desc(&full, &[0, 1])).unwrap();
+        // B shares block 0 (the full prefix), private tail block 2.
+        let (lb, _) = be.prefill(prefill_desc(&full, &[0, 2])).unwrap();
+        assert_eq!(la, lb, "shared physical prefix must not perturb the math");
+    }
+
+    #[test]
+    fn released_blocks_are_poisoned_in_debug() {
+        let mut be = backend();
+        be.prefill(prefill_desc(&[5, 6, 7], &[0])).unwrap();
+        be.release_blocks(&[0]);
+        if cfg!(debug_assertions) {
+            assert!(
+                be.kv().k_row(0, 0, 0).iter().all(|x| x.is_nan()),
+                "freed block must be poisoned in debug builds"
+            );
+            // A decode whose table points at the freed block must now
+            // produce NaN logits (loud failure), not stale values.
+            let (rows, _) = be
+                .decode(&[DecodeDesc { seq_id: 0, context_len: 3, token: 1, block_table: &[0] }])
+                .unwrap();
+            assert!(rows[0].iter().any(|v| v.is_nan()), "stale read must be loud");
+        }
+        // Re-prefilling the recycled block overwrites the poison fully.
+        let (l, _) = be.prefill(prefill_desc(&[5, 6, 7], &[0])).unwrap();
+        assert!(l.iter().all(|v| v.is_finite()));
     }
 
     #[test]
     fn rejects_bad_inputs() {
         let mut be = backend();
-        assert!(be.prefill(0, &[]).is_err());
-        assert!(be.prefill(0, &[300]).is_err(), "token outside vocab");
-        assert!(be.decode(&[DecodeEntry { slot: 0, position: 0, token: 1 }]).is_err());
+        assert!(be.prefill(prefill_desc(&[], &[0])).is_err());
+        assert!(be.prefill(prefill_desc(&[300], &[0])).is_err(), "token outside vocab");
+        let long = vec![1u32; 17];
+        assert!(
+            be.prefill(prefill_desc(&long, &[0])).is_err(),
+            "block table too short for the prompt"
+        );
+        assert!(
+            be.decode(&[DecodeDesc { seq_id: 0, context_len: 16, token: 1, block_table: &[0] }])
+                .is_err(),
+            "decode landing past the table must fail"
+        );
         assert!(CpuBackend::new(CpuModelConfig { d_model: 60, ..Default::default() }).is_err());
         assert!(CpuBackend::new(CpuModelConfig { group_size: 48, ..Default::default() })
             .is_err());
+    }
+
+    #[test]
+    fn bind_kv_sets_geometry() {
+        let mut be = backend();
+        be.bind_kv(32, 4);
+        assert_eq!(be.kv().n_blocks(), 32);
+        assert_eq!(be.kv().block_size(), 4);
+        // 5 tokens now need 2 blocks of 4.
+        assert!(be.prefill(prefill_desc(&[1, 2, 3, 4, 5], &[0])).is_err());
+        assert!(be.prefill(prefill_desc(&[1, 2, 3, 4, 5], &[0, 1])).is_ok());
     }
 
     #[test]
@@ -467,7 +611,7 @@ mod tests {
         // Degenerate (near-constant) logits would make every request
         // generate the same token forever; check the head discriminates.
         let mut be = backend();
-        let (l, _) = be.prefill(0, &[42, 17, 99]).unwrap();
+        let (l, _) = be.prefill(prefill_desc(&[42, 17, 99], &[0])).unwrap();
         let lo = l.iter().cloned().fold(f32::INFINITY, f32::min);
         let hi = l.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         assert!(hi - lo > 0.05, "logit range {} too flat", hi - lo);

@@ -5,7 +5,7 @@ use std::collections::HashMap;
 use crate::rng::Rng;
 use crate::Result;
 
-use super::backend::{Backend, DecodeEntry};
+use super::backend::{Backend, DecodeDesc, PrefillDesc};
 use super::metrics::Metrics;
 use super::request::{Request, RequestOutput};
 use super::sampler;
@@ -33,9 +33,13 @@ pub struct Engine<B: Backend> {
 }
 
 impl<B: Backend> Engine<B> {
-    pub fn new(mut cfg: EngineConfig, backend: B) -> Engine<B> {
+    pub fn new(mut cfg: EngineConfig, mut backend: B) -> Engine<B> {
         cfg.max_batch = cfg.max_batch.min(backend.max_batch());
         cfg.max_seq_len = cfg.max_seq_len.min(backend.max_seq_len());
+        // Announce the paged-KV geometry: backends owning physical K/V
+        // size their block pool to the manager's, so every BlockId a
+        // table can carry is addressable.
+        backend.bind_kv(cfg.total_blocks, cfg.block_size);
         Engine {
             scheduler: Scheduler::new(cfg),
             backend,
@@ -63,12 +67,14 @@ impl<B: Backend> Engine<B> {
                     self.run_prefill(id)?;
                 }
                 self.metrics.engine_steps += 1;
+                self.drain_releases();
                 Ok(true)
             }
             ScheduledWork::Decode(ids) => {
                 self.run_decode(ids)?;
                 self.metrics.engine_steps += 1;
                 self.metrics.decode_steps += 1;
+                self.drain_releases();
                 Ok(true)
             }
         }
@@ -82,12 +88,25 @@ impl<B: Backend> Engine<B> {
         Ok(EngineReport { outputs: std::mem::take(&mut self.outputs), metrics: self.metrics.clone() })
     }
 
+    /// Forward blocks/sequences the scheduler released during this step
+    /// to the backend.  Runs after execution and before the next
+    /// `schedule()` can re-allocate the freed blocks, so a paged backend
+    /// may safely poison or recycle the memory.
+    fn drain_releases(&mut self) {
+        let (blocks, seqs) = self.scheduler.blocks.take_released();
+        if !blocks.is_empty() {
+            self.backend.release_blocks(&blocks);
+        }
+        for id in seqs {
+            self.backend.release_seq(id);
+        }
+    }
+
     fn run_prefill(&mut self, id: usize) -> Result<()> {
-        let (slot, prompt) = {
-            let seq = &self.scheduler.seqs[&id];
-            (seq.slot, seq.effective_prompt())
-        };
-        let (logits, secs) = self.backend.prefill(slot, &prompt)?;
+        let prompt = self.scheduler.seqs[&id].effective_prompt();
+        let table = self.scheduler.blocks.table(id).expect("prefill without allocation");
+        let (logits, secs) =
+            self.backend.prefill(PrefillDesc { seq_id: id, tokens: &prompt, block_table: table })?;
         self.clock += secs;
         // Sample the first generated token from the prefill logits.
         let token = {
@@ -113,11 +132,22 @@ impl<B: Backend> Engine<B> {
     }
 
     fn run_decode(&mut self, ids: Vec<usize>) -> Result<()> {
-        let entries: Vec<DecodeEntry> = ids
+        let entries: Vec<DecodeDesc<'_>> = ids
             .iter()
             .map(|id| {
                 let s = &self.scheduler.seqs[id];
-                DecodeEntry { slot: s.slot, position: s.position(), token: s.last_token() }
+                DecodeDesc {
+                    seq_id: *id,
+                    // position() counts the fed token, whose K/V entry
+                    // lands one past the materialized context.
+                    context_len: s.position() - 1,
+                    token: s.last_token(),
+                    block_table: self
+                        .scheduler
+                        .blocks
+                        .table(*id)
+                        .expect("decode without allocation"),
+                }
             })
             .collect();
         let (rows, secs) = self.backend.decode(&entries)?;
@@ -149,8 +179,7 @@ impl<B: Backend> Engine<B> {
             seq.is_done(self.cfg.max_seq_len)
         };
         if let Some(reason) = done {
-            let slot = self.scheduler.finish(id);
-            self.backend.release(slot);
+            self.scheduler.finish(id);
             let seq = &self.scheduler.seqs[&id];
             let latency = self.clock - seq.arrival;
             self.metrics.latencies.push(latency);

@@ -1,0 +1,202 @@
+//! Physically-paged K/V storage — the memory that block tables address.
+//!
+//! [`super::block_manager::BlockManager`] owns the *accounting* layer of
+//! PagedAttention (block tables, refcounts, the prefix cache); this
+//! module owns the *storage* layer those tables point into.  K and V each
+//! live in one flat pool laid out as
+//!
+//! ```text
+//! [n_blocks × block_size × n_layers × d]
+//! ```
+//!
+//! so a (block, in-block position, layer) triple names one contiguous
+//! `d`-float row.  A sequence reaches position `p` through its table:
+//! `block = table[p / block_size]`, `offset = p % block_size`.  Two
+//! tables containing the same [`BlockId`] therefore *share physical
+//! memory* — a prefix-cache hit in the block manager is a real aliased
+//! read here, not a bookkeeping fiction — and attention kernels walk the
+//! pool block-by-block exactly as the paper's paged layout prescribes
+//! (layers innermost so one token's whole stack is cache-adjacent when a
+//! layer loop revisits the same position).
+//!
+//! Freeing is explicit: when the engine reports blocks whose refcount
+//! reached zero ([`PagedKvCache::release_blocks`]), debug builds poison
+//! their contents with NaN so any read through a stale table blows up
+//! parity tests loudly instead of silently serving a recycled sequence's
+//! K/V.  Release is therefore a *return* of memory, not an overwrite
+//! convention.
+
+use super::block_manager::BlockId;
+
+/// Flat paged K/V pool (see module docs for the layout).
+#[derive(Debug)]
+pub struct PagedKvCache {
+    block_size: usize,
+    n_layers: usize,
+    /// Floats per (position, layer) row — `d_model` for MHA backends.
+    d: usize,
+    n_blocks: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl PagedKvCache {
+    pub fn new(n_blocks: usize, block_size: usize, n_layers: usize, d: usize) -> PagedKvCache {
+        assert!(block_size > 0 && n_layers > 0 && d > 0);
+        let len = n_blocks * block_size * n_layers * d;
+        PagedKvCache {
+            block_size,
+            n_layers,
+            d,
+            n_blocks,
+            k: vec![0.0; len],
+            v: vec![0.0; len],
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    /// Bytes held by both pools (capacity accounting for callers).
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+
+    /// Grow the pool so every id `< n_blocks` is addressable (no-op when
+    /// already large enough; never shrinks).
+    pub fn ensure_blocks(&mut self, n_blocks: usize) {
+        if n_blocks > self.n_blocks {
+            let len = n_blocks * self.block_size * self.n_layers * self.d;
+            self.k.resize(len, 0.0);
+            self.v.resize(len, 0.0);
+            self.n_blocks = n_blocks;
+        }
+    }
+
+    #[inline]
+    fn offset(&self, block: BlockId, pos_in_block: usize, layer: usize) -> usize {
+        debug_assert!(pos_in_block < self.block_size && layer < self.n_layers);
+        ((block * self.block_size + pos_in_block) * self.n_layers + layer) * self.d
+    }
+
+    /// Write one position's K and V rows through a block table.  Grows
+    /// the pool on demand so directly-driven backends need no up-front
+    /// geometry binding.
+    pub fn write(
+        &mut self,
+        table: &[BlockId],
+        pos: usize,
+        layer: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        debug_assert_eq!(k_row.len(), self.d);
+        debug_assert_eq!(v_row.len(), self.d);
+        let block = table[pos / self.block_size];
+        self.ensure_blocks(block + 1);
+        let off = self.offset(block, pos % self.block_size, layer);
+        self.k[off..off + self.d].copy_from_slice(k_row);
+        self.v[off..off + self.d].copy_from_slice(v_row);
+    }
+
+    /// K row of one (block, in-block position, layer) cell, `d` floats.
+    #[inline]
+    pub fn k_row(&self, block: BlockId, pos_in_block: usize, layer: usize) -> &[f32] {
+        let off = self.offset(block, pos_in_block, layer);
+        &self.k[off..off + self.d]
+    }
+
+    /// V row of one (block, in-block position, layer) cell, `d` floats.
+    #[inline]
+    pub fn v_row(&self, block: BlockId, pos_in_block: usize, layer: usize) -> &[f32] {
+        let off = self.offset(block, pos_in_block, layer);
+        &self.v[off..off + self.d]
+    }
+
+    /// Accept blocks back from the allocator (refcount reached zero).
+    /// Debug builds poison the returned memory so stale reads through a
+    /// dangling table surface as NaN instead of a recycled sequence's
+    /// values; release builds skip the pass (the allocator guarantees no
+    /// live table references a freed block).
+    pub fn release_blocks(&mut self, blocks: &[BlockId]) {
+        if cfg!(debug_assertions) {
+            self.poison_blocks(blocks);
+        }
+    }
+
+    /// Unconditionally fill the given blocks with NaN (test hook; the
+    /// debug-build free path routes through here).
+    pub fn poison_blocks(&mut self, blocks: &[BlockId]) {
+        let stride = self.block_size * self.n_layers * self.d;
+        for &b in blocks {
+            if b >= self.n_blocks {
+                continue; // never written -> nothing to poison
+            }
+            let off = b * stride;
+            self.k[off..off + stride].fill(f32::NAN);
+            self.v[off..off + stride].fill(f32::NAN);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(d: usize, fill: f32) -> Vec<f32> {
+        vec![fill; d]
+    }
+
+    #[test]
+    fn write_then_read_roundtrip_through_table() {
+        let mut kv = PagedKvCache::new(4, 4, 2, 8);
+        let table = [2usize, 0]; // deliberately out of order
+        kv.write(&table, 1, 0, &rows(8, 1.5), &rows(8, -2.0));
+        kv.write(&table, 5, 1, &rows(8, 3.0), &rows(8, 4.0));
+        // pos 1 -> block table[0]=2 offset 1; pos 5 -> table[1]=0 offset 1
+        assert_eq!(kv.k_row(2, 1, 0), &rows(8, 1.5)[..]);
+        assert_eq!(kv.v_row(2, 1, 0), &rows(8, -2.0)[..]);
+        assert_eq!(kv.k_row(0, 1, 1), &rows(8, 3.0)[..]);
+        assert_eq!(kv.v_row(0, 1, 1), &rows(8, 4.0)[..]);
+    }
+
+    #[test]
+    fn shared_block_is_shared_memory() {
+        let mut kv = PagedKvCache::new(4, 4, 1, 4);
+        let table_a = [1usize, 2];
+        let table_b = [1usize, 3]; // shares physical block 1 with a
+        kv.write(&table_a, 0, 0, &rows(4, 7.0), &rows(4, 8.0));
+        // Reading position 0 through b's table sees a's write.
+        assert_eq!(kv.k_row(table_b[0], 0, 0), &rows(4, 7.0)[..]);
+    }
+
+    #[test]
+    fn grows_on_demand() {
+        let mut kv = PagedKvCache::new(0, 4, 1, 4);
+        assert_eq!(kv.n_blocks(), 0);
+        kv.write(&[5], 2, 0, &rows(4, 1.0), &rows(4, 2.0));
+        assert!(kv.n_blocks() >= 6);
+        assert_eq!(kv.k_row(5, 2, 0), &rows(4, 1.0)[..]);
+        // earlier blocks exist and are zeroed
+        assert!(kv.k_row(0, 0, 0).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn poison_marks_freed_blocks_with_nan() {
+        let mut kv = PagedKvCache::new(2, 4, 2, 4);
+        kv.write(&[0], 0, 0, &rows(4, 1.0), &rows(4, 1.0));
+        kv.write(&[1], 0, 0, &rows(4, 2.0), &rows(4, 2.0));
+        kv.poison_blocks(&[0]);
+        assert!(kv.k_row(0, 0, 0).iter().all(|x| x.is_nan()), "freed block must read NaN");
+        assert!(kv.v_row(0, 0, 0).iter().all(|x| x.is_nan()));
+        // other blocks untouched
+        assert_eq!(kv.k_row(1, 0, 0), &rows(4, 2.0)[..]);
+        // ids past the pool are ignored, not a panic
+        kv.poison_blocks(&[99]);
+    }
+}

@@ -1,16 +1,22 @@
 //! vLLM-style serving engine (the Layer-3 coordinator).
 //!
 //! Reproduces the serving stack the paper measures *through*: paged
-//! KV-cache management ([`block_manager`]), continuous batching with a
-//! prefill/decode scheduler ([`scheduler`]), sampling ([`sampler`]), and
-//! an engine step loop ([`engine`]) driving a pluggable [`backend`]:
+//! KV-cache accounting ([`block_manager`]) over physically-paged K/V
+//! storage ([`kv`]), continuous batching with a prefill/decode scheduler
+//! ([`scheduler`]), sampling ([`sampler`]), and an engine step loop
+//! ([`engine`]) driving a pluggable [`backend`].  Block tables flow
+//! end-to-end: the scheduler allocates them, the engine threads them
+//! through [`backend::PrefillDesc`]/[`backend::DecodeDesc`], and paged
+//! backends execute attention through them — a prefix-cache hit in the
+//! manager is an aliased read of real memory in the backend:
 //!
 //! * [`backend::SimBackend`] — advances a *virtual clock* using the
 //!   [`crate::perfmodel`] step times of a paper model under a chosen
 //!   [`crate::OptConfig`]; used to regenerate Figures 2–3;
 //! * [`cpu_backend::CpuBackend`] — real token generation through a tiny
 //!   quantized transformer executed in-crate by the fused dequant-GEMM
-//!   kernels ([`crate::gptq::fused`]), wall clock;
+//!   kernels ([`crate::gptq::fused`]) over a [`kv::PagedKvCache`], wall
+//!   clock;
 //! * `PjrtBackend` (feature `pjrt`) — real token generation through the
 //!   AOT-compiled tiny model on the PJRT CPU client (wall clock).
 //!
@@ -21,6 +27,7 @@ pub mod backend;
 pub mod block_manager;
 pub mod cpu_backend;
 pub mod engine;
+pub mod kv;
 pub mod metrics;
 pub mod request;
 pub mod sampler;
@@ -28,8 +35,10 @@ pub mod scheduler;
 pub mod sequence;
 pub mod tokenizer;
 
-pub use backend::{Backend, DecodeEntry, SimBackend};
+pub use backend::{Backend, DecodeDesc, PrefillDesc, SimBackend};
+pub use block_manager::{BlockId, BlockManager};
 pub use cpu_backend::{CpuBackend, CpuModelConfig};
+pub use kv::PagedKvCache;
 pub use engine::{Engine, EngineReport};
 pub use metrics::Metrics;
 pub use request::{FinishReason, Request, RequestOutput, SamplingParams};

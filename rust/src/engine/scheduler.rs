@@ -2,9 +2,11 @@
 //!
 //! Policy, mirroring vLLM v0's core loop:
 //!
-//! 1. Prefill-priority admission: while there is batch room, a free
-//!    backend slot and enough KV blocks, admit waiting (or preempted)
-//!    sequences — up to `max_prefills_per_step` per step.
+//! 1. Prefill-priority admission: while there is batch room and enough
+//!    KV blocks, admit waiting (or preempted) sequences — up to
+//!    `max_prefills_per_step` per step.  Admission allocates the block
+//!    table the backend will execute through (no backend slots — the
+//!    table *is* the sequence's identity in KV storage).
 //! 2. Otherwise decode every running sequence as one batch.
 //! 3. On KV exhaustion while appending a generated token, preempt the
 //!    most recently arrived running sequence (recompute semantics: its
@@ -38,7 +40,6 @@ pub struct Scheduler {
     pub seqs: HashMap<usize, Sequence>,
     waiting: VecDeque<usize>,
     running: Vec<usize>,
-    free_slots: Vec<usize>,
     pub preemption_count: usize,
 }
 
@@ -49,7 +50,6 @@ impl Scheduler {
             seqs: HashMap::new(),
             waiting: VecDeque::new(),
             running: Vec::new(),
-            free_slots: (0..cfg.max_batch).rev().collect(),
             preemption_count: 0,
             cfg,
         }
@@ -75,11 +75,10 @@ impl Scheduler {
 
     /// Decide the next step's work.
     pub fn schedule(&mut self) -> ScheduledWork {
-        // Admission: prefill while there is room.
+        // Admission: prefill while there is batch room and KV blocks.
         let mut prefills = Vec::new();
         while prefills.len() < self.cfg.max_prefills_per_step
             && self.running.len() + prefills.len() < self.cfg.max_batch
-            && !self.free_slots.is_empty()
         {
             let Some(&cand) = self.waiting.front() else { break };
             let prompt = self.seqs[&cand].effective_prompt();
@@ -95,9 +94,7 @@ impl Scheduler {
             }
             self.waiting.pop_front();
             assert!(self.blocks.allocate(cand, &prompt));
-            let slot = self.free_slots.pop().unwrap();
             let seq = self.seqs.get_mut(&cand).unwrap();
-            seq.slot = slot;
             seq.state = SeqState::Prefilling;
             prefills.push(cand);
         }
@@ -159,29 +156,19 @@ impl Scheduler {
     fn preempt(&mut self, id: usize) {
         self.running.retain(|&r| r != id);
         self.blocks.free_sequence(id);
-        let seq = self.seqs.get_mut(&id).expect("unknown seq");
-        if seq.slot != usize::MAX {
-            self.free_slots.push(seq.slot);
-        }
-        seq.preempt();
+        self.seqs.get_mut(&id).expect("unknown seq").preempt();
         self.preemption_count += 1;
         // Preempted sequences go to the *front*: they already hold
         // generated tokens and should resume first (vLLM recompute).
         self.waiting.push_front(id);
     }
 
-    /// Finish a sequence: free its KV blocks and backend slot.
-    pub fn finish(&mut self, id: usize) -> usize {
+    /// Finish a sequence: free its KV blocks (the engine drains the
+    /// resulting block/sequence releases to the backend after the step).
+    pub fn finish(&mut self, id: usize) {
         self.running.retain(|&r| r != id);
         self.blocks.free_sequence(id);
-        let seq = self.seqs.get_mut(&id).expect("unknown seq");
-        let slot = seq.slot;
-        if slot != usize::MAX {
-            self.free_slots.push(slot);
-        }
-        seq.slot = usize::MAX;
-        seq.state = SeqState::Finished;
-        slot
+        self.seqs.get_mut(&id).expect("unknown seq").state = SeqState::Finished;
     }
 
     /// Property-test hook: internal queues must be consistent.
@@ -192,37 +179,24 @@ impl Scheduler {
             if s.state != SeqState::Running {
                 return Err(format!("running seq {id} in state {:?}", s.state));
             }
-            if s.slot == usize::MAX {
-                return Err(format!("running seq {id} has no slot"));
+            if self.blocks.table(id).is_none() {
+                return Err(format!("running seq {id} has no block table"));
             }
         }
-        let mut slots: Vec<usize> = self
-            .running
-            .iter()
-            .map(|id| self.seqs[id].slot)
-            .chain(self.free_slots.iter().copied())
-            .collect();
-        // prefilling seqs also hold slots
-        for s in self.seqs.values() {
-            if s.state == SeqState::Prefilling {
-                slots.push(s.slot);
-            }
-        }
-        slots.sort_unstable();
-        slots.dedup();
-        if slots.len()
-            != self.running.len()
-                + self.free_slots.len()
-                + self
-                    .seqs
-                    .values()
-                    .filter(|s| s.state == SeqState::Prefilling)
-                    .count()
-        {
-            return Err("slot leak or double assignment".into());
-        }
-        if self.running.len() > self.cfg.max_batch {
+        // Prefilling sequences occupy batch room too.
+        let prefilling =
+            self.seqs.values().filter(|s| s.state == SeqState::Prefilling).count();
+        if self.running.len() + prefilling > self.cfg.max_batch {
             return Err("decode batch exceeds max_batch".into());
+        }
+        // Waiting/preempted/finished sequences must hold no KV blocks.
+        for (id, s) in &self.seqs {
+            let holds_blocks = self.blocks.table(*id).is_some();
+            let may_hold =
+                matches!(s.state, SeqState::Running | SeqState::Prefilling);
+            if holds_blocks && !may_hold {
+                return Err(format!("seq {id} in state {:?} still holds blocks", s.state));
+            }
         }
         Ok(())
     }
@@ -327,17 +301,21 @@ mod tests {
     }
 
     #[test]
-    fn finish_releases_slot_and_blocks() {
+    fn finish_releases_blocks_and_reports_them() {
         let mut s = Scheduler::new(cfg());
         s.add_request(&req(0, 4, 4));
         let ScheduledWork::Prefills(_) = s.schedule() else { panic!() };
         let free_before = s.blocks.free_blocks();
         s.promote_to_running(0);
+        s.blocks.take_released(); // discard pre-finish noise
         s.finish(0);
         assert!(s.blocks.free_blocks() > free_before);
         assert_eq!(s.num_running(), 0);
+        let (freed, seqs) = s.blocks.take_released();
+        assert!(!freed.is_empty(), "finish must report physically freed blocks");
+        assert_eq!(seqs, vec![0]);
         s.check_invariants().unwrap();
-        // slot can be reused
+        // batch room is reusable
         s.add_request(&req(5, 4, 4));
         assert!(matches!(s.schedule(), ScheduledWork::Prefills(_)));
     }

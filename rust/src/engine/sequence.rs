@@ -24,8 +24,6 @@ pub struct Sequence {
     pub generated: Vec<u32>,
     pub sampling: SamplingParams,
     pub state: SeqState,
-    /// Backend slot while Running (dense-KV backends), usize::MAX if none.
-    pub slot: usize,
     pub arrival: f64,
     pub first_token_time: Option<f64>,
     pub finish_time: Option<f64>,
@@ -40,7 +38,6 @@ impl Sequence {
             generated: Vec::new(),
             sampling: req.sampling,
             state: SeqState::Waiting,
-            slot: usize::MAX,
             arrival: req.arrival,
             first_token_time: None,
             finish_time: None,
@@ -87,7 +84,6 @@ impl Sequence {
     /// (they are re-prefilled as part of the new prompt pass).
     pub fn preempt(&mut self) {
         self.state = SeqState::Preempted;
-        self.slot = usize::MAX;
         self.preemptions += 1;
     }
 

@@ -33,10 +33,21 @@
 //!   per panel (`xg[k] = x[perm[k]]`, the load pattern Algorithm 2
 //!   branches on), after which the kernel is permutation-oblivious.
 //!
+//! * **Column-split parallelism.**  Large shapes are N-partitioned over
+//!   scoped threads (rayon-style work stealing is unavailable offline):
+//!   each worker owns a nibble-aligned column slab and runs the identical
+//!   serial tile loop over it, so the parallel path is **bit-identical**
+//!   to the serial one (per-column accumulation order is unchanged — K is
+//!   never split).  [`fused_threads`] gates the split: small shapes (the
+//!   tiny CpuBackend model, unit-test sizes) stay on the spawn-free
+//!   serial path.  `gemv` slabs are contiguous output chunks (zero-copy
+//!   via `split_at_mut`); `gemm` workers fill thread-local `[M, slab]`
+//!   tiles merged after the join.
+//!
 //! Parity with the oracle across shapes, groups, batch sizes and
 //! act-order is pinned by `rust/tests/parity.rs`; speed is measured by
 //! `rust/benches/fused_gemm.rs` (≥10× over the oracle on the 4096×4096
-//! decode shape).
+//! decode shape, and parallel ≥ serial on the same shape).
 
 use super::pack::NIBBLES_PER_WORD;
 use super::quantize::QuantizedTensor;
@@ -54,23 +65,57 @@ fn col_block(n: usize, mb: usize) -> usize {
     nb.min(n)
 }
 
-/// `y[N] = x[K] · deq(Q)[K, N]` — fused single-row (decode) GEMV.
+/// Worker count the auto-dispatched entry points use for an
+/// `mb × K × N` call: an N-partitioned column split, engaged only when
+/// every worker gets a meaningful slab (1 = stay serial).
+pub fn fused_threads(mb: usize, k: usize, n: usize) -> usize {
+    /// Per-worker column-slab floor: below this the spawn overhead and
+    /// shared-activation traffic beat the win.
+    const MIN_COLS: usize = 512;
+    /// Fused MAC floor: tiny calls (the tiny-model projections, unit
+    /// tests) never leave the serial path.
+    const MIN_WORK: usize = 1 << 21;
+    if n % NIBBLES_PER_WORD != 0 || mb.saturating_mul(k).saturating_mul(n) < MIN_WORK {
+        return 1;
+    }
+    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    hw.min(n / MIN_COLS).max(1)
+}
+
+/// `y[N] = x[K] · deq(Q)[K, N]` — fused single-row (decode) GEMV,
+/// auto-parallel over columns when the shape warrants it.
 pub fn gemv_fused(x: &[f32], q: &QuantizedTensor) -> Vec<f32> {
+    gemv_fused_threads(x, q, fused_threads(1, q.k, q.n))
+}
+
+/// [`gemv_fused`] with an explicit worker count (`1` = serial; the
+/// result is bit-identical across counts).
+pub fn gemv_fused_threads(x: &[f32], q: &QuantizedTensor, threads: usize) -> Vec<f32> {
     assert_eq!(x.len(), q.k);
     let mut y = vec![0.0f32; q.n];
-    match &q.perm {
-        None => fused_panel(x, 1, q, &mut y),
+    let gathered;
+    let xg: &[f32] = match &q.perm {
+        None => x,
         Some(p) => {
             // Act-order gather (Algorithm 2's b_q_perm branch).
-            let xg: Vec<f32> = p.iter().map(|&src| x[src]).collect();
-            fused_panel(&xg, 1, q, &mut y);
+            gathered = p.iter().map(|&src| x[src]).collect::<Vec<f32>>();
+            &gathered
         }
-    }
+    };
+    let xsum = activation_group_sums(xg, 1, q.k, q.group_size);
+    run_col_split(xg, &xsum, 1, q, threads, &mut y);
     y
 }
 
-/// `Y[M, N] = X[M, K] · deq(Q)` — fused batched (prefill) GEMM.
+/// `Y[M, N] = X[M, K] · deq(Q)` — fused batched (prefill) GEMM,
+/// auto-parallel over columns when the shape warrants it.
 pub fn gemm_fused(x: &Matrix, q: &QuantizedTensor) -> Matrix {
+    gemm_fused_threads(x, q, fused_threads(x.rows, q.k, q.n))
+}
+
+/// [`gemm_fused`] with an explicit worker count (`1` = serial; the
+/// result is bit-identical across counts).
+pub fn gemm_fused_threads(x: &Matrix, q: &QuantizedTensor, threads: usize) -> Matrix {
     assert_eq!(x.cols, q.k);
     let (k, n) = (q.k, q.n);
     let mut out = Matrix::zeros(x.rows, n);
@@ -80,8 +125,8 @@ pub fn gemm_fused(x: &Matrix, q: &QuantizedTensor) -> Matrix {
         let mb = M_BLOCK.min(x.rows - m0);
         let xs = &x.data[m0 * k..(m0 + mb) * k];
         let ys = &mut out.data[m0 * n..(m0 + mb) * n];
-        match &q.perm {
-            None => fused_panel(xs, mb, q, ys),
+        let xg: &[f32] = match &q.perm {
+            None => xs,
             Some(p) => {
                 gather.clear();
                 gather.reserve(mb * k);
@@ -89,51 +134,138 @@ pub fn gemm_fused(x: &Matrix, q: &QuantizedTensor) -> Matrix {
                     let row = &xs[mi * k..(mi + 1) * k];
                     gather.extend(p.iter().map(|&src| row[src]));
                 }
-                fused_panel(&gather, mb, q, ys);
+                &gather
             }
-        }
+        };
+        let xsum = activation_group_sums(xg, mb, k, q.group_size);
+        run_col_split(xg, &xsum, mb, q, threads, ys);
         m0 += mb;
     }
     out
 }
 
-/// Core tile loop over one M-block of (already gathered) activations.
+/// Per-(row, group) activation sums for the zero-point term, `[mb, K/g]`.
+fn activation_group_sums(xg: &[f32], mb: usize, k: usize, g: usize) -> Vec<f32> {
+    debug_assert_eq!(xg.len(), mb * k);
+    let groups = k / g;
+    let mut xsum = vec![0.0f32; mb * groups];
+    for mi in 0..mb {
+        for gi in 0..groups {
+            xsum[mi * groups + gi] = xg[mi * k + gi * g..mi * k + (gi + 1) * g].iter().sum();
+        }
+    }
+    xsum
+}
+
+/// N-partitioned dispatch over one gathered M-block: split the column
+/// axis into nibble-aligned slabs, one scoped thread per slab (serial
+/// when `threads <= 1`).  `out` is `[mb, N]` row-major, zeroed.
+fn run_col_split(
+    xg: &[f32],
+    xsum: &[f32],
+    mb: usize,
+    q: &QuantizedTensor,
+    threads: usize,
+    out: &mut [f32],
+) {
+    let n = q.n;
+    let threads = if n % NIBBLES_PER_WORD == 0 { threads.min(n / NIBBLES_PER_WORD) } else { 1 };
+    if threads <= 1 {
+        fused_panel_cols(xg, xsum, mb, q, 0, n, out);
+        return;
+    }
+    // Slab bounds, aligned down to the packed nibble width; the last
+    // bound absorbs the remainder.
+    let mut bounds = Vec::with_capacity(threads + 1);
+    for t in 0..=threads {
+        bounds.push((n * t / threads) / NIBBLES_PER_WORD * NIBBLES_PER_WORD);
+    }
+    bounds[threads] = n;
+    if mb == 1 {
+        // GEMV: one output row — column slabs are contiguous chunks.
+        std::thread::scope(|s| {
+            let mut rest: &mut [f32] = out;
+            for t in 0..threads {
+                let (c0, c1) = (bounds[t], bounds[t + 1]);
+                if c1 == c0 {
+                    continue;
+                }
+                let (chunk, tail) = rest.split_at_mut(c1 - c0);
+                rest = tail;
+                s.spawn(move || fused_panel_cols(xg, xsum, 1, q, c0, c1 - c0, chunk));
+            }
+        });
+    } else {
+        // GEMM: workers fill thread-local `[mb, slab]` tiles, merged
+        // into the strided output after the join.  The scope (and the
+        // tiles) are re-created per 8-row M-block: hoisting one pool
+        // over all blocks would require gathering the whole act-order
+        // activation matrix up front instead of one M-block at a time —
+        // a deliberate trade-off, since the serving hot path this split
+        // exists for is decode (M ≤ batch ≤ 8: exactly one block).
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads)
+                .filter(|&t| bounds[t + 1] > bounds[t])
+                .map(|t| {
+                    let (c0, c1) = (bounds[t], bounds[t + 1]);
+                    s.spawn(move || {
+                        let mut tile = vec![0.0f32; mb * (c1 - c0)];
+                        fused_panel_cols(xg, xsum, mb, q, c0, c1 - c0, &mut tile);
+                        (c0, c1, tile)
+                    })
+                })
+                .collect();
+            for h in handles {
+                let (c0, c1, tile) = h.join().expect("fused worker panicked");
+                let cn = c1 - c0;
+                for mi in 0..mb {
+                    out[mi * n + c0..mi * n + c1].copy_from_slice(&tile[mi * cn..(mi + 1) * cn]);
+                }
+            }
+        });
+    }
+}
+
+/// Core tile loop over one M-block of (already gathered) activations,
+/// restricted to the column window `[c0, c0 + cn)` of the tensor.
 ///
-/// `xg` is `[mb, K]` row-major, `out` is `[mb, N]` row-major and is
-/// *accumulated into* (callers pass zeroed output).
-fn fused_panel(xg: &[f32], mb: usize, q: &QuantizedTensor, out: &mut [f32]) {
+/// `xg` is `[mb, K]` row-major, `xsum` the `[mb, K/g]` group sums, and
+/// `out` is the `[mb, cn]` row-major window (stride `cn`), *accumulated
+/// into* (callers pass zeroed output).  `c0` must be nibble-aligned.
+fn fused_panel_cols(
+    xg: &[f32],
+    xsum: &[f32],
+    mb: usize,
+    q: &QuantizedTensor,
+    c0: usize,
+    cn: usize,
+    out: &mut [f32],
+) {
     let (k, n, g) = (q.k, q.n, q.group_size);
     debug_assert_eq!(xg.len(), mb * k);
-    debug_assert_eq!(out.len(), mb * n);
+    debug_assert_eq!(out.len(), mb * cn);
+    debug_assert_eq!(c0 % NIBBLES_PER_WORD, 0, "column window must be nibble-aligned");
     assert_eq!(g % NIBBLES_PER_WORD, 0, "group size must be a multiple of 8");
     assert_eq!(k % g, 0, "group size must divide K");
     let groups = k / g;
     let words_per_group = g / NIBBLES_PER_WORD;
     let nw = n / NIBBLES_PER_WORD;
 
-    // Per-(row, group) activation sums for the zero-point term.
-    let mut xsum = vec![0.0f32; mb * groups];
-    for mi in 0..mb {
-        for gi in 0..groups {
-            xsum[mi * groups + gi] =
-                xg[mi * k + gi * g..mi * k + (gi + 1) * g].iter().sum();
-        }
-    }
-
-    let nb_max = col_block(n, mb);
+    let nb_max = col_block(cn, mb);
     let mut dot = vec![0.0f32; mb * nb_max];
     let mut zrow = vec![0.0f32; nb_max];
 
     let mut cb = 0;
-    while cb < n {
-        let nb = nb_max.min(n - cb);
+    while cb < cn {
+        let nb = nb_max.min(cn - cb);
+        let ca = c0 + cb; // absolute first column of this tile
         for gi in 0..groups {
             for mi in 0..mb {
                 dot[mi * nb_max..mi * nb_max + nb].fill(0.0);
             }
             // Unpack this group's zero points for the column block.
             for wz in 0..nb / NIBBLES_PER_WORD {
-                let word = q.qzeros[gi * nw + cb / NIBBLES_PER_WORD + wz];
+                let word = q.qzeros[gi * nw + ca / NIBBLES_PER_WORD + wz];
                 for j in 0..NIBBLES_PER_WORD {
                     zrow[wz * NIBBLES_PER_WORD + j] = ((word >> (4 * j)) & 0xF) as f32;
                 }
@@ -142,7 +274,7 @@ fn fused_panel(xg: &[f32], mb: usize, q: &QuantizedTensor, out: &mut [f32]) {
             let w0 = gi * words_per_group;
             for dw in 0..words_per_group {
                 let w = w0 + dw;
-                let row = &q.qweight[w * n + cb..w * n + cb + nb];
+                let row = &q.qweight[w * n + ca..w * n + ca + nb];
                 for mi in 0..mb {
                     let xr = &xg[mi * k + w * NIBBLES_PER_WORD
                         ..mi * k + (w + 1) * NIBBLES_PER_WORD];
@@ -166,11 +298,11 @@ fn fused_panel(xg: &[f32], mb: usize, q: &QuantizedTensor, out: &mut [f32]) {
                 }
             }
             // Flush: y += s·(dot − z·Σx), once per group per column.
-            let srow = &q.scales[gi * n + cb..gi * n + cb + nb];
+            let srow = &q.scales[gi * n + ca..gi * n + ca + nb];
             for mi in 0..mb {
                 let xs = xsum[mi * groups + gi];
                 let drow = &dot[mi * nb_max..mi * nb_max + nb];
-                let yrow = &mut out[mi * n + cb..mi * n + cb + nb];
+                let yrow = &mut out[mi * cn + cb..mi * cn + cb + nb];
                 for c in 0..nb {
                     yrow[c] += srow[c] * (drow[c] - zrow[c] * xs);
                 }
@@ -244,6 +376,59 @@ mod tests {
                 max_abs_diff(&got.data, &want.data)
             );
         }
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        // The column split must not change results at all: per-column
+        // accumulation order is untouched (K is never partitioned).
+        let q = random_quantized(256, 640, 64, 21);
+        let mut rng = Rng::new(22);
+        let x = rng.normal_vec_f32(256, 1.0);
+        let serial = gemv_fused_threads(&x, &q, 1);
+        for threads in [2, 3, 5, 8] {
+            assert_eq!(serial, gemv_fused_threads(&x, &q, threads), "gemv threads={threads}");
+        }
+        let xm = Matrix::from_vec(11, 256, rng.normal_vec_f32(11 * 256, 1.0));
+        let serial_m = gemm_fused_threads(&xm, &q, 1);
+        for threads in [2, 4, 7] {
+            assert_eq!(
+                serial_m.data,
+                gemm_fused_threads(&xm, &q, threads).data,
+                "gemm threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_act_order_matches_serial_and_oracle() {
+        let mut rng = Rng::new(31);
+        let mut perm: Vec<usize> = (0..128).collect();
+        rng.shuffle(&mut perm);
+        let q = random_quantized(128, 264, 64, 32).with_perm(perm);
+        let x = rng.normal_vec_f32(128, 1.0);
+        let serial = gemv_fused_threads(&x, &q, 1);
+        // 264 % 8 == 0: the split engages and must stay aligned.
+        assert_eq!(serial, gemv_fused_threads(&x, &q, 4));
+        assert!(max_abs_diff(&serial, &gemv_f32(&x, &q)) < 1e-3);
+    }
+
+    #[test]
+    fn oversubscribed_thread_count_is_clamped() {
+        let q = random_quantized(64, 16, 32, 41);
+        let mut rng = Rng::new(42);
+        let x = rng.normal_vec_f32(64, 1.0);
+        // More workers than nibble-words of output: must clamp, not hang
+        // or emit empty slabs.
+        assert_eq!(gemv_fused_threads(&x, &q, 1), gemv_fused_threads(&x, &q, 64));
+    }
+
+    #[test]
+    fn auto_threads_stays_serial_for_tiny_shapes() {
+        assert_eq!(fused_threads(1, 64, 64), 1, "tiny-model shapes must not spawn");
+        assert_eq!(fused_threads(8, 64, 256), 1);
+        // Misaligned N can never split.
+        assert_eq!(fused_threads(64, 4096, 4095), 1);
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub mod linalg;
 pub mod pack;
 pub mod quantize;
 
-pub use fused::{gemm_fused, gemv_fused};
+pub use fused::{fused_threads, gemm_fused, gemm_fused_threads, gemv_fused, gemv_fused_threads};
 pub use gemm::{dequantize, gemm_f32, gemv_f32};
 pub use pack::{pack_cols, pack_rows, unpack_cols, unpack_rows, NIBBLES_PER_WORD};
 pub use quantize::{

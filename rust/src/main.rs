@@ -50,8 +50,9 @@ fn usage() {
     eprintln!(
         "usage: opt4gptq <serve|simulate|kernel|accuracy|quantize> [options]
   serve     --backend cpu|pjrt --requests N --max-tokens N [--temperature T]
-            (cpu: in-crate fused-kernel transformer; pjrt: --artifacts DIR,
-             needs the `pjrt` build feature)
+            [--blocks N --block-size N]  (paged-KV pool geometry)
+            (cpu: in-crate fused-kernel transformer over paged KV;
+             pjrt: --artifacts DIR, needs the `pjrt` build feature)
   simulate  --model NAME --requests N [--opt baseline|smb|vml|ila|opt4gptq]
   kernel    --m M --k K --n N [--group G]
   accuracy  --model NAME [--split arc_c|arc_e]
@@ -125,8 +126,19 @@ fn serve_with<B: Backend>(backend: B, args: &Args) -> opt4gptq::Result<()> {
     let max_batch = backend.max_batch();
     let max_seq_len = backend.max_seq_len();
     let vocab = backend.vocab() as u32;
-    let mut engine =
-        Engine::new(EngineConfig { max_batch, max_seq_len, ..Default::default() }, backend);
+    // Paged-KV pool geometry: Engine::new binds it into the backend, so
+    // these flags directly size the physical block pool.
+    let default_cfg = EngineConfig::default();
+    let total_blocks = args.get_usize("blocks", default_cfg.total_blocks);
+    let block_size = args.get_usize("block-size", default_cfg.block_size);
+    println!(
+        "paged KV: {total_blocks} blocks x {block_size} tokens ({} max cached tokens)",
+        total_blocks * block_size
+    );
+    let mut engine = Engine::new(
+        EngineConfig { max_batch, max_seq_len, total_blocks, block_size, ..default_cfg },
+        backend,
+    );
 
     let trace = RequestTrace::generate_with(
         n,
@@ -160,6 +172,10 @@ fn serve_with<B: Backend>(backend: B, args: &Args) -> opt4gptq::Result<()> {
         report.metrics.mean_latency(),
         report.metrics.mean_ttft(),
         report.metrics.mean_decode_batch(),
+    );
+    println!(
+        "prefix-cache hits: {} (shared blocks are physically shared in the paged pool)",
+        engine.scheduler.blocks.prefix_hits
     );
     Ok(())
 }

@@ -2,10 +2,13 @@
 //! real token generation with the AOT-compiled tiny GPTQ Llama.
 //!
 //! KV layout: the HLO decode artifacts operate on a dense batched cache
-//! `f32[L, B, H, S, D]` whose lane `b` is the engine's backend *slot*;
-//! the engine's paged block tables map onto dense per-slot regions here
-//! (the tiny model's contexts fit comfortably; the paging machinery is
-//! still exercised and tested at the scheduler level).
+//! `f32[L, B, H, S, D]`, so this backend cannot execute through block
+//! tables directly; instead it maps each sequence id from the paged
+//! [`PrefillDesc`]/[`DecodeDesc`] contract onto a private dense lane
+//! (`lanes`), releasing the lane when the engine retires the sequence
+//! via [`Backend::release_seq`].  The paging machinery is still
+//! exercised and tested at the scheduler/CpuBackend level; here the
+//! tables are accepted and ignored.
 //!
 //! Perf (EXPERIMENTS.md §Perf): the decode hot path keeps the batched KV
 //! cache as PJRT **literals handed from step output to step input** —
@@ -21,7 +24,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context};
 
-use crate::engine::backend::{Backend, DecodeEntry};
+use crate::engine::backend::{Backend, DecodeDesc, PrefillDesc};
 use crate::Result;
 
 use super::client::Runtime;
@@ -42,6 +45,9 @@ pub struct PjrtBackend {
     pub runtime: Runtime,
     pub dims: TinyDims,
     max_batch: usize,
+    /// sequence id -> dense KV lane (the paged contract adapter).
+    lanes: HashMap<usize, usize>,
+    free_lanes: Vec<usize>,
     /// Batched KV cache literals `[L, B, H, S, D]` (k, v), handed from
     /// decode output to decode input without touching the host.
     kv_lit: Option<(xla::Literal, xla::Literal)>,
@@ -77,6 +83,8 @@ impl PjrtBackend {
             runtime,
             dims,
             max_batch,
+            lanes: HashMap::new(),
+            free_lanes: (0..max_batch).rev().collect(),
             kv_lit: None,
             mirror_k: vec![0.0; total],
             mirror_v: vec![0.0; total],
@@ -141,6 +149,20 @@ impl PjrtBackend {
         Ok(())
     }
 
+    /// Lane already owned by `seq_id`, or a freshly assigned one.
+    fn lane_for(&mut self, seq_id: usize) -> Result<usize> {
+        if let Some(&lane) = self.lanes.get(&seq_id) {
+            return Ok(lane);
+        }
+        match self.free_lanes.pop() {
+            Some(lane) => {
+                self.lanes.insert(seq_id, lane);
+                Ok(lane)
+            }
+            None => bail!("no free KV lane for sequence {seq_id} (max_batch {})", self.max_batch),
+        }
+    }
+
     fn timed_execute(
         &mut self,
         tag: &str,
@@ -167,12 +189,14 @@ impl Backend for PjrtBackend {
         self.dims.vocab
     }
 
-    fn prefill(&mut self, slot: usize, tokens: &[u32]) -> Result<(Vec<f32>, f64)> {
+    fn prefill(&mut self, req: PrefillDesc<'_>) -> Result<(Vec<f32>, f64)> {
         let t0 = Instant::now();
         let d = self.dims;
+        let tokens = req.tokens;
         if tokens.is_empty() || tokens.len() > d.prefill_slots {
             bail!("prefill length {} outside 1..={}", tokens.len(), d.prefill_slots);
         }
+        let slot = self.lane_for(req.seq_id)?;
         let mut padded = vec![0i32; d.prefill_slots];
         for (i, &t) in tokens.iter().enumerate() {
             padded[i] = t as i32;
@@ -195,18 +219,20 @@ impl Backend for PjrtBackend {
         Ok((logits_row, t0.elapsed().as_secs_f64()))
     }
 
-    fn decode(&mut self, batch: &[DecodeEntry]) -> Result<(Vec<Vec<f32>>, f64)> {
+    fn decode(&mut self, batch: &[DecodeDesc<'_>]) -> Result<(Vec<Vec<f32>>, f64)> {
         let t0 = Instant::now();
         let d = self.dims;
         let b = self.max_batch;
         assert!(!batch.is_empty() && batch.len() <= b);
-        // Lanes are slots; idle lanes run masked at position 0.
+        // Idle lanes run masked at position 0.
+        let mut lanes = Vec::with_capacity(batch.len());
         let mut lengths = vec![0i32; b];
         let mut tokens = vec![0i32; b];
         for e in batch {
-            assert!(e.slot < b, "slot {} out of range", e.slot);
-            lengths[e.slot] = e.position as i32;
-            tokens[e.slot] = e.token as i32;
+            let lane = self.lane_for(e.seq_id)?;
+            lengths[lane] = e.context_len as i32;
+            tokens[lane] = e.token as i32;
+            lanes.push(lane);
         }
         if self.kv_lit.is_none() {
             let dims = self.kv_dims();
@@ -230,11 +256,17 @@ impl Backend for PjrtBackend {
         self.mirror_stale = true;
 
         let all_logits = logits.to_vec::<f32>()?;
-        let rows = batch
+        let rows = lanes
             .iter()
-            .map(|e| all_logits[e.slot * d.vocab..(e.slot + 1) * d.vocab].to_vec())
+            .map(|&lane| all_logits[lane * d.vocab..(lane + 1) * d.vocab].to_vec())
             .collect();
         Ok((rows, t0.elapsed().as_secs_f64()))
+    }
+
+    fn release_seq(&mut self, seq_id: usize) {
+        if let Some(lane) = self.lanes.remove(&seq_id) {
+            self.free_lanes.push(lane);
+        }
     }
 }
 

@@ -1,12 +1,14 @@
 //! Engine integration across execution backends: the same seed and trace
 //! through `SimBackend` (virtual clock, synthetic logits) and
-//! `CpuBackend` (real fused-kernel math) must give deterministic,
-//! reproducible per-request token counts and monotone metrics — with no
-//! panics on the preemption/slot-release paths.
+//! `CpuBackend` (real fused-kernel math over physically-paged KV) must
+//! give deterministic, reproducible per-request token counts and
+//! monotone metrics — with no panics on the preemption/block-release
+//! paths — and prefix-cache hits must be *physical*: shared block-table
+//! entries aliasing the same pool memory with oracle-identical logits.
 
 use opt4gptq::engine::{
-    Backend, CpuBackend, CpuModelConfig, Engine, EngineConfig, Request, SamplingParams,
-    SimBackend,
+    Backend, BlockManager, CpuBackend, CpuModelConfig, Engine, EngineConfig, PrefillDesc,
+    Request, SamplingParams, SimBackend,
 };
 use opt4gptq::models::by_name;
 use opt4gptq::OptConfig;
@@ -119,7 +121,7 @@ fn sim_and_cpu_backends_agree_on_token_counts() {
 }
 
 #[test]
-fn cpu_backend_survives_preemption_and_slot_release() {
+fn cpu_backend_survives_preemption_and_block_release() {
     let w = heavy_workload();
     let (a, preemptions) = run_engine(cpu_backend(), cramped(), &w);
     assert!(preemptions > 0, "this config must preempt to prove the recompute path");
@@ -139,8 +141,8 @@ fn cpu_backend_survives_preemption_and_slot_release() {
 #[test]
 fn greedy_cpu_serving_is_deterministic_across_engine_configs() {
     // Greedy sampling through real logits: decode *batching* differs
-    // between configs, but each sequence's math is independent (dense
-    // per-slot KV, row-independent fused GEMM), so outputs must match
+    // between configs, but each sequence's math is independent (private
+    // block tables, row-independent fused GEMM), so outputs must match
     // token-for-token.
     let run = |cfg: EngineConfig| {
         let mut e = Engine::new(cfg, cpu_backend());
@@ -160,4 +162,81 @@ fn greedy_cpu_serving_is_deterministic_across_engine_configs() {
     let a = run(roomy());
     let b = run(EngineConfig { max_batch: 2, ..roomy() });
     assert_eq!(a, b, "greedy decoding must not depend on batch composition");
+}
+
+/// Physical prefix sharing at the backend level: two sequences whose
+/// block tables share prefix blocks must consume fewer blocks *and*
+/// produce logits bit-identical to a fresh, unshared run.
+#[test]
+fn prefix_sharing_is_physical_and_bit_exact() {
+    let block_size = 16;
+    let mut bm = BlockManager::new(64, block_size);
+    let mut be = cpu_backend();
+    be.bind_kv(64, block_size);
+
+    // 36 tokens: two full (shareable) blocks + a private tail block.
+    let prompt: Vec<u32> = (0..36).map(|i| ((i * 13 + 5) % 256) as u32).collect();
+    assert!(bm.allocate(1, &prompt));
+    let free_after_first = bm.free_blocks();
+    assert!(bm.allocate(2, &prompt));
+    // Prefix hit accounting must coincide with real block savings: the
+    // second sequence only consumed its private tail block.
+    assert!(bm.prefix_hits >= 2, "full prefix blocks must hit the cache");
+    assert_eq!(
+        free_after_first - bm.free_blocks(),
+        1,
+        "a prefix-cache hit must reduce blocks consumed, not just count hits"
+    );
+    let t1: Vec<usize> = bm.table(1).unwrap().to_vec();
+    let t2: Vec<usize> = bm.table(2).unwrap().to_vec();
+    assert_eq!(t1[..2], t2[..2], "shared prefix must reference the same physical blocks");
+    assert_ne!(t1[2], t2[2], "partial tail must stay private");
+
+    // Execute both through their tables; then compare against a fresh
+    // backend that never shared anything (the oracle).
+    let (l1, _) =
+        be.prefill(PrefillDesc { seq_id: 1, tokens: &prompt, block_table: &t1 }).unwrap();
+    let (l2, _) =
+        be.prefill(PrefillDesc { seq_id: 2, tokens: &prompt, block_table: &t2 }).unwrap();
+    let mut fresh = cpu_backend();
+    fresh.bind_kv(64, block_size);
+    let fresh_table: Vec<usize> = (10..13).collect();
+    let (oracle, _) = fresh
+        .prefill(PrefillDesc { seq_id: 9, tokens: &prompt, block_table: &fresh_table })
+        .unwrap();
+    assert_eq!(l1, oracle, "sharing must not perturb the first sequence");
+    assert_eq!(l2, oracle, "a shared-prefix run must be bit-identical to a fresh run");
+    bm.check_invariants().unwrap();
+}
+
+/// Prefix sharing through the whole engine: identical greedy prompts
+/// must generate identical tokens whether or not they shared blocks,
+/// and the run must actually exercise the prefix cache.
+#[test]
+fn engine_prefix_sharing_preserves_greedy_tokens() {
+    let prompt: Vec<u32> = (0..20).map(|i| ((i * 7 + 3) % 256) as u32).collect();
+    let run = |n_requests: usize| {
+        let mut e = Engine::new(roomy(), cpu_backend());
+        for i in 0..n_requests {
+            e.add_request(Request::new(
+                i,
+                prompt.clone(),
+                SamplingParams { max_tokens: 8, ..Default::default() },
+            ));
+        }
+        let report = e.run().unwrap();
+        e.scheduler.check_invariants().unwrap();
+        let hits = e.scheduler.blocks.prefix_hits;
+        let mut outs: Vec<(usize, Vec<u32>)> =
+            report.outputs.iter().map(|o| (o.id, o.tokens.clone())).collect();
+        outs.sort();
+        (outs, hits)
+    };
+    let (solo, solo_hits) = run(1);
+    assert_eq!(solo_hits, 0, "a single request has nothing to share");
+    let (pair, pair_hits) = run(2);
+    assert!(pair_hits > 0, "identical prompts must hit the prefix cache");
+    assert_eq!(pair.len(), 2);
+    assert_eq!(pair[0].1, solo[0].1, "sharing must not change greedy generation");
+    assert_eq!(pair[1].1, solo[0].1, "both shared sequences must match the fresh run");
 }

@@ -11,7 +11,7 @@
 
 use std::collections::HashMap;
 
-use opt4gptq::engine::backend::{Backend, DecodeEntry};
+use opt4gptq::engine::backend::{Backend, DecodeDesc, PrefillDesc};
 use opt4gptq::engine::tokenizer::ByteTokenizer;
 use opt4gptq::engine::Backend as _;
 use opt4gptq::engine::{Engine, EngineConfig, Request, SamplingParams};
@@ -146,11 +146,15 @@ fn pjrt_kv_cache_consistency() {
 
     let prompt = [10u32, 20, 30, 40, 50];
     // Path A: prefill all 5 tokens; logits predict token 6.
-    let (logits_a, _) = backend.prefill(0, &prompt).unwrap();
+    let (logits_a, _) = backend
+        .prefill(PrefillDesc { seq_id: 0, tokens: &prompt, block_table: &[] })
+        .unwrap();
     // Path B: prefill 4, decode the 5th.
-    let (_, _) = backend.prefill(1, &prompt[..4]).unwrap();
+    let (_, _) = backend
+        .prefill(PrefillDesc { seq_id: 1, tokens: &prompt[..4], block_table: &[] })
+        .unwrap();
     let (rows, _) = backend
-        .decode(&[DecodeEntry { slot: 1, position: 4, token: 50 }])
+        .decode(&[DecodeDesc { seq_id: 1, context_len: 4, token: 50, block_table: &[] }])
         .unwrap();
     let logits_b = &rows[0];
     assert_eq!(logits_a.len(), logits_b.len());
@@ -167,18 +171,20 @@ fn pjrt_kv_cache_consistency() {
 fn pjrt_batch_lanes_are_independent() {
     let Some(dir) = artifacts_dir() else { return };
     let mut backend = PjrtBackend::load(&dir).unwrap();
-    backend.prefill(0, &[1, 2, 3]).unwrap();
-    backend.prefill(1, &[9, 8, 7, 6]).unwrap();
+    let p0 = [1u32, 2, 3];
+    let p1 = [9u32, 8, 7, 6];
+    backend.prefill(PrefillDesc { seq_id: 0, tokens: &p0, block_table: &[] }).unwrap();
+    backend.prefill(PrefillDesc { seq_id: 1, tokens: &p1, block_table: &[] }).unwrap();
 
     let (single0, _) = backend
-        .decode(&[DecodeEntry { slot: 0, position: 3, token: 3 }])
+        .decode(&[DecodeDesc { seq_id: 0, context_len: 3, token: 3, block_table: &[] }])
         .unwrap();
-    // reset slot 0's cache by re-prefilling (decode above mutated it)
-    backend.prefill(0, &[1, 2, 3]).unwrap();
+    // reset seq 0's cache by re-prefilling (decode above mutated it)
+    backend.prefill(PrefillDesc { seq_id: 0, tokens: &p0, block_table: &[] }).unwrap();
     let (batch, _) = backend
         .decode(&[
-            DecodeEntry { slot: 0, position: 3, token: 3 },
-            DecodeEntry { slot: 1, position: 4, token: 6 },
+            DecodeDesc { seq_id: 0, context_len: 3, token: 3, block_table: &[] },
+            DecodeDesc { seq_id: 1, context_len: 4, token: 6, block_table: &[] },
         ])
         .unwrap();
     let max_diff = single0[0]

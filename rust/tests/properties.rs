@@ -3,7 +3,7 @@
 //!
 //! * block-manager refcount/free-list consistency under arbitrary
 //!   alloc/append/free interleavings;
-//! * scheduler slot/queue consistency under random request streams,
+//! * scheduler queue/block-table consistency under random request streams,
 //!   including the preemption path;
 //! * GPTQ pack/unpack as exact inverses on arbitrary codes;
 //! * f16 rounding invariants (monotonicity, idempotence);
