@@ -10,7 +10,10 @@
 //! [`crate::gptq::fused`] — decode steps exercise the `M = batch` fused
 //! GEMM path, prefills the `M = prompt_len` path, and the per-layer
 //! output projection carries a real act-order (`b_q_perm`) checkpoint so
-//! the gather branch runs on every token.
+//! the gather branch runs on every token.  Every weight is held as a
+//! [`PreparedTensor`]: the vector-friendly swizzled prepack the
+//! runtime-dispatched kernel (scalar or AVX2) wants is computed once at
+//! model build, never on the serve path.
 //!
 //! KV layout: a [`PagedKvCache`] pool `[n_blocks × block_size × n_layers
 //! × d_model]` per cache side, addressed exclusively through the block
@@ -33,7 +36,8 @@ use std::time::Instant;
 use anyhow::bail;
 
 use crate::gptq::{
-    gemm_fused, gemv_fused, quantize_gptq, quantize_rtn, GptqConfig, Matrix, QuantizedTensor,
+    gemm_fused_prepared, gemv_fused_prepared, quantize_gptq, quantize_rtn, GptqConfig, Matrix,
+    PreparedTensor,
 };
 use crate::rng::Rng;
 use crate::Result;
@@ -88,18 +92,21 @@ impl CpuModelConfig {
     }
 }
 
-/// One transformer block's quantized projections.
+/// One transformer block's quantized projections.  Each is a
+/// [`PreparedTensor`]: the vector-friendly swizzled prepack the active
+/// kernel wants is computed **here, once, at model build** — serve-path
+/// projections never re-swizzle.
 struct LayerWeights {
-    wq: QuantizedTensor,
-    wk: QuantizedTensor,
-    wv: QuantizedTensor,
+    wq: PreparedTensor,
+    wk: PreparedTensor,
+    wv: PreparedTensor,
     /// Output projection — quantized with `act_order: true`, so this
     /// tensor ships a real `b_q_perm` and every forward pass exercises
     /// the fused kernel's gather branch.
-    wo: QuantizedTensor,
-    w_gate: QuantizedTensor,
-    w_up: QuantizedTensor,
-    w_down: QuantizedTensor,
+    wo: PreparedTensor,
+    w_gate: PreparedTensor,
+    w_up: PreparedTensor,
+    w_down: PreparedTensor,
 }
 
 /// One sequence's span of work inside a forward pass: `tokens[i]` lands
@@ -116,13 +123,13 @@ pub struct CpuBackend {
     embed: Matrix,
     pos: Matrix,
     layers: Vec<LayerWeights>,
-    lm_head: QuantizedTensor,
+    lm_head: PreparedTensor,
     kv: PagedKvCache,
 }
 
-fn quantized(rng: &mut Rng, k: usize, n: usize, g: usize, std: f32) -> QuantizedTensor {
+fn quantized(rng: &mut Rng, k: usize, n: usize, g: usize, std: f32) -> PreparedTensor {
     let w = Matrix::from_vec(k, n, rng.normal_vec_f32(k * n, std));
-    quantize_rtn(&w, g)
+    PreparedTensor::new(quantize_rtn(&w, g))
 }
 
 impl CpuBackend {
@@ -164,11 +171,11 @@ impl CpuBackend {
             // a real Hessian-diagonal ordering to follow.
             let wo_dense = Matrix::from_vec(d, d, rng.normal_vec_f32(d * d, proj_std));
             let calib = Matrix::from_vec(64, d, rng.normal_vec_f32(64 * d, 1.0));
-            let wo = quantize_gptq(
+            let wo = PreparedTensor::new(quantize_gptq(
                 wo_dense,
                 &calib,
                 GptqConfig { group_size: cfg.group_size, percdamp: 0.01, act_order: true },
-            );
+            ));
             layers.push(LayerWeights {
                 wq: quantized(&mut rng, d, d, cfg.group_size, proj_std),
                 wk: quantized(&mut rng, d, d, cfg.group_size, proj_std),
@@ -273,7 +280,11 @@ impl CpuBackend {
             let a = rmsnorm_rows(&h);
             let (qm, km, vm) = {
                 let lw = &self.layers[li];
-                (gemm_fused(&a, &lw.wq), gemm_fused(&a, &lw.wk), gemm_fused(&a, &lw.wv))
+                (
+                    gemm_fused_prepared(&a, &lw.wq),
+                    gemm_fused_prepared(&a, &lw.wk),
+                    gemm_fused_prepared(&a, &lw.wv),
+                )
             };
             for (i, &(si, pos, _)) in rows.iter().enumerate() {
                 self.kv.write(spans[si].table, pos, li, km.row(i), vm.row(i));
@@ -290,18 +301,18 @@ impl CpuBackend {
                     &mut att.data[i * d..(i + 1) * d],
                 );
             }
-            let o = gemm_fused(&att, &self.layers[li].wo);
+            let o = gemm_fused_prepared(&att, &self.layers[li].wo);
             add_assign(&mut h, &o);
 
             // ---- MLP ----
             let m = rmsnorm_rows(&h);
             let lw = &self.layers[li];
-            let mut ff = gemm_fused(&m, &lw.w_gate);
-            let up = gemm_fused(&m, &lw.w_up);
+            let mut ff = gemm_fused_prepared(&m, &lw.w_gate);
+            let up = gemm_fused_prepared(&m, &lw.w_up);
             for (f, &u) in ff.data.iter_mut().zip(&up.data) {
                 *f = silu(*f) * u;
             }
-            let down = gemm_fused(&ff, &lw.w_down);
+            let down = gemm_fused_prepared(&ff, &lw.w_down);
             add_assign(&mut h, &down);
         }
         Ok(rmsnorm_rows(&h))
@@ -331,7 +342,7 @@ impl Backend for CpuBackend {
             bail!("cannot prefill an empty prompt");
         }
         let hidden = self.forward(&[SeqSpan { table: req.block_table, start: 0, tokens: req.tokens }])?;
-        let logits = gemv_fused(hidden.row(req.tokens.len() - 1), &self.lm_head);
+        let logits = gemv_fused_prepared(hidden.row(req.tokens.len() - 1), &self.lm_head);
         Ok((logits, t0.elapsed().as_secs_f64()))
     }
 
@@ -347,7 +358,7 @@ impl Backend for CpuBackend {
             .map(|(e, tok)| SeqSpan { table: e.block_table, start: e.context_len, tokens: tok })
             .collect();
         let hidden = self.forward(&spans)?;
-        let logits = gemm_fused(&hidden, &self.lm_head);
+        let logits = gemm_fused_prepared(&hidden, &self.lm_head);
         let v = self.cfg.vocab;
         let out = (0..batch.len()).map(|i| logits.data[i * v..(i + 1) * v].to_vec()).collect();
         Ok((out, t0.elapsed().as_secs_f64()))
@@ -602,7 +613,21 @@ mod tests {
     fn wo_carries_act_order_perm() {
         let be = backend();
         for lw in &be.layers {
-            assert!(lw.wo.perm.is_some(), "wo must be an act-order checkpoint");
+            assert!(lw.wo.tensor().perm.is_some(), "wo must be an act-order checkpoint");
+        }
+    }
+
+    #[test]
+    fn weights_are_prepacked_for_the_active_kernel() {
+        // Model build must cache the swizzle exactly when the dispatched
+        // kernel streams it, so the serve path never re-swizzles.
+        let be = backend();
+        let want = matches!(crate::gptq::active_kernel(), crate::gptq::Kernel::Avx2);
+        assert_eq!(be.lm_head.is_swizzled(), want);
+        for lw in &be.layers {
+            for w in [&lw.wq, &lw.wk, &lw.wv, &lw.wo, &lw.w_gate, &lw.w_up, &lw.w_down] {
+                assert_eq!(w.is_swizzled(), want);
+            }
         }
     }
 

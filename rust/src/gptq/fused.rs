@@ -6,63 +6,145 @@
 //! allocation plus a full extra pass over the weights before any math
 //! happens.  This module is the executable analogue of the paper's kernel
 //! structure (it is what [`crate::engine::cpu_backend::CpuBackend`] serves
-//! real tokens through):
+//! real tokens through), with the paper's three platform-level strategies
+//! mapped onto their CPU embodiments:
 //!
-//! * **Tile geometry.**  The K axis is walked in *group slabs* (one
-//!   quantization group, `group_size` rows — the dequant parameters are
-//!   constant across a slab, mirroring how the DCU kernel's `K_SLAB = 128`
-//!   stays within one group; see `dcusim::kernels::gemv`).  The N axis is
-//!   blocked so the per-tile accumulator (`M_BLOCK × N` partial dots plus
-//!   the unpacked zero row) stays L1-resident — the CPU cache analogue of
-//!   the SMB-Opt LDS accumulator tile.  M is blocked by [`M_BLOCK`]` = 8`,
-//!   matching the simulator's `M_COUNT_MAX` (rows of a block share one
-//!   pass over the packed weights).
+//! * **Runtime kernel dispatch.**  Every fused call runs through one of
+//!   two kernels selected once per process by [`simd::KernelDispatch`]
+//!   (the CPU analogue of the paper's per-platform kernel binding):
+//!   the explicit AVX2+FMA path in [`super::simd`] on hosts that have it,
+//!   or the portable scalar tile loop below everywhere else.  Both
+//!   kernels share the identical tile geometry and group-factored math;
+//!   `OPT4GPTQ_KERNEL=scalar|avx2` forces a path for testing.  The
+//!   scalar loop is untouched by dispatch — its results stay
+//!   bit-identical to previous releases.
 //!
-//! * **Lane pairs.**  Each packed `u32` word holds 8 nibbles (8 K-rows of
-//!   one column); the inner loop accumulates them as four explicitly
-//!   paired products — the half2-analogue of the paper's VML/ILA inner
-//!   loop — which both mirrors the kernel and gives the autovectorizer
-//!   independent chains.
+//! * **Tile geometry (SMB-Opt).**  The K axis is walked in *group slabs*
+//!   (one quantization group, `group_size` rows — the dequant parameters
+//!   are constant across a slab, mirroring how the DCU kernel's
+//!   `K_SLAB = 128` stays within one group; see `dcusim::kernels::gemv`).
+//!   The N axis is blocked so the per-tile accumulator state plus the
+//!   activation slab stays L1-resident — the scalar path keeps an
+//!   `M_BLOCK × N_tile` partial-dot buffer and unpacked zero row
+//!   ([`col_block`] budgets all three); the SIMD path keeps a stack
+//!   scratch flush tile and holds the running sums in vector registers.
+//!   M is blocked by [`M_BLOCK`]` = 8`, matching the simulator's
+//!   `M_COUNT_MAX` (rows of a block share one pass over the weights).
 //!
-//! * **Group factorization.**  Within a group, `Σ x·s·(c − z)` is computed
-//!   as `s·(Σ x·c − z·Σ x)`: the scale multiply and zero subtract are
-//!   hoisted out of the K loop entirely (one flush per group per column),
-//!   so the hot loop is shift/mask/convert/fma only.
+//! * **Vector loads (VML-Opt).**  Each packed `u32` word holds 8 nibbles
+//!   (8 K-rows of one column).  The scalar loop accumulates them as four
+//!   explicitly paired products — the half2-analogue of the paper's
+//!   inner loop, which gives the autovectorizer independent chains.  The
+//!   SIMD kernel instead loads eight *columns'* words with one 256-bit
+//!   load — aligned when the tensor is prepacked into the
+//!   column-interleaved [`super::pack::SwizzledWeights`] swizzle (built
+//!   once per [`PreparedTensor`], so serve-path projections never
+//!   re-swizzle) — and unpacks 8 lanes at a time with shift/mask.
+//!
+//! * **Vector FMA (ILA-Opt).**  Within a group, `Σ x·s·(c − z)` is
+//!   computed as `s·(Σ x·c − z·Σ x)`: the scale multiply and zero
+//!   subtract are hoisted out of the K loop entirely (one flush per
+//!   group per column), so the hot loop is shift/mask/convert/fma only —
+//!   `vfmadd231ps` on the SIMD path, with the flush kept in vector
+//!   registers.
 //!
 //! * **Act-order.**  `b_q_perm` checkpoints gather the activations once
 //!   per panel (`xg[k] = x[perm[k]]`, the load pattern Algorithm 2
-//!   branches on), after which the kernel is permutation-oblivious.
+//!   branches on), after which both kernels are permutation-oblivious.
 //!
 //! * **Column-split parallelism.**  Large shapes are N-partitioned over
 //!   scoped threads (rayon-style work stealing is unavailable offline):
-//!   each worker owns a nibble-aligned column slab and runs the identical
-//!   serial tile loop over it, so the parallel path is **bit-identical**
+//!   each worker owns a nibble-aligned column slab and runs the
+//!   dispatched kernel over it, so the parallel path is **bit-identical**
 //!   to the serial one (per-column accumulation order is unchanged — K is
 //!   never split).  [`fused_threads`] gates the split: small shapes (the
 //!   tiny CpuBackend model, unit-test sizes) stay on the spawn-free
-//!   serial path.  `gemv` slabs are contiguous output chunks (zero-copy
+//!   serial path.  The hardware width is resolved once per process
+//!   (`available_parallelism` is a syscall; `OPT4GPTQ_THREADS`
+//!   overrides).  `gemv` slabs are contiguous output chunks (zero-copy
 //!   via `split_at_mut`); `gemm` workers fill thread-local `[M, slab]`
 //!   tiles merged after the join.
 //!
-//! Parity with the oracle across shapes, groups, batch sizes and
-//! act-order is pinned by `rust/tests/parity.rs`; speed is measured by
-//! `rust/benches/fused_gemm.rs` (≥10× over the oracle on the 4096×4096
-//! decode shape, and parallel ≥ serial on the same shape).
+//! Parity with the oracle across shapes, groups, batch sizes, act-order
+//! and **every dispatchable kernel** is pinned by `rust/tests/parity.rs`;
+//! speed is measured by `rust/benches/fused_gemm.rs` (≥10× over the
+//! oracle on the 4096×4096 decode shape, parallel ≥ serial, and SIMD ≥
+//! scalar on the same shape).
 
-use super::pack::NIBBLES_PER_WORD;
+use std::sync::OnceLock;
+
+use super::pack::{swizzle_weights, SwizzledWeights, NIBBLES_PER_WORD};
 use super::quantize::QuantizedTensor;
+use super::simd::{self, Kernel};
 use super::Matrix;
 
 /// Rows of the activation matrix processed per pass over the packed
 /// weights (mirrors `dcusim::kernels::gemv::M_COUNT_MAX`).
 pub const M_BLOCK: usize = 8;
 
-/// Column-block size: keep the `mb`-row accumulator tile plus the zero
-/// row within ~16 KiB so the per-tile state is L1-resident.
-fn col_block(n: usize, mb: usize) -> usize {
-    let budget = (16 * 1024 / 4) / (mb + 1);
+/// Column-block size for the scalar kernel: keep the `mb`-row accumulator
+/// tile, the zero row, *and* the `mb × group` activation slab within
+/// ~16 KiB so the per-tile working set is L1-resident (the slab was
+/// unaccounted before, letting large-M prefill tiles spill).
+fn col_block(n: usize, mb: usize, g: usize) -> usize {
+    let floats = 16 * 1024 / 4;
+    let budget = floats.saturating_sub(mb * g) / (mb + 1);
     let nb = budget.max(64) & !7; // multiple of the nibble width
     nb.min(n)
+}
+
+/// One fused panel invocation's resolved operands: the packed tensor,
+/// the kernel the dispatcher chose for it, and (when prepacked) the
+/// swizzled weight view the SIMD path streams from.
+#[derive(Clone, Copy)]
+pub(crate) struct KernelCall<'a> {
+    pub(crate) q: &'a QuantizedTensor,
+    /// Only the x86-64 SIMD kernel reads the swizzle; other targets
+    /// carry it dead (the scalar loop streams the storage layout).
+    #[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+    pub(crate) swz: Option<&'a SwizzledWeights>,
+    pub(crate) kernel: Kernel,
+}
+
+/// A [`QuantizedTensor`] plus the vector-friendly prepack the active
+/// kernel wants, computed **once** at construction (model build time in
+/// `CpuBackend`) so serve-path projections never re-swizzle.  On scalar
+/// hosts the prepack is skipped entirely — the tensor is served as-is.
+///
+/// Deliberate trade-off: on AVX2 hosts the swizzle is a second full
+/// copy of the packed words (~0.5 byte/weight extra), kept alongside
+/// the storage layout so [`Self::tensor`] stays a complete
+/// `QuantizedTensor` (oracle parity, checkpointing, and any raw-layout
+/// caller keep working).  Collapsing to a single layout per tensor is
+/// tracked in ROADMAP.md.
+pub struct PreparedTensor {
+    q: QuantizedTensor,
+    swz: Option<SwizzledWeights>,
+}
+
+impl PreparedTensor {
+    pub fn new(q: QuantizedTensor) -> PreparedTensor {
+        let swz = match simd::active_kernel() {
+            Kernel::Avx2 => Some(swizzle_weights(&q.qweight, q.k / NIBBLES_PER_WORD, q.n)),
+            Kernel::Scalar => None,
+        };
+        PreparedTensor { q, swz }
+    }
+
+    /// The underlying packed tensor.
+    pub fn tensor(&self) -> &QuantizedTensor {
+        &self.q
+    }
+
+    /// Whether the vector-friendly prepack was built (i.e. the active
+    /// kernel streams aligned swizzled loads).
+    pub fn is_swizzled(&self) -> bool {
+        self.swz.is_some()
+    }
+
+    fn call(&self) -> KernelCall<'_> {
+        KernelCall { q: &self.q, swz: self.swz.as_ref(), kernel: simd::active_kernel() }
+    }
 }
 
 /// Worker count the auto-dispatched entry points use for an
@@ -78,19 +160,57 @@ pub fn fused_threads(mb: usize, k: usize, n: usize) -> usize {
     if n % NIBBLES_PER_WORD != 0 || mb.saturating_mul(k).saturating_mul(n) < MIN_WORK {
         return 1;
     }
-    let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
-    hw.min(n / MIN_COLS).max(1)
+    hw_threads().min(n / MIN_COLS).max(1)
 }
 
-/// `y[N] = x[K] · deq(Q)[K, N]` — fused single-row (decode) GEMV,
-/// auto-parallel over columns when the shape warrants it.
+/// Hardware worker-pool width, resolved **once** per process:
+/// `available_parallelism` is a syscall, and it used to run once per
+/// projection per token on the decode path.  `OPT4GPTQ_THREADS` (≥ 1)
+/// overrides detection for benchmarking; invalid values fall back.
+fn hw_threads() -> usize {
+    static HW: OnceLock<usize> = OnceLock::new();
+    *HW.get_or_init(|| {
+        std::env::var("OPT4GPTQ_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or_else(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1))
+    })
+}
+
+/// `y[N] = x[K] · deq(Q)[K, N]` — fused single-row (decode) GEMV through
+/// the dispatched kernel, auto-parallel over columns when warranted.
 pub fn gemv_fused(x: &[f32], q: &QuantizedTensor) -> Vec<f32> {
-    gemv_fused_threads(x, q, fused_threads(1, q.k, q.n))
+    gemv_fused_with(x, q, simd::active_kernel(), fused_threads(1, q.k, q.n))
 }
 
 /// [`gemv_fused`] with an explicit worker count (`1` = serial; the
 /// result is bit-identical across counts).
 pub fn gemv_fused_threads(x: &[f32], q: &QuantizedTensor, threads: usize) -> Vec<f32> {
+    gemv_fused_with(x, q, simd::active_kernel(), threads)
+}
+
+/// [`gemv_fused`] with the kernel *and* worker count forced — the entry
+/// point the parity tests and benches use to pin every dispatch path.
+/// Panics if `kernel` is not available on this host.
+pub fn gemv_fused_with(x: &[f32], q: &QuantizedTensor, kernel: Kernel, threads: usize) -> Vec<f32> {
+    assert!(simd::supports(kernel), "kernel '{kernel}' is not available on this host");
+    gemv_run(x, &KernelCall { q, swz: None, kernel }, threads)
+}
+
+/// [`gemv_fused`] over a [`PreparedTensor`]: the swizzled prepack (when
+/// built) feeds the SIMD kernel aligned streaming loads.
+pub fn gemv_fused_prepared(x: &[f32], p: &PreparedTensor) -> Vec<f32> {
+    gemv_run(x, &p.call(), fused_threads(1, p.q.k, p.q.n))
+}
+
+/// [`gemv_fused_prepared`] with an explicit worker count (benching).
+pub fn gemv_fused_prepared_threads(x: &[f32], p: &PreparedTensor, threads: usize) -> Vec<f32> {
+    gemv_run(x, &p.call(), threads)
+}
+
+fn gemv_run(x: &[f32], call: &KernelCall<'_>, threads: usize) -> Vec<f32> {
+    let q = call.q;
     assert_eq!(x.len(), q.k);
     let mut y = vec![0.0f32; q.n];
     let gathered;
@@ -103,19 +223,36 @@ pub fn gemv_fused_threads(x: &[f32], q: &QuantizedTensor, threads: usize) -> Vec
         }
     };
     let xsum = activation_group_sums(xg, 1, q.k, q.group_size);
-    run_col_split(xg, &xsum, 1, q, threads, &mut y);
+    run_col_split(xg, &xsum, 1, call, threads, &mut y);
     y
 }
 
-/// `Y[M, N] = X[M, K] · deq(Q)` — fused batched (prefill) GEMM,
-/// auto-parallel over columns when the shape warrants it.
+/// `Y[M, N] = X[M, K] · deq(Q)` — fused batched (prefill) GEMM through
+/// the dispatched kernel, auto-parallel over columns when warranted.
 pub fn gemm_fused(x: &Matrix, q: &QuantizedTensor) -> Matrix {
-    gemm_fused_threads(x, q, fused_threads(x.rows, q.k, q.n))
+    gemm_fused_with(x, q, simd::active_kernel(), fused_threads(x.rows, q.k, q.n))
 }
 
 /// [`gemm_fused`] with an explicit worker count (`1` = serial; the
 /// result is bit-identical across counts).
 pub fn gemm_fused_threads(x: &Matrix, q: &QuantizedTensor, threads: usize) -> Matrix {
+    gemm_fused_with(x, q, simd::active_kernel(), threads)
+}
+
+/// [`gemm_fused`] with the kernel *and* worker count forced (see
+/// [`gemv_fused_with`]).  Panics if `kernel` is unavailable here.
+pub fn gemm_fused_with(x: &Matrix, q: &QuantizedTensor, kernel: Kernel, threads: usize) -> Matrix {
+    assert!(simd::supports(kernel), "kernel '{kernel}' is not available on this host");
+    gemm_run(x, &KernelCall { q, swz: None, kernel }, threads)
+}
+
+/// [`gemm_fused`] over a [`PreparedTensor`] (see [`gemv_fused_prepared`]).
+pub fn gemm_fused_prepared(x: &Matrix, p: &PreparedTensor) -> Matrix {
+    gemm_run(x, &p.call(), fused_threads(x.rows, p.q.k, p.q.n))
+}
+
+fn gemm_run(x: &Matrix, call: &KernelCall<'_>, threads: usize) -> Matrix {
+    let q = call.q;
     assert_eq!(x.cols, q.k);
     let (k, n) = (q.k, q.n);
     let mut out = Matrix::zeros(x.rows, n);
@@ -138,7 +275,7 @@ pub fn gemm_fused_threads(x: &Matrix, q: &QuantizedTensor, threads: usize) -> Ma
             }
         };
         let xsum = activation_group_sums(xg, mb, k, q.group_size);
-        run_col_split(xg, &xsum, mb, q, threads, ys);
+        run_col_split(xg, &xsum, mb, call, threads, ys);
         m0 += mb;
     }
     out
@@ -157,6 +294,33 @@ fn activation_group_sums(xg: &[f32], mb: usize, k: usize, g: usize) -> Vec<f32> 
     xsum
 }
 
+/// Run the dispatched kernel over one column window.
+fn panel_any(
+    call: &KernelCall<'_>,
+    xg: &[f32],
+    xsum: &[f32],
+    mb: usize,
+    c0: usize,
+    cn: usize,
+    out: &mut [f32],
+) {
+    match call.kernel {
+        Kernel::Scalar => fused_panel_cols(xg, xsum, mb, call.q, c0, cn, out),
+        Kernel::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                simd::panel_avx2(call, xg, xsum, mb, c0, cn, out)
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                // Unreachable through public entry points (`supports`
+                // rejects Avx2 off x86-64); degrade gracefully anyway.
+                fused_panel_cols(xg, xsum, mb, call.q, c0, cn, out)
+            }
+        }
+    }
+}
+
 /// N-partitioned dispatch over one gathered M-block: split the column
 /// axis into nibble-aligned slabs, one scoped thread per slab (serial
 /// when `threads <= 1`).  `out` is `[mb, N]` row-major, zeroed.
@@ -164,14 +328,14 @@ fn run_col_split(
     xg: &[f32],
     xsum: &[f32],
     mb: usize,
-    q: &QuantizedTensor,
+    call: &KernelCall<'_>,
     threads: usize,
     out: &mut [f32],
 ) {
-    let n = q.n;
+    let n = call.q.n;
     let threads = if n % NIBBLES_PER_WORD == 0 { threads.min(n / NIBBLES_PER_WORD) } else { 1 };
     if threads <= 1 {
-        fused_panel_cols(xg, xsum, mb, q, 0, n, out);
+        panel_any(call, xg, xsum, mb, 0, n, out);
         return;
     }
     // Slab bounds, aligned down to the packed nibble width; the last
@@ -192,7 +356,8 @@ fn run_col_split(
                 }
                 let (chunk, tail) = rest.split_at_mut(c1 - c0);
                 rest = tail;
-                s.spawn(move || fused_panel_cols(xg, xsum, 1, q, c0, c1 - c0, chunk));
+                let call = *call;
+                s.spawn(move || panel_any(&call, xg, xsum, 1, c0, c1 - c0, chunk));
             }
         });
     } else {
@@ -208,9 +373,10 @@ fn run_col_split(
                 .filter(|&t| bounds[t + 1] > bounds[t])
                 .map(|t| {
                     let (c0, c1) = (bounds[t], bounds[t + 1]);
+                    let call = *call;
                     s.spawn(move || {
                         let mut tile = vec![0.0f32; mb * (c1 - c0)];
-                        fused_panel_cols(xg, xsum, mb, q, c0, c1 - c0, &mut tile);
+                        panel_any(&call, xg, xsum, mb, c0, c1 - c0, &mut tile);
                         (c0, c1, tile)
                     })
                 })
@@ -226,8 +392,11 @@ fn run_col_split(
     }
 }
 
-/// Core tile loop over one M-block of (already gathered) activations,
-/// restricted to the column window `[c0, c0 + cn)` of the tensor.
+/// Portable scalar tile loop over one M-block of (already gathered)
+/// activations, restricted to the column window `[c0, c0 + cn)` of the
+/// tensor.  This is the dispatch fallback and the bit-identity baseline:
+/// its accumulation order is frozen (the parity suite pins it), and the
+/// SIMD kernel in [`super::simd`] must match it to oracle tolerance.
 ///
 /// `xg` is `[mb, K]` row-major, `xsum` the `[mb, K/g]` group sums, and
 /// `out` is the `[mb, cn]` row-major window (stride `cn`), *accumulated
@@ -251,7 +420,7 @@ fn fused_panel_cols(
     let words_per_group = g / NIBBLES_PER_WORD;
     let nw = n / NIBBLES_PER_WORD;
 
-    let nb_max = col_block(cn, mb);
+    let nb_max = col_block(cn, mb, g);
     let mut dot = vec![0.0f32; mb * nb_max];
     let mut zrow = vec![0.0f32; nb_max];
 
@@ -379,24 +548,77 @@ mod tests {
     }
 
     #[test]
+    fn every_available_kernel_matches_oracle() {
+        // The dispatch table must never change *what* is computed — only
+        // how fast.  Sweep every runnable kernel against the oracle.
+        let q = random_quantized(256, 64, 64, 17);
+        let mut rng = Rng::new(18);
+        let x = rng.normal_vec_f32(256, 1.0);
+        let want = gemv_f32(&x, &q);
+        let xm = Matrix::from_vec(11, 256, rng.normal_vec_f32(11 * 256, 1.0));
+        let want_m = gemm_f32(&xm, &q);
+        for kernel in simd::available_kernels() {
+            let got = gemv_fused_with(&x, &q, kernel, 1);
+            assert!(
+                max_abs_diff(&got, &want) < 1e-3,
+                "kernel {kernel}: gemv diff {}",
+                max_abs_diff(&got, &want)
+            );
+            let got_m = gemm_fused_with(&xm, &q, kernel, 1);
+            assert!(
+                max_abs_diff(&got_m.data, &want_m.data) < 1e-3,
+                "kernel {kernel}: gemm diff {}",
+                max_abs_diff(&got_m.data, &want_m.data)
+            );
+        }
+    }
+
+    #[test]
+    fn prepared_path_is_bit_identical_to_unprepared() {
+        // The swizzled prepack reorders *loads*, never math: a prepared
+        // tensor must reproduce the plain path exactly, bit for bit.
+        let q = random_quantized(256, 64, 64, 51);
+        let mut rng = Rng::new(52);
+        let x = rng.normal_vec_f32(256, 1.0);
+        let plain = gemv_fused(&x, &q);
+        let p = PreparedTensor::new(q.clone());
+        assert_eq!(plain, gemv_fused_prepared(&x, &p), "gemv prepared path diverged");
+        let xm = Matrix::from_vec(9, 256, rng.normal_vec_f32(9 * 256, 1.0));
+        assert_eq!(
+            gemm_fused(&xm, &q).data,
+            gemm_fused_prepared(&xm, &p).data,
+            "gemm prepared path diverged"
+        );
+        // Prepared + explicit threads too (the bench path).
+        assert_eq!(plain, gemv_fused_prepared_threads(&x, &p, 2));
+    }
+
+    #[test]
     fn parallel_is_bit_identical_to_serial() {
         // The column split must not change results at all: per-column
         // accumulation order is untouched (K is never partitioned).
+        // Pinned per kernel — the SIMD path must honor it too.
         let q = random_quantized(256, 640, 64, 21);
         let mut rng = Rng::new(22);
         let x = rng.normal_vec_f32(256, 1.0);
-        let serial = gemv_fused_threads(&x, &q, 1);
-        for threads in [2, 3, 5, 8] {
-            assert_eq!(serial, gemv_fused_threads(&x, &q, threads), "gemv threads={threads}");
-        }
         let xm = Matrix::from_vec(11, 256, rng.normal_vec_f32(11 * 256, 1.0));
-        let serial_m = gemm_fused_threads(&xm, &q, 1);
-        for threads in [2, 4, 7] {
-            assert_eq!(
-                serial_m.data,
-                gemm_fused_threads(&xm, &q, threads).data,
-                "gemm threads={threads}"
-            );
+        for kernel in simd::available_kernels() {
+            let serial = gemv_fused_with(&x, &q, kernel, 1);
+            for threads in [2, 3, 5, 8] {
+                assert_eq!(
+                    serial,
+                    gemv_fused_with(&x, &q, kernel, threads),
+                    "gemv kernel={kernel} threads={threads}"
+                );
+            }
+            let serial_m = gemm_fused_with(&xm, &q, kernel, 1);
+            for threads in [2, 4, 7] {
+                assert_eq!(
+                    serial_m.data,
+                    gemm_fused_with(&xm, &q, kernel, threads).data,
+                    "gemm kernel={kernel} threads={threads}"
+                );
+            }
         }
     }
 
@@ -429,6 +651,27 @@ mod tests {
         assert_eq!(fused_threads(8, 64, 256), 1);
         // Misaligned N can never split.
         assert_eq!(fused_threads(64, 4096, 4095), 1);
+    }
+
+    #[test]
+    fn col_block_budget_accounts_for_activation_slab() {
+        // Accumulator tile (mb·nb) + zero row (nb) + activation slab
+        // (mb·g) must fit the 16 KiB budget, and nb stays nibble-aligned
+        // with the floor respected.
+        for (mb, g) in [(1, 32), (1, 128), (8, 32), (8, 128)] {
+            let nb = col_block(1 << 20, mb, g);
+            assert_eq!(nb % 8, 0, "mb={mb} g={g}: nb={nb} must be a multiple of 8");
+            assert!(nb >= 64, "mb={mb} g={g}: nb={nb} below floor");
+            if nb > 64 {
+                let floats = nb * (mb + 1) + mb * g;
+                assert!(
+                    floats <= 16 * 1024 / 4,
+                    "mb={mb} g={g}: working set {floats} floats exceeds L1 budget"
+                );
+            }
+        }
+        // Small N is clamped to N exactly as before.
+        assert_eq!(col_block(40, 1, 32), 40);
     }
 
     #[test]
@@ -466,8 +709,10 @@ mod tests {
     #[test]
     fn zero_activation_gives_zero_output() {
         let q = random_quantized(64, 8, 64, 6);
-        let y = gemv_fused(&vec![0.0; 64], &q);
-        assert!(y.iter().all(|&v| v == 0.0));
+        for kernel in simd::available_kernels() {
+            let y = gemv_fused_with(&vec![0.0; 64], &q, kernel, 1);
+            assert!(y.iter().all(|&v| v == 0.0), "kernel {kernel}");
+        }
     }
 
     #[test]

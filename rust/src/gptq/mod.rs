@@ -4,10 +4,12 @@
 //! one-shot quantization algorithm itself (Frantar et al., 2022 — Hessian
 //! accumulation from calibration activations plus Cholesky-based error
 //! propagation), the 4-bit packing layout shared with the Python/Pallas
-//! layer, a dense CPU reference for the quantized GEMM ([`gemm`], the
-//! correctness oracle) and the fused dequantize-on-the-fly fast path
-//! ([`fused`], the kernel [`crate::engine::cpu_backend::CpuBackend`]
-//! serves through).
+//! layer (plus its vector-friendly [`pack::SwizzledWeights`] prepack), a
+//! dense CPU reference for the quantized GEMM ([`gemm`], the correctness
+//! oracle) and the fused dequantize-on-the-fly fast path ([`fused`], the
+//! kernel [`crate::engine::cpu_backend::CpuBackend`] serves through),
+//! runtime-dispatched between a portable scalar loop and the explicit
+//! AVX2+FMA path in [`simd`].
 //!
 //! Layout contract (identical to `python/compile/quant_ref.py` and
 //! `python/compile/kernels/ref.py`):
@@ -22,13 +24,22 @@ pub mod gemm;
 pub mod linalg;
 pub mod pack;
 pub mod quantize;
+pub mod simd;
 
-pub use fused::{fused_threads, gemm_fused, gemm_fused_threads, gemv_fused, gemv_fused_threads};
+pub use fused::{
+    fused_threads, gemm_fused, gemm_fused_prepared, gemm_fused_threads, gemm_fused_with,
+    gemv_fused, gemv_fused_prepared, gemv_fused_prepared_threads, gemv_fused_threads,
+    gemv_fused_with, PreparedTensor,
+};
 pub use gemm::{dequantize, gemm_f32, gemv_f32};
-pub use pack::{pack_cols, pack_rows, unpack_cols, unpack_rows, NIBBLES_PER_WORD};
+pub use pack::{
+    pack_cols, pack_rows, swizzle_weights, unpack_cols, unpack_rows, SwizzledWeights,
+    NIBBLES_PER_WORD,
+};
 pub use quantize::{
     quantize_gptq, quantize_rtn, reconstruction_error, GptqConfig, QuantizedTensor,
 };
+pub use simd::{active_kernel, available_kernels, Kernel, KernelDispatch};
 
 /// A dense row-major f32 matrix (minimal, no external crates).
 #[derive(Debug, Clone, PartialEq)]

@@ -1,6 +1,82 @@
-//! 4-bit nibble packing (the exllama-style GPTQ storage layout).
+//! 4-bit nibble packing (the exllama-style GPTQ storage layout), plus the
+//! vector-friendly prepacked ("swizzled") copy the explicit-SIMD kernels
+//! stream from.
+//!
+//! The storage layout (`qweight: u32[K/8, N]`) is row-major over word
+//! rows: walking one column-octet down the K axis touches one 32-byte
+//! span per word row at an `N`-word stride.  [`SwizzledWeights`] is the
+//! VML-Opt analogue of the paper's coalesced vector loads: a
+//! column-interleaved copy in which a column-octet's entire K walk is one
+//! contiguous, 32-byte-aligned stream, so each step of the fused inner
+//! loop is a single aligned 256-bit load feeding all 8 lanes.
 
 pub const NIBBLES_PER_WORD: usize = 8;
+
+/// Eight consecutive columns' packed words for one word row — the unit a
+/// 256-bit vector load feeds.  `repr(align(32))` keeps every element of a
+/// `Vec<Lane8>` load-aligned (size 32 = align 32, no padding).
+#[repr(C, align(32))]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lane8(pub [u32; 8]);
+
+/// Column-interleaved prepack of a `u32[K/8, N]` weight matrix:
+/// `octet(o, w)` holds word row `w` of columns `8o..8o+8`, laid out so
+/// octet `o`'s word rows `0..K/8` are contiguous (`lanes[o * K/8 + w]`).
+/// Computed once per tensor (see `fused::PreparedTensor`) and reused by
+/// every serve-path projection — the swizzle never runs on the hot path.
+#[derive(Debug, Clone)]
+pub struct SwizzledWeights {
+    kw: usize,
+    nw: usize,
+    lanes: Vec<Lane8>,
+}
+
+impl SwizzledWeights {
+    /// Word rows per column (`K / 8`).
+    pub fn kw(&self) -> usize {
+        self.kw
+    }
+
+    /// Columns covered (`N`).
+    pub fn n(&self) -> usize {
+        self.nw * NIBBLES_PER_WORD
+    }
+
+    /// Word row `w` of column-octet `o` (columns `8o..8o+8`).
+    #[inline]
+    pub fn octet(&self, o: usize, w: usize) -> &[u32; 8] {
+        &self.lanes[o * self.kw + w].0
+    }
+
+    /// Flat 32-byte-aligned word view: octet `(o, w)` starts at index
+    /// `(o * kw + w) * 8`.  The SIMD kernels index this directly.
+    pub fn words(&self) -> &[u32] {
+        // SAFETY: Lane8 is repr(C) over [u32; 8] with no padding (size 32
+        // == align 32), so the Vec's backing store is a valid contiguous
+        // [u32] of 8 * len elements.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.lanes.as_ptr() as *const u32,
+                self.lanes.len() * NIBBLES_PER_WORD,
+            )
+        }
+    }
+}
+
+/// Build the column-interleaved prepack of `qweight` (`u32[kw, n]`).
+pub fn swizzle_weights(qweight: &[u32], kw: usize, n: usize) -> SwizzledWeights {
+    assert_eq!(qweight.len(), kw * n);
+    assert_eq!(n % NIBBLES_PER_WORD, 0, "N must be a multiple of 8");
+    let nw = n / NIBBLES_PER_WORD;
+    let mut lanes = vec![Lane8([0; NIBBLES_PER_WORD]); nw * kw];
+    for o in 0..nw {
+        for w in 0..kw {
+            let src = w * n + o * NIBBLES_PER_WORD;
+            lanes[o * kw + w].0.copy_from_slice(&qweight[src..src + NIBBLES_PER_WORD]);
+        }
+    }
+    SwizzledWeights { kw, nw, lanes }
+}
 
 /// Pack codes `u8[K, N]` (values 0..=15) into `u32[K/8, N]`:
 /// nibble `j` (bits `4j..4j+4`) of word `w` holds row `8w + j`.
@@ -120,5 +196,43 @@ mod tests {
     #[should_panic(expected = "multiple of 8")]
     fn pack_rows_rejects_bad_k() {
         pack_rows(&[0u8; 12], 12, 1);
+    }
+
+    #[test]
+    fn swizzle_octets_match_storage_layout() {
+        let mut rng = Rng::new(3);
+        let (k, n) = (64, 40);
+        let kw = k / NIBBLES_PER_WORD;
+        let qweight: Vec<u32> = (0..kw * n).map(|_| rng.next_u32()).collect();
+        let swz = swizzle_weights(&qweight, kw, n);
+        assert_eq!(swz.kw(), kw);
+        assert_eq!(swz.n(), n);
+        for o in 0..n / NIBBLES_PER_WORD {
+            for w in 0..kw {
+                let src = w * n + o * NIBBLES_PER_WORD;
+                assert_eq!(
+                    &swz.octet(o, w)[..],
+                    &qweight[src..src + NIBBLES_PER_WORD],
+                    "o={o} w={w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn swizzle_flat_view_is_aligned_and_consistent() {
+        let mut rng = Rng::new(4);
+        let (kw, n) = (16, 24);
+        let qweight: Vec<u32> = (0..kw * n).map(|_| rng.next_u32()).collect();
+        let swz = swizzle_weights(&qweight, kw, n);
+        let words = swz.words();
+        assert_eq!(words.len(), kw * n);
+        assert_eq!(words.as_ptr() as usize % 32, 0, "flat view must be 32-byte aligned");
+        for o in 0..n / NIBBLES_PER_WORD {
+            for w in 0..kw {
+                let base = (o * kw + w) * NIBBLES_PER_WORD;
+                assert_eq!(&words[base..base + NIBBLES_PER_WORD], &swz.octet(o, w)[..]);
+            }
+        }
     }
 }

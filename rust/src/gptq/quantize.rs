@@ -53,6 +53,16 @@ impl QuantizedTensor {
     pub fn packed_bytes(&self) -> usize {
         self.qweight.len() * 4 + self.scales.len() * 4 + self.qzeros.len() * 4
     }
+
+    /// Minimum bytes one fused `M×K×N` evaluation must move: the packed
+    /// tensor once (weights stream, never re-read across column tiles of
+    /// the same pass) plus the `M×K` activations and `M×N` outputs.
+    /// The bench's GB/s accounting divides this by wall time, so the
+    /// number is a *floor* on realized bandwidth, not a cache-traffic
+    /// measurement.
+    pub fn fused_traffic_bytes(&self, m: usize) -> usize {
+        self.packed_bytes() + (m * self.k + m * self.n) * 4
+    }
 }
 
 /// GPTQ hyper-parameters.
@@ -331,6 +341,9 @@ mod tests {
         assert_eq!(q.qzeros.len(), (k / 32) * 1);
         assert_eq!(q.groups(), 2);
         assert!(q.packed_bytes() < k * 8 * 4 / 4); // >4x compression vs f32
+        // Traffic floor: packed tensor + f32 activations and outputs.
+        assert_eq!(q.fused_traffic_bytes(1), q.packed_bytes() + (k + 8) * 4);
+        assert_eq!(q.fused_traffic_bytes(4), q.packed_bytes() + 4 * (k + 8) * 4);
     }
 
     #[test]

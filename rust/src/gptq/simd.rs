@@ -1,0 +1,404 @@
+//! Runtime-dispatched explicit-SIMD kernels for [`super::fused`] — the
+//! CPU embodiment of the paper's heterogeneous platform adaptation.
+//!
+//! The paper's three platform-level strategies map onto this module as:
+//!
+//! * **VML-Opt** (vectorized memory loads): each inner-loop step is one
+//!   256-bit load of a column-octet's packed word row — aligned when the
+//!   tensor carries a [`SwizzledWeights`] prepack (see `pack`), unaligned
+//!   but still contiguous straight from the storage layout otherwise.
+//! * **ILA-Opt** (native vector FMA): nibbles are unpacked 8 lanes at a
+//!   time with shift/mask, converted once, and accumulated with
+//!   `vfmadd231ps`; the group-factored flush `s·(Σx·c − z·Σx)` is
+//!   evaluated entirely in vector registers.
+//! * **SMB-Opt** (shared-memory tile buffering): per-column-tile partial
+//!   outputs live in a stack scratch tile (`M_BLOCK × TILE_COLS`), so one
+//!   group's activation slab plus the flush tile stay L1-resident.
+//!
+//! Kernel selection happens **once** per process through
+//! [`KernelDispatch`]: AVX2+FMA hosts get the explicit path, everything
+//! else transparently falls back to the portable scalar loop in
+//! `fused` (which stays bit-identical to previous releases).  Set
+//! `OPT4GPTQ_KERNEL=scalar|avx2|auto` to override detection for testing;
+//! an `avx2` request on a host without the features falls back to scalar
+//! with a warning rather than faulting.
+//!
+//! Parity across dispatch paths is pinned by `rust/tests/parity.rs`
+//! (forced-scalar and forced-SIMD sweeps against the dense oracle);
+//! relative speed by `rust/benches/fused_gemm.rs`, which asserts the SIMD
+//! path is never slower than scalar on the headline decode shape.
+
+use std::sync::OnceLock;
+
+/// One fused-kernel implementation the dispatcher can select.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable scalar tile loop (`fused::fused_panel_cols`) — relies on
+    /// autovectorization, runs everywhere, bit-identical across releases.
+    Scalar,
+    /// Explicit AVX2+FMA octet kernel (x86-64 only, runtime-detected).
+    Avx2,
+}
+
+impl Kernel {
+    /// Stable lowercase name (used by `OPT4GPTQ_KERNEL` and bench JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+        }
+    }
+}
+
+impl std::fmt::Display for Kernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Whether `kernel` can run on this host.
+pub fn supports(kernel: Kernel) -> bool {
+    match kernel {
+        Kernel::Scalar => true,
+        Kernel::Avx2 => avx2_supported(),
+    }
+}
+
+/// Every kernel this host can run (scalar always; AVX2 when detected).
+/// Tests iterate this to sweep all dispatchable paths.
+pub fn available_kernels() -> Vec<Kernel> {
+    let mut v = vec![Kernel::Scalar];
+    if avx2_supported() {
+        v.push(Kernel::Avx2);
+    }
+    v
+}
+
+fn avx2_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Process-wide kernel selection, resolved once on first use: the
+/// dispatch-table analogue of the paper's per-platform kernel binding.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelDispatch {
+    /// The kernel every auto-dispatched fused call runs through.
+    pub kernel: Kernel,
+    /// How it was chosen: `"auto"` (feature detection), `"env"`
+    /// (`OPT4GPTQ_KERNEL`), or `"fallback"` (env requested an
+    /// unavailable or unknown kernel).
+    pub source: &'static str,
+}
+
+static DISPATCH: OnceLock<KernelDispatch> = OnceLock::new();
+
+impl KernelDispatch {
+    /// The resolved process-wide dispatch entry.  The environment is read
+    /// exactly once; later changes to `OPT4GPTQ_KERNEL` have no effect.
+    pub fn get() -> KernelDispatch {
+        *DISPATCH.get_or_init(|| match std::env::var("OPT4GPTQ_KERNEL") {
+            Ok(v) => match v.to_ascii_lowercase().as_str() {
+                "scalar" => KernelDispatch { kernel: Kernel::Scalar, source: "env" },
+                "avx2" if avx2_supported() => {
+                    KernelDispatch { kernel: Kernel::Avx2, source: "env" }
+                }
+                "avx2" => {
+                    eprintln!(
+                        "opt4gptq: OPT4GPTQ_KERNEL=avx2 but AVX2+FMA are not \
+                         available on this host; falling back to scalar"
+                    );
+                    KernelDispatch { kernel: Kernel::Scalar, source: "fallback" }
+                }
+                "auto" | "" => KernelDispatch::auto(),
+                other => {
+                    eprintln!(
+                        "opt4gptq: unknown OPT4GPTQ_KERNEL={other:?} \
+                         (expected scalar|avx2|auto); using auto detection"
+                    );
+                    KernelDispatch { kernel: KernelDispatch::auto().kernel, source: "fallback" }
+                }
+            },
+            Err(_) => KernelDispatch::auto(),
+        })
+    }
+
+    fn auto() -> KernelDispatch {
+        if avx2_supported() {
+            KernelDispatch { kernel: Kernel::Avx2, source: "auto" }
+        } else {
+            KernelDispatch { kernel: Kernel::Scalar, source: "auto" }
+        }
+    }
+}
+
+/// The kernel auto-dispatched fused calls run through.
+pub fn active_kernel() -> Kernel {
+    KernelDispatch::get().kernel
+}
+
+/// AVX2+FMA panel kernel: same contract as `fused::fused_panel_cols`
+/// (column window `[c0, c0+cn)` of one gathered M-block, `out` a zeroed
+/// `[mb, cn]` window), plus an optional swizzled weight view for aligned
+/// streaming loads.  Caller must have verified [`supports`]`(Avx2)`.
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn panel_avx2(
+    call: &super::fused::KernelCall<'_>,
+    xg: &[f32],
+    xsum: &[f32],
+    mb: usize,
+    c0: usize,
+    cn: usize,
+    out: &mut [f32],
+) {
+    let q = call.q;
+    assert!(avx2_supported(), "AVX2 kernel dispatched on a host without AVX2+FMA");
+    assert!(mb <= super::fused::M_BLOCK);
+    assert_eq!(xg.len(), mb * q.k);
+    assert_eq!(out.len(), mb * cn);
+    assert_eq!(c0 % 8, 0, "column window must be octet-aligned");
+    assert_eq!(cn % 8, 0, "column window width must be a multiple of 8");
+    assert_eq!(q.group_size % 8, 0, "group size must be a multiple of 8");
+    assert_eq!(q.k % q.group_size, 0, "group size must divide K");
+    if cn == 0 || mb == 0 {
+        return;
+    }
+    let geom = x86::Geom {
+        qweight: &q.qweight,
+        qzeros: &q.qzeros,
+        scales: &q.scales,
+        swz: call.swz.map(|s| s.words()).unwrap_or(&[]),
+        k: q.k,
+        n: q.n,
+        kw: q.k / 8,
+        nw: q.n / 8,
+        wpg: q.group_size / 8,
+        groups: q.k / q.group_size,
+    };
+    if let Some(s) = call.swz {
+        assert_eq!(s.kw(), geom.kw, "swizzle K mismatch");
+        assert_eq!(s.n(), q.n, "swizzle N mismatch");
+        // SAFETY: AVX2+FMA presence asserted above.
+        unsafe { x86::tiles::<true>(&geom, xg, xsum, mb, c0, cn, out) }
+    } else {
+        // SAFETY: AVX2+FMA presence asserted above.
+        unsafe { x86::tiles::<false>(&geom, xg, xsum, mb, c0, cn, out) }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use crate::gptq::fused::M_BLOCK;
+    use std::arch::x86_64::*;
+
+    /// Column-tile width of the SIMD path: the `M_BLOCK × TILE_COLS` f32
+    /// flush tile (8 KiB — the SMB-Opt stack scratch) plus one group's
+    /// activation slab stays L1-resident while weights stream through.
+    pub(super) const TILE_COLS: usize = 256;
+
+    /// Octet-group width for the `mb = 1` decode GEMV: four independent
+    /// accumulator chains hide the FMA latency a single running sum
+    /// would serialize on.
+    const GEMV_OG: usize = 4;
+
+    /// Resolved tensor geometry shared by the tile and octet loops.
+    pub(super) struct Geom<'a> {
+        pub qweight: &'a [u32],
+        pub qzeros: &'a [u32],
+        pub scales: &'a [f32],
+        /// Flat swizzled view (`pack::SwizzledWeights::words`); empty
+        /// when streaming straight from the storage layout.
+        pub swz: &'a [u32],
+        pub k: usize,
+        pub n: usize,
+        pub kw: usize,
+        pub nw: usize,
+        /// Words per group slab (`group_size / 8`).
+        pub wpg: usize,
+        pub groups: usize,
+    }
+
+    /// Tile loop over the column window: walk `[c0, c0+cn)` in
+    /// `TILE_COLS` tiles, K in group slabs, flushing each group's
+    /// register accumulators into the stack scratch tile.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2+FMA at runtime and the geometry
+    /// invariants checked by [`super::panel_avx2`].
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn tiles<const SWZ: bool>(
+        geom: &Geom<'_>,
+        xg: &[f32],
+        xsum: &[f32],
+        mb: usize,
+        c0: usize,
+        cn: usize,
+        out: &mut [f32],
+    ) {
+        let mut ytile = [0.0f32; M_BLOCK * TILE_COLS];
+        let mut cb = 0usize;
+        while cb < cn {
+            let nb = TILE_COLS.min(cn - cb);
+            let octs = nb / 8;
+            let oct0 = (c0 + cb) / 8; // absolute first octet of this tile
+            for mi in 0..mb {
+                ytile[mi * TILE_COLS..mi * TILE_COLS + nb].fill(0.0);
+            }
+            for gi in 0..geom.groups {
+                let mut oi = 0usize;
+                if mb == 1 {
+                    // Decode GEMV: 4-octet groups, 4 independent chains.
+                    while oi + GEMV_OG <= octs {
+                        group_octets::<1, GEMV_OG, SWZ>(
+                            geom,
+                            xg,
+                            xsum,
+                            gi,
+                            oct0 + oi,
+                            &mut ytile,
+                            oi * 8,
+                        );
+                        oi += GEMV_OG;
+                    }
+                }
+                while oi < octs {
+                    let o0 = oct0 + oi;
+                    let yc = oi * 8;
+                    match mb {
+                        1 => group_octets::<1, 1, SWZ>(geom, xg, xsum, gi, o0, &mut ytile, yc),
+                        2 => group_octets::<2, 1, SWZ>(geom, xg, xsum, gi, o0, &mut ytile, yc),
+                        3 => group_octets::<3, 1, SWZ>(geom, xg, xsum, gi, o0, &mut ytile, yc),
+                        4 => group_octets::<4, 1, SWZ>(geom, xg, xsum, gi, o0, &mut ytile, yc),
+                        5 => group_octets::<5, 1, SWZ>(geom, xg, xsum, gi, o0, &mut ytile, yc),
+                        6 => group_octets::<6, 1, SWZ>(geom, xg, xsum, gi, o0, &mut ytile, yc),
+                        7 => group_octets::<7, 1, SWZ>(geom, xg, xsum, gi, o0, &mut ytile, yc),
+                        8 => group_octets::<8, 1, SWZ>(geom, xg, xsum, gi, o0, &mut ytile, yc),
+                        _ => unreachable!("mb is capped at M_BLOCK"),
+                    }
+                    oi += 1;
+                }
+            }
+            for mi in 0..mb {
+                out[mi * cn + cb..mi * cn + cb + nb]
+                    .copy_from_slice(&ytile[mi * TILE_COLS..mi * TILE_COLS + nb]);
+            }
+            cb += nb;
+        }
+    }
+
+    /// One group slab × `OG` column-octets × `MB` activation rows, fully
+    /// register-resident: `MB×OG` running sums accumulate `Σ x·code`
+    /// with `vfmadd231ps` over the slab's word rows (8-lane nibble
+    /// unpack via shift/mask per row), then the group-factored flush
+    /// `y += s·(acc − z·Σx)` lands in the scratch tile at `ycol`.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2+FMA at runtime; `o0 + OG` octets
+    /// and `ycol + OG*8` columns must be in bounds.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn group_octets<const MB: usize, const OG: usize, const SWZ: bool>(
+        geom: &Geom<'_>,
+        xg: &[f32],
+        xsum: &[f32],
+        gi: usize,
+        o0: usize,
+        ytile: &mut [f32],
+        ycol: usize,
+    ) {
+        let mask = _mm256_set1_epi32(0xF);
+        let w0 = gi * geom.wpg;
+        let mut acc = [[_mm256_setzero_ps(); OG]; MB];
+        for dw in 0..geom.wpg {
+            let w = w0 + dw;
+            // One 256-bit load per octet feeds all 8 lanes (VML-Opt):
+            // aligned from the swizzled stream, unaligned-contiguous
+            // straight from the storage layout otherwise.
+            let mut words = [_mm256_setzero_si256(); OG];
+            for (oc, wrd) in words.iter_mut().enumerate() {
+                *wrd = if SWZ {
+                    _mm256_load_si256(
+                        geom.swz.as_ptr().add(((o0 + oc) * geom.kw + w) * 8) as *const __m256i
+                    )
+                } else {
+                    _mm256_loadu_si256(
+                        geom.qweight.as_ptr().add(w * geom.n + (o0 + oc) * 8) as *const __m256i
+                    )
+                };
+            }
+            // Eight nibble rows per word: shift/mask unpack, convert
+            // once, FMA into every row's accumulator (ILA-Opt).
+            for j in 0..8 {
+                let mut nib = [_mm256_setzero_ps(); OG];
+                for (oc, nb) in nib.iter_mut().enumerate() {
+                    *nb = _mm256_cvtepi32_ps(_mm256_and_si256(words[oc], mask));
+                    words[oc] = _mm256_srli_epi32::<4>(words[oc]);
+                }
+                for (mi, arow) in acc.iter_mut().enumerate() {
+                    let xv = _mm256_set1_ps(*xg.get_unchecked(mi * geom.k + w * 8 + j));
+                    for (oc, a) in arow.iter_mut().enumerate() {
+                        *a = _mm256_fmadd_ps(xv, nib[oc], *a);
+                    }
+                }
+            }
+        }
+        // Group-factored flush, entirely in vector registers:
+        // y += s·(acc − z·Σx).
+        let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+        for oc in 0..OG {
+            let o = o0 + oc;
+            let zword = *geom.qzeros.get_unchecked(gi * geom.nw + o) as i32;
+            let z = _mm256_cvtepi32_ps(_mm256_and_si256(
+                _mm256_srlv_epi32(_mm256_set1_epi32(zword), shifts),
+                mask,
+            ));
+            let s = _mm256_loadu_ps(geom.scales.as_ptr().add(gi * geom.n + o * 8));
+            for (mi, arow) in acc.iter().enumerate() {
+                let xs = _mm256_set1_ps(*xsum.get_unchecked(mi * geom.groups + gi));
+                let yp = ytile.as_mut_ptr().add(mi * TILE_COLS + ycol + oc * 8);
+                let y = _mm256_loadu_ps(yp);
+                _mm256_storeu_ps(
+                    yp,
+                    _mm256_fmadd_ps(s, _mm256_sub_ps(arow[oc], _mm256_mul_ps(z, xs)), y),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_is_always_available() {
+        let kernels = available_kernels();
+        assert!(kernels.contains(&Kernel::Scalar));
+        assert!(supports(Kernel::Scalar));
+        for k in kernels {
+            assert!(supports(k), "listed kernel {k} must be runnable");
+        }
+    }
+
+    #[test]
+    fn dispatch_selects_a_supported_kernel() {
+        let d = KernelDispatch::get();
+        assert!(supports(d.kernel), "dispatched kernel {} must be runnable", d.kernel);
+        assert!(matches!(d.source, "auto" | "env" | "fallback"));
+        // The table resolves once: repeated reads agree.
+        assert_eq!(KernelDispatch::get().kernel, d.kernel);
+        assert_eq!(active_kernel(), d.kernel);
+    }
+
+    #[test]
+    fn kernel_names_are_stable() {
+        assert_eq!(Kernel::Scalar.name(), "scalar");
+        assert_eq!(Kernel::Avx2.name(), "avx2");
+        assert_eq!(format!("{}", Kernel::Avx2), "avx2");
+    }
+}
