@@ -91,6 +91,9 @@ fn serve<B: Backend>(backend: B, args: &Args, label: &str) -> opt4gptq::Result<(
     // allocates tables over.
     let total_blocks = args.get_usize("blocks", 256);
     let block_size = args.get_usize("block-size", 16);
+    // Prefill chunk tokens per mixed step (chunked prefill keeps decode
+    // latency bounded while long prompts stream in block-aligned chunks).
+    let prefill_budget = args.get_usize("prefill-budget", 64);
     let tok = ByteTokenizer;
     let max_batch = backend.max_batch();
     let mut engine = Engine::new(
@@ -99,7 +102,8 @@ fn serve<B: Backend>(backend: B, args: &Args, label: &str) -> opt4gptq::Result<(
             max_seq_len: backend.max_seq_len(),
             block_size,
             total_blocks,
-            max_prefills_per_step: 2,
+            prefill_budget,
+            ..Default::default()
         },
         backend,
     );
@@ -144,5 +148,11 @@ fn serve<B: Backend>(backend: B, args: &Args, label: &str) -> opt4gptq::Result<(
     println!("mean TTFT:         {:.3}s", m.mean_ttft());
     println!("mean decode batch: {:.2}", m.mean_decode_batch());
     println!("prefix-cache hits: {}", engine.scheduler.blocks.prefix_hits);
+    println!("prefill chunks:    {}", m.prefill_chunks);
+    println!(
+        "prefix skip:       {} tokens skipped ({:.1}% of prompt tokens)",
+        m.prefill_tokens_skipped,
+        m.prefix_skip_rate() * 100.0
+    );
     Ok(())
 }

@@ -40,7 +40,7 @@ fn main() {
         for i in 0..1000usize {
             let plen = rng.range_usize(1, 120);
             let prompt: Vec<u32> = (0..plen).map(|_| rng.next_u32() % 1000).collect();
-            assert!(bm.allocate(i, &prompt));
+            assert!(bm.allocate(i, &prompt).is_some());
             for t in 0..rng.range_usize(0, 40) {
                 if !bm.append_token(i, plen + t + 1) {
                     break;

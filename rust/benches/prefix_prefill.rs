@@ -1,0 +1,242 @@
+//! Prefix-aware chunked prefill vs forced recompute on the real
+//! [`CpuBackend`]: the paper's "never pay for work the platform can
+//! remember" discipline applied to the serving layer.
+//!
+//! Two measurements per (prefix length, chunk budget) point:
+//!
+//! * **recompute** — prefill the whole prompt through a table that
+//!   shares the prefix blocks (what `OPT4GPTQ_PREFIX_SKIP=0` does:
+//!   shared memory, duplicated compute);
+//! * **skip** — prefill only the tail (`start = prefix_len`), reading
+//!   the cached prefix K/V through the shared blocks.
+//!
+//! Acceptance floor (full mode only): with a shared prefix spanning
+//! ≥ 2 blocks, the skip path must be **strictly faster** than forced
+//! recompute (best-of-N), and both paths must produce bit-identical
+//! logits.  Chunked prefill is additionally swept across budgets —
+//! including one below the block size — and must stay bit-identical to
+//! the one-shot pass.
+//!
+//! Every measurement lands in `BENCH_prefix_prefill.json` (prefix
+//! length, chunk budget, tokens/s, skipped fraction).  Run:
+//! `cargo bench --bench prefix_prefill` — or with `-- --smoke` for the
+//! CI-sized run (tiny shapes, no perf floors, JSON still emitted).
+
+use opt4gptq::benchkit::{bench, fmt_duration, Table};
+use opt4gptq::engine::{Backend, CpuBackend, CpuModelConfig, PrefillDesc};
+
+const BLOCK_SIZE: usize = 16;
+
+fn backend(max_seq: usize) -> CpuBackend {
+    let mut be = CpuBackend::new(CpuModelConfig {
+        max_seq,
+        // A bit wider than the default test model so each prefill does
+        // measurable work while the bench stays CI-friendly.
+        d_model: 128,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 256,
+        ..Default::default()
+    })
+    .expect("backend config");
+    be.bind_kv(64, BLOCK_SIZE);
+    be
+}
+
+fn prompt(len: usize) -> Vec<u32> {
+    (0..len).map(|i| ((i * 37 + 11) % 256) as u32).collect()
+}
+
+fn table_for(len: usize, first_block: usize) -> Vec<usize> {
+    (0..len.div_ceil(BLOCK_SIZE)).map(|b| first_block + b).collect()
+}
+
+/// One-shot prefill of `tokens[start..]` through `table`; returns the
+/// final-token logits.
+fn prefill_span(be: &mut CpuBackend, tokens: &[u32], start: usize, table: &[usize]) -> Vec<f32> {
+    let (logits, _) = be
+        .prefill(PrefillDesc {
+            seq_id: 0,
+            tokens: &tokens[start..],
+            start,
+            is_last: true,
+            block_table: table,
+        })
+        .expect("prefill");
+    logits
+}
+
+/// Chunked prefill under `budget` tokens per step; returns the final
+/// chunk's logits.
+fn prefill_chunked(
+    be: &mut CpuBackend,
+    tokens: &[u32],
+    start: usize,
+    budget: usize,
+    table: &[usize],
+) -> Vec<f32> {
+    let mut pos = start;
+    let mut last = Vec::new();
+    while pos < tokens.len() {
+        let end = (pos + budget).min(tokens.len());
+        let out = be
+            .step(
+                &[PrefillDesc {
+                    seq_id: 0,
+                    tokens: &tokens[pos..end],
+                    start: pos,
+                    is_last: end == tokens.len(),
+                    block_table: table,
+                }],
+                &[],
+            )
+            .expect("chunked prefill");
+        if end == tokens.len() {
+            last = out.prefill_logits[0].clone().expect("final chunk logits");
+        }
+        pos = end;
+    }
+    last
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!(
+        "prefix-aware chunked prefill bench{}",
+        if smoke { "  [smoke mode: reduced shapes, no perf floors]" } else { "" }
+    );
+
+    // (prompt_len, prefix_len) grid; prefixes are whole blocks.
+    let cases: &[(usize, usize)] = if smoke {
+        &[(48, 32)]
+    } else {
+        &[(96, 32), (96, 64), (160, 128)]
+    };
+    let budgets: &[usize] = if smoke { &[8, 48] } else { &[8, 16, 48, 4096] };
+    let iters = if smoke { 3 } else { 9 };
+
+    let mut table = Table::new(
+        "cached-prefix prefill vs forced recompute (CpuBackend wall clock)",
+        &["prompt", "prefix", "recompute p50", "skip p50", "speedup", "skipped"],
+    );
+    let mut failures: Vec<String> = Vec::new();
+    let mut json_rows: Vec<String> = Vec::new();
+
+    for &(prompt_len, prefix_len) in cases {
+        assert_eq!(prefix_len % BLOCK_SIZE, 0, "prefixes must be whole blocks");
+        let toks = prompt(prompt_len);
+        let mut be = backend(prompt_len.max(64));
+
+        // Warm sequence: fills the shared prefix blocks (and the rest of
+        // its own table) exactly as a first request would.
+        let warm_table = table_for(prompt_len, 0);
+        let warm = prefill_span(&mut be, &toks, 0, &warm_table);
+
+        // A second sequence sharing the prefix blocks, private tail.
+        let shared_blocks = prefix_len / BLOCK_SIZE;
+        let mut shared_table: Vec<usize> = warm_table[..shared_blocks].to_vec();
+        shared_table.extend(table_for(prompt_len - prefix_len, 32));
+
+        // Parity first: a fast wrong prefill is not a speedup.
+        let recompute_logits = prefill_span(&mut be, &toks, 0, &shared_table);
+        let skip_logits = prefill_span(&mut be, &toks, prefix_len, &shared_table);
+        assert_eq!(recompute_logits, warm, "recompute through shared blocks diverged");
+        assert_eq!(skip_logits, warm, "prefix-skip logits diverged from full prefill");
+
+        let recompute = bench(
+            &format!("recompute {prompt_len}t (prefix {prefix_len})"),
+            1,
+            iters,
+            || {
+                std::hint::black_box(prefill_span(&mut be, &toks, 0, &shared_table));
+            },
+        );
+        let skip = bench(
+            &format!("skip      {prompt_len}t (prefix {prefix_len})"),
+            1,
+            iters,
+            || {
+                std::hint::black_box(prefill_span(&mut be, &toks, prefix_len, &shared_table));
+            },
+        );
+        let speedup = recompute.min / skip.min;
+        let skipped_fraction = prefix_len as f64 / prompt_len as f64;
+        // Strict floor: a cached prefix of >= 2 blocks must make prefill
+        // faster, not just not-slower (best-of-N absorbs noise).
+        if !smoke && prefix_len >= 2 * BLOCK_SIZE && speedup <= 1.0 {
+            failures.push(format!(
+                "prefix {prefix_len}/{prompt_len}: skip is not faster ({speedup:.3}x best-of)"
+            ));
+        }
+        table.row(vec![
+            format!("{prompt_len}"),
+            format!("{prefix_len} ({shared_blocks} blocks)"),
+            fmt_duration(recompute.p50),
+            fmt_duration(skip.p50),
+            format!("{speedup:.2}x"),
+            format!("{:.0}%", skipped_fraction * 100.0),
+        ]);
+        json_rows.push(format!(
+            "    {{\"prompt_len\": {prompt_len}, \"prefix_len\": {prefix_len}, \
+             \"chunk_budget\": null, \"mode\": \"skip_vs_recompute\", \
+             \"recompute_ns\": {:.0}, \"skip_ns\": {:.0}, \
+             \"recompute_tok_per_s\": {:.1}, \"skip_tok_per_s\": {:.1}, \
+             \"speedup_best_of\": {speedup:.3}, \"skipped_fraction\": {skipped_fraction:.3}}}",
+            recompute.p50 * 1e9,
+            skip.p50 * 1e9,
+            prompt_len as f64 / recompute.p50,
+            (prompt_len - prefix_len) as f64 / skip.p50,
+        ));
+
+        // Chunk-budget sweep on the same prompt (no prefix skip: isolate
+        // the chunking cost/parity from the skip win).
+        for &budget in budgets {
+            let chunked_logits = prefill_chunked(&mut be, &toks, 0, budget, &shared_table);
+            assert_eq!(
+                chunked_logits, warm,
+                "budget {budget}: chunked prefill diverged from one-shot"
+            );
+            let chunked = bench(
+                &format!("chunked   {prompt_len}t budget {budget}"),
+                1,
+                iters,
+                || {
+                    std::hint::black_box(prefill_chunked(&mut be, &toks, 0, budget, &shared_table));
+                },
+            );
+            json_rows.push(format!(
+                "    {{\"prompt_len\": {prompt_len}, \"prefix_len\": {prefix_len}, \
+                 \"chunk_budget\": {budget}, \"mode\": \"chunked\", \
+                 \"chunked_ns\": {:.0}, \"chunked_tok_per_s\": {:.1}, \
+                 \"skipped_fraction\": 0.0}}",
+                chunked.p50 * 1e9,
+                prompt_len as f64 / chunked.p50,
+            ));
+        }
+    }
+
+    table.print();
+
+    let json = format!(
+        "{{\n  \"bench\": \"prefix_prefill\",\n  \"smoke\": {smoke},\n  \
+         \"block_size\": {BLOCK_SIZE},\n  \"cases\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n"),
+    );
+    std::fs::write("BENCH_prefix_prefill.json", &json)
+        .expect("failed to write BENCH_prefix_prefill.json");
+    println!("\nwrote BENCH_prefix_prefill.json ({} rows)", json_rows.len());
+
+    if failures.is_empty() {
+        if smoke {
+            println!("\nshape check: smoke mode (perf floors skipped; parity asserts passed)");
+        } else {
+            println!("\nshape check: OK (prefix-skip strictly faster at >= 2 shared blocks; chunked bit-identical)");
+        }
+    } else {
+        println!("\nshape check FAILED:");
+        for f in &failures {
+            println!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -26,8 +26,13 @@
 //!   sequence ids onto lanes internally.
 //!
 //! Lifecycle: the engine announces the paged-KV geometry once via
-//! [`Backend::bind_kv`], then streams [`PrefillDesc`]/[`DecodeDesc`]
-//! work, and after every step returns physically-freed blocks through
+//! [`Backend::bind_kv`], then drives **mixed steps** through
+//! [`Backend::step`] — each step carries the prefill chunks scheduled
+//! under the token budget ([`PrefillDesc`], including `start > 0`
+//! chunks that resume a partially-prefilled prompt or skip a cached
+//! prefix outright) *and* the decode batch ([`DecodeDesc`]) in one
+//! call, so backends fold everything into a single forward pass.  After
+//! every step the engine returns physically-freed blocks through
 //! [`Backend::release_blocks`] (debug builds poison them — see
 //! [`super::kv`]) and retired sequence ids through
 //! [`Backend::release_seq`].
@@ -40,16 +45,33 @@ use crate::Result;
 
 use super::block_manager::BlockId;
 
-/// One sequence's prefill work: run the whole prompt, writing K/V
-/// through the block table.
+/// One prefill **chunk**: a contiguous span of a sequence's prompt,
+/// written through the block table starting at position `start`.
+///
+/// A whole-prompt prefill is the special case `start == 0, is_last ==
+/// true`.  Chunked prefill sends a long prompt as several descriptors
+/// across engine steps; prefix-aware prefill starts the first chunk at
+/// `cached_len` (the leading tokens whose K/V already live in shared,
+/// fully-computed prefix blocks — the backend never sees them at all).
 #[derive(Debug, Clone, Copy)]
 pub struct PrefillDesc<'a> {
     /// Engine-wide sequence id (stable across preemptions; the unit
     /// [`Backend::release_seq`] later retires).
     pub seq_id: usize,
-    /// The prompt tokens; token `i`'s K/V entry lands at position `i`.
+    /// This chunk's tokens; token `i`'s K/V entry lands at position
+    /// `start + i`, and its attention covers positions `0..=start + i`
+    /// (reading earlier chunks' — or a shared prefix's — K/V through the
+    /// table).
     pub tokens: &'a [u32],
-    /// Physical block table covering at least `tokens.len()` positions.
+    /// Position of `tokens[0]`: cached-prefix length plus previously
+    /// executed chunk lengths.
+    pub start: usize,
+    /// True when this chunk reaches the end of the prompt: the backend
+    /// must return next-token logits for it (and may skip the lm_head
+    /// for chunks that don't).
+    pub is_last: bool,
+    /// Physical block table covering at least `start + tokens.len()`
+    /// positions.
     pub block_table: &'a [BlockId],
 }
 
@@ -68,6 +90,19 @@ pub struct DecodeDesc<'a> {
     pub block_table: &'a [BlockId],
 }
 
+/// Everything one mixed engine step produced.
+#[derive(Debug, Clone)]
+pub struct StepOutput {
+    /// One entry per prefill descriptor, in order: `Some(next-token
+    /// logits)` iff the chunk was `is_last`, `None` for mid-prompt
+    /// chunks (their only output is K/V written through the table).
+    pub prefill_logits: Vec<Option<Vec<f32>>>,
+    /// One logits row per decode descriptor, in order.
+    pub decode_logits: Vec<Vec<f32>>,
+    /// Elapsed seconds (wall or virtual) for the whole step.
+    pub secs: f64,
+}
+
 /// A model execution backend (paged-KV batch contract — see module docs).
 pub trait Backend {
     /// Max sequences decodable in one step.
@@ -81,13 +116,33 @@ pub trait Backend {
     /// simulated/dense-lane backends may ignore it.
     fn bind_kv(&mut self, _total_blocks: usize, _block_size: usize) {}
 
-    /// Run one sequence's prompt; returns (next-token logits, elapsed
-    /// seconds).
-    fn prefill(&mut self, req: PrefillDesc<'_>) -> Result<(Vec<f32>, f64)>;
+    /// Run one **mixed batch**: every prefill chunk and every decode row
+    /// in a single call (backends fold them into one forward pass, so
+    /// prefill chunks keep the fused GEMM at M ≫ 1 while decodes ride
+    /// along).  Either slice may be empty, but not both.
+    fn step(
+        &mut self,
+        prefills: &[PrefillDesc<'_>],
+        decodes: &[DecodeDesc<'_>],
+    ) -> Result<StepOutput>;
 
-    /// Run one decode step; returns one logits row per entry plus the
-    /// elapsed seconds for the whole batch.
-    fn decode(&mut self, batch: &[DecodeDesc<'_>]) -> Result<(Vec<Vec<f32>>, f64)>;
+    /// Convenience: run one whole-prompt (or final-chunk) prefill alone;
+    /// returns (next-token logits, elapsed seconds).  The descriptor
+    /// must have `is_last == true`.
+    fn prefill(&mut self, req: PrefillDesc<'_>) -> Result<(Vec<f32>, f64)> {
+        let mut out = self.step(std::slice::from_ref(&req), &[])?;
+        match out.prefill_logits.pop().flatten() {
+            Some(logits) => Ok((logits, out.secs)),
+            None => anyhow::bail!("prefill chunk produced no logits (is_last == false?)"),
+        }
+    }
+
+    /// Convenience: run one pure decode batch; returns one logits row
+    /// per entry plus the elapsed seconds for the whole batch.
+    fn decode(&mut self, batch: &[DecodeDesc<'_>]) -> Result<(Vec<Vec<f32>>, f64)> {
+        let out = self.step(&[], batch)?;
+        Ok((out.decode_logits, out.secs))
+    }
 
     /// Blocks whose refcount reached zero since the last step: the
     /// memory is returned to the allocator, and paged backends may
@@ -149,23 +204,46 @@ impl Backend for SimBackend {
         self.sim_vocab
     }
 
-    fn prefill(&mut self, req: PrefillDesc<'_>) -> Result<(Vec<f32>, f64)> {
-        let secs = self.perf.prefill_seconds(self.model, req.tokens.len().max(1), self.opt);
-        let logits = self.fake_logits(self.sim_vocab);
-        Ok((logits, secs))
-    }
-
-    fn decode(&mut self, batch: &[DecodeDesc<'_>]) -> Result<(Vec<Vec<f32>>, f64)> {
-        assert!(!batch.is_empty());
-        // `context_len + 1` counts the fed token, matching the sequence
-        // length the perf model's attention term is parameterized on.
-        let mean_ctx = batch.iter().map(|e| (e.context_len + 1) as f64).sum::<f64>()
-            / batch.len() as f64;
-        let secs =
-            self.perf
-                .decode_step_seconds(self.model, batch.len(), mean_ctx.max(1.0), self.opt);
-        let logits = (0..batch.len()).map(|_| self.fake_logits(self.sim_vocab)).collect();
-        Ok((logits, secs))
+    fn step(
+        &mut self,
+        prefills: &[PrefillDesc<'_>],
+        decodes: &[DecodeDesc<'_>],
+    ) -> Result<StepOutput> {
+        assert!(!prefills.is_empty() || !decodes.is_empty(), "empty backend step");
+        let mut secs = 0.0;
+        // Each chunk is priced independently as the *incremental* cost of
+        // extending that sequence's prefill from `start` to `start + len`
+        // (f(end) − f(start)): chunks of one prompt telescope to exactly
+        // the one-shot cost f(L) − f(cached_len), so the virtual clock
+        // neither rewards chunking for free nor lumps unrelated prompts
+        // into one superlinear attention term — and a skipped cached
+        // prefix shows the same win a real backend sees.
+        for p in prefills {
+            let end = p.start + p.tokens.len();
+            secs += self.perf.prefill_seconds(self.model, end.max(1), self.opt);
+            if p.start > 0 {
+                secs -= self.perf.prefill_seconds(self.model, p.start, self.opt);
+            }
+        }
+        if !decodes.is_empty() {
+            // `context_len + 1` counts the fed token, matching the
+            // sequence length the perf model's attention term is
+            // parameterized on.
+            let mean_ctx = decodes.iter().map(|e| (e.context_len + 1) as f64).sum::<f64>()
+                / decodes.len() as f64;
+            secs += self.perf.decode_step_seconds(
+                self.model,
+                decodes.len(),
+                mean_ctx.max(1.0),
+                self.opt,
+            );
+        }
+        let prefill_logits = prefills
+            .iter()
+            .map(|p| p.is_last.then(|| self.fake_logits(self.sim_vocab)))
+            .collect();
+        let decode_logits = (0..decodes.len()).map(|_| self.fake_logits(self.sim_vocab)).collect();
+        Ok(StepOutput { prefill_logits, decode_logits, secs })
     }
 }
 
@@ -209,11 +287,43 @@ mod tests {
         let short = vec![1u32; 16];
         let long = vec![1u32; 512];
         let (_, t_short) = b
-            .prefill(PrefillDesc { seq_id: 0, tokens: &short, block_table: &[] })
+            .prefill(PrefillDesc { seq_id: 0, tokens: &short, start: 0, is_last: true, block_table: &[] })
             .unwrap();
         let (_, t_long) = b
-            .prefill(PrefillDesc { seq_id: 0, tokens: &long, block_table: &[] })
+            .prefill(PrefillDesc { seq_id: 0, tokens: &long, start: 0, is_last: true, block_table: &[] })
             .unwrap();
         assert!(t_long > t_short);
+    }
+
+    #[test]
+    fn mixed_step_costs_prefill_plus_decode() {
+        let m = by_name("Llama-2-7B-GPTQ").unwrap();
+        let mut b = SimBackend::new(m, OptConfig::BASELINE, 8);
+        let tokens = vec![1u32; 64];
+        let chunk = PrefillDesc { seq_id: 0, tokens: &tokens, start: 0, is_last: false, block_table: &[] };
+        let dec = [decode_desc(1, 30), decode_desc(2, 40)];
+        let out = b.step(&[chunk], &dec).unwrap();
+        assert_eq!(out.prefill_logits, vec![None], "mid-prompt chunk returns no logits");
+        assert_eq!(out.decode_logits.len(), 2);
+        let pre_only = b.step(&[chunk], &[]).unwrap();
+        let dec_only = b.step(&[], &dec).unwrap();
+        let sum = pre_only.secs + dec_only.secs;
+        assert!((out.secs - sum).abs() < 1e-12, "mixed step must cost both parts: {} vs {sum}", out.secs);
+    }
+
+    #[test]
+    fn skipped_prefix_reduces_simulated_prefill_cost() {
+        // The backend only sees the chunk tokens: a prefix-skip prefill
+        // of the tail must be cheaper than the whole prompt.
+        let m = by_name("Llama-2-7B-GPTQ").unwrap();
+        let mut b = SimBackend::new(m, OptConfig::BASELINE, 8);
+        let prompt = vec![1u32; 256];
+        let (_, t_full) = b
+            .prefill(PrefillDesc { seq_id: 0, tokens: &prompt, start: 0, is_last: true, block_table: &[] })
+            .unwrap();
+        let (_, t_tail) = b
+            .prefill(PrefillDesc { seq_id: 1, tokens: &prompt[192..], start: 192, is_last: true, block_table: &[] })
+            .unwrap();
+        assert!(t_tail < t_full, "skipping 192 cached tokens must be cheaper: {t_tail} vs {t_full}");
     }
 }

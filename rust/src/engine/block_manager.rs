@@ -19,6 +19,12 @@ struct Block {
     /// Hash of the full token prefix this block completes (prefix cache
     /// key); None for blocks still being filled.
     prefix_hash: Option<u64>,
+    /// True once the owning sequence's prefill has materialized every
+    /// position of this block in the paged K/V pool.  A prefix-cache hit
+    /// on a *computed* block can skip recomputation entirely; a hit on a
+    /// block whose owner is still mid-prefill shares the memory but must
+    /// recompute (the values do not exist yet).
+    computed: bool,
 }
 
 /// Allocator + per-sequence block tables.
@@ -50,7 +56,7 @@ impl BlockManager {
         BlockManager {
             block_size,
             blocks: (0..total_blocks)
-                .map(|_| Block { refcount: 0, prefix_hash: None })
+                .map(|_| Block { refcount: 0, prefix_hash: None, computed: false })
                 .collect(),
             free: (0..total_blocks).rev().collect(),
             prefix_index: HashMap::new(),
@@ -84,11 +90,21 @@ impl BlockManager {
 
     /// Allocate the block table for a new sequence's prompt, reusing
     /// prefix-cached blocks for fully-filled prefix blocks.
-    pub fn allocate(&mut self, seq_id: usize, prompt: &[u32]) -> bool {
+    ///
+    /// On success returns `Some(cached_len)`: the number of leading
+    /// prompt tokens whose K/V already live in fully-shared **and fully
+    /// computed** prefix blocks — the span a prefix-aware prefill may
+    /// skip outright.  A hit on a block whose owner is still mid-prefill
+    /// shares the memory (refcount bump) but contributes nothing to
+    /// `cached_len`: its values are not materialized yet.  Returns
+    /// `None` on out-of-memory (everything rolled back).
+    pub fn allocate(&mut self, seq_id: usize, prompt: &[u32]) -> Option<usize> {
         assert!(!self.tables.contains_key(&seq_id), "sequence already allocated");
         let needed = self.blocks_needed(prompt.len().max(1));
         let mut table = Vec::with_capacity(needed);
         let mut hasher: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut cached_blocks = 0usize;
+        let mut leading_run = true;
         for bi in 0..needed {
             let start = bi * self.block_size;
             let end = ((bi + 1) * self.block_size).min(prompt.len());
@@ -106,10 +122,16 @@ impl BlockManager {
                 if let Some(&b) = self.prefix_index.get(&k) {
                     self.blocks[b].refcount += 1;
                     self.prefix_hits += 1;
+                    if leading_run && self.blocks[b].computed {
+                        cached_blocks += 1;
+                    } else {
+                        leading_run = false;
+                    }
                     table.push(b);
                     continue;
                 }
             }
+            leading_run = false;
             match self.free.pop() {
                 Some(b) => {
                     // Reclaimed within this drain window: the block must
@@ -117,6 +139,7 @@ impl BlockManager {
                     self.freed_log.retain(|&x| x != b);
                     self.blocks[b].refcount = 1;
                     self.blocks[b].prefix_hash = key;
+                    self.blocks[b].computed = false;
                     if let Some(k) = key {
                         self.prefix_index.insert(k, b);
                     }
@@ -134,12 +157,27 @@ impl BlockManager {
                     for &b in table.iter() {
                         self.release_block(b);
                     }
-                    return false;
+                    return None;
                 }
             }
         }
         self.tables.insert(seq_id, table);
-        true
+        Some((cached_blocks * self.block_size).min(prompt.len()))
+    }
+
+    /// Record prefill progress: every table block fully covered by the
+    /// first `upto_tokens` positions is now materialized in the paged
+    /// pool, so future prefix-cache hits on it may skip recomputation.
+    /// Idempotent; partial tail blocks stay uncomputed (they carry no
+    /// prefix hash and can never be hit anyway).
+    pub fn mark_computed(&mut self, seq_id: usize, upto_tokens: usize) {
+        let table = self.tables.get(&seq_id).expect("unknown sequence");
+        for (bi, &b) in table.iter().enumerate() {
+            if (bi + 1) * self.block_size > upto_tokens {
+                break;
+            }
+            self.blocks[b].computed = true;
+        }
     }
 
     /// Append one generated token; allocates a fresh block at block
@@ -160,6 +198,7 @@ impl BlockManager {
                 self.freed_log.retain(|&x| x != b);
                 self.blocks[b].refcount = 1;
                 self.blocks[b].prefix_hash = None;
+                self.blocks[b].computed = false;
                 table.push(b);
                 true
             }
@@ -175,6 +214,7 @@ impl BlockManager {
             if let Some(k) = blk.prefix_hash.take() {
                 self.prefix_index.remove(&k);
             }
+            blk.computed = false;
             self.free.push(b);
             self.freed_log.push(b);
         }
@@ -211,6 +251,9 @@ impl BlockManager {
             let in_free = self.free.contains(&b);
             if (blk.refcount == 0) != in_free {
                 return Err(format!("block {b}: refcount {} vs free-list {in_free}", blk.refcount));
+            }
+            if blk.refcount == 0 && blk.computed {
+                return Err(format!("freed block {b} still marked computed"));
             }
         }
         let used: usize = self.blocks.iter().filter(|b| b.refcount > 0).count();
@@ -253,7 +296,7 @@ mod tests {
     #[test]
     fn allocate_and_free_roundtrip() {
         let mut bm = BlockManager::new(16, 4);
-        assert!(bm.allocate(1, &[1, 2, 3, 4, 5]));
+        assert!(bm.allocate(1, &[1, 2, 3, 4, 5]).is_some());
         assert_eq!(bm.table(1).unwrap().len(), 2);
         assert_eq!(bm.free_blocks(), 14);
         bm.free_sequence(1);
@@ -264,7 +307,7 @@ mod tests {
     #[test]
     fn append_allocates_at_boundaries() {
         let mut bm = BlockManager::new(8, 4);
-        assert!(bm.allocate(1, &[1, 2, 3]));
+        assert!(bm.allocate(1, &[1, 2, 3]).is_some());
         assert_eq!(bm.table(1).unwrap().len(), 1);
         assert!(bm.append_token(1, 4)); // fills block 0
         assert_eq!(bm.table(1).unwrap().len(), 1);
@@ -276,13 +319,13 @@ mod tests {
     #[test]
     fn out_of_memory_reported_and_rolled_back() {
         let mut bm = BlockManager::new(2, 4);
-        assert!(bm.allocate(1, &[1, 1, 1, 1, 2, 2, 2, 2])); // uses both blocks
+        assert!(bm.allocate(1, &[1, 1, 1, 1, 2, 2, 2, 2]).is_some()); // uses both blocks
         // different content -> no prefix sharing -> must fail
-        assert!(!bm.allocate(2, &[9, 9, 9, 9, 8, 8, 8, 8]));
+        assert!(bm.allocate(2, &[9, 9, 9, 9, 8, 8, 8, 8]).is_none());
         assert!(bm.table(2).is_none());
         bm.check_invariants().unwrap();
         bm.free_sequence(1);
-        assert!(bm.allocate(2, &[9, 9, 9, 9, 8, 8, 8, 8]));
+        assert!(bm.allocate(2, &[9, 9, 9, 9, 8, 8, 8, 8]).is_some());
         bm.check_invariants().unwrap();
     }
 
@@ -290,9 +333,9 @@ mod tests {
     fn prefix_sharing_reuses_full_blocks() {
         let mut bm = BlockManager::new(16, 4);
         let prompt: Vec<u32> = (0..8).collect();
-        assert!(bm.allocate(1, &prompt));
+        assert!(bm.allocate(1, &prompt).is_some());
         let before = bm.free_blocks();
-        assert!(bm.allocate(2, &prompt));
+        assert!(bm.allocate(2, &prompt).is_some());
         // Both full blocks shared: no new blocks consumed.
         assert_eq!(bm.free_blocks(), before);
         assert_eq!(bm.prefix_hits, 2);
@@ -309,8 +352,8 @@ mod tests {
     #[test]
     fn divergent_prompts_do_not_share() {
         let mut bm = BlockManager::new(16, 4);
-        assert!(bm.allocate(1, &[1, 2, 3, 4]));
-        assert!(bm.allocate(2, &[1, 2, 3, 9]));
+        assert!(bm.allocate(1, &[1, 2, 3, 4]).is_some());
+        assert!(bm.allocate(2, &[1, 2, 3, 9]).is_some());
         assert_ne!(bm.table(1).unwrap(), bm.table(2).unwrap());
         bm.check_invariants().unwrap();
     }
@@ -318,8 +361,8 @@ mod tests {
     #[test]
     fn partial_tail_block_is_private() {
         let mut bm = BlockManager::new(16, 4);
-        assert!(bm.allocate(1, &[1, 2, 3, 4, 5])); // 1 full + 1 partial
-        assert!(bm.allocate(2, &[1, 2, 3, 4, 5]));
+        assert!(bm.allocate(1, &[1, 2, 3, 4, 5]).is_some()); // 1 full + 1 partial
+        assert!(bm.allocate(2, &[1, 2, 3, 4, 5]).is_some());
         let t1 = bm.table(1).unwrap();
         let t2 = bm.table(2).unwrap();
         assert_eq!(t1[0], t2[0], "full prefix block shared");
@@ -338,18 +381,18 @@ mod tests {
     #[test]
     fn oom_rollback_leaves_no_dangling_prefix_entry() {
         let mut bm = BlockManager::new(3, 4);
-        assert!(bm.allocate(1, &[1, 1, 1, 1, 2, 2, 2, 2])); // 2 full blocks
+        assert!(bm.allocate(1, &[1, 1, 1, 1, 2, 2, 2, 2]).is_some()); // 2 full blocks
         // Seq 2 needs 3 blocks: its first full block is allocated *and*
         // prefix-indexed before the pool runs dry on the second — the
         // rollback must also retract that index entry.
-        assert!(!bm.allocate(2, &[5, 5, 5, 5, 6, 6, 6, 6, 7, 7, 7, 7]));
+        assert!(bm.allocate(2, &[5, 5, 5, 5, 6, 6, 6, 6, 7, 7, 7, 7]).is_none());
         assert!(bm.table(2).is_none());
         assert_eq!(bm.free_blocks(), 1);
         bm.check_invariants().unwrap();
         // A later identical prompt must take a *fresh* block, not "hit"
         // the rolled-back (freed) one through a stale index entry.
         let hits_before = bm.prefix_hits;
-        assert!(bm.allocate(3, &[5, 5, 5, 5]));
+        assert!(bm.allocate(3, &[5, 5, 5, 5]).is_some());
         assert_eq!(bm.prefix_hits, hits_before, "prefix hit on a rolled-back block");
         bm.check_invariants().unwrap();
     }
@@ -358,15 +401,15 @@ mod tests {
     fn oom_rollback_keeps_shared_prefix_blocks_alive() {
         let mut bm = BlockManager::new(3, 4);
         let prompt: Vec<u32> = (0..8).collect();
-        assert!(bm.allocate(1, &prompt));
+        assert!(bm.allocate(1, &prompt).is_some());
         // Seq 2 shares both full blocks, then fails on its private tail.
         let mut longer: Vec<u32> = prompt.clone();
         longer.extend([9, 9, 9, 9, 8]); // 4 blocks total > 3 available
-        assert!(!bm.allocate(2, &longer));
+        assert!(bm.allocate(2, &longer).is_none());
         bm.check_invariants().unwrap();
         // Seq 1's shared blocks survived the rollback untouched.
         assert_eq!(bm.table(1).unwrap().len(), 2);
-        assert!(bm.allocate(3, &prompt), "prefix cache must still serve the survivor");
+        assert!(bm.allocate(3, &prompt).is_some(), "prefix cache must still serve the survivor");
         assert!(bm.prefix_hits >= 4);
         bm.check_invariants().unwrap();
     }
@@ -375,8 +418,8 @@ mod tests {
     fn release_logs_report_physical_frees_once() {
         let mut bm = BlockManager::new(8, 4);
         let prompt: Vec<u32> = (0..8).collect();
-        assert!(bm.allocate(1, &prompt));
-        assert!(bm.allocate(2, &prompt)); // fully shared
+        assert!(bm.allocate(1, &prompt).is_some());
+        assert!(bm.allocate(2, &prompt).is_some()); // fully shared
         bm.take_released(); // discard allocation-era noise (none expected)
         bm.free_sequence(1);
         let (freed, seqs) = bm.take_released();
@@ -397,14 +440,74 @@ mod tests {
         // engine step): the drain must NOT report the reused block, or
         // the backend would poison memory a live table references.
         let mut bm = BlockManager::new(1, 4);
-        assert!(bm.allocate(1, &[1, 2, 3]));
+        assert!(bm.allocate(1, &[1, 2, 3]).is_some());
         let b = bm.table(1).unwrap()[0];
         bm.free_sequence(1);
-        assert!(bm.allocate(2, &[7, 8, 9]));
+        assert!(bm.allocate(2, &[7, 8, 9]).is_some());
         assert_eq!(bm.table(2).unwrap()[0], b, "the single block must be reused");
         let (freed, seqs) = bm.take_released();
         assert!(freed.is_empty(), "reused block must not be reported as freed: {freed:?}");
         assert_eq!(seqs, vec![1]);
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cached_len_counts_only_computed_shared_blocks() {
+        let mut bm = BlockManager::new(16, 4);
+        let prompt: Vec<u32> = (0..10).collect(); // 2 full blocks + tail
+        assert_eq!(bm.allocate(1, &prompt), Some(0), "fresh blocks cannot be cached");
+        // Seq 2 hits both full blocks, but seq 1 has not prefilled yet:
+        // memory is shared, compute is not skippable.
+        assert_eq!(bm.allocate(2, &prompt), Some(0), "uncomputed hits must not count");
+        bm.free_sequence(2);
+        // Seq 1's prefill passes the first block only.
+        bm.mark_computed(1, 5);
+        assert_eq!(bm.allocate(3, &prompt), Some(4), "one computed block = 4 tokens");
+        bm.free_sequence(3);
+        // Full prefill: both full blocks are now skippable.
+        bm.mark_computed(1, 10);
+        assert_eq!(bm.allocate(4, &prompt), Some(8));
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cached_len_is_clamped_and_reset_on_free() {
+        let mut bm = BlockManager::new(16, 4);
+        let prompt: Vec<u32> = (0..8).collect(); // exactly 2 full blocks
+        assert_eq!(bm.allocate(1, &prompt), Some(0));
+        bm.mark_computed(1, 8);
+        // Fully-cached prompt: cached_len covers the whole prompt (the
+        // scheduler clamps to len-1 to keep logits computable).
+        assert_eq!(bm.allocate(2, &prompt), Some(8));
+        bm.free_sequence(1);
+        bm.free_sequence(2);
+        bm.check_invariants().unwrap();
+        // All references dropped: the computed flag must not survive
+        // into a recycled block.
+        assert_eq!(bm.allocate(3, &prompt), Some(0), "freed blocks must forget computed state");
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cached_len_stops_at_first_gap() {
+        let mut bm = BlockManager::new(16, 4);
+        let a: Vec<u32> = (0..8).collect();
+        assert_eq!(bm.allocate(1, &a), Some(0));
+        bm.mark_computed(1, 8);
+        // Same first block, divergent second block: the leading cached
+        // run must stop at the divergence even though block 0 is hit.
+        let b: Vec<u32> = vec![0, 1, 2, 3, 9, 9, 9, 9];
+        assert_eq!(bm.allocate(2, &b), Some(4));
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn mark_computed_ignores_partial_tail() {
+        let mut bm = BlockManager::new(16, 4);
+        let prompt: Vec<u32> = (0..6).collect(); // 1 full + 1 partial
+        assert_eq!(bm.allocate(1, &prompt), Some(0));
+        bm.mark_computed(1, 6); // tail block only half-covered
+        assert_eq!(bm.allocate(2, &prompt), Some(4), "partial tail can never be cached");
         bm.check_invariants().unwrap();
     }
 }

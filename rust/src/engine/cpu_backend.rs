@@ -36,13 +36,12 @@ use std::time::Instant;
 use anyhow::bail;
 
 use crate::gptq::{
-    gemm_fused_prepared, gemv_fused_prepared, quantize_gptq, quantize_rtn, GptqConfig, Matrix,
-    PreparedTensor,
+    gemm_fused_prepared, quantize_gptq, quantize_rtn, GptqConfig, Matrix, PreparedTensor,
 };
 use crate::rng::Rng;
 use crate::Result;
 
-use super::backend::{Backend, DecodeDesc, PrefillDesc};
+use super::backend::{Backend, DecodeDesc, PrefillDesc, StepOutput};
 use super::block_manager::BlockId;
 use super::kv::PagedKvCache;
 
@@ -336,32 +335,78 @@ impl Backend for CpuBackend {
         self.kv = PagedKvCache::new(total_blocks, block_size, self.cfg.n_layers, self.cfg.d_model);
     }
 
-    fn prefill(&mut self, req: PrefillDesc<'_>) -> Result<(Vec<f32>, f64)> {
+    fn step(
+        &mut self,
+        prefills: &[PrefillDesc<'_>],
+        decodes: &[DecodeDesc<'_>],
+    ) -> Result<StepOutput> {
         let t0 = Instant::now();
-        if req.tokens.is_empty() {
-            bail!("cannot prefill an empty prompt");
+        if prefills.is_empty() && decodes.is_empty() {
+            bail!("empty backend step");
         }
-        let hidden = self.forward(&[SeqSpan { table: req.block_table, start: 0, tokens: req.tokens }])?;
-        let logits = gemv_fused_prepared(hidden.row(req.tokens.len() - 1), &self.lm_head);
-        Ok((logits, t0.elapsed().as_secs_f64()))
-    }
-
-    fn decode(&mut self, batch: &[DecodeDesc<'_>]) -> Result<(Vec<Vec<f32>>, f64)> {
-        let t0 = Instant::now();
-        assert!(!batch.is_empty());
-        // The fed token's K/V entry lands at `context_len`, one past the
-        // `context_len` tokens already materialized through the table.
-        let fed: Vec<[u32; 1]> = batch.iter().map(|e| [e.token]).collect();
-        let spans: Vec<SeqSpan<'_>> = batch
-            .iter()
-            .zip(&fed)
-            .map(|(e, tok)| SeqSpan { table: e.block_table, start: e.context_len, tokens: tok })
-            .collect();
+        for p in prefills {
+            if p.tokens.is_empty() {
+                bail!("cannot prefill an empty chunk");
+            }
+        }
+        // One forward pass over everything: prefill chunks (each starting
+        // at its `start` position — cached-prefix tokens never appear)
+        // followed by the decode rows.  The fed decode token's K/V entry
+        // lands at `context_len`, one past the materialized context.
+        let fed: Vec<[u32; 1]> = decodes.iter().map(|e| [e.token]).collect();
+        let mut spans: Vec<SeqSpan<'_>> = Vec::with_capacity(prefills.len() + decodes.len());
+        for p in prefills {
+            spans.push(SeqSpan { table: p.block_table, start: p.start, tokens: p.tokens });
+        }
+        for (e, tok) in decodes.iter().zip(&fed) {
+            spans.push(SeqSpan { table: e.block_table, start: e.context_len, tokens: tok });
+        }
         let hidden = self.forward(&spans)?;
-        let logits = gemm_fused_prepared(&hidden, &self.lm_head);
+
+        // lm_head only for rows that produce logits: the last token of
+        // every final chunk plus every decode row — batched into one
+        // fused GEMM (mid-prompt chunks skip the head entirely).
+        let mut head_rows: Vec<usize> = Vec::new();
+        let mut off = 0;
+        let mut last_row: Vec<Option<usize>> = Vec::with_capacity(prefills.len());
+        for p in prefills {
+            last_row.push(p.is_last.then(|| head_rows.len()));
+            if p.is_last {
+                head_rows.push(off + p.tokens.len() - 1);
+            }
+            off += p.tokens.len();
+        }
+        let decode_row0 = head_rows.len();
+        for i in 0..decodes.len() {
+            head_rows.push(off + i);
+        }
+        let d = self.cfg.d_model;
         let v = self.cfg.vocab;
-        let out = (0..batch.len()).map(|i| logits.data[i * v..(i + 1) * v].to_vec()).collect();
-        Ok((out, t0.elapsed().as_secs_f64()))
+        let logits = if head_rows.is_empty() {
+            Matrix::zeros(0, v)
+        } else if prefills.is_empty() {
+            // Pure decode: the head rows are exactly the hidden rows in
+            // order — run the lm_head on `hidden` directly, no gather
+            // copy on the steady-state decode path.
+            gemm_fused_prepared(&hidden, &self.lm_head)
+        } else {
+            let mut gathered = Matrix::zeros(head_rows.len(), d);
+            for (ri, &hr) in head_rows.iter().enumerate() {
+                gathered.data[ri * d..(ri + 1) * d].copy_from_slice(hidden.row(hr));
+            }
+            gemm_fused_prepared(&gathered, &self.lm_head)
+        };
+        let prefill_logits = last_row
+            .into_iter()
+            .map(|r| r.map(|ri| logits.data[ri * v..(ri + 1) * v].to_vec()))
+            .collect();
+        let decode_logits = (0..decodes.len())
+            .map(|i| {
+                let ri = decode_row0 + i;
+                logits.data[ri * v..(ri + 1) * v].to_vec()
+            })
+            .collect();
+        Ok(StepOutput { prefill_logits, decode_logits, secs: t0.elapsed().as_secs_f64() })
     }
 
     fn release_blocks(&mut self, blocks: &[BlockId]) {
@@ -463,7 +508,7 @@ mod tests {
     }
 
     fn prefill_desc<'a>(tokens: &'a [u32], table: &'a [BlockId]) -> PrefillDesc<'a> {
-        PrefillDesc { seq_id: 0, tokens, block_table: table }
+        PrefillDesc { seq_id: 0, tokens, start: 0, is_last: true, block_table: table }
     }
 
     fn max_diff(a: &[f32], b: &[f32]) -> f32 {
@@ -613,7 +658,7 @@ mod tests {
     fn wo_carries_act_order_perm() {
         let be = backend();
         for lw in &be.layers {
-            assert!(lw.wo.tensor().perm.is_some(), "wo must be an act-order checkpoint");
+            assert!(lw.wo.perm().is_some(), "wo must be an act-order checkpoint");
         }
     }
 
@@ -629,6 +674,105 @@ mod tests {
                 assert_eq!(w.is_swizzled(), want);
             }
         }
+    }
+
+    #[test]
+    fn chunked_prefill_is_bit_identical_to_one_shot() {
+        // Splitting a prompt into chunks (block-aligned or not, chunk
+        // sizes below the block size included) must reproduce the
+        // one-shot prefill logits bit for bit: earlier chunks' K/V is
+        // read back through the table exactly as the one-shot pass
+        // computes it in-flight.
+        let prompt: Vec<u32> = (0..40).map(|i| ((i * 11 + 3) % 256) as u32).collect();
+        let mut a = backend(); // block size 16 -> 3 blocks
+        let (one_shot, _) = a.prefill(prefill_desc(&prompt, &[0, 1, 2])).unwrap();
+        for chunks in [vec![16, 24], vec![16, 16, 8], vec![3, 5, 8, 24], vec![1; 40]] {
+            let mut b = backend();
+            let mut pos = 0usize;
+            let mut last = Vec::new();
+            for len in &chunks {
+                let end = pos + len;
+                let out = b
+                    .step(
+                        &[PrefillDesc {
+                            seq_id: 0,
+                            tokens: &prompt[pos..end],
+                            start: pos,
+                            is_last: end == prompt.len(),
+                            block_table: &[0, 1, 2],
+                        }],
+                        &[],
+                    )
+                    .unwrap();
+                if end == prompt.len() {
+                    last = out.prefill_logits[0].clone().expect("final chunk logits");
+                } else {
+                    assert!(out.prefill_logits[0].is_none(), "mid chunk must skip the head");
+                }
+                pos = end;
+            }
+            assert_eq!(last, one_shot, "chunks {chunks:?} diverged from one-shot prefill");
+        }
+    }
+
+    #[test]
+    fn prefix_skip_is_bit_identical_to_recompute() {
+        // Sequence A fills blocks [0, 1] with the shared prefix; a
+        // prefix-skip prefill of B (start = 32, sharing those blocks)
+        // must give logits bit-identical to B's full recompute.
+        let shared: Vec<u32> = (0..32).map(|i| ((i * 7 + 1) % 256) as u32).collect();
+        let mut full = shared.clone();
+        full.extend((0..9).map(|i| ((i * 29 + 5) % 256) as u32));
+        let mut be = backend();
+        be.prefill(prefill_desc(&shared, &[0, 1])).unwrap();
+        // Full recompute through a table sharing the prefix blocks (what
+        // OPT4GPTQ_PREFIX_SKIP=0 does): rewrites identical K/V.
+        let (recompute, _) = be.prefill(prefill_desc(&full, &[0, 1, 2])).unwrap();
+        // Prefix-skip: the backend never sees the first 32 tokens.
+        let out = be
+            .step(
+                &[PrefillDesc {
+                    seq_id: 1,
+                    tokens: &full[32..],
+                    start: 32,
+                    is_last: true,
+                    block_table: &[0, 1, 3],
+                }],
+                &[],
+            )
+            .unwrap();
+        let skipped = out.prefill_logits[0].clone().unwrap();
+        assert_eq!(skipped, recompute, "skipping the cached prefix changed the logits");
+    }
+
+    #[test]
+    fn mixed_step_matches_separate_calls() {
+        // A chunk and a decode folded into one step must equal the same
+        // work issued as separate calls (row-independent math).
+        let prompt: Vec<u32> = (0..20).map(|i| ((i * 5 + 2) % 256) as u32).collect();
+        let mut a = backend();
+        a.prefill(prefill_desc(&[9, 8, 7], &[3])).unwrap();
+        let (dec_alone, _) = a
+            .decode(&[DecodeDesc { seq_id: 0, context_len: 3, token: 7, block_table: &[3] }])
+            .unwrap();
+        let (pre_alone, _) = a.prefill(prefill_desc(&prompt, &[0, 1])).unwrap();
+
+        let mut b = backend();
+        b.prefill(prefill_desc(&[9, 8, 7], &[3])).unwrap();
+        let out = b
+            .step(
+                &[PrefillDesc {
+                    seq_id: 1,
+                    tokens: &prompt,
+                    start: 0,
+                    is_last: true,
+                    block_table: &[0, 1],
+                }],
+                &[DecodeDesc { seq_id: 0, context_len: 3, token: 7, block_table: &[3] }],
+            )
+            .unwrap();
+        assert_eq!(out.prefill_logits[0].as_ref().unwrap(), &pre_alone);
+        assert_eq!(out.decode_logits[0], dec_alone[0]);
     }
 
     #[test]

@@ -1,4 +1,12 @@
-//! The engine step loop: schedule → execute → sample → account.
+//! The engine step loop: schedule → execute one mixed batch → sample →
+//! account.
+//!
+//! Every step is a single [`Backend::step`] call carrying the prefill
+//! chunks the scheduler fit under the token budget *plus* the whole
+//! decode batch.  Prefill progress is tracked per sequence
+//! ([`super::sequence::Sequence::prefill_pos`]); a sequence joins the
+//! decode batch only after its final chunk executes and its first token
+//! is sampled from that chunk's logits.
 
 use std::collections::HashMap;
 
@@ -9,7 +17,7 @@ use super::backend::{Backend, DecodeDesc, PrefillDesc};
 use super::metrics::Metrics;
 use super::request::{Request, RequestOutput};
 use super::sampler;
-use super::scheduler::{ScheduledWork, Scheduler};
+use super::scheduler::{PrefillChunk, ScheduledWork, Scheduler};
 use super::sequence::SeqState;
 use super::EngineConfig;
 
@@ -61,19 +69,9 @@ impl<B: Backend> Engine<B> {
     pub fn step(&mut self) -> Result<bool> {
         match self.scheduler.schedule() {
             ScheduledWork::Idle => Ok(false),
-            ScheduledWork::Prefills(ids) => {
-                self.metrics.prefill_steps += 1;
-                for id in ids {
-                    self.run_prefill(id)?;
-                }
+            ScheduledWork::Step { prefills, decodes } => {
+                self.run_step(prefills, decodes)?;
                 self.metrics.engine_steps += 1;
-                self.drain_releases();
-                Ok(true)
-            }
-            ScheduledWork::Decode(ids) => {
-                self.run_decode(ids)?;
-                self.metrics.engine_steps += 1;
-                self.metrics.decode_steps += 1;
                 self.drain_releases();
                 Ok(true)
             }
@@ -85,6 +83,7 @@ impl<B: Backend> Engine<B> {
         while self.step()? {}
         self.metrics.elapsed = self.clock;
         self.metrics.preemptions = self.scheduler.preemption_count;
+        self.metrics.prefill_tokens_skipped = self.scheduler.prefill_tokens_skipped;
         Ok(EngineReport { outputs: std::mem::take(&mut self.outputs), metrics: self.metrics.clone() })
     }
 
@@ -102,37 +101,32 @@ impl<B: Backend> Engine<B> {
         }
     }
 
-    fn run_prefill(&mut self, id: usize) -> Result<()> {
-        let prompt = self.scheduler.seqs[&id].effective_prompt();
-        let table = self.scheduler.blocks.table(id).expect("prefill without allocation");
-        let (logits, secs) =
-            self.backend.prefill(PrefillDesc { seq_id: id, tokens: &prompt, block_table: table })?;
-        self.clock += secs;
-        // Sample the first generated token from the prefill logits.
-        let token = {
-            let seq = self.scheduler.seqs.get_mut(&id).unwrap();
-            let rng = self.rngs.get_mut(&id).unwrap();
-            let t = sampler::sample(&logits, &seq.sampling, rng);
-            seq.generated.push(t);
-            if seq.first_token_time.is_none() {
-                seq.first_token_time = Some(self.clock);
-                self.metrics.ttfts.push(self.clock - seq.arrival);
-            }
-            t
-        };
-        let _ = token;
-        self.metrics.output_tokens += 1;
-        if !self.scheduler.append_token(id) {
-            // Self-preempted: will re-run later; nothing else to do.
-            return Ok(());
-        }
-        self.scheduler.promote_to_running(id);
-        self.maybe_finish(id);
-        Ok(())
-    }
-
-    fn run_decode(&mut self, ids: Vec<usize>) -> Result<()> {
-        let entries: Vec<DecodeDesc<'_>> = ids
+    /// Execute one mixed batch: prefill chunks + decode rows in a single
+    /// backend call, then sample, advance prefill cursors and account.
+    fn run_step(&mut self, prefills: Vec<PrefillChunk>, decodes: Vec<usize>) -> Result<()> {
+        // Only each chunk's own span is materialized (owned buffers the
+        // descriptors borrow from while the backend runs) — never the
+        // whole effective prompt per step.
+        let chunk_tokens: Vec<Vec<u32>> = prefills
+            .iter()
+            .map(|c| self.scheduler.seqs[&c.seq_id].effective_slice(c.start, c.len))
+            .collect();
+        let prefill_descs: Vec<PrefillDesc<'_>> = prefills
+            .iter()
+            .zip(&chunk_tokens)
+            .map(|(c, tokens)| PrefillDesc {
+                seq_id: c.seq_id,
+                tokens: tokens.as_slice(),
+                start: c.start,
+                is_last: c.is_last,
+                block_table: self
+                    .scheduler
+                    .blocks
+                    .table(c.seq_id)
+                    .expect("prefill without allocation"),
+            })
+            .collect();
+        let decode_descs: Vec<DecodeDesc<'_>> = decodes
             .iter()
             .map(|id| {
                 let s = &self.scheduler.seqs[id];
@@ -150,11 +144,51 @@ impl<B: Backend> Engine<B> {
                 }
             })
             .collect();
-        let (rows, secs) = self.backend.decode(&entries)?;
-        debug_assert_eq!(rows.len(), ids.len());
-        self.clock += secs;
-        self.metrics.decode_batch_sum += ids.len();
-        for (id, logits) in ids.into_iter().zip(rows) {
+        let mut out = self.backend.step(&prefill_descs, &decode_descs)?;
+        debug_assert_eq!(out.prefill_logits.len(), prefills.len());
+        debug_assert_eq!(out.decode_logits.len(), decodes.len());
+        drop(prefill_descs);
+        drop(decode_descs);
+        self.clock += out.secs;
+        if !prefills.is_empty() {
+            self.metrics.prefill_steps += 1;
+            self.metrics.prefill_chunks += prefills.len();
+        }
+        if !decodes.is_empty() {
+            self.metrics.decode_steps += 1;
+            self.metrics.decode_batch_sum += decodes.len();
+        }
+
+        // Prefill bookkeeping: advance every chunk's cursor; final
+        // chunks sample their first token and join the decode batch.
+        for (i, chunk) in prefills.iter().enumerate() {
+            self.scheduler.advance_prefill(chunk);
+            if !chunk.is_last {
+                continue;
+            }
+            let logits = std::mem::take(&mut out.prefill_logits[i])
+                .expect("final chunk must produce logits");
+            let id = chunk.seq_id;
+            {
+                let seq = self.scheduler.seqs.get_mut(&id).unwrap();
+                let rng = self.rngs.get_mut(&id).unwrap();
+                let t = sampler::sample(&logits, &seq.sampling, rng);
+                seq.generated.push(t);
+                if seq.first_token_time.is_none() {
+                    seq.first_token_time = Some(self.clock);
+                    self.metrics.ttfts.push(self.clock - seq.arrival);
+                }
+            }
+            self.metrics.output_tokens += 1;
+            if !self.scheduler.append_token(id) {
+                // Self-preempted: will re-run later; nothing else to do.
+                continue;
+            }
+            self.scheduler.promote_to_running(id);
+            self.maybe_finish(id);
+        }
+
+        for (id, logits) in decodes.into_iter().zip(out.decode_logits) {
             // The sequence may have been preempted by an earlier seq in
             // this same loop (KV exhaustion); skip it then.
             if self.scheduler.seqs[&id].state != SeqState::Running {
@@ -295,7 +329,9 @@ mod tests {
                 block_size: 4,
                 total_blocks: 40,
                 max_seq_len: 128,
-                max_prefills_per_step: 4,
+                prefill_budget: 64,
+                // env-inherited: runs on both skip and recompute paths
+                ..Default::default()
             },
             be,
         );
@@ -311,6 +347,68 @@ mod tests {
             assert_eq!(o.tokens.len(), 30, "req {} generated {}", o.id, o.tokens.len());
         }
         assert!(report.metrics.preemptions > 0, "this config must preempt");
+        e.scheduler.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn chunked_prefill_conserves_tokens_across_budgets() {
+        // Any token budget — including budgets below the block size —
+        // must leave accounting exact and finish every request.
+        for budget in [1, 3, 16, 50, 1000] {
+            let m = by_name("Llama-2-7B-GPTQ").unwrap();
+            let be = SimBackend::new(m, OptConfig::BASELINE, 4);
+            let mut e = Engine::new(
+                EngineConfig {
+                    max_batch: 4,
+                    total_blocks: 2048,
+                    prefill_budget: budget,
+                    ..Default::default()
+                },
+                be,
+            );
+            for i in 0..6 {
+                e.add_request(req(i, 40 + i, 5));
+            }
+            let report = e.run().unwrap();
+            assert_eq!(report.outputs.len(), 6, "budget {budget}");
+            assert_eq!(report.metrics.output_tokens, 30, "budget {budget}");
+            if budget < 40 {
+                assert!(
+                    report.metrics.prefill_chunks > 6,
+                    "budget {budget} must chunk long prompts: {} chunks",
+                    report.metrics.prefill_chunks
+                );
+            }
+            e.scheduler.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn shared_prompts_skip_prefill_tokens() {
+        let m = by_name("Llama-2-7B-GPTQ").unwrap();
+        let be = SimBackend::new(m, OptConfig::BASELINE, 4);
+        let mut e = Engine::new(
+            EngineConfig {
+                max_batch: 4,
+                total_blocks: 2048,
+                prefill_budget: 32,
+                prefix_skip: true,
+                ..Default::default()
+            },
+            be,
+        );
+        // Identical 32-token prompts.  Budget 32 staggers the two
+        // admissions across steps, so the second arrives after the
+        // first's prefix blocks are computed and skips them.
+        for i in 0..2 {
+            e.add_request(req(i, 32, 4));
+        }
+        let report = e.run().unwrap();
+        assert_eq!(report.outputs.len(), 2);
+        assert!(
+            report.metrics.prefill_tokens_skipped > 0,
+            "second identical prompt must skip its cached prefix"
+        );
         e.scheduler.check_invariants().unwrap();
     }
 

@@ -11,6 +11,15 @@ pub struct Metrics {
     pub prefill_steps: usize,
     pub decode_steps: usize,
     pub preemptions: usize,
+    /// Prefill chunk executions (a one-shot prefill counts as one chunk).
+    pub prefill_chunks: usize,
+    /// Prompt tokens never sent to the backend: their K/V already lived
+    /// in fully-computed shared prefix blocks (prefix-aware prefill).
+    /// Counted per *admission* — a preempted sequence that re-prefills
+    /// and skips again counts again, exactly like the recompute work a
+    /// preemption duplicates — so under heavy preemption this can
+    /// legitimately exceed `prompt_tokens`.
+    pub prefill_tokens_skipped: usize,
     /// Sum of decode batch sizes (for mean batch occupancy).
     pub decode_batch_sum: usize,
     /// Per-request end-to-end latencies, seconds.
@@ -67,6 +76,17 @@ impl Metrics {
         }
         self.decode_batch_sum as f64 / self.decode_steps as f64
     }
+
+    /// Fraction of prompt tokens served straight from the prefix cache
+    /// (skipped, never recomputed) — the prefix hit rate of this run.
+    /// Clamped to 1.0: preemption re-admissions skip (and count) the
+    /// same prompt tokens again while `prompt_tokens` counts them once.
+    pub fn prefix_skip_rate(&self) -> f64 {
+        if self.prompt_tokens == 0 {
+            return 0.0;
+        }
+        (self.prefill_tokens_skipped as f64 / self.prompt_tokens as f64).min(1.0)
+    }
 }
 
 #[cfg(test)]
@@ -86,6 +106,13 @@ mod tests {
         assert_eq!(m.throughput(), 0.0);
         assert_eq!(m.mean_latency(), 0.0);
         assert_eq!(m.p95_latency(), 0.0);
+    }
+
+    #[test]
+    fn prefix_skip_rate_math() {
+        let m = Metrics { prompt_tokens: 80, prefill_tokens_skipped: 20, ..Default::default() };
+        assert_eq!(m.prefix_skip_rate(), 0.25);
+        assert_eq!(Metrics::default().prefix_skip_rate(), 0.0);
     }
 
     #[test]

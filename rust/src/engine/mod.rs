@@ -2,13 +2,37 @@
 //!
 //! Reproduces the serving stack the paper measures *through*: paged
 //! KV-cache accounting ([`block_manager`]) over physically-paged K/V
-//! storage ([`kv`]), continuous batching with a prefill/decode scheduler
-//! ([`scheduler`]), sampling ([`sampler`]), and an engine step loop
-//! ([`engine`]) driving a pluggable [`backend`].  Block tables flow
-//! end-to-end: the scheduler allocates them, the engine threads them
-//! through [`backend::PrefillDesc`]/[`backend::DecodeDesc`], and paged
-//! backends execute attention through them — a prefix-cache hit in the
-//! manager is an aliased read of real memory in the backend:
+//! storage ([`kv`]), continuous batching with a chunked-prefill
+//! scheduler ([`scheduler`]), sampling ([`sampler`]), and an engine
+//! step loop ([`engine`]) driving a pluggable [`backend`].  Block
+//! tables flow end-to-end: the scheduler allocates them, the engine
+//! threads them through [`backend::PrefillDesc`]/[`backend::DecodeDesc`],
+//! and paged backends execute attention through them — a prefix-cache
+//! hit in the manager is an aliased read of real memory in the backend.
+//!
+//! **Chunked mixed-batch steps.** Every engine step is one
+//! [`backend::Backend::step`] call: the whole decode batch plus as many
+//! prefill chunk tokens as [`EngineConfig::prefill_budget`] allows,
+//! folded into a single forward pass.  Long prompts stream in
+//! block-aligned chunks across steps (decode latency stays bounded;
+//! the fused GEMM runs at M ≫ 1 during prefill), with per-sequence
+//! progress tracked in [`sequence::Sequence::prefill_pos`].
+//!
+//! **The `cached_len` contract.** [`block_manager::BlockManager::allocate`]
+//! returns the number of leading prompt tokens whose K/V already live
+//! in fully-shared *and fully-computed* prefix blocks.  With
+//! [`EngineConfig::prefix_skip`] on (the default;
+//! `OPT4GPTQ_PREFIX_SKIP=0` flips it), those tokens never reach the
+//! backend: the first chunk starts at `cached_len` — a prefix-cache hit
+//! is shared *compute*, not just shared memory.  Blocks become
+//! "computed" only when the owning sequence's prefill passes them
+//! ([`block_manager::BlockManager::mark_computed`]), so a prompt
+//! sharing blocks with a still-prefilling peer shares memory but
+//! recomputes — never reads K/V that does not exist yet.  The skip and
+//! recompute paths are bit-identical (pinned by
+//! `rust/tests/backend_integration.rs` and `benches/prefix_prefill.rs`).
+//!
+//! Backends:
 //!
 //! * [`backend::SimBackend`] — advances a *virtual clock* using the
 //!   [`crate::perfmodel`] step times of a paper model under a chosen
@@ -35,14 +59,14 @@ pub mod scheduler;
 pub mod sequence;
 pub mod tokenizer;
 
-pub use backend::{Backend, DecodeDesc, PrefillDesc, SimBackend};
+pub use backend::{Backend, DecodeDesc, PrefillDesc, SimBackend, StepOutput};
 pub use block_manager::{BlockId, BlockManager};
 pub use cpu_backend::{CpuBackend, CpuModelConfig};
 pub use kv::PagedKvCache;
 pub use engine::{Engine, EngineReport};
 pub use metrics::Metrics;
 pub use request::{FinishReason, Request, RequestOutput, SamplingParams};
-pub use scheduler::{Scheduler, SchedulerConfig};
+pub use scheduler::{PrefillChunk, ScheduledWork, Scheduler, SchedulerConfig};
 pub use sequence::{SeqState, Sequence};
 
 /// Engine-level configuration (vLLM flag analogues).
@@ -56,8 +80,26 @@ pub struct EngineConfig {
     pub total_blocks: usize,
     /// Max model context (prompt + generation).
     pub max_seq_len: usize,
-    /// Max prefills admitted per engine step.
-    pub max_prefills_per_step: usize,
+    /// Per-step token budget for prefill chunk tokens (vLLM's
+    /// `max_num_batched_tokens` analogue, prefill side): prompts are
+    /// processed in block-aligned chunks under this budget, mixed into
+    /// the same backend step as the decode batch, so decode latency
+    /// stays bounded while prefill saturates the fused GEMM at M ≫ 1.
+    /// Clamped to ≥ 1 (one prefill token per step always progresses).
+    pub prefill_budget: usize,
+    /// Skip the transformer entirely for a prompt's cached prefix (the
+    /// leading tokens whose K/V already live in fully-computed shared
+    /// prefix blocks).  `OPT4GPTQ_PREFIX_SKIP=0` in the environment
+    /// flips the *default* to forced recompute for differential testing;
+    /// explicit field settings always win.
+    pub prefix_skip: bool,
+}
+
+/// Default for [`EngineConfig::prefix_skip`]: enabled unless the
+/// `OPT4GPTQ_PREFIX_SKIP=0` escape hatch is set (differential testing —
+/// the recompute path stays reachable without a rebuild).
+pub fn prefix_skip_default() -> bool {
+    !matches!(std::env::var("OPT4GPTQ_PREFIX_SKIP").as_deref(), Ok("0"))
 }
 
 impl Default for EngineConfig {
@@ -67,7 +109,8 @@ impl Default for EngineConfig {
             block_size: 16,
             total_blocks: 4096,
             max_seq_len: 2048,
-            max_prefills_per_step: 4,
+            prefill_budget: 512,
+            prefix_skip: prefix_skip_default(),
         }
     }
 }

@@ -1,17 +1,26 @@
-//! Continuous-batching scheduler (vLLM-style).
+//! Continuous-batching scheduler (vLLM-style, chunked-prefill mode).
 //!
-//! Policy, mirroring vLLM v0's core loop:
+//! Every engine step is one **mixed batch**: the full decode batch plus
+//! as many prefill chunk tokens as the per-step token budget
+//! (`prefill_budget`) allows, executed by the backend in a single call.
+//! Policy:
 //!
-//! 1. Prefill-priority admission: while there is batch room and enough
-//!    KV blocks, admit waiting (or preempted) sequences — up to
-//!    `max_prefills_per_step` per step.  Admission allocates the block
-//!    table the backend will execute through (no backend slots — the
-//!    table *is* the sequence's identity in KV storage).
-//! 2. Otherwise decode every running sequence as one batch.
+//! 1. Continue partially-prefilled sequences first (one block-aligned
+//!    chunk each, in admission order), then admit waiting (or preempted)
+//!    sequences while budget and batch room remain.  Admission allocates
+//!    the block table the backend will execute through, and the
+//!    allocator reports `cached_len` — the leading tokens whose K/V
+//!    already live in fully-computed shared prefix blocks.  With
+//!    `prefix_skip` on, those tokens are *never sent to the backend*:
+//!    the first chunk starts at `cached_len` (clamped to keep at least
+//!    the final token computable for logits).
+//! 2. Chunk bounds are block-aligned whenever that still makes progress
+//!    (a budget smaller than the block size degrades to unaligned but
+//!    still bit-identical chunks).
 //! 3. On KV exhaustion while appending a generated token, preempt the
 //!    most recently arrived running sequence (recompute semantics: its
-//!    blocks are freed and it re-prefills later with its generated
-//!    tokens folded into the prompt).
+//!    blocks are freed, its prefill progress resets, and it re-prefills
+//!    later with its generated tokens folded into the prompt).
 
 use std::collections::{HashMap, VecDeque};
 
@@ -22,13 +31,25 @@ use super::EngineConfig;
 
 pub type SchedulerConfig = EngineConfig;
 
+/// One prefill chunk scheduled for the coming step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillChunk {
+    pub seq_id: usize,
+    /// Position of the chunk's first token (cached prefix + prior
+    /// chunks).
+    pub start: usize,
+    /// Tokens in this chunk (≥ 1).
+    pub len: usize,
+    /// True when the chunk reaches the end of the effective prompt.
+    pub is_last: bool,
+}
+
 /// What the engine should run this step.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ScheduledWork {
-    /// Run these sequences' prompts (then they join the decode batch).
-    Prefills(Vec<usize>),
-    /// Decode one token for each of these sequences.
-    Decode(Vec<usize>),
+    /// One mixed backend step: prefill chunks under the token budget
+    /// plus the whole decode batch (either part may be empty, not both).
+    Step { prefills: Vec<PrefillChunk>, decodes: Vec<usize> },
     /// Nothing runnable (all queues empty).
     Idle,
 }
@@ -40,7 +61,13 @@ pub struct Scheduler {
     pub seqs: HashMap<usize, Sequence>,
     waiting: VecDeque<usize>,
     running: Vec<usize>,
+    /// Admitted sequences whose prompts are mid-prefill, in admission
+    /// order (each gets at most one chunk per step).
+    prefilling: Vec<usize>,
     pub preemption_count: usize,
+    /// Prompt tokens never sent to the backend because their K/V was
+    /// already cached (summed over all admissions).
+    pub prefill_tokens_skipped: usize,
 }
 
 impl Scheduler {
@@ -50,7 +77,9 @@ impl Scheduler {
             seqs: HashMap::new(),
             waiting: VecDeque::new(),
             running: Vec::new(),
+            prefilling: Vec::new(),
             preemption_count: 0,
+            prefill_tokens_skipped: 0,
             cfg,
         }
     }
@@ -69,17 +98,50 @@ impl Scheduler {
         self.running.len()
     }
 
+    pub fn num_prefilling(&self) -> usize {
+        self.prefilling.len()
+    }
+
     pub fn has_work(&self) -> bool {
-        !self.waiting.is_empty() || !self.running.is_empty()
+        !self.waiting.is_empty() || !self.running.is_empty() || !self.prefilling.is_empty()
+    }
+
+    /// The next block-aligned chunk of `id`'s prompt under `budget`
+    /// remaining tokens (caller guarantees `budget >= 1` and that the
+    /// sequence has prefill work left).
+    fn next_chunk(&self, id: usize, budget: usize) -> PrefillChunk {
+        let seq = &self.seqs[&id];
+        let pos = seq.prefill_pos;
+        let prompt_len = seq.total_tokens();
+        debug_assert!(pos < prompt_len, "chunking a completed prefill");
+        let mut end = pos + (prompt_len - pos).min(budget);
+        if end < prompt_len {
+            // Align the boundary down to a block edge when that still
+            // makes progress; tiny budgets (< block_size) proceed
+            // unaligned rather than stalling.
+            let aligned = end - end % self.cfg.block_size;
+            if aligned > pos {
+                end = aligned;
+            }
+        }
+        PrefillChunk { seq_id: id, start: pos, len: end - pos, is_last: end == prompt_len }
     }
 
     /// Decide the next step's work.
     pub fn schedule(&mut self) -> ScheduledWork {
-        // Admission: prefill while there is batch room and KV blocks.
+        let mut budget = self.cfg.prefill_budget.max(1);
         let mut prefills = Vec::new();
-        while prefills.len() < self.cfg.max_prefills_per_step
-            && self.running.len() + prefills.len() < self.cfg.max_batch
-        {
+        // 1. Continue in-flight prefills, one chunk each.
+        for &id in &self.prefilling {
+            if budget == 0 {
+                break;
+            }
+            let chunk = self.next_chunk(id, budget);
+            budget -= chunk.len;
+            prefills.push(chunk);
+        }
+        // 2. Admit waiting sequences while budget and batch room remain.
+        while budget > 0 && self.running.len() + self.prefilling.len() < self.cfg.max_batch {
             let Some(&cand) = self.waiting.front() else { break };
             let prompt = self.seqs[&cand].effective_prompt();
             if prompt.len() + 1 > self.cfg.max_seq_len {
@@ -90,35 +152,61 @@ impl Scheduler {
                 continue;
             }
             if !self.blocks.can_allocate(prompt.len() + 1) {
-                break; // no KV room; decode instead (frees blocks later)
+                break; // no KV room; decodes will free blocks later
             }
             self.waiting.pop_front();
-            assert!(self.blocks.allocate(cand, &prompt));
+            let cached = self.blocks.allocate(cand, &prompt).expect("can_allocate checked");
+            // Keep at least the final prompt token computable: its
+            // hidden state feeds the lm_head for the first sampled
+            // token.  With prefix_skip off, recompute everything (the
+            // blocks are still shared — memory wins survive).
+            let cached =
+                if self.cfg.prefix_skip { cached.min(prompt.len().saturating_sub(1)) } else { 0 };
+            self.prefill_tokens_skipped += cached;
             let seq = self.seqs.get_mut(&cand).unwrap();
             seq.state = SeqState::Prefilling;
-            prefills.push(cand);
+            seq.cached_len = cached;
+            seq.prefill_pos = cached;
+            self.prefilling.push(cand);
+            let chunk = self.next_chunk(cand, budget);
+            budget -= chunk.len;
+            prefills.push(chunk);
         }
-        if !prefills.is_empty() {
-            return ScheduledWork::Prefills(prefills);
+        let decodes = self.running.clone();
+        if prefills.is_empty() && decodes.is_empty() {
+            if !self.waiting.is_empty() {
+                // Nothing running, yet the head of the queue cannot be
+                // admitted: only possible when the prompt alone exceeds
+                // KV capacity.  Reject it to guarantee progress.
+                let id = self.waiting.pop_front().unwrap();
+                self.seqs.get_mut(&id).unwrap().state = SeqState::Finished;
+                return self.schedule();
+            }
+            return ScheduledWork::Idle;
         }
-        if !self.running.is_empty() {
-            return ScheduledWork::Decode(self.running.clone());
-        }
-        if !self.waiting.is_empty() {
-            // Nothing running, yet the head of the queue cannot be
-            // admitted: only possible when the prompt alone exceeds KV
-            // capacity.  Reject it to guarantee progress.
-            let id = self.waiting.pop_front().unwrap();
-            self.seqs.get_mut(&id).unwrap().state = SeqState::Finished;
-            return self.schedule();
-        }
-        ScheduledWork::Idle
+        ScheduledWork::Step { prefills, decodes }
     }
 
-    /// Mark a prefilled sequence as part of the decode batch.
+    /// Record that a chunk executed: advance the sequence's prefill
+    /// cursor and mark the blocks it fully covered as computed (so
+    /// future prefix-cache hits on them can skip recomputation).
+    pub fn advance_prefill(&mut self, chunk: &PrefillChunk) {
+        let seq = self.seqs.get_mut(&chunk.seq_id).expect("unknown seq");
+        debug_assert_eq!(seq.state, SeqState::Prefilling);
+        debug_assert_eq!(seq.prefill_pos, chunk.start);
+        seq.prefill_pos += chunk.len;
+        self.blocks.mark_computed(chunk.seq_id, seq.prefill_pos);
+    }
+
+    /// Mark a fully-prefilled sequence as part of the decode batch
+    /// (called after its first token was sampled and appended, so
+    /// exactly that one token is still un-materialized — the next
+    /// decode step feeds it).
     pub fn promote_to_running(&mut self, id: usize) {
+        self.prefilling.retain(|&p| p != id);
         let seq = self.seqs.get_mut(&id).expect("unknown seq");
         debug_assert_eq!(seq.state, SeqState::Prefilling);
+        debug_assert_eq!(seq.prefill_remaining(), 1, "promoting a mid-prefill sequence");
         seq.state = SeqState::Running;
         self.running.push(id);
     }
@@ -155,6 +243,7 @@ impl Scheduler {
 
     fn preempt(&mut self, id: usize) {
         self.running.retain(|&r| r != id);
+        self.prefilling.retain(|&p| p != id);
         self.blocks.free_sequence(id);
         self.seqs.get_mut(&id).expect("unknown seq").preempt();
         self.preemption_count += 1;
@@ -167,6 +256,7 @@ impl Scheduler {
     /// resulting block/sequence releases to the backend after the step).
     pub fn finish(&mut self, id: usize) {
         self.running.retain(|&r| r != id);
+        self.prefilling.retain(|&p| p != id);
         self.blocks.free_sequence(id);
         self.seqs.get_mut(&id).expect("unknown seq").state = SeqState::Finished;
     }
@@ -183,10 +273,30 @@ impl Scheduler {
                 return Err(format!("running seq {id} has no block table"));
             }
         }
-        // Prefilling sequences occupy batch room too.
+        for &id in &self.prefilling {
+            let s = &self.seqs[&id];
+            if s.state != SeqState::Prefilling {
+                return Err(format!("prefilling seq {id} in state {:?}", s.state));
+            }
+            if self.blocks.table(id).is_none() {
+                return Err(format!("prefilling seq {id} has no block table"));
+            }
+            if s.prefill_pos < s.cached_len {
+                return Err(format!("seq {id}: prefill_pos behind cached_len"));
+            }
+        }
+        // Every Prefilling-state sequence must be tracked in the list.
         let prefilling =
             self.seqs.values().filter(|s| s.state == SeqState::Prefilling).count();
-        if self.running.len() + prefilling > self.cfg.max_batch {
+        if prefilling != self.prefilling.len() {
+            return Err(format!(
+                "{} sequences in Prefilling state but {} tracked",
+                prefilling,
+                self.prefilling.len()
+            ));
+        }
+        // Prefilling sequences occupy batch room too.
+        if self.running.len() + self.prefilling.len() > self.cfg.max_batch {
             return Err("decode batch exceeds max_batch".into());
         }
         // Waiting/preempted/finished sequences must hold no KV blocks.
@@ -213,7 +323,10 @@ mod tests {
             block_size: 4,
             total_blocks: 16,
             max_seq_len: 64,
-            max_prefills_per_step: 2,
+            prefill_budget: 8,
+            // Pinned on purpose: these are unit tests OF the skip
+            // mechanism, independent of the OPT4GPTQ_PREFIX_SKIP env.
+            prefix_skip: true,
         }
     }
 
@@ -225,34 +338,165 @@ mod tests {
         )
     }
 
+    /// Drive every scheduled chunk to completion as the engine would,
+    /// without a backend: advance, then (on last chunks) append the
+    /// first sampled token and promote.
+    fn run_prefills(s: &mut Scheduler, prefills: &[PrefillChunk]) {
+        for c in prefills {
+            s.advance_prefill(c);
+            if c.is_last {
+                s.seqs.get_mut(&c.seq_id).unwrap().generated.push(1);
+                assert!(s.append_token(c.seq_id));
+                s.promote_to_running(c.seq_id);
+            }
+        }
+    }
+
     #[test]
-    fn admits_up_to_max_prefills() {
+    fn admits_under_token_budget() {
         let mut s = Scheduler::new(cfg());
         for i in 0..3 {
             s.add_request(&req(i, 4, 4));
         }
+        // Budget 8 = two 4-token prompts; the third waits.
         match s.schedule() {
-            ScheduledWork::Prefills(p) => assert_eq!(p, vec![0, 1]),
-            w => panic!("expected prefills, got {w:?}"),
+            ScheduledWork::Step { prefills, decodes } => {
+                assert_eq!(
+                    prefills,
+                    vec![
+                        PrefillChunk { seq_id: 0, start: 0, len: 4, is_last: true },
+                        PrefillChunk { seq_id: 1, start: 0, len: 4, is_last: true },
+                    ]
+                );
+                assert!(decodes.is_empty());
+            }
+            w => panic!("expected step, got {w:?}"),
+        }
+        assert_eq!(s.num_waiting(), 1);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn long_prompt_is_chunked_block_aligned_across_steps() {
+        let mut s = Scheduler::new(SchedulerConfig { max_seq_len: 64, ..cfg() });
+        s.add_request(&req(0, 10, 4)); // 10 tokens, budget 8, block 4
+        let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+        assert_eq!(prefills, vec![PrefillChunk { seq_id: 0, start: 0, len: 8, is_last: false }]);
+        run_prefills(&mut s, &prefills);
+        s.check_invariants().unwrap();
+        // Next step finishes the prompt (2 remaining) and has room to
+        // admit more — none waiting, so just the tail chunk.
+        let ScheduledWork::Step { prefills, decodes } = s.schedule() else { panic!() };
+        assert_eq!(prefills, vec![PrefillChunk { seq_id: 0, start: 8, len: 2, is_last: true }]);
+        assert!(decodes.is_empty());
+        run_prefills(&mut s, &prefills);
+        // Fully prefilled: next step is a pure decode.
+        let ScheduledWork::Step { prefills, decodes } = s.schedule() else { panic!() };
+        assert!(prefills.is_empty());
+        assert_eq!(decodes, vec![0]);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn budget_below_block_size_still_progresses() {
+        let mut s = Scheduler::new(SchedulerConfig { prefill_budget: 3, ..cfg() });
+        s.add_request(&req(0, 6, 4));
+        let mut starts = Vec::new();
+        loop {
+            let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+            if prefills.is_empty() {
+                break;
+            }
+            assert_eq!(prefills.len(), 1);
+            assert!(prefills[0].len <= 3);
+            starts.push((prefills[0].start, prefills[0].len));
+            let done = prefills[0].is_last;
+            run_prefills(&mut s, &prefills);
+            if done {
+                break;
+            }
+        }
+        // 6 tokens under budget 3: every token is scheduled exactly
+        // once, in order, with no chunk exceeding the budget.
+        let total: usize = starts.iter().map(|(_, l)| l).sum();
+        assert_eq!(total, 6);
+        assert_eq!(starts.first().unwrap().0, 0);
+        for w in starts.windows(2) {
+            assert_eq!(w[0].0 + w[0].1, w[1].0, "chunks must be contiguous");
         }
         s.check_invariants().unwrap();
     }
 
     #[test]
-    fn decodes_after_promotion() {
+    fn decodes_mix_with_prefill_chunks() {
         let mut s = Scheduler::new(cfg());
         s.add_request(&req(0, 4, 4));
-        let ScheduledWork::Prefills(p) = s.schedule() else { panic!() };
-        for id in p {
-            s.seqs.get_mut(&id).unwrap().generated.push(1);
-            assert!(s.append_token(id));
-            s.promote_to_running(id);
-        }
-        // no more waiting -> decode
-        match s.schedule() {
-            ScheduledWork::Decode(d) => assert_eq!(d, vec![0]),
-            w => panic!("expected decode, got {w:?}"),
-        }
+        let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+        run_prefills(&mut s, &prefills);
+        // Seq 0 is decoding; a new long prompt arrives: one mixed step.
+        // Distinct content — no prefix sharing with seq 0's blocks.
+        let mut r1 = req(1, 10, 4);
+        r1.prompt = (100..110).collect();
+        s.add_request(&r1);
+        let ScheduledWork::Step { prefills, decodes } = s.schedule() else { panic!() };
+        assert_eq!(decodes, vec![0]);
+        assert_eq!(prefills.len(), 1);
+        assert_eq!(prefills[0].seq_id, 1);
+        assert!(!prefills[0].is_last, "10 tokens under budget 8 must chunk");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cached_prefix_is_skipped_at_admission() {
+        let mut s = Scheduler::new(SchedulerConfig { prefill_budget: 64, ..cfg() });
+        s.add_request(&req(0, 10, 4)); // 2 full blocks + tail
+        let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+        assert_eq!(prefills[0], PrefillChunk { seq_id: 0, start: 0, len: 10, is_last: true });
+        run_prefills(&mut s, &prefills);
+        assert_eq!(s.prefill_tokens_skipped, 0);
+        // Identical prompt: the two full blocks are computed now, so the
+        // second sequence's first chunk starts at 8.
+        s.add_request(&req(1, 10, 4));
+        let ScheduledWork::Step { prefills, decodes } = s.schedule() else { panic!() };
+        assert_eq!(decodes, vec![0]);
+        assert_eq!(prefills, vec![PrefillChunk { seq_id: 1, start: 8, len: 2, is_last: true }]);
+        assert_eq!(s.prefill_tokens_skipped, 8);
+        assert_eq!(s.seqs[&1].cached_len, 8);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fully_cached_prompt_still_computes_the_last_token() {
+        let mut s = Scheduler::new(SchedulerConfig { prefill_budget: 64, ..cfg() });
+        let mut r0 = req(0, 8, 4); // exactly 2 full blocks
+        r0.prompt = (0..8).collect();
+        s.add_request(&r0);
+        let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+        run_prefills(&mut s, &prefills);
+        let mut r1 = req(1, 8, 4);
+        r1.prompt = (0..8).collect();
+        s.add_request(&r1);
+        let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+        // Whole prompt cached: clamp keeps the final token computable.
+        assert_eq!(prefills, vec![PrefillChunk { seq_id: 1, start: 7, len: 1, is_last: true }]);
+        assert_eq!(s.prefill_tokens_skipped, 7);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefix_skip_off_recomputes_everything() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            prefill_budget: 64,
+            prefix_skip: false,
+            ..cfg()
+        });
+        s.add_request(&req(0, 10, 4));
+        let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+        run_prefills(&mut s, &prefills);
+        s.add_request(&req(1, 10, 4));
+        let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+        assert_eq!(prefills, vec![PrefillChunk { seq_id: 1, start: 0, len: 10, is_last: true }]);
+        assert_eq!(s.prefill_tokens_skipped, 0, "escape hatch must force full recompute");
         s.check_invariants().unwrap();
     }
 
@@ -265,13 +509,14 @@ mod tests {
     }
 
     #[test]
-    fn kv_exhaustion_preempts_youngest() {
+    fn kv_exhaustion_preempts_youngest_and_resets_progress() {
         let mut s = Scheduler::new(SchedulerConfig {
             max_batch: 2,
             block_size: 4,
             total_blocks: 4,
             max_seq_len: 64,
-            max_prefills_per_step: 2,
+            prefill_budget: 32,
+            prefix_skip: true,
         });
         // Distinct prompt contents so the prefix cache cannot share blocks.
         let mut r0 = req(0, 7, 30);
@@ -280,13 +525,9 @@ mod tests {
         r1.prompt = vec![2; 7];
         s.add_request(&Request { arrival: 0.0, ..r0 });
         s.add_request(&Request { arrival: 1.0, ..r1 });
-        let ScheduledWork::Prefills(p) = s.schedule() else { panic!() };
-        assert_eq!(p.len(), 2);
-        for id in p {
-            s.seqs.get_mut(&id).unwrap().generated.push(1);
-            assert!(s.append_token(id));
-            s.promote_to_running(id);
-        }
+        let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+        assert_eq!(prefills.len(), 2);
+        run_prefills(&mut s, &prefills);
         // Each seq has 8 tokens in 2 blocks; all 4 blocks used.  The next
         // append on seq 0 must preempt seq 1 (younger).
         s.seqs.get_mut(&0).unwrap().generated.push(2);
@@ -295,18 +536,20 @@ mod tests {
         assert_eq!(s.num_running(), 1);
         assert_eq!(s.preemption_count, 1);
         s.check_invariants().unwrap();
-        // Preempted sequence re-queues at the front with its tokens.
+        // Preempted sequence re-queues at the front with its tokens and
+        // zeroed prefill progress.
         assert_eq!(s.num_waiting(), 1);
         assert_eq!(s.seqs[&1].effective_prompt().len(), 8);
+        assert_eq!(s.seqs[&1].prefill_pos, 0);
     }
 
     #[test]
     fn finish_releases_blocks_and_reports_them() {
         let mut s = Scheduler::new(cfg());
         s.add_request(&req(0, 4, 4));
-        let ScheduledWork::Prefills(_) = s.schedule() else { panic!() };
+        let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
         let free_before = s.blocks.free_blocks();
-        s.promote_to_running(0);
+        run_prefills(&mut s, &prefills);
         s.blocks.take_released(); // discard pre-finish noise
         s.finish(0);
         assert!(s.blocks.free_blocks() > free_before);
@@ -317,6 +560,6 @@ mod tests {
         s.check_invariants().unwrap();
         // batch room is reusable
         s.add_request(&req(5, 4, 4));
-        assert!(matches!(s.schedule(), ScheduledWork::Prefills(_)));
+        assert!(matches!(s.schedule(), ScheduledWork::Step { .. }));
     }
 }

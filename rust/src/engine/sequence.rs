@@ -7,7 +7,9 @@ use super::request::{Request, SamplingParams};
 pub enum SeqState {
     /// In the waiting queue (not yet prefilling).
     Waiting,
-    /// Admitted: KV allocated, prompt not yet run.
+    /// Admitted: KV allocated, prompt running in block-aligned chunks
+    /// across one or more engine steps ([`Sequence::prefill_pos`] tracks
+    /// progress; the cached prefix is skipped outright).
     Prefilling,
     /// In the decode batch.
     Running,
@@ -28,6 +30,14 @@ pub struct Sequence {
     pub first_token_time: Option<f64>,
     pub finish_time: Option<f64>,
     pub preemptions: usize,
+    /// Leading prompt tokens skipped at admission because their K/V
+    /// already lived in fully-computed shared prefix blocks (this
+    /// admission only; reset by preemption).
+    pub cached_len: usize,
+    /// Prefill progress: prompt tokens already materialized in (or
+    /// skipped into) the KV cache.  Starts at `cached_len` on admission;
+    /// prefill is complete when it reaches the effective prompt length.
+    pub prefill_pos: usize,
 }
 
 impl Sequence {
@@ -42,6 +52,8 @@ impl Sequence {
             first_token_time: None,
             finish_time: None,
             preemptions: 0,
+            cached_len: 0,
+            prefill_pos: 0,
         }
     }
 
@@ -80,11 +92,20 @@ impl Sequence {
         None
     }
 
+    /// Remaining un-prefilled prompt tokens (0 once prefill completed).
+    pub fn prefill_remaining(&self) -> usize {
+        self.total_tokens().saturating_sub(self.prefill_pos)
+    }
+
     /// Reset for recompute after preemption: generated tokens are kept
-    /// (they are re-prefilled as part of the new prompt pass).
+    /// (they are re-prefilled as part of the new prompt pass), but all
+    /// prefill progress is discarded — the blocks are gone, and the next
+    /// admission recomputes `cached_len` against the then-current cache.
     pub fn preempt(&mut self) {
         self.state = SeqState::Preempted;
         self.preemptions += 1;
+        self.cached_len = 0;
+        self.prefill_pos = 0;
     }
 
     /// The effective prompt for (re-)prefill: original prompt plus
@@ -93,6 +114,24 @@ impl Sequence {
         let mut p = self.prompt.clone();
         p.extend_from_slice(&self.generated);
         p
+    }
+
+    /// One span of the effective prompt, materialized without cloning
+    /// the rest: the engine builds each prefill chunk's token buffer
+    /// through this, so a long prompt chunked at budget B copies O(L)
+    /// tokens total instead of O(L²/B) whole-prompt clones.
+    pub fn effective_slice(&self, start: usize, len: usize) -> Vec<u32> {
+        let end = start + len;
+        debug_assert!(end <= self.total_tokens());
+        let p = self.prompt.len();
+        let mut out = Vec::with_capacity(len);
+        if start < p {
+            out.extend_from_slice(&self.prompt[start..end.min(p)]);
+        }
+        if end > p {
+            out.extend_from_slice(&self.generated[start.max(p) - p..end - p]);
+        }
+        out
     }
 }
 
@@ -150,9 +189,38 @@ mod tests {
     fn preemption_preserves_generated_tokens() {
         let mut s = seq(10);
         s.generated.extend([4, 5]);
+        s.cached_len = 2;
+        s.prefill_pos = 5;
         s.preempt();
         assert_eq!(s.state, SeqState::Preempted);
         assert_eq!(s.effective_prompt(), vec![1, 2, 3, 4, 5]);
         assert_eq!(s.preemptions, 1);
+        assert_eq!((s.cached_len, s.prefill_pos), (0, 0), "prefill progress must reset");
+    }
+
+    #[test]
+    fn effective_slice_matches_effective_prompt() {
+        let mut s = seq(10); // prompt [1, 2, 3]
+        s.generated.extend([4, 5, 6]);
+        let full = s.effective_prompt();
+        for start in 0..full.len() {
+            for len in 0..=full.len() - start {
+                assert_eq!(
+                    s.effective_slice(start, len),
+                    full[start..start + len].to_vec(),
+                    "start {start} len {len}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_progress_tracking() {
+        let mut s = seq(10); // 3-token prompt
+        assert_eq!(s.prefill_remaining(), 3);
+        s.prefill_pos = 2;
+        assert_eq!(s.prefill_remaining(), 1);
+        s.prefill_pos = 3;
+        assert_eq!(s.prefill_remaining(), 0);
     }
 }

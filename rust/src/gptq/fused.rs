@@ -106,44 +106,103 @@ pub(crate) struct KernelCall<'a> {
     pub(crate) kernel: Kernel,
 }
 
-/// A [`QuantizedTensor`] plus the vector-friendly prepack the active
-/// kernel wants, computed **once** at construction (model build time in
+/// The single weight layout a [`PreparedTensor`] holds — exactly one
+/// copy of the packed words, in whichever order the active kernel
+/// streams them.
+enum WeightLayout {
+    /// Storage-layout `qweight` served as-is (scalar hosts).
+    Raw,
+    /// Column-interleaved prepack for aligned 256-bit loads (AVX2
+    /// hosts).  The tensor's `qweight` is **dropped** — the swizzle is
+    /// the only weight copy, halving packed-weight residency on serve
+    /// hosts; raw-layout consumers rebuild it through
+    /// [`PreparedTensor::to_raw`].
+    Swizzled(SwizzledWeights),
+}
+
+/// A [`QuantizedTensor`] held in the **single** layout the active kernel
+/// wants, converted **once** at construction (model build time in
 /// `CpuBackend`) so serve-path projections never re-swizzle.  On scalar
-/// hosts the prepack is skipped entirely — the tensor is served as-is.
+/// hosts the tensor is served as-is; on AVX2 hosts the packed words live
+/// only in the swizzled order (the duplicate `qweight` copy previous
+/// releases kept alongside it is gone — ~0.5 byte/weight saved, i.e.
+/// packed-weight residency halves).  Scales, zeros and the act-order
+/// permutation are layout-independent and kept verbatim.
 ///
-/// Deliberate trade-off: on AVX2 hosts the swizzle is a second full
-/// copy of the packed words (~0.5 byte/weight extra), kept alongside
-/// the storage layout so [`Self::tensor`] stays a complete
-/// `QuantizedTensor` (oracle parity, checkpointing, and any raw-layout
-/// caller keep working).  Collapsing to a single layout per tensor is
-/// tracked in ROADMAP.md.
+/// Raw-layout consumers (the `gptq::gemm` oracle, checkpoint writers)
+/// use the explicit accessor [`Self::to_raw`], which un-swizzles on
+/// demand — a cold path by construction.
 pub struct PreparedTensor {
+    /// `qweight` is empty when `layout` is [`WeightLayout::Swizzled`];
+    /// all other fields are always valid.
     q: QuantizedTensor,
-    swz: Option<SwizzledWeights>,
+    layout: WeightLayout,
 }
 
 impl PreparedTensor {
-    pub fn new(q: QuantizedTensor) -> PreparedTensor {
-        let swz = match simd::active_kernel() {
-            Kernel::Avx2 => Some(swizzle_weights(&q.qweight, q.k / NIBBLES_PER_WORD, q.n)),
-            Kernel::Scalar => None,
+    pub fn new(mut q: QuantizedTensor) -> PreparedTensor {
+        let layout = match simd::active_kernel() {
+            Kernel::Avx2 => {
+                let swz = swizzle_weights(&q.qweight, q.k / NIBBLES_PER_WORD, q.n);
+                // Single-layout invariant: the swizzle replaces the
+                // storage copy instead of shadowing it.
+                q.qweight = Vec::new();
+                WeightLayout::Swizzled(swz)
+            }
+            Kernel::Scalar => WeightLayout::Raw,
         };
-        PreparedTensor { q, swz }
+        PreparedTensor { q, layout }
     }
 
-    /// The underlying packed tensor.
-    pub fn tensor(&self) -> &QuantizedTensor {
-        &self.q
+    /// Rebuild the complete storage-layout [`QuantizedTensor`] (the
+    /// oracle/checkpoint interchange format).  Cheap clone on scalar
+    /// hosts; an un-swizzle pass on AVX2 hosts.
+    pub fn to_raw(&self) -> QuantizedTensor {
+        let mut q = self.q.clone();
+        if let WeightLayout::Swizzled(swz) = &self.layout {
+            q.qweight = super::pack::unswizzle_weights(swz);
+        }
+        q
     }
 
-    /// Whether the vector-friendly prepack was built (i.e. the active
-    /// kernel streams aligned swizzled loads).
+    /// In-features of the packed tensor.
+    pub fn k(&self) -> usize {
+        self.q.k
+    }
+
+    /// Out-features of the packed tensor.
+    pub fn n(&self) -> usize {
+        self.q.n
+    }
+
+    /// The act-order permutation (`b_q_perm`), if this is a `desc_act`
+    /// checkpoint.
+    pub fn perm(&self) -> Option<&[usize]> {
+        self.q.perm.as_deref()
+    }
+
+    /// Bytes resident for the packed representation (weights in their
+    /// single layout + scales + zeros).
+    pub fn packed_bytes(&self) -> usize {
+        let weight_words = match &self.layout {
+            WeightLayout::Raw => self.q.qweight.len(),
+            WeightLayout::Swizzled(swz) => swz.kw() * swz.n(),
+        };
+        (weight_words + self.q.qzeros.len()) * 4 + self.q.scales.len() * 4
+    }
+
+    /// Whether the single held layout is the vector-friendly swizzle
+    /// (i.e. the active kernel streams aligned 256-bit loads).
     pub fn is_swizzled(&self) -> bool {
-        self.swz.is_some()
+        matches!(self.layout, WeightLayout::Swizzled(_))
     }
 
     fn call(&self) -> KernelCall<'_> {
-        KernelCall { q: &self.q, swz: self.swz.as_ref(), kernel: simd::active_kernel() }
+        let swz = match &self.layout {
+            WeightLayout::Raw => None,
+            WeightLayout::Swizzled(s) => Some(s),
+        };
+        KernelCall { q: &self.q, swz, kernel: simd::active_kernel() }
     }
 }
 
@@ -591,6 +650,44 @@ mod tests {
         );
         // Prepared + explicit threads too (the bench path).
         assert_eq!(plain, gemv_fused_prepared_threads(&x, &p, 2));
+    }
+
+    #[test]
+    fn prepared_tensor_holds_a_single_weight_layout() {
+        // The prepack must *replace* the storage copy, not shadow it:
+        // resident packed bytes never exceed the raw tensor's, and on
+        // swizzled hosts the duplicate qweight words are gone.
+        let q = random_quantized(256, 64, 64, 61);
+        let raw_bytes = q.packed_bytes();
+        let p = PreparedTensor::new(q.clone());
+        assert_eq!(p.packed_bytes(), raw_bytes, "one layout = one copy of the words");
+        assert_eq!((p.k(), p.n()), (256, 64));
+        if p.is_swizzled() {
+            // The raw words were dropped; only the swizzle remains.
+            assert!(p.q.qweight.is_empty(), "swizzled tensor must not keep raw qweight");
+        }
+    }
+
+    #[test]
+    fn to_raw_rebuilds_the_storage_layout_exactly() {
+        // Oracle/checkpoint consumers get the canonical tensor back
+        // bit-for-bit, whatever layout the host serves from.
+        let mut rng = Rng::new(62);
+        let mut perm: Vec<usize> = (0..128).collect();
+        rng.shuffle(&mut perm);
+        let q = random_quantized(128, 24, 64, 63).with_perm(perm);
+        let p = PreparedTensor::new(q.clone());
+        let raw = p.to_raw();
+        assert_eq!(raw.qweight, q.qweight);
+        assert_eq!(raw.scales, q.scales);
+        assert_eq!(raw.qzeros, q.qzeros);
+        assert_eq!(raw.perm, q.perm);
+        // And the rebuilt tensor drives the oracle to the same answer
+        // the prepared fast path computes.
+        let x = rng.normal_vec_f32(128, 1.0);
+        let fast = gemv_fused_prepared(&x, &p);
+        let oracle = crate::gptq::gemm::gemv_f32(&x, &raw);
+        assert!(max_abs_diff(&fast, &oracle) < 1e-3);
     }
 
     #[test]

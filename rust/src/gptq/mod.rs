@@ -33,8 +33,8 @@ pub use fused::{
 };
 pub use gemm::{dequantize, gemm_f32, gemv_f32};
 pub use pack::{
-    pack_cols, pack_rows, swizzle_weights, unpack_cols, unpack_rows, SwizzledWeights,
-    NIBBLES_PER_WORD,
+    pack_cols, pack_rows, swizzle_weights, unpack_cols, unpack_rows, unswizzle_weights,
+    SwizzledWeights, NIBBLES_PER_WORD,
 };
 pub use quantize::{
     quantize_gptq, quantize_rtn, reconstruction_error, GptqConfig, QuantizedTensor,

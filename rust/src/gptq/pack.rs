@@ -78,6 +78,23 @@ pub fn swizzle_weights(qweight: &[u32], kw: usize, n: usize) -> SwizzledWeights 
     SwizzledWeights { kw, nw, lanes }
 }
 
+/// Inverse of [`swizzle_weights`]: rebuild the storage-layout
+/// `qweight` (`u32[kw, n]`) from the prepack.  Cold path — used only
+/// when a raw-layout consumer (oracle parity, checkpointing) needs the
+/// canonical tensor back from a serve-host [`SwizzledWeights`]-only
+/// `PreparedTensor`.
+pub fn unswizzle_weights(swz: &SwizzledWeights) -> Vec<u32> {
+    let (kw, n) = (swz.kw, swz.nw * NIBBLES_PER_WORD);
+    let mut qweight = vec![0u32; kw * n];
+    for o in 0..swz.nw {
+        for w in 0..kw {
+            let dst = w * n + o * NIBBLES_PER_WORD;
+            qweight[dst..dst + NIBBLES_PER_WORD].copy_from_slice(&swz.lanes[o * kw + w].0);
+        }
+    }
+    qweight
+}
+
 /// Pack codes `u8[K, N]` (values 0..=15) into `u32[K/8, N]`:
 /// nibble `j` (bits `4j..4j+4`) of word `w` holds row `8w + j`.
 pub fn pack_rows(codes: &[u8], k: usize, n: usize) -> Vec<u32> {
@@ -217,6 +234,15 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn unswizzle_is_the_exact_inverse() {
+        let mut rng = Rng::new(5);
+        let (kw, n) = (8, 48);
+        let qweight: Vec<u32> = (0..kw * n).map(|_| rng.next_u32()).collect();
+        let swz = swizzle_weights(&qweight, kw, n);
+        assert_eq!(unswizzle_weights(&swz), qweight);
     }
 
     #[test]

@@ -51,8 +51,10 @@ fn usage() {
         "usage: opt4gptq <serve|simulate|kernel|accuracy|quantize> [options]
   serve     --backend cpu|pjrt --requests N --max-tokens N [--temperature T]
             [--blocks N --block-size N]  (paged-KV pool geometry)
+            [--prefill-budget N]  (prefill chunk tokens per mixed step)
             (cpu: in-crate fused-kernel transformer over paged KV;
-             pjrt: --artifacts DIR, needs the `pjrt` build feature)
+             pjrt: --artifacts DIR, needs the `pjrt` build feature;
+             OPT4GPTQ_PREFIX_SKIP=0 forces cached-prefix recompute)
   simulate  --model NAME --requests N [--opt baseline|smb|vml|ila|opt4gptq]
   kernel    --m M --k K --n N [--group G]
   accuracy  --model NAME [--split arc_c|arc_e]
@@ -83,7 +85,7 @@ fn cmd_serve(args: &Args) -> opt4gptq::Result<()> {
                 cfg.vocab, cfg.n_layers, cfg.d_model, cfg.group_size
             );
             let backend = CpuBackend::new(cfg)?;
-            serve_with(backend, args)
+            serve_with(backend, args, false)
         }
         "pjrt" => cmd_serve_pjrt(args),
         other => {
@@ -104,7 +106,9 @@ fn cmd_serve_pjrt(args: &Args) -> opt4gptq::Result<()> {
         "tiny model: vocab={} layers={} heads={} max_seq={}",
         backend.dims.vocab, backend.dims.n_layers, backend.dims.n_heads, backend.dims.max_seq
     );
-    serve_with(backend, args)
+    // Dense-lane HLO artifacts execute whole prompts only: no chunk
+    // resumption, no cached-prefix skipping (the backend bails on both).
+    serve_with(backend, args, true)
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -118,8 +122,12 @@ fn cmd_serve_pjrt(_args: &Args) -> opt4gptq::Result<()> {
     std::process::exit(2);
 }
 
-/// Drive the engine over a ShareGPT-like trace on any executable backend.
-fn serve_with<B: Backend>(backend: B, args: &Args) -> opt4gptq::Result<()> {
+/// Drive the engine over a ShareGPT-like trace on any executable
+/// backend.  `whole_prompt_only` pins one-shot prefill semantics for
+/// backends that cannot resume chunks or skip cached prefixes (PJRT's
+/// dense-lane artifacts): the budget is raised past any prompt and
+/// prefix skip is forced off, whatever the flags/env say.
+fn serve_with<B: Backend>(backend: B, args: &Args, whole_prompt_only: bool) -> opt4gptq::Result<()> {
     let n = args.get_usize("requests", 8);
     let max_tokens = args.get_usize("max-tokens", 16);
     let temperature = args.get_f64("temperature", 0.0) as f32;
@@ -131,12 +139,34 @@ fn serve_with<B: Backend>(backend: B, args: &Args) -> opt4gptq::Result<()> {
     let default_cfg = EngineConfig::default();
     let total_blocks = args.get_usize("blocks", default_cfg.total_blocks);
     let block_size = args.get_usize("block-size", default_cfg.block_size);
+    let mut prefill_budget = args.get_usize("prefill-budget", default_cfg.prefill_budget);
+    let mut prefix_skip = default_cfg.prefix_skip;
+    if whole_prompt_only {
+        // Unbounded: the budget is shared across same-step admissions,
+        // so anything finite could still split a second prompt.
+        prefill_budget = usize::MAX;
+        prefix_skip = false;
+    }
+    let budget_label = if prefill_budget == usize::MAX {
+        "unbounded".to_string()
+    } else {
+        format!("{prefill_budget} tok/step")
+    };
     println!(
-        "paged KV: {total_blocks} blocks x {block_size} tokens ({} max cached tokens)",
-        total_blocks * block_size
+        "paged KV: {total_blocks} blocks x {block_size} tokens ({} max cached tokens); \
+         prefill budget {budget_label}, prefix skip {}",
+        total_blocks * block_size,
+        if prefix_skip { "on" } else { "off" }
     );
     let mut engine = Engine::new(
-        EngineConfig { max_batch, max_seq_len, total_blocks, block_size, ..default_cfg },
+        EngineConfig {
+            max_batch,
+            max_seq_len,
+            total_blocks,
+            block_size,
+            prefill_budget,
+            prefix_skip,
+        },
         backend,
     );
 
@@ -176,6 +206,12 @@ fn serve_with<B: Backend>(backend: B, args: &Args) -> opt4gptq::Result<()> {
     println!(
         "prefix-cache hits: {} (shared blocks are physically shared in the paged pool)",
         engine.scheduler.blocks.prefix_hits
+    );
+    println!(
+        "prefill: {} chunks, {} tokens skipped via cached prefixes ({:.1}% prefix hit rate)",
+        report.metrics.prefill_chunks,
+        report.metrics.prefill_tokens_skipped,
+        report.metrics.prefix_skip_rate() * 100.0
     );
     Ok(())
 }

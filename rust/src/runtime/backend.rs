@@ -24,7 +24,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context};
 
-use crate::engine::backend::{Backend, DecodeDesc, PrefillDesc};
+use crate::engine::backend::{Backend, DecodeDesc, PrefillDesc, StepOutput};
 use crate::Result;
 
 use super::client::Runtime;
@@ -189,8 +189,44 @@ impl Backend for PjrtBackend {
         self.dims.vocab
     }
 
-    fn prefill(&mut self, req: PrefillDesc<'_>) -> Result<(Vec<f32>, f64)> {
+    fn step(
+        &mut self,
+        prefills: &[PrefillDesc<'_>],
+        decodes: &[DecodeDesc<'_>],
+    ) -> Result<StepOutput> {
         let t0 = Instant::now();
+        let mut prefill_logits = Vec::with_capacity(prefills.len());
+        for p in prefills {
+            // The HLO prefill artifacts run a whole prompt into a fresh
+            // dense lane: chunk resumption and cached-prefix skipping
+            // have no lane-level representation here.  Serve this
+            // backend with a prefill budget ≥ the longest prompt and
+            // `prefix_skip` off (see `cmd_serve_pjrt`).
+            if p.start != 0 || !p.is_last {
+                bail!(
+                    "PjrtBackend cannot resume a prefill chunk at position {} \
+                     (dense-lane HLO artifacts need whole prompts; disable \
+                     prefix skip and raise --prefill-budget)",
+                    p.start
+                );
+            }
+            prefill_logits.push(Some(self.prefill_whole(p)?));
+        }
+        let decode_logits =
+            if decodes.is_empty() { Vec::new() } else { self.decode_batch(decodes)? };
+        Ok(StepOutput { prefill_logits, decode_logits, secs: t0.elapsed().as_secs_f64() })
+    }
+
+    fn release_seq(&mut self, seq_id: usize) {
+        if let Some(lane) = self.lanes.remove(&seq_id) {
+            self.free_lanes.push(lane);
+        }
+    }
+}
+
+impl PjrtBackend {
+    /// Run one whole prompt into the sequence's dense lane.
+    fn prefill_whole(&mut self, req: &PrefillDesc<'_>) -> Result<Vec<f32>> {
         let d = self.dims;
         let tokens = req.tokens;
         if tokens.is_empty() || tokens.len() > d.prefill_slots {
@@ -216,11 +252,10 @@ impl Backend for PjrtBackend {
         let kk = kk.to_vec::<f32>()?;
         let vv = vv.to_vec::<f32>()?;
         self.splice_slot(slot, &kk, &vv)?;
-        Ok((logits_row, t0.elapsed().as_secs_f64()))
+        Ok(logits_row)
     }
 
-    fn decode(&mut self, batch: &[DecodeDesc<'_>]) -> Result<(Vec<Vec<f32>>, f64)> {
-        let t0 = Instant::now();
+    fn decode_batch(&mut self, batch: &[DecodeDesc<'_>]) -> Result<Vec<Vec<f32>>> {
         let d = self.dims;
         let b = self.max_batch;
         assert!(!batch.is_empty() && batch.len() <= b);
@@ -260,13 +295,7 @@ impl Backend for PjrtBackend {
             .iter()
             .map(|&lane| all_logits[lane * d.vocab..(lane + 1) * d.vocab].to_vec())
             .collect();
-        Ok((rows, t0.elapsed().as_secs_f64()))
-    }
-
-    fn release_seq(&mut self, seq_id: usize) {
-        if let Some(lane) = self.lanes.remove(&seq_id) {
-            self.free_lanes.push(lane);
-        }
+        Ok(rows)
     }
 }
 

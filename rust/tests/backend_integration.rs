@@ -86,7 +86,10 @@ fn cramped() -> EngineConfig {
         block_size: 4,
         total_blocks: 26,
         max_seq_len: 128,
-        max_prefills_per_step: 4,
+        prefill_budget: 64,
+        // Inherited from the environment so the CI forced-recompute job
+        // (OPT4GPTQ_PREFIX_SKIP=0) exercises this suite on both paths.
+        ..Default::default()
     }
 }
 
@@ -176,9 +179,9 @@ fn prefix_sharing_is_physical_and_bit_exact() {
 
     // 36 tokens: two full (shareable) blocks + a private tail block.
     let prompt: Vec<u32> = (0..36).map(|i| ((i * 13 + 5) % 256) as u32).collect();
-    assert!(bm.allocate(1, &prompt));
+    assert!(bm.allocate(1, &prompt).is_some());
     let free_after_first = bm.free_blocks();
-    assert!(bm.allocate(2, &prompt));
+    assert!(bm.allocate(2, &prompt).is_some());
     // Prefix hit accounting must coincide with real block savings: the
     // second sequence only consumed its private tail block.
     assert!(bm.prefix_hits >= 2, "full prefix blocks must hit the cache");
@@ -195,14 +198,14 @@ fn prefix_sharing_is_physical_and_bit_exact() {
     // Execute both through their tables; then compare against a fresh
     // backend that never shared anything (the oracle).
     let (l1, _) =
-        be.prefill(PrefillDesc { seq_id: 1, tokens: &prompt, block_table: &t1 }).unwrap();
+        be.prefill(PrefillDesc { seq_id: 1, tokens: &prompt, start: 0, is_last: true, block_table: &t1 }).unwrap();
     let (l2, _) =
-        be.prefill(PrefillDesc { seq_id: 2, tokens: &prompt, block_table: &t2 }).unwrap();
+        be.prefill(PrefillDesc { seq_id: 2, tokens: &prompt, start: 0, is_last: true, block_table: &t2 }).unwrap();
     let mut fresh = cpu_backend();
     fresh.bind_kv(64, block_size);
     let fresh_table: Vec<usize> = (10..13).collect();
     let (oracle, _) = fresh
-        .prefill(PrefillDesc { seq_id: 9, tokens: &prompt, block_table: &fresh_table })
+        .prefill(PrefillDesc { seq_id: 9, tokens: &prompt, start: 0, is_last: true, block_table: &fresh_table })
         .unwrap();
     assert_eq!(l1, oracle, "sharing must not perturb the first sequence");
     assert_eq!(l2, oracle, "a shared-prefix run must be bit-identical to a fresh run");
@@ -239,4 +242,87 @@ fn engine_prefix_sharing_preserves_greedy_tokens() {
     assert_eq!(pair.len(), 2);
     assert_eq!(pair[0].1, solo[0].1, "sharing must not change greedy generation");
     assert_eq!(pair[1].1, solo[0].1, "both shared sequences must match the fresh run");
+}
+
+/// Greedy generation through the whole engine with prefix-skip enabled
+/// must be token-identical to the forced-recompute path
+/// (`OPT4GPTQ_PREFIX_SKIP=0` semantics), while actually skipping work.
+#[test]
+fn prefix_skip_engine_matches_forced_recompute() {
+    // Shared 32-token prefix (2 full blocks of 16), distinct tails, plus
+    // one unrelated prompt — mixed sharing in one continuous batch.
+    let shared: Vec<u32> = (0..32).map(|i| ((i * 13 + 5) % 256) as u32).collect();
+    let workload: Vec<Vec<u32>> = (0..3)
+        .map(|i| {
+            let mut p = shared.clone();
+            p.extend((0..4).map(|j| ((i * 61 + j * 17 + 9) % 256) as u32));
+            p
+        })
+        .chain(std::iter::once((0..20).map(|i| ((i * 31 + 2) % 256) as u32).collect()))
+        .collect();
+    let run = |prefix_skip: bool| {
+        let mut e = Engine::new(
+            EngineConfig {
+                prefill_budget: 48,
+                prefix_skip,
+                ..roomy()
+            },
+            cpu_backend(),
+        );
+        for (i, prompt) in workload.iter().enumerate() {
+            e.add_request(Request::new(
+                i,
+                prompt.clone(),
+                SamplingParams { max_tokens: 8, ..Default::default() },
+            ));
+        }
+        let report = e.run().unwrap();
+        e.scheduler.check_invariants().unwrap();
+        let mut outs: Vec<(usize, Vec<u32>)> =
+            report.outputs.iter().map(|o| (o.id, o.tokens.clone())).collect();
+        outs.sort();
+        (outs, report.metrics.prefill_tokens_skipped)
+    };
+    let (skip, skipped) = run(true);
+    let (recompute, recomputed_skips) = run(false);
+    assert_eq!(recomputed_skips, 0, "forced recompute must never skip");
+    assert!(skipped > 0, "shared prefixes must be skipped when enabled");
+    assert_eq!(skip, recompute, "prefix skip changed greedy generation");
+}
+
+/// Chunked prefill under any token budget — including budgets smaller
+/// than the block size — must generate exactly the tokens a one-shot
+/// prefill generates (real math, greedy sampling pins the logits).
+#[test]
+fn chunked_prefill_engine_matches_one_shot() {
+    let workload: Vec<Vec<u32>> = (0..3)
+        .map(|i| (0..37 + i).map(|j| ((i * 41 + j * 7 + 3) % 256) as u32).collect())
+        .collect();
+    let run = |prefill_budget: usize| {
+        let mut e = Engine::new(
+            EngineConfig { prefill_budget, ..roomy() },
+            cpu_backend(),
+        );
+        for (i, prompt) in workload.iter().enumerate() {
+            e.add_request(Request::new(
+                i,
+                prompt.clone(),
+                SamplingParams { max_tokens: 6, ..Default::default() },
+            ));
+        }
+        let report = e.run().unwrap();
+        e.scheduler.check_invariants().unwrap();
+        let mut outs: Vec<(usize, Vec<u32>)> =
+            report.outputs.iter().map(|o| (o.id, o.tokens.clone())).collect();
+        outs.sort();
+        (outs, report.metrics.prefill_chunks)
+    };
+    let (one_shot, one_shot_chunks) = run(1000);
+    assert_eq!(one_shot_chunks, 3, "huge budget must prefill each prompt in one chunk");
+    // 7 < block_size (16): the unaligned-chunk edge case stays exact.
+    for budget in [7, 16, 24] {
+        let (chunked, chunks) = run(budget);
+        assert!(chunks > 3, "budget {budget} must actually chunk ({chunks} chunks)");
+        assert_eq!(chunked, one_shot, "budget {budget} changed greedy generation");
+    }
 }

@@ -106,7 +106,10 @@ fn pjrt_generation_is_deterministic() {
                 max_seq_len: backend.max_seq_len(),
                 block_size: 16,
                 total_blocks: 128,
-                max_prefills_per_step: 2,
+                // Dense-lane HLO artifacts need whole prompts: no
+                // chunking, no cached-prefix skipping.
+                prefill_budget: 4096,
+                prefix_skip: false,
             },
             backend,
         );
@@ -147,11 +150,11 @@ fn pjrt_kv_cache_consistency() {
     let prompt = [10u32, 20, 30, 40, 50];
     // Path A: prefill all 5 tokens; logits predict token 6.
     let (logits_a, _) = backend
-        .prefill(PrefillDesc { seq_id: 0, tokens: &prompt, block_table: &[] })
+        .prefill(PrefillDesc { seq_id: 0, tokens: &prompt, start: 0, is_last: true, block_table: &[] })
         .unwrap();
     // Path B: prefill 4, decode the 5th.
     let (_, _) = backend
-        .prefill(PrefillDesc { seq_id: 1, tokens: &prompt[..4], block_table: &[] })
+        .prefill(PrefillDesc { seq_id: 1, tokens: &prompt[..4], start: 0, is_last: true, block_table: &[] })
         .unwrap();
     let (rows, _) = backend
         .decode(&[DecodeDesc { seq_id: 1, context_len: 4, token: 50, block_table: &[] }])
@@ -173,14 +176,14 @@ fn pjrt_batch_lanes_are_independent() {
     let mut backend = PjrtBackend::load(&dir).unwrap();
     let p0 = [1u32, 2, 3];
     let p1 = [9u32, 8, 7, 6];
-    backend.prefill(PrefillDesc { seq_id: 0, tokens: &p0, block_table: &[] }).unwrap();
-    backend.prefill(PrefillDesc { seq_id: 1, tokens: &p1, block_table: &[] }).unwrap();
+    backend.prefill(PrefillDesc { seq_id: 0, tokens: &p0, start: 0, is_last: true, block_table: &[] }).unwrap();
+    backend.prefill(PrefillDesc { seq_id: 1, tokens: &p1, start: 0, is_last: true, block_table: &[] }).unwrap();
 
     let (single0, _) = backend
         .decode(&[DecodeDesc { seq_id: 0, context_len: 3, token: 3, block_table: &[] }])
         .unwrap();
     // reset seq 0's cache by re-prefilling (decode above mutated it)
-    backend.prefill(PrefillDesc { seq_id: 0, tokens: &p0, block_table: &[] }).unwrap();
+    backend.prefill(PrefillDesc { seq_id: 0, tokens: &p0, start: 0, is_last: true, block_table: &[] }).unwrap();
     let (batch, _) = backend
         .decode(&[
             DecodeDesc { seq_id: 0, context_len: 3, token: 3, block_table: &[] },

@@ -30,7 +30,7 @@ fn prop_block_manager_invariants_hold_under_chaos() {
         |r| {
             let n = r.range_usize(5, 60);
             Ops((0..n)
-                .map(|_| (r.below(3) as u8, r.range_usize(0, 9), r.range_usize(1, 70)))
+                .map(|_| (r.below(4) as u8, r.range_usize(0, 9), r.range_usize(1, 70)))
                 .collect())
         },
         |Ops(ops)| {
@@ -42,7 +42,7 @@ fn prop_block_manager_invariants_hold_under_chaos() {
                         if live[seq].is_none() {
                             let prompt: Vec<u32> =
                                 (0..len).map(|j| (seq * 1000 + j * 7 + i) as u32).collect();
-                            if bm.allocate(seq, &prompt) {
+                            if bm.allocate(seq, &prompt).is_some() {
                                 live[seq] = Some(len);
                             }
                         }
@@ -52,6 +52,13 @@ fn prop_block_manager_invariants_hold_under_chaos() {
                             if bm.append_token(seq, t + 1) {
                                 live[seq] = Some(t + 1);
                             }
+                        }
+                    }
+                    2 => {
+                        // Prefill progress: marking computed blocks must
+                        // never break refcount/free-list consistency.
+                        if let Some(t) = live[seq] {
+                            bm.mark_computed(seq, len.min(t));
                         }
                     }
                     _ => {
@@ -181,12 +188,15 @@ fn prop_engine_conservation() {
             let n_req = r.range_usize(1, 12);
             let max_batch = r.range_usize(1, 6);
             let total_blocks = r.range_usize(24, 200);
+            // Budgets below the block size (4) and above any prompt are
+            // both in range: chunked and one-shot prefill paths.
+            let prefill_budget = r.range_usize(1, 48);
             let reqs: Vec<(usize, usize)> = (0..n_req)
                 .map(|_| (r.range_usize(1, 30), r.range_usize(1, 20)))
                 .collect();
-            (max_batch, total_blocks, reqs)
+            (max_batch, total_blocks, prefill_budget, reqs)
         },
-        |(max_batch, total_blocks, reqs)| {
+        |(max_batch, total_blocks, prefill_budget, reqs)| {
             let model = by_name("Qwen1.5-1.8B-Chat-GPTQ-Int4").unwrap();
             let backend = SimBackend::new(model, OptConfig::OPT4GPTQ, *max_batch);
             let mut e = Engine::new(
@@ -195,7 +205,10 @@ fn prop_engine_conservation() {
                     block_size: 4,
                     total_blocks: *total_blocks,
                     max_seq_len: 256,
-                    max_prefills_per_step: 2,
+                    prefill_budget: *prefill_budget,
+                    // env-inherited: the forced-recompute CI job must
+                    // reach this property on the recompute path too
+                    ..Default::default()
                 },
                 backend,
             );
