@@ -1,0 +1,41 @@
+//! Toolchain probe for the AVX-512 fused kernel.
+//!
+//! The `_mm512_*` intrinsics in `std::arch::x86_64` were stabilized in
+//! rustc 1.89; on older stable toolchains `gptq::simd`'s AVX-512 kernel
+//! cannot compile.  Rather than pinning a minimum toolchain for the
+//! whole crate, this script probes `rustc --version` and sets the
+//! `opt4gptq_avx512_intrinsics` cfg when the intrinsics are available.
+//! Without the cfg the AVX-512 kernel is compiled out and the dispatch
+//! registry reports it unsupported — the same graceful fallback as a
+//! host without the CPU features, so every test and bench still passes.
+
+use std::process::Command;
+
+/// First rustc minor version whose stable `std::arch` includes the
+/// AVX-512 intrinsics the kernel uses.
+const AVX512_INTRINSICS_MINOR: u32 = 89;
+
+fn rustc_minor() -> Option<u32> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    // "rustc 1.93.0 (…)" -> 93.  Nightly/dev builds keep the same shape.
+    let text = String::from_utf8(out.stdout).ok()?;
+    let version = text.split_whitespace().nth(1)?;
+    let mut parts = version.split('.');
+    let major: u32 = parts.next()?.parse().ok()?;
+    let minor: u32 = parts.next()?.parse().ok()?;
+    if major > 1 {
+        return Some(u32::MAX); // some future major: certainly new enough
+    }
+    Some(minor)
+}
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    // Declare the custom cfg for check-cfg-aware toolchains (older
+    // cargos ignore this line).
+    println!("cargo:rustc-check-cfg=cfg(opt4gptq_avx512_intrinsics)");
+    if rustc_minor().is_some_and(|minor| minor >= AVX512_INTRINSICS_MINOR) {
+        println!("cargo:rustc-cfg=opt4gptq_avx512_intrinsics");
+    }
+}

@@ -18,9 +18,13 @@
 //! the one-shot pass.
 //!
 //! Every measurement lands in `BENCH_prefix_prefill.json` (prefix
-//! length, chunk budget, tokens/s, skipped fraction).  Run:
-//! `cargo bench --bench prefix_prefill` — or with `-- --smoke` for the
-//! CI-sized run (tiny shapes, no perf floors, JSON still emitted).
+//! length, chunk budget, tokens/s, skipped fraction), each row under a
+//! stable `label` key — CI's `tools/bench_gate.rs` step compares the
+//! smoke run's skip-vs-recompute row against the committed
+//! `BENCH_prefix_prefill.baseline.json` and fails on a > 15%
+//! regression.  Run: `cargo bench --bench prefix_prefill` — or with
+//! `-- --smoke` for the CI-sized run (tiny shapes, no perf floors, JSON
+//! still emitted).
 
 use opt4gptq::benchkit::{bench, fmt_duration, Table};
 use opt4gptq::engine::{Backend, CpuBackend, CpuModelConfig, PrefillDesc};
@@ -177,7 +181,8 @@ fn main() {
             format!("{:.0}%", skipped_fraction * 100.0),
         ]);
         json_rows.push(format!(
-            "    {{\"prompt_len\": {prompt_len}, \"prefix_len\": {prefix_len}, \
+            "    {{\"label\": \"skip_vs_recompute {prompt_len}t prefix{prefix_len}\", \
+             \"prompt_len\": {prompt_len}, \"prefix_len\": {prefix_len}, \
              \"chunk_budget\": null, \"mode\": \"skip_vs_recompute\", \
              \"recompute_ns\": {:.0}, \"skip_ns\": {:.0}, \
              \"recompute_tok_per_s\": {:.1}, \"skip_tok_per_s\": {:.1}, \
@@ -205,7 +210,8 @@ fn main() {
                 },
             );
             json_rows.push(format!(
-                "    {{\"prompt_len\": {prompt_len}, \"prefix_len\": {prefix_len}, \
+                "    {{\"label\": \"chunked {prompt_len}t prefix{prefix_len} budget{budget}\", \
+                 \"prompt_len\": {prompt_len}, \"prefix_len\": {prefix_len}, \
                  \"chunk_budget\": {budget}, \"mode\": \"chunked\", \
                  \"chunked_ns\": {:.0}, \"chunked_tok_per_s\": {:.1}, \
                  \"skipped_fraction\": 0.0}}",
@@ -230,7 +236,10 @@ fn main() {
         if smoke {
             println!("\nshape check: smoke mode (perf floors skipped; parity asserts passed)");
         } else {
-            println!("\nshape check: OK (prefix-skip strictly faster at >= 2 shared blocks; chunked bit-identical)");
+            println!(
+                "\nshape check: OK (prefix-skip strictly faster at >= 2 shared blocks; \
+                 chunked bit-identical)"
+            );
         }
     } else {
         println!("\nshape check FAILED:");

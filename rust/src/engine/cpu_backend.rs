@@ -12,8 +12,9 @@
 //! output projection carries a real act-order (`b_q_perm`) checkpoint so
 //! the gather branch runs on every token.  Every weight is held as a
 //! [`PreparedTensor`]: the vector-friendly swizzled prepack the
-//! runtime-dispatched kernel (scalar or AVX2) wants is computed once at
-//! model build, never on the serve path.
+//! runtime-dispatched kernel (scalar, AVX2 or AVX-512) wants — at the
+//! lane width the resolved dispatch streams — is computed once at model
+//! build, never on the serve path.
 //!
 //! KV layout: a [`PagedKvCache`] pool `[n_blocks × block_size × n_layers
 //! × d_model]` per cache side, addressed exclusively through the block
@@ -665,9 +666,10 @@ mod tests {
     #[test]
     fn weights_are_prepacked_for_the_active_kernel() {
         // Model build must cache the swizzle exactly when the dispatched
-        // kernel streams it, so the serve path never re-swizzles.
+        // kernel streams it — at that kernel's lane width — so the serve
+        // path never re-swizzles.
         let be = backend();
-        let want = matches!(crate::gptq::active_kernel(), crate::gptq::Kernel::Avx2);
+        let want = crate::gptq::active_kernel().swizzle_width().is_some();
         assert_eq!(be.lm_head.is_swizzled(), want);
         for lw in &be.layers {
             for w in [&lw.wq, &lw.wk, &lw.wv, &lw.wo, &lw.w_gate, &lw.w_up, &lw.w_down] {

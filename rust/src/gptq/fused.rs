@@ -9,15 +9,15 @@
 //! real tokens through), with the paper's three platform-level strategies
 //! mapped onto their CPU embodiments:
 //!
-//! * **Runtime kernel dispatch.**  Every fused call runs through one of
-//!   two kernels selected once per process by [`simd::KernelDispatch`]
-//!   (the CPU analogue of the paper's per-platform kernel binding):
-//!   the explicit AVX2+FMA path in [`super::simd`] on hosts that have it,
-//!   or the portable scalar tile loop below everywhere else.  Both
-//!   kernels share the identical tile geometry and group-factored math;
-//!   `OPT4GPTQ_KERNEL=scalar|avx2` forces a path for testing.  The
-//!   scalar loop is untouched by dispatch — its results stay
-//!   bit-identical to previous releases.
+//! * **Runtime kernel dispatch.**  Every fused call runs through one
+//!   kernel of the [`simd::kernel_registry`] — portable scalar, 8-lane
+//!   AVX2+FMA, or 16-lane AVX-512F/BW — selected once per process by
+//!   [`simd::KernelDispatch`] (the CPU analogue of the paper's
+//!   per-platform kernel binding): auto-detection picks the widest
+//!   kernel the host runs, `OPT4GPTQ_KERNEL=scalar|avx2|avx512` forces
+//!   a path for testing.  All kernels share the identical tile geometry
+//!   and group-factored math; the scalar loop is untouched by dispatch —
+//!   its results stay bit-identical to previous releases.
 //!
 //! * **Tile geometry (SMB-Opt).**  The K axis is walked in *group slabs*
 //!   (one quantization group, `group_size` rows — the dequant parameters
@@ -35,11 +35,13 @@
 //!   (8 K-rows of one column).  The scalar loop accumulates them as four
 //!   explicitly paired products — the half2-analogue of the paper's
 //!   inner loop, which gives the autovectorizer independent chains.  The
-//!   SIMD kernel instead loads eight *columns'* words with one 256-bit
-//!   load — aligned when the tensor is prepacked into the
-//!   column-interleaved [`super::pack::SwizzledWeights`] swizzle (built
-//!   once per [`PreparedTensor`], so serve-path projections never
-//!   re-swizzle) — and unpacks 8 lanes at a time with shift/mask.
+//!   SIMD kernels instead load eight (AVX2) or sixteen (AVX-512)
+//!   *columns'* words with one 256/512-bit load — aligned when the
+//!   tensor is prepacked into the column-interleaved
+//!   [`super::pack::SwizzledWeights`] swizzle at the kernel's lane
+//!   width (built once per [`PreparedTensor`], so serve-path
+//!   projections never re-swizzle) — and unpack 8 or 16 lanes at a time
+//!   with shift/mask.
 //!
 //! * **Vector FMA (ILA-Opt).**  Within a group, `Σ x·s·(c − z)` is
 //!   computed as `s·(Σ x·c − z·Σ x)`: the scale multiply and zero
@@ -73,7 +75,7 @@
 
 use std::sync::OnceLock;
 
-use super::pack::{swizzle_weights, SwizzledWeights, NIBBLES_PER_WORD};
+use super::pack::{swizzle_weights_width, SwizzledWeights, NIBBLES_PER_WORD};
 use super::quantize::QuantizedTensor;
 use super::simd::{self, Kernel};
 use super::Matrix;
@@ -112,7 +114,8 @@ pub(crate) struct KernelCall<'a> {
 enum WeightLayout {
     /// Storage-layout `qweight` served as-is (scalar hosts).
     Raw,
-    /// Column-interleaved prepack for aligned 256-bit loads (AVX2
+    /// Column-interleaved prepack for aligned vector loads, at the
+    /// active kernel's lane width (8 on AVX2 hosts, 16 on AVX-512
     /// hosts).  The tensor's `qweight` is **dropped** — the swizzle is
     /// the only weight copy, halving packed-weight residency on serve
     /// hosts; raw-layout consumers rebuild it through
@@ -123,11 +126,13 @@ enum WeightLayout {
 /// A [`QuantizedTensor`] held in the **single** layout the active kernel
 /// wants, converted **once** at construction (model build time in
 /// `CpuBackend`) so serve-path projections never re-swizzle.  On scalar
-/// hosts the tensor is served as-is; on AVX2 hosts the packed words live
-/// only in the swizzled order (the duplicate `qweight` copy previous
-/// releases kept alongside it is gone — ~0.5 byte/weight saved, i.e.
-/// packed-weight residency halves).  Scales, zeros and the act-order
-/// permutation are layout-independent and kept verbatim.
+/// hosts the tensor is served as-is; on SIMD hosts the packed words live
+/// only in the swizzled order, at the lane width the resolved dispatch
+/// streams (8 for AVX2, 16 for AVX-512 — `Kernel::swizzle_width`); the
+/// duplicate `qweight` copy previous releases kept alongside it is gone
+/// (~0.5 byte/weight saved, i.e. packed-weight residency halves).
+/// Scales, zeros and the act-order permutation are layout-independent
+/// and kept verbatim.
 ///
 /// Raw-layout consumers (the `gptq::gemm` oracle, checkpoint writers)
 /// use the explicit accessor [`Self::to_raw`], which un-swizzles on
@@ -141,15 +146,15 @@ pub struct PreparedTensor {
 
 impl PreparedTensor {
     pub fn new(mut q: QuantizedTensor) -> PreparedTensor {
-        let layout = match simd::active_kernel() {
-            Kernel::Avx2 => {
-                let swz = swizzle_weights(&q.qweight, q.k / NIBBLES_PER_WORD, q.n);
+        let layout = match simd::active_kernel().swizzle_width() {
+            Some(width) => {
+                let swz = swizzle_weights_width(&q.qweight, q.k / NIBBLES_PER_WORD, q.n, width);
                 // Single-layout invariant: the swizzle replaces the
                 // storage copy instead of shadowing it.
                 q.qweight = Vec::new();
                 WeightLayout::Swizzled(swz)
             }
-            Kernel::Scalar => WeightLayout::Raw,
+            None => WeightLayout::Raw,
         };
         PreparedTensor { q, layout }
     }
@@ -192,7 +197,7 @@ impl PreparedTensor {
     }
 
     /// Whether the single held layout is the vector-friendly swizzle
-    /// (i.e. the active kernel streams aligned 256-bit loads).
+    /// (i.e. the active kernel streams aligned 256- or 512-bit loads).
     pub fn is_swizzled(&self) -> bool {
         matches!(self.layout, WeightLayout::Swizzled(_))
     }
@@ -377,6 +382,19 @@ fn panel_any(
                 fused_panel_cols(xg, xsum, mb, call.q, c0, cn, out)
             }
         }
+        Kernel::Avx512 => {
+            #[cfg(all(target_arch = "x86_64", opt4gptq_avx512_intrinsics))]
+            {
+                simd::panel_avx512(call, xg, xsum, mb, c0, cn, out)
+            }
+            #[cfg(not(all(target_arch = "x86_64", opt4gptq_avx512_intrinsics)))]
+            {
+                // Unreachable through public entry points (`supports`
+                // rejects Avx512 off x86-64 and on toolchains that
+                // compile the kernel out); degrade gracefully anyway.
+                fused_panel_cols(xg, xsum, mb, call.q, c0, cn, out)
+            }
+        }
     }
 }
 
@@ -392,16 +410,22 @@ fn run_col_split(
     out: &mut [f32],
 ) {
     let n = call.q.n;
-    let threads = if n % NIBBLES_PER_WORD == 0 { threads.min(n / NIBBLES_PER_WORD) } else { 1 };
+    // Slabs are aligned to the dispatched kernel's column granularity
+    // (the packed nibble width for scalar/AVX2, a full hexadectet for
+    // AVX-512) so every worker's window keeps the kernel's load
+    // alignment — split points never change per-column accumulation
+    // order, so the result stays bit-identical to serial.
+    let align = call.kernel.col_align();
+    let threads = if n % NIBBLES_PER_WORD == 0 { threads.min(n / align) } else { 1 };
     if threads <= 1 {
         panel_any(call, xg, xsum, mb, 0, n, out);
         return;
     }
-    // Slab bounds, aligned down to the packed nibble width; the last
+    // Slab bounds, aligned down to the kernel granularity; the last
     // bound absorbs the remainder.
     let mut bounds = Vec::with_capacity(threads + 1);
     for t in 0..=threads {
-        bounds.push((n * t / threads) / NIBBLES_PER_WORD * NIBBLES_PER_WORD);
+        bounds.push((n * t / threads) / align * align);
     }
     bounds[threads] = n;
     if mb == 1 {

@@ -8,8 +8,9 @@
 //! dense CPU reference for the quantized GEMM ([`gemm`], the correctness
 //! oracle) and the fused dequantize-on-the-fly fast path ([`fused`], the
 //! kernel [`crate::engine::cpu_backend::CpuBackend`] serves through),
-//! runtime-dispatched between a portable scalar loop and the explicit
-//! AVX2+FMA path in [`simd`].
+//! runtime-dispatched across the kernel registry in [`simd`]: a portable
+//! scalar loop, the 8-lane AVX2+FMA kernel, and the 16-lane AVX-512F/BW
+//! kernel.
 //!
 //! Layout contract (identical to `python/compile/quant_ref.py` and
 //! `python/compile/kernels/ref.py`):
@@ -33,13 +34,16 @@ pub use fused::{
 };
 pub use gemm::{dequantize, gemm_f32, gemv_f32};
 pub use pack::{
-    pack_cols, pack_rows, swizzle_weights, unpack_cols, unpack_rows, unswizzle_weights,
-    SwizzledWeights, NIBBLES_PER_WORD,
+    pack_cols, pack_rows, swizzle_weights, swizzle_weights_width, unpack_cols, unpack_rows,
+    unswizzle_weights, SwizzledWeights, NIBBLES_PER_WORD,
 };
 pub use quantize::{
     quantize_gptq, quantize_rtn, reconstruction_error, GptqConfig, QuantizedTensor,
 };
-pub use simd::{active_kernel, available_kernels, Kernel, KernelDispatch};
+pub use simd::{
+    active_kernel, available_kernels, kernel_registry, supports, Kernel, KernelDispatch,
+    KernelInfo,
+};
 
 /// A dense row-major f32 matrix (minimal, no external crates).
 #[derive(Debug, Clone, PartialEq)]

@@ -6,29 +6,46 @@
 //! rows: walking one column-octet down the K axis touches one 32-byte
 //! span per word row at an `N`-word stride.  [`SwizzledWeights`] is the
 //! VML-Opt analogue of the paper's coalesced vector loads: a
-//! column-interleaved copy in which a column-octet's entire K walk is one
-//! contiguous, 32-byte-aligned stream, so each step of the fused inner
-//! loop is a single aligned 256-bit load feeding all 8 lanes.
+//! column-interleaved copy in which a column group's entire K walk is one
+//! contiguous, load-aligned stream, so each step of the fused inner loop
+//! is a single aligned vector load feeding every lane.
+//!
+//! The interleave is parameterized by **lane width** — one prepack
+//! routine ([`swizzle_weights_width`]) serves both SIMD kernels:
+//!
+//! * width 8 (AVX2): column-octet groups, each group's word rows
+//!   contiguous and 32-byte aligned (one `ymm` load per step);
+//! * width 16 (AVX-512): column-hexadectet groups, contiguous and
+//!   64-byte aligned (one `zmm` load per step).  When `N % 16 == 8`,
+//!   the odd trailing octet is laid out after the full groups as a
+//!   32-byte-aligned octet stream (the kernel's `ymm` tail path).
+//!
+//! [`unswizzle_weights`] is the exact inverse at both widths — the cold
+//! path raw-layout consumers (oracle parity, checkpointing) rebuild the
+//! storage tensor through.
 
 pub const NIBBLES_PER_WORD: usize = 8;
 
-/// Eight consecutive columns' packed words for one word row — the unit a
-/// 256-bit vector load feeds.  `repr(align(32))` keeps every element of a
-/// `Vec<Lane8>` load-aligned (size 32 = align 32, no padding).
-#[repr(C, align(32))]
+/// Backing storage block of the swizzle: sized and aligned for one
+/// 512-bit load, which also satisfies the 256-bit alignment the 8-lane
+/// layout needs (size 64 = align 64, no padding, so a `Vec<AlignBlock>`
+/// is a contiguous aligned `[u32]`).
+#[repr(C, align(64))]
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct Lane8(pub [u32; 8]);
+struct AlignBlock([u32; 16]);
 
-/// Column-interleaved prepack of a `u32[K/8, N]` weight matrix:
-/// `octet(o, w)` holds word row `w` of columns `8o..8o+8`, laid out so
-/// octet `o`'s word rows `0..K/8` are contiguous (`lanes[o * K/8 + w]`).
-/// Computed once per tensor (see `fused::PreparedTensor`) and reused by
-/// every serve-path projection — the swizzle never runs on the hot path.
+/// Column-interleaved prepack of a `u32[K/8, N]` weight matrix at a
+/// given lane width `L ∈ {8, 16}`: column group `g` (columns
+/// `L·g..L·g+L`) holds its word rows `0..K/8` contiguously, one aligned
+/// `L`-word vector load per row.  Computed once per tensor (see
+/// `fused::PreparedTensor`) and reused by every serve-path projection —
+/// the swizzle never runs on the hot path.
 #[derive(Debug, Clone)]
 pub struct SwizzledWeights {
     kw: usize,
-    nw: usize,
-    lanes: Vec<Lane8>,
+    n: usize,
+    lane_width: usize,
+    blocks: Vec<AlignBlock>,
 }
 
 impl SwizzledWeights {
@@ -39,57 +56,104 @@ impl SwizzledWeights {
 
     /// Columns covered (`N`).
     pub fn n(&self) -> usize {
-        self.nw * NIBBLES_PER_WORD
+        self.n
     }
 
-    /// Word row `w` of column-octet `o` (columns `8o..8o+8`).
+    /// Column-interleave width of this prepack (8 or 16 lanes).
+    pub fn lane_width(&self) -> usize {
+        self.lane_width
+    }
+
+    /// Flat word index of `(col, word_row)` in [`Self::words`]: full
+    /// `lane_width`-column groups first (group `g` row `w` starts at
+    /// `(g·kw + w)·lane_width`), then — for the 16-lane layout of an
+    /// `N % 16 == 8` tensor — the trailing octet as its own contiguous
+    /// stream.  Exposed so tests can pin the layout/alignment contract;
+    /// the SIMD kernels inline the same arithmetic.
+    pub fn word_index(&self, col: usize, w: usize) -> usize {
+        debug_assert!(col < self.n && w < self.kw);
+        let full = self.n / self.lane_width;
+        let g = col / self.lane_width;
+        if g < full {
+            (g * self.kw + w) * self.lane_width + col % self.lane_width
+        } else {
+            let tail = self.n % self.lane_width;
+            full * self.kw * self.lane_width + w * tail + col % self.lane_width
+        }
+    }
+
+    /// Word row `w` of column-octet `o` (columns `8o..8o+8`) — octets
+    /// are contiguous 8-word spans at both lane widths, and never
+    /// straddle an [`AlignBlock`] (indices are 8-aligned, blocks hold
+    /// 16 words).
     #[inline]
     pub fn octet(&self, o: usize, w: usize) -> &[u32; 8] {
-        &self.lanes[o * self.kw + w].0
+        let i = self.word_index(o * NIBBLES_PER_WORD, w);
+        let lane = i % 16;
+        self.blocks[i / 16].0[lane..lane + NIBBLES_PER_WORD].try_into().unwrap()
     }
 
-    /// Flat 32-byte-aligned word view: octet `(o, w)` starts at index
-    /// `(o * kw + w) * 8`.  The SIMD kernels index this directly.
+    /// Flat 64-byte-aligned word view (`kw · n` words); the SIMD kernels
+    /// index this directly via the [`Self::word_index`] arithmetic.
     pub fn words(&self) -> &[u32] {
-        // SAFETY: Lane8 is repr(C) over [u32; 8] with no padding (size 32
-        // == align 32), so the Vec's backing store is a valid contiguous
-        // [u32] of 8 * len elements.
+        // SAFETY: AlignBlock is repr(C) over [u32; 16] with no padding
+        // (size 64 == align 64), so the Vec's backing store is a valid
+        // contiguous [u32] of 16 * blocks.len() >= kw * n elements.
+        unsafe { std::slice::from_raw_parts(self.blocks.as_ptr() as *const u32, self.kw * self.n) }
+    }
+
+    fn words_mut(&mut self) -> &mut [u32] {
+        // SAFETY: as in `words`.
         unsafe {
-            std::slice::from_raw_parts(
-                self.lanes.as_ptr() as *const u32,
-                self.lanes.len() * NIBBLES_PER_WORD,
-            )
+            std::slice::from_raw_parts_mut(self.blocks.as_mut_ptr() as *mut u32, self.kw * self.n)
         }
     }
 }
 
-/// Build the column-interleaved prepack of `qweight` (`u32[kw, n]`).
-pub fn swizzle_weights(qweight: &[u32], kw: usize, n: usize) -> SwizzledWeights {
+/// Build the column-interleaved prepack of `qweight` (`u32[kw, n]`) at
+/// `lane_width` ∈ {8, 16}.  `n` must be a multiple of 8; at width 16 an
+/// `n % 16 == 8` tensor gets the trailing-octet layout (see the module
+/// docs) so every valid packed tensor prepacks at either width.
+pub fn swizzle_weights_width(
+    qweight: &[u32],
+    kw: usize,
+    n: usize,
+    lane_width: usize,
+) -> SwizzledWeights {
     assert_eq!(qweight.len(), kw * n);
+    assert!(lane_width == 8 || lane_width == 16, "lane width must be 8 or 16");
     assert_eq!(n % NIBBLES_PER_WORD, 0, "N must be a multiple of 8");
-    let nw = n / NIBBLES_PER_WORD;
-    let mut lanes = vec![Lane8([0; NIBBLES_PER_WORD]); nw * kw];
-    for o in 0..nw {
+    let total = kw * n;
+    let blocks = vec![AlignBlock([0; 16]); total.div_ceil(16)];
+    let mut swz = SwizzledWeights { kw, n, lane_width, blocks };
+    for o in 0..n / NIBBLES_PER_WORD {
         for w in 0..kw {
             let src = w * n + o * NIBBLES_PER_WORD;
-            lanes[o * kw + w].0.copy_from_slice(&qweight[src..src + NIBBLES_PER_WORD]);
+            let dst = swz.word_index(o * NIBBLES_PER_WORD, w);
+            swz.words_mut()[dst..dst + NIBBLES_PER_WORD]
+                .copy_from_slice(&qweight[src..src + NIBBLES_PER_WORD]);
         }
     }
-    SwizzledWeights { kw, nw, lanes }
+    swz
 }
 
-/// Inverse of [`swizzle_weights`]: rebuild the storage-layout
-/// `qweight` (`u32[kw, n]`) from the prepack.  Cold path — used only
-/// when a raw-layout consumer (oracle parity, checkpointing) needs the
-/// canonical tensor back from a serve-host [`SwizzledWeights`]-only
-/// `PreparedTensor`.
+/// [`swizzle_weights_width`] at the 8-lane (AVX2) width.
+pub fn swizzle_weights(qweight: &[u32], kw: usize, n: usize) -> SwizzledWeights {
+    swizzle_weights_width(qweight, kw, n, NIBBLES_PER_WORD)
+}
+
+/// Inverse of [`swizzle_weights_width`] at either lane width: rebuild
+/// the storage-layout `qweight` (`u32[kw, n]`) from the prepack.  Cold
+/// path — used only when a raw-layout consumer (oracle parity,
+/// checkpointing) needs the canonical tensor back from a serve-host
+/// [`SwizzledWeights`]-only `PreparedTensor`.
 pub fn unswizzle_weights(swz: &SwizzledWeights) -> Vec<u32> {
-    let (kw, n) = (swz.kw, swz.nw * NIBBLES_PER_WORD);
+    let (kw, n) = (swz.kw(), swz.n());
     let mut qweight = vec![0u32; kw * n];
-    for o in 0..swz.nw {
+    for o in 0..n / NIBBLES_PER_WORD {
         for w in 0..kw {
             let dst = w * n + o * NIBBLES_PER_WORD;
-            qweight[dst..dst + NIBBLES_PER_WORD].copy_from_slice(&swz.lanes[o * kw + w].0);
+            qweight[dst..dst + NIBBLES_PER_WORD].copy_from_slice(swz.octet(o, w));
         }
     }
     qweight
@@ -216,32 +280,50 @@ mod tests {
     }
 
     #[test]
-    fn swizzle_octets_match_storage_layout() {
+    fn swizzle_octets_match_storage_layout_at_both_widths() {
         let mut rng = Rng::new(3);
         let (k, n) = (64, 40);
         let kw = k / NIBBLES_PER_WORD;
         let qweight: Vec<u32> = (0..kw * n).map(|_| rng.next_u32()).collect();
-        let swz = swizzle_weights(&qweight, kw, n);
-        assert_eq!(swz.kw(), kw);
-        assert_eq!(swz.n(), n);
-        for o in 0..n / NIBBLES_PER_WORD {
-            for w in 0..kw {
-                let src = w * n + o * NIBBLES_PER_WORD;
-                assert_eq!(
-                    &swz.octet(o, w)[..],
-                    &qweight[src..src + NIBBLES_PER_WORD],
-                    "o={o} w={w}"
-                );
+        for width in [8, 16] {
+            let swz = swizzle_weights_width(&qweight, kw, n, width);
+            assert_eq!(swz.kw(), kw);
+            assert_eq!(swz.n(), n);
+            assert_eq!(swz.lane_width(), width);
+            for o in 0..n / NIBBLES_PER_WORD {
+                for w in 0..kw {
+                    let src = w * n + o * NIBBLES_PER_WORD;
+                    assert_eq!(
+                        &swz.octet(o, w)[..],
+                        &qweight[src..src + NIBBLES_PER_WORD],
+                        "width={width} o={o} w={w}"
+                    );
+                }
             }
         }
     }
 
     #[test]
-    fn unswizzle_is_the_exact_inverse() {
+    fn unswizzle_is_the_exact_inverse_at_both_widths() {
         let mut rng = Rng::new(5);
+        // n = 48: a multiple of 16; n = 40: exercises the 16-lane
+        // layout's trailing octet.
+        for (kw, n) in [(8usize, 48usize), (8, 40), (16, 8)] {
+            let qweight: Vec<u32> = (0..kw * n).map(|_| rng.next_u32()).collect();
+            for width in [8, 16] {
+                let swz = swizzle_weights_width(&qweight, kw, n, width);
+                assert_eq!(unswizzle_weights(&swz), qweight, "kw={kw} n={n} width={width}");
+            }
+        }
+    }
+
+    #[test]
+    fn default_swizzle_is_the_eight_lane_layout() {
+        let mut rng = Rng::new(6);
         let (kw, n) = (8, 48);
         let qweight: Vec<u32> = (0..kw * n).map(|_| rng.next_u32()).collect();
         let swz = swizzle_weights(&qweight, kw, n);
+        assert_eq!(swz.lane_width(), 8);
         assert_eq!(unswizzle_weights(&swz), qweight);
     }
 
@@ -253,11 +335,47 @@ mod tests {
         let swz = swizzle_weights(&qweight, kw, n);
         let words = swz.words();
         assert_eq!(words.len(), kw * n);
-        assert_eq!(words.as_ptr() as usize % 32, 0, "flat view must be 32-byte aligned");
+        assert_eq!(words.as_ptr() as usize % 64, 0, "flat view must be 64-byte aligned");
         for o in 0..n / NIBBLES_PER_WORD {
             for w in 0..kw {
                 let base = (o * kw + w) * NIBBLES_PER_WORD;
+                assert_eq!(swz.word_index(o * NIBBLES_PER_WORD, w), base);
                 assert_eq!(&words[base..base + NIBBLES_PER_WORD], &swz.octet(o, w)[..]);
+            }
+        }
+    }
+
+    #[test]
+    fn sixteen_lane_rows_are_zmm_aligned_and_tail_octets_ymm_aligned() {
+        // The zmm-load contract of the 16-lane layout: every full
+        // hexadectet's word row starts on a 64-byte boundary, and the
+        // trailing octet rows (n % 16 == 8) on a 32-byte one.
+        let mut rng = Rng::new(7);
+        let (kw, n) = (8, 40); // 2 full hexadectets + trailing octet
+        let qweight: Vec<u32> = (0..kw * n).map(|_| rng.next_u32()).collect();
+        let swz = swizzle_weights_width(&qweight, kw, n, 16);
+        let words = swz.words();
+        assert_eq!(words.as_ptr() as usize % 64, 0);
+        for h in 0..n / 16 {
+            for w in 0..kw {
+                let i = swz.word_index(h * 16, w);
+                assert_eq!(i, (h * kw + w) * 16);
+                let addr = unsafe { words.as_ptr().add(i) } as usize;
+                assert_eq!(addr % 64, 0, "hexadectet h={h} w={w} must be zmm-aligned");
+                // One contiguous 16-word row holds columns 16h..16h+16.
+                for lane in 0..16 {
+                    assert_eq!(words[i + lane], qweight[w * n + h * 16 + lane]);
+                }
+            }
+        }
+        let tail_col = n / 16 * 16;
+        for w in 0..kw {
+            let i = swz.word_index(tail_col, w);
+            assert_eq!(i, (n / 16) * kw * 16 + w * 8);
+            let addr = unsafe { words.as_ptr().add(i) } as usize;
+            assert_eq!(addr % 32, 0, "tail octet w={w} must be ymm-aligned");
+            for lane in 0..8 {
+                assert_eq!(words[i + lane], qweight[w * n + tail_col + lane]);
             }
         }
     }

@@ -4,31 +4,54 @@
 //! The paper's three platform-level strategies map onto this module as:
 //!
 //! * **VML-Opt** (vectorized memory loads): each inner-loop step is one
-//!   256-bit load of a column-octet's packed word row — aligned when the
-//!   tensor carries a [`SwizzledWeights`] prepack (see `pack`), unaligned
-//!   but still contiguous straight from the storage layout otherwise.
-//! * **ILA-Opt** (native vector FMA): nibbles are unpacked 8 lanes at a
-//!   time with shift/mask, converted once, and accumulated with
-//!   `vfmadd231ps`; the group-factored flush `s·(Σx·c − z·Σx)` is
-//!   evaluated entirely in vector registers.
+//!   vector load of a column group's packed word row — 256-bit for the
+//!   8-lane kernel, 512-bit for the 16-lane one — aligned when the
+//!   tensor carries a [`SwizzledWeights`](super::pack::SwizzledWeights)
+//!   prepack at the kernel's lane width, unaligned but still contiguous
+//!   straight from the storage layout otherwise.
+//! * **ILA-Opt** (native vector FMA): nibbles are unpacked 8 or 16 lanes
+//!   at a time with shift/mask, converted once, and accumulated with
+//!   `vfmadd231ps` (ymm or zmm); the group-factored flush
+//!   `s·(Σx·c − z·Σx)` is evaluated entirely in vector registers.
 //! * **SMB-Opt** (shared-memory tile buffering): per-column-tile partial
 //!   outputs live in a stack scratch tile (`M_BLOCK × TILE_COLS`), so one
 //!   group's activation slab plus the flush tile stay L1-resident.
 //!
+//! # The kernel registry
+//!
 //! Kernel selection happens **once** per process through
-//! [`KernelDispatch`]: AVX2+FMA hosts get the explicit path, everything
-//! else transparently falls back to the portable scalar loop in
-//! `fused` (which stays bit-identical to previous releases).  Set
-//! `OPT4GPTQ_KERNEL=scalar|avx2|auto` to override detection for testing;
-//! an `avx2` request on a host without the features falls back to scalar
-//! with a warning rather than faulting.
+//! [`KernelDispatch`], which resolves against the [`kernel_registry`]
+//! (ascending preference — auto-detection picks the widest supported
+//! row):
+//!
+//! | kernel   | lanes | swizzle layout                     | required CPU features            | env override              |
+//! |----------|-------|------------------------------------|----------------------------------|---------------------------|
+//! | `scalar` | 1     | none (streams storage layout)      | —                                | `OPT4GPTQ_KERNEL=scalar`  |
+//! | `avx2`   | 8     | 8-lane interleave, 32-byte aligned | `avx2`, `fma`                    | `OPT4GPTQ_KERNEL=avx2`    |
+//! | `avx512` | 16    | 16-lane interleave, 64-byte aligned (odd trailing octet as a ymm stream) | `avx512f`, `avx512bw` (+`avx2`, `fma` for the tail path) | `OPT4GPTQ_KERNEL=avx512` |
+//!
+//! `OPT4GPTQ_KERNEL=<name>|auto` overrides detection for testing (the
+//! CI forced-kernel matrix runs the full suite once per leg); requesting
+//! a kernel the host cannot run — or an unknown name — falls back with a
+//! single warning on stderr (emitted once, through the `OnceLock`
+//! resolution) naming the valid set and the kernel actually chosen,
+//! rather than faulting.  The AVX-512 kernel additionally requires a
+//! toolchain with stable `_mm512_*` intrinsics (rustc ≥ 1.89, probed by
+//! `build.rs`); older toolchains compile it out and the registry reports
+//! it unsupported — the same graceful path as missing CPU features.
+//!
+//! A NEON port for aarch64 is the remaining open slot: the registry, the
+//! width-parameterized swizzle, and the panel contract are ready for it.
 //!
 //! Parity across dispatch paths is pinned by `rust/tests/parity.rs`
-//! (forced-scalar and forced-SIMD sweeps against the dense oracle);
-//! relative speed by `rust/benches/fused_gemm.rs`, which asserts the SIMD
-//! path is never slower than scalar on the headline decode shape.
+//! (forced sweeps of every registry kernel against the dense oracle);
+//! relative speed by `rust/benches/fused_gemm.rs`, which asserts SIMD ≥
+//! scalar and (where detected) AVX-512 ≥ AVX2 on the headline decode
+//! shape, best-of-N.
 
 use std::sync::OnceLock;
+
+use super::pack::NIBBLES_PER_WORD;
 
 /// One fused-kernel implementation the dispatcher can select.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -38,15 +61,48 @@ pub enum Kernel {
     Scalar,
     /// Explicit AVX2+FMA octet kernel (x86-64 only, runtime-detected).
     Avx2,
+    /// Explicit AVX-512F/BW hexadectet kernel (x86-64 only,
+    /// runtime-detected, compiled only on toolchains with stable
+    /// AVX-512 intrinsics).
+    Avx512,
 }
 
 impl Kernel {
-    /// Stable lowercase name (used by `OPT4GPTQ_KERNEL` and bench JSON).
+    /// The registry row describing this kernel — the single source of
+    /// truth for its name, lane width, swizzle layout and required
+    /// features.
+    pub fn info(self) -> &'static KernelInfo {
+        kernel_registry()
+            .iter()
+            .find(|info| info.kernel == self)
+            .expect("every kernel has a registry row")
+    }
+
+    /// Stable lowercase name (used by `OPT4GPTQ_KERNEL`, the CI matrix,
+    /// and bench JSON).
     pub fn name(self) -> &'static str {
-        match self {
-            Kernel::Scalar => "scalar",
-            Kernel::Avx2 => "avx2",
-        }
+        self.info().name
+    }
+
+    /// f32 lanes per vector FMA (1 = scalar autovectorization).
+    pub fn lanes(self) -> usize {
+        self.info().lanes
+    }
+
+    /// Column-interleave width of the swizzled prepack this kernel
+    /// streams aligned loads from (`None`: streams the storage layout).
+    /// `fused::PreparedTensor` builds the swizzle at this width once at
+    /// model build, so the serve path never re-swizzles.
+    pub fn swizzle_width(self) -> Option<usize> {
+        self.info().swizzle_width
+    }
+
+    /// Column granularity the threaded column split must respect so
+    /// every worker's slab keeps this kernel's load alignment (the
+    /// packed nibble width for scalar/AVX2, a full hexadectet for
+    /// AVX-512).
+    pub fn col_align(self) -> usize {
+        self.swizzle_width().unwrap_or(NIBBLES_PER_WORD)
     }
 }
 
@@ -56,22 +112,68 @@ impl std::fmt::Display for Kernel {
     }
 }
 
-/// Whether `kernel` can run on this host.
+/// One row of the kernel registry: everything the dispatcher, the docs
+/// table, and the CI forced-kernel matrix need to know about a kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelInfo {
+    pub kernel: Kernel,
+    /// Stable name (`OPT4GPTQ_KERNEL` value, bench JSON, CI matrix leg).
+    pub name: &'static str,
+    /// f32 lanes per vector FMA.
+    pub lanes: usize,
+    /// Column-interleave width of the aligned prepack (`None` = raw).
+    pub swizzle_width: Option<usize>,
+    /// CPU features [`supports`] requires at runtime.
+    pub required_features: &'static [&'static str],
+}
+
+static REGISTRY: [KernelInfo; 3] = [
+    KernelInfo {
+        kernel: Kernel::Scalar,
+        name: "scalar",
+        lanes: 1,
+        swizzle_width: None,
+        required_features: &[],
+    },
+    KernelInfo {
+        kernel: Kernel::Avx2,
+        name: "avx2",
+        lanes: 8,
+        swizzle_width: Some(8),
+        required_features: &["avx2", "fma"],
+    },
+    KernelInfo {
+        kernel: Kernel::Avx512,
+        name: "avx512",
+        lanes: 16,
+        swizzle_width: Some(16),
+        required_features: &["avx512f", "avx512bw", "avx2", "fma"],
+    },
+];
+
+/// The kernel registry, in ascending preference order: auto-detection
+/// picks the **last** supported row, `OPT4GPTQ_KERNEL` values resolve
+/// against the `name` column, and tests/CI iterate it so a new kernel
+/// is swept the moment it is registered.
+pub fn kernel_registry() -> &'static [KernelInfo] {
+    &REGISTRY
+}
+
+/// Whether `kernel` can run on this host (CPU features present and the
+/// kernel compiled in).
 pub fn supports(kernel: Kernel) -> bool {
     match kernel {
         Kernel::Scalar => true,
         Kernel::Avx2 => avx2_supported(),
+        Kernel::Avx512 => avx512_supported(),
     }
 }
 
-/// Every kernel this host can run (scalar always; AVX2 when detected).
-/// Tests iterate this to sweep all dispatchable paths.
+/// Every kernel this host can run (scalar always; wider ones when
+/// detected), in registry order.  Tests iterate this to sweep all
+/// dispatchable paths.
 pub fn available_kernels() -> Vec<Kernel> {
-    let mut v = vec![Kernel::Scalar];
-    if avx2_supported() {
-        v.push(Kernel::Avx2);
-    }
-    v
+    kernel_registry().iter().map(|info| info.kernel).filter(|&k| supports(k)).collect()
 }
 
 fn avx2_supported() -> bool {
@@ -85,8 +187,22 @@ fn avx2_supported() -> bool {
     }
 }
 
+fn avx512_supported() -> bool {
+    #[cfg(all(target_arch = "x86_64", opt4gptq_avx512_intrinsics))]
+    {
+        is_x86_feature_detected!("avx512f")
+            && is_x86_feature_detected!("avx512bw")
+            && is_x86_feature_detected!("avx2")
+            && is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(all(target_arch = "x86_64", opt4gptq_avx512_intrinsics)))]
+    {
+        false
+    }
+}
+
 /// Process-wide kernel selection, resolved once on first use: the
-/// dispatch-table analogue of the paper's per-platform kernel binding.
+/// registry analogue of the paper's per-platform kernel binding.
 #[derive(Debug, Clone, Copy)]
 pub struct KernelDispatch {
     /// The kernel every auto-dispatched fused call runs through.
@@ -101,40 +217,56 @@ static DISPATCH: OnceLock<KernelDispatch> = OnceLock::new();
 
 impl KernelDispatch {
     /// The resolved process-wide dispatch entry.  The environment is read
-    /// exactly once; later changes to `OPT4GPTQ_KERNEL` have no effect.
+    /// exactly once — later changes to `OPT4GPTQ_KERNEL` have no effect,
+    /// and any override warning is emitted exactly once, here.
     pub fn get() -> KernelDispatch {
-        *DISPATCH.get_or_init(|| match std::env::var("OPT4GPTQ_KERNEL") {
-            Ok(v) => match v.to_ascii_lowercase().as_str() {
-                "scalar" => KernelDispatch { kernel: Kernel::Scalar, source: "env" },
-                "avx2" if avx2_supported() => {
-                    KernelDispatch { kernel: Kernel::Avx2, source: "env" }
+        *DISPATCH.get_or_init(|| {
+            let Ok(requested) = std::env::var("OPT4GPTQ_KERNEL") else {
+                return KernelDispatch::auto();
+            };
+            let requested = requested.to_ascii_lowercase();
+            if requested.is_empty() || requested == "auto" {
+                return KernelDispatch::auto();
+            }
+            match kernel_registry().iter().find(|info| info.name == requested) {
+                Some(info) if supports(info.kernel) => {
+                    KernelDispatch { kernel: info.kernel, source: "env" }
                 }
-                "avx2" => {
+                Some(info) => {
+                    let auto = KernelDispatch::auto();
                     eprintln!(
-                        "opt4gptq: OPT4GPTQ_KERNEL=avx2 but AVX2+FMA are not \
-                         available on this host; falling back to scalar"
+                        "opt4gptq: OPT4GPTQ_KERNEL={} requested, but this host cannot run \
+                         it (needs {}, or the toolchain compiled it out); falling back to \
+                         auto-detected '{}'",
+                        info.name,
+                        info.required_features.join("+"),
+                        auto.kernel,
                     );
-                    KernelDispatch { kernel: Kernel::Scalar, source: "fallback" }
+                    KernelDispatch { kernel: auto.kernel, source: "fallback" }
                 }
-                "auto" | "" => KernelDispatch::auto(),
-                other => {
+                None => {
+                    let auto = KernelDispatch::auto();
+                    let valid: Vec<&str> = kernel_registry().iter().map(|i| i.name).collect();
                     eprintln!(
-                        "opt4gptq: unknown OPT4GPTQ_KERNEL={other:?} \
-                         (expected scalar|avx2|auto); using auto detection"
+                        "opt4gptq: unknown OPT4GPTQ_KERNEL={requested:?} (valid values: \
+                         {}|auto); falling back to auto-detected '{}'",
+                        valid.join("|"),
+                        auto.kernel,
                     );
-                    KernelDispatch { kernel: KernelDispatch::auto().kernel, source: "fallback" }
+                    KernelDispatch { kernel: auto.kernel, source: "fallback" }
                 }
-            },
-            Err(_) => KernelDispatch::auto(),
+            }
         })
     }
 
     fn auto() -> KernelDispatch {
-        if avx2_supported() {
-            KernelDispatch { kernel: Kernel::Avx2, source: "auto" }
-        } else {
-            KernelDispatch { kernel: Kernel::Scalar, source: "auto" }
-        }
+        let kernel = kernel_registry()
+            .iter()
+            .rev()
+            .map(|info| info.kernel)
+            .find(|&k| supports(k))
+            .unwrap_or(Kernel::Scalar);
+        KernelDispatch { kernel, source: "auto" }
     }
 }
 
@@ -182,6 +314,7 @@ pub(crate) fn panel_avx2(
         groups: q.k / q.group_size,
     };
     if let Some(s) = call.swz {
+        assert_eq!(s.lane_width(), 8, "AVX2 kernel needs the 8-lane swizzle");
         assert_eq!(s.kw(), geom.kw, "swizzle K mismatch");
         assert_eq!(s.n(), q.n, "swizzle N mismatch");
         // SAFETY: AVX2+FMA presence asserted above.
@@ -371,6 +504,330 @@ mod x86 {
     }
 }
 
+/// AVX-512F/BW panel kernel: same contract as [`panel_avx2`], 16 lanes
+/// wide — one 512-bit load per hexadectet (16 columns) per word row,
+/// zmm shift/mask nibble unpack and `vfmadd231ps`, the group-factored
+/// flush held in zmm registers, and a widened register tile (4
+/// independent zmm chains, 64 columns in flight) on the M=1 decode
+/// path.  An `N % 16 == 8` tensor's trailing octet runs through a ymm
+/// tail path so every octet-aligned window is accepted.  Caller must
+/// have verified [`supports`]`(Avx512)`.
+#[cfg(all(target_arch = "x86_64", opt4gptq_avx512_intrinsics))]
+pub(crate) fn panel_avx512(
+    call: &super::fused::KernelCall<'_>,
+    xg: &[f32],
+    xsum: &[f32],
+    mb: usize,
+    c0: usize,
+    cn: usize,
+    out: &mut [f32],
+) {
+    let q = call.q;
+    assert!(avx512_supported(), "AVX-512 kernel dispatched on a host without AVX-512F/BW");
+    assert!(mb <= super::fused::M_BLOCK);
+    assert_eq!(xg.len(), mb * q.k);
+    assert_eq!(out.len(), mb * cn);
+    // The column split aligns slabs to `Kernel::col_align() == 16`, so
+    // windows start hexadectet-aligned; only the matrix's trailing octet
+    // (N % 16 == 8, always at the end of the last window) is narrower.
+    assert_eq!(c0 % 16, 0, "column window must be hexadectet-aligned");
+    assert_eq!(cn % 8, 0, "column window width must be a multiple of 8");
+    assert_eq!(q.group_size % 8, 0, "group size must be a multiple of 8");
+    assert_eq!(q.k % q.group_size, 0, "group size must divide K");
+    if cn % 16 != 0 {
+        assert_eq!(c0 + cn, q.n, "an octet-ragged window must end the matrix");
+    }
+    if cn == 0 || mb == 0 {
+        return;
+    }
+    let geom = x86_512::Geom {
+        qweight: &q.qweight,
+        qzeros: &q.qzeros,
+        scales: &q.scales,
+        swz: call.swz.map(|s| s.words()).unwrap_or(&[]),
+        k: q.k,
+        n: q.n,
+        nw: q.n / 8,
+        kw: q.k / 8,
+        wpg: q.group_size / 8,
+        groups: q.k / q.group_size,
+        full_hex: q.n / 16,
+    };
+    if let Some(s) = call.swz {
+        assert_eq!(s.lane_width(), 16, "AVX-512 kernel needs the 16-lane swizzle");
+        assert_eq!(s.kw(), geom.kw, "swizzle K mismatch");
+        assert_eq!(s.n(), q.n, "swizzle N mismatch");
+        // SAFETY: AVX-512F/BW (+AVX2/FMA) presence asserted above.
+        unsafe { x86_512::tiles::<true>(&geom, xg, xsum, mb, c0, cn, out) }
+    } else {
+        // SAFETY: AVX-512F/BW (+AVX2/FMA) presence asserted above.
+        unsafe { x86_512::tiles::<false>(&geom, xg, xsum, mb, c0, cn, out) }
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", opt4gptq_avx512_intrinsics))]
+mod x86_512 {
+    use crate::gptq::fused::M_BLOCK;
+    use std::arch::x86_64::*;
+
+    /// Column-tile width, shared with the AVX2 path: the flush tile is
+    /// the same 8 KiB `M_BLOCK × 256` f32 SMB-Opt stack scratch.
+    pub(super) const TILE_COLS: usize = 256;
+
+    /// Hexadectet-group width for the `mb = 1` decode GEMV: four
+    /// independent zmm accumulator chains (64 columns in flight) hide
+    /// the FMA latency — the widened-register-tile analogue of the AVX2
+    /// path's 4-octet grouping.
+    const GEMV_HG: usize = 4;
+
+    /// Resolved tensor geometry shared by the tile, hexadectet, and
+    /// tail-octet loops.
+    pub(super) struct Geom<'a> {
+        pub qweight: &'a [u32],
+        pub qzeros: &'a [u32],
+        pub scales: &'a [f32],
+        /// Flat 16-lane swizzled view; empty when streaming straight
+        /// from the storage layout.
+        pub swz: &'a [u32],
+        pub k: usize,
+        pub n: usize,
+        pub kw: usize,
+        pub nw: usize,
+        /// Words per group slab (`group_size / 8`).
+        pub wpg: usize,
+        pub groups: usize,
+        /// Full 16-column groups of the swizzle layout (`N / 16`); the
+        /// odd trailing octet (when `N % 16 == 8`) lives after them.
+        pub full_hex: usize,
+    }
+
+    /// Tile loop over the column window: walk `[c0, c0+cn)` in
+    /// `TILE_COLS` tiles, K in group slabs, flushing each group's zmm
+    /// accumulators into the stack scratch tile; an octet-ragged final
+    /// tile finishes through the ymm tail path.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX-512F/BW (+AVX2/FMA) at runtime and
+    /// the geometry invariants checked by [`super::panel_avx512`].
+    #[target_feature(enable = "avx512f,avx512bw,avx2,fma")]
+    pub(super) unsafe fn tiles<const SWZ: bool>(
+        geom: &Geom<'_>,
+        xg: &[f32],
+        xsum: &[f32],
+        mb: usize,
+        c0: usize,
+        cn: usize,
+        out: &mut [f32],
+    ) {
+        let mut ytile = [0.0f32; M_BLOCK * TILE_COLS];
+        let mut cb = 0usize;
+        while cb < cn {
+            let nb = TILE_COLS.min(cn - cb);
+            let hexes = nb / 16;
+            let tail = nb % 16; // 0, or 8: the matrix's trailing octet
+            let hex0 = (c0 + cb) / 16; // absolute first hexadectet
+            for mi in 0..mb {
+                ytile[mi * TILE_COLS..mi * TILE_COLS + nb].fill(0.0);
+            }
+            for gi in 0..geom.groups {
+                let mut hi = 0usize;
+                if mb == 1 {
+                    // Decode GEMV: 4-hexadectet groups, 4 independent
+                    // zmm chains (the widened register tile).
+                    while hi + GEMV_HG <= hexes {
+                        group_hexes::<1, GEMV_HG, SWZ>(
+                            geom,
+                            xg,
+                            xsum,
+                            gi,
+                            hex0 + hi,
+                            &mut ytile,
+                            hi * 16,
+                        );
+                        hi += GEMV_HG;
+                    }
+                }
+                while hi < hexes {
+                    let h0 = hex0 + hi;
+                    let yc = hi * 16;
+                    match mb {
+                        1 => group_hexes::<1, 1, SWZ>(geom, xg, xsum, gi, h0, &mut ytile, yc),
+                        2 => group_hexes::<2, 1, SWZ>(geom, xg, xsum, gi, h0, &mut ytile, yc),
+                        3 => group_hexes::<3, 1, SWZ>(geom, xg, xsum, gi, h0, &mut ytile, yc),
+                        4 => group_hexes::<4, 1, SWZ>(geom, xg, xsum, gi, h0, &mut ytile, yc),
+                        5 => group_hexes::<5, 1, SWZ>(geom, xg, xsum, gi, h0, &mut ytile, yc),
+                        6 => group_hexes::<6, 1, SWZ>(geom, xg, xsum, gi, h0, &mut ytile, yc),
+                        7 => group_hexes::<7, 1, SWZ>(geom, xg, xsum, gi, h0, &mut ytile, yc),
+                        8 => group_hexes::<8, 1, SWZ>(geom, xg, xsum, gi, h0, &mut ytile, yc),
+                        _ => unreachable!("mb is capped at M_BLOCK"),
+                    }
+                    hi += 1;
+                }
+                if tail != 0 {
+                    let col = c0 + cb + hexes * 16; // absolute tail column
+                    let yc = hexes * 16;
+                    match mb {
+                        1 => tail_octet::<1, SWZ>(geom, xg, xsum, gi, col, &mut ytile, yc),
+                        2 => tail_octet::<2, SWZ>(geom, xg, xsum, gi, col, &mut ytile, yc),
+                        3 => tail_octet::<3, SWZ>(geom, xg, xsum, gi, col, &mut ytile, yc),
+                        4 => tail_octet::<4, SWZ>(geom, xg, xsum, gi, col, &mut ytile, yc),
+                        5 => tail_octet::<5, SWZ>(geom, xg, xsum, gi, col, &mut ytile, yc),
+                        6 => tail_octet::<6, SWZ>(geom, xg, xsum, gi, col, &mut ytile, yc),
+                        7 => tail_octet::<7, SWZ>(geom, xg, xsum, gi, col, &mut ytile, yc),
+                        8 => tail_octet::<8, SWZ>(geom, xg, xsum, gi, col, &mut ytile, yc),
+                        _ => unreachable!("mb is capped at M_BLOCK"),
+                    }
+                }
+            }
+            for mi in 0..mb {
+                out[mi * cn + cb..mi * cn + cb + nb]
+                    .copy_from_slice(&ytile[mi * TILE_COLS..mi * TILE_COLS + nb]);
+            }
+            cb += nb;
+        }
+    }
+
+    /// One group slab × `HG` column-hexadectets × `MB` activation rows,
+    /// fully register-resident: `MB×HG` zmm running sums accumulate
+    /// `Σ x·code` with `vfmadd231ps` over the slab's word rows (16-lane
+    /// nibble unpack via shift/mask per row), then the group-factored
+    /// flush `y += s·(acc − z·Σx)` lands in the scratch tile at `ycol`.
+    /// Per column the operation sequence is identical to the AVX2
+    /// kernel's, so the two agree bitwise.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX-512F/BW at runtime; `h0 + HG`
+    /// hexadectets and `ycol + HG*16` columns must be in bounds.
+    #[target_feature(enable = "avx512f,avx512bw,avx2,fma")]
+    unsafe fn group_hexes<const MB: usize, const HG: usize, const SWZ: bool>(
+        geom: &Geom<'_>,
+        xg: &[f32],
+        xsum: &[f32],
+        gi: usize,
+        h0: usize,
+        ytile: &mut [f32],
+        ycol: usize,
+    ) {
+        let mask = _mm512_set1_epi32(0xF);
+        let w0 = gi * geom.wpg;
+        let mut acc = [[_mm512_setzero_ps(); HG]; MB];
+        for dw in 0..geom.wpg {
+            let w = w0 + dw;
+            // One 512-bit load per hexadectet feeds all 16 lanes
+            // (VML-Opt): aligned from the 16-lane swizzled stream,
+            // unaligned-contiguous from the storage layout otherwise.
+            let mut words = [_mm512_setzero_si512(); HG];
+            for (hc, wrd) in words.iter_mut().enumerate() {
+                // `.cast()` lets inference pick the load's pointer
+                // parameter type (it differs across stdarch releases).
+                *wrd = if SWZ {
+                    _mm512_load_si512(geom.swz.as_ptr().add(((h0 + hc) * geom.kw + w) * 16).cast())
+                } else {
+                    _mm512_loadu_si512(
+                        geom.qweight.as_ptr().add(w * geom.n + (h0 + hc) * 16).cast(),
+                    )
+                };
+            }
+            // Eight nibble rows per word: shift/mask unpack, convert
+            // once, FMA into every row's accumulator (ILA-Opt).
+            for j in 0..8 {
+                let mut nib = [_mm512_setzero_ps(); HG];
+                for (hc, nb) in nib.iter_mut().enumerate() {
+                    *nb = _mm512_cvtepi32_ps(_mm512_and_si512(words[hc], mask));
+                    words[hc] = _mm512_srli_epi32::<4>(words[hc]);
+                }
+                for (mi, arow) in acc.iter_mut().enumerate() {
+                    let xv = _mm512_set1_ps(*xg.get_unchecked(mi * geom.k + w * 8 + j));
+                    for (hc, a) in arow.iter_mut().enumerate() {
+                        *a = _mm512_fmadd_ps(xv, nib[hc], *a);
+                    }
+                }
+            }
+        }
+        // Group-factored flush, entirely in zmm registers:
+        // y += s·(acc − z·Σx).  A hexadectet's 16 zero nibbles live in
+        // TWO qzeros words — broadcast each into one 256-bit half, then
+        // shift/mask decode all 16 lanes at once.
+        let shifts = _mm512_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28, 0, 4, 8, 12, 16, 20, 24, 28);
+        for hc in 0..HG {
+            let h = h0 + hc;
+            let zlo = *geom.qzeros.get_unchecked(gi * geom.nw + h * 2) as i32;
+            let zhi = *geom.qzeros.get_unchecked(gi * geom.nw + h * 2 + 1) as i32;
+            let zwords = _mm512_inserti64x4::<1>(
+                _mm512_castsi256_si512(_mm256_set1_epi32(zlo)),
+                _mm256_set1_epi32(zhi),
+            );
+            let z = _mm512_cvtepi32_ps(_mm512_and_si512(_mm512_srlv_epi32(zwords, shifts), mask));
+            let s = _mm512_loadu_ps(geom.scales.as_ptr().add(gi * geom.n + h * 16));
+            for (mi, arow) in acc.iter().enumerate() {
+                let xs = _mm512_set1_ps(*xsum.get_unchecked(mi * geom.groups + gi));
+                let yp = ytile.as_mut_ptr().add(mi * TILE_COLS + ycol + hc * 16);
+                let y = _mm512_loadu_ps(yp);
+                _mm512_storeu_ps(
+                    yp,
+                    _mm512_fmadd_ps(s, _mm512_sub_ps(arow[hc], _mm512_mul_ps(z, xs)), y),
+                );
+            }
+        }
+    }
+
+    /// The trailing octet of an `N % 16 == 8` tensor: one group slab ×
+    /// 1 octet × `MB` rows through ymm ops (same per-column operation
+    /// sequence as the AVX2 kernel, so parity is preserved bitwise).
+    /// In the 16-lane swizzle the tail stream lives after the full
+    /// hexadectet groups, 32-byte aligned.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX-512F/BW (+AVX2/FMA) at runtime;
+    /// `col` must be the matrix's final octet and `ycol + 8` columns of
+    /// the tile in bounds.
+    #[target_feature(enable = "avx512f,avx512bw,avx2,fma")]
+    unsafe fn tail_octet<const MB: usize, const SWZ: bool>(
+        geom: &Geom<'_>,
+        xg: &[f32],
+        xsum: &[f32],
+        gi: usize,
+        col: usize,
+        ytile: &mut [f32],
+        ycol: usize,
+    ) {
+        debug_assert_eq!(col, geom.full_hex * 16, "tail octet must be the matrix's last");
+        let mask = _mm256_set1_epi32(0xF);
+        let w0 = gi * geom.wpg;
+        let tail_base = geom.full_hex * geom.kw * 16;
+        let mut acc = [_mm256_setzero_ps(); MB];
+        for dw in 0..geom.wpg {
+            let w = w0 + dw;
+            let mut word = if SWZ {
+                _mm256_load_si256(geom.swz.as_ptr().add(tail_base + w * 8) as *const __m256i)
+            } else {
+                _mm256_loadu_si256(geom.qweight.as_ptr().add(w * geom.n + col) as *const __m256i)
+            };
+            for j in 0..8 {
+                let nib = _mm256_cvtepi32_ps(_mm256_and_si256(word, mask));
+                word = _mm256_srli_epi32::<4>(word);
+                for (mi, a) in acc.iter_mut().enumerate() {
+                    let xv = _mm256_set1_ps(*xg.get_unchecked(mi * geom.k + w * 8 + j));
+                    *a = _mm256_fmadd_ps(xv, nib, *a);
+                }
+            }
+        }
+        let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+        let zword = *geom.qzeros.get_unchecked(gi * geom.nw + col / 8) as i32;
+        let z = _mm256_cvtepi32_ps(_mm256_and_si256(
+            _mm256_srlv_epi32(_mm256_set1_epi32(zword), shifts),
+            mask,
+        ));
+        let s = _mm256_loadu_ps(geom.scales.as_ptr().add(gi * geom.n + col));
+        for (mi, a) in acc.iter().enumerate() {
+            let xs = _mm256_set1_ps(*xsum.get_unchecked(mi * geom.groups + gi));
+            let yp = ytile.as_mut_ptr().add(mi * TILE_COLS + ycol);
+            let y = _mm256_loadu_ps(yp);
+            _mm256_storeu_ps(yp, _mm256_fmadd_ps(s, _mm256_sub_ps(*a, _mm256_mul_ps(z, xs)), y));
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -399,6 +856,30 @@ mod tests {
     fn kernel_names_are_stable() {
         assert_eq!(Kernel::Scalar.name(), "scalar");
         assert_eq!(Kernel::Avx2.name(), "avx2");
-        assert_eq!(format!("{}", Kernel::Avx2), "avx2");
+        assert_eq!(Kernel::Avx512.name(), "avx512");
+        assert_eq!(format!("{}", Kernel::Avx512), "avx512");
+    }
+
+    #[test]
+    fn registry_covers_every_kernel() {
+        let names: Vec<&str> = kernel_registry().iter().map(|info| info.name).collect();
+        assert_eq!(names, ["scalar", "avx2", "avx512"], "registry must name all kernels");
+        // Kernel methods delegate to the registry; `info()` must resolve
+        // for every variant (a variant without a row would panic here).
+        for kernel in [Kernel::Scalar, Kernel::Avx2, Kernel::Avx512] {
+            assert_eq!(kernel.info().kernel, kernel);
+            assert_eq!(kernel.col_align(), kernel.swizzle_width().unwrap_or(NIBBLES_PER_WORD));
+        }
+    }
+
+    #[test]
+    fn auto_detection_prefers_the_widest_supported_kernel() {
+        // available_kernels is registry-ordered (ascending preference),
+        // so auto dispatch must pick its last element — scalar only when
+        // nothing wider runs here.
+        let widest = *available_kernels().last().unwrap();
+        let auto = KernelDispatch::auto();
+        assert_eq!(auto.kernel, widest);
+        assert_eq!(auto.source, "auto");
     }
 }

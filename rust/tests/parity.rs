@@ -1,10 +1,15 @@
 //! Cross-layer parity harness: the fused dequantize-GEMM fast path
 //! (`gptq::fused`) pinned against the dense oracle
 //! (`gptq::gemm::{gemv_f32, gemm_f32}`) over a seeded shape sweep —
-//! K ∈ {64, 128, 4096}, N ∈ {8, 32, 256}, group ∈ {32, 64, 128},
+//! K ∈ {64, 128, 4096}, N ∈ {8, 32, 40, 256}, group ∈ {32, 64, 128},
 //! M ∈ {1, 8, 64}, with and without act-order (`b_q_perm`) — and, since
 //! the kernel dispatch landed, under **every dispatch path this host can
-//! run** (forced scalar everywhere, forced AVX2 where detected).
+//! run**: the sweep iterates the kernel registry (forced scalar
+//! everywhere, forced AVX2 and forced AVX-512 where detected).  N = 8
+//! pins the AVX-512 kernel's degenerate pure-tail matrix, N = 40 the
+//! mixed full-hexadectet + trailing-octet layout (`N % 16 == 8` with
+//! `full_hex > 0` — the tail stream base and scratch offsets only
+//! diverge from zero there), and N ∈ {32, 256} the tail-free path.
 //!
 //! Tensors are synthesized directly in the packed layout (random codes,
 //! zeros, scales, permutation): parity must hold for *every* valid
@@ -26,13 +31,13 @@
 //!   mapping have no rounding to hide behind there.
 
 use opt4gptq::gptq::{
-    available_kernels, gemm_f32, gemm_fused_with, gemv_f32, gemv_fused_with, pack, Kernel, Matrix,
-    QuantizedTensor,
+    available_kernels, gemm_f32, gemm_fused_with, gemv_f32, gemv_fused_with, kernel_registry,
+    pack, supports, Kernel, Matrix, QuantizedTensor,
 };
 use opt4gptq::rng::Rng;
 
 const KS: [usize; 3] = [64, 128, 4096];
-const NS: [usize; 3] = [8, 32, 256];
+const NS: [usize; 4] = [8, 32, 40, 256];
 const GROUPS: [usize; 3] = [32, 64, 128];
 const MS: [usize; 3] = [1, 8, 64];
 /// Relative tolerance vs the oracle (of the output's ∞-norm, floored at
@@ -98,6 +103,37 @@ fn shape_sweep() -> Vec<(usize, usize, usize, bool)> {
         }
     }
     shapes
+}
+
+#[test]
+fn kernel_sweep_iterates_the_full_registry() {
+    // The sweeps below run `available_kernels()`; pin that it is the
+    // registry filtered by host support, that the registry names all
+    // three kernels, and that on an AVX-512 host the avx512 leg cannot
+    // silently vanish from the sweep.
+    let names: Vec<&str> = kernel_registry().iter().map(|info| info.name).collect();
+    assert_eq!(names, ["scalar", "avx2", "avx512"]);
+    let avail = available_kernels();
+    assert!(avail.contains(&Kernel::Scalar));
+    for info in kernel_registry() {
+        assert_eq!(
+            avail.contains(&info.kernel),
+            supports(info.kernel),
+            "available_kernels must list exactly the supported registry rows ({})",
+            info.name
+        );
+    }
+    #[cfg(all(target_arch = "x86_64", opt4gptq_avx512_intrinsics))]
+    if is_x86_feature_detected!("avx512f")
+        && is_x86_feature_detected!("avx512bw")
+        && is_x86_feature_detected!("avx2")
+        && is_x86_feature_detected!("fma")
+    {
+        assert!(
+            avail.contains(&Kernel::Avx512),
+            "host reports avx512f/bw but the sweep would skip the avx512 kernel"
+        );
+    }
 }
 
 #[test]

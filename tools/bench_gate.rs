@@ -1,0 +1,454 @@
+//! Bench regression gate: compare a freshly-emitted `BENCH_*.json`
+//! against its committed `BENCH_*.baseline.json` and fail (exit 1) when
+//! a gated metric regresses beyond the allowed percentage.
+//!
+//! ```text
+//! bench_gate <baseline.json> <current.json> [--max-regress-pct 15] [--only <substr>]
+//! ```
+//!
+//! Rows are matched by their `label` field inside the top-level `cases`
+//! array.  For every baseline row (optionally filtered to labels
+//! containing the `--only` substring), two metric families are gated:
+//!
+//! * timing fields (`ns_per_iter`, or any field ending in `_ns`) —
+//!   regress when the current value exceeds `baseline · (1 + pct/100)`;
+//! * ratio fields (any field starting with `speedup`) — regress when
+//!   the current value falls below `baseline / (1 + pct/100)`.
+//!
+//! A baseline row whose label is missing from the current run fails the
+//! gate (a silently-dropped shape is a regression too); extra current
+//! rows are ignored, so the baseline file only needs to carry the gated
+//! rows.  The gate also fails when it checked nothing — a filter typo
+//! must not produce a green step.
+//!
+//! CI wires this after both bench smoke steps (`fused_gemm` on the
+//! headline 4096×4096 M=1 decode shape, `prefix_prefill` on the
+//! skip-vs-recompute row).  To refresh a baseline, copy a
+//! representative run's JSON artifact over the `.baseline.json` file —
+//! absolute ns/iter is machine-dependent, so tighten it from the CI
+//! runner's own numbers, not a dev box's.
+//!
+//! The JSON reader below is a ~100-line recursive-descent parser for
+//! the subset these bench records use (no external crates are available
+//! offline); it is unit-tested under `cargo test`.
+
+use std::process::exit;
+
+/// Minimal JSON value tree.
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn as_num(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(text: &'a str) -> Parser<'a> {
+        Parser { bytes: text.as_bytes(), pos: 0 }
+    }
+
+    fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser::new(text);
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(format!("trailing garbage at byte {}", p.pos));
+        }
+        Ok(v)
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, want: u8) -> Result<(), String> {
+        if self.peek() == Some(want) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", want as char, self.pos))
+        }
+    }
+
+    fn eat_lit(&mut self, lit: &str) -> Result<(), String> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(())
+        } else {
+            Err(format!("expected '{lit}' at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.eat_lit("true").map(|_| Json::Bool(true)),
+            Some(b'f') => self.eat_lit("false").map(|_| Json::Bool(false)),
+            Some(b'n') => self.eat_lit("null").map(|_| Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(format!("unexpected {other:?} at byte {}", self.pos)),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            pairs.push((key, self.value()?));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                other => return Err(format!("unexpected {other:?} in object at {}", self.pos)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => return Err(format!("unexpected {other:?} in array at {}", self.pos)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self.peek().ok_or("unterminated escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            // Bench records never emit \u escapes;
+                            // decode the BMP code point anyway.
+                            if self.pos + 4 > self.bytes.len() {
+                                return Err("truncated \\u escape".to_string());
+                            }
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+                                .map_err(|_| "bad \\u escape")?;
+                            let cp =
+                                u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape")?;
+                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            self.pos += 4;
+                        }
+                        other => return Err(format!("bad escape '\\{}'", other as char)),
+                    }
+                }
+                Some(_) => {
+                    // Consume one UTF-8 code point (the input came from
+                    // a &str, so boundaries are valid).
+                    let start = self.pos;
+                    self.pos += 1;
+                    while self.pos < self.bytes.len() && self.bytes[self.pos] & 0xC0 == 0x80 {
+                        self.pos += 1;
+                    }
+                    out.push_str(std::str::from_utf8(&self.bytes[start..self.pos]).unwrap());
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or_else(|| format!("bad number at byte {start}"))
+    }
+}
+
+fn load(path: &str) -> Json {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("bench_gate: cannot read {path}: {e}");
+            exit(2);
+        }
+    };
+    match Parser::parse(&text) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("bench_gate: cannot parse {path}: {e}");
+            exit(2);
+        }
+    }
+}
+
+/// Labeled rows of the file's top-level `cases` array.
+fn labeled_cases(doc: &Json) -> Vec<(&str, &Json)> {
+    doc.get("cases")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|row| row.get("label").and_then(Json::as_str).map(|l| (l, row)))
+        .collect()
+}
+
+/// Whether `field` is gated, and in which direction:
+/// `Some(true)` = higher-is-worse (timings), `Some(false)` =
+/// lower-is-worse (speedup ratios), `None` = not gated.
+fn gated_direction(field: &str) -> Option<bool> {
+    if field == "ns_per_iter" || field.ends_with("_ns") {
+        Some(true)
+    } else if field.starts_with("speedup") {
+        Some(false)
+    } else {
+        None
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: bench_gate <baseline.json> <current.json> \
+         [--max-regress-pct <pct>] [--only <label-substring>]"
+    );
+    exit(2);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths: Vec<&str> = Vec::new();
+    let mut max_regress_pct = 15.0f64;
+    let mut only: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--max-regress-pct" => {
+                i += 1;
+                max_regress_pct = args
+                    .get(i)
+                    .and_then(|v| v.parse::<f64>().ok())
+                    .unwrap_or_else(|| usage());
+            }
+            "--only" => {
+                i += 1;
+                only = Some(args.get(i).cloned().unwrap_or_else(|| usage()));
+            }
+            flag if flag.starts_with("--") => usage(),
+            path => paths.push(path),
+        }
+        i += 1;
+    }
+    let [baseline_path, current_path] = paths[..] else { usage() };
+
+    let baseline = load(baseline_path);
+    let current = load(current_path);
+    let current_rows = labeled_cases(&current);
+
+    let slack = 1.0 + max_regress_pct / 100.0;
+    let mut checked = 0usize;
+    let mut failures: Vec<String> = Vec::new();
+
+    println!("bench_gate: {current_path} vs baseline {baseline_path} (max regress {max_regress_pct}%)");
+    for (label, base_row) in labeled_cases(&baseline) {
+        if let Some(filter) = &only {
+            if !label.contains(filter.as_str()) {
+                continue;
+            }
+        }
+        let Some((_, cur_row)) = current_rows.iter().find(|(l, _)| *l == label) else {
+            failures.push(format!("row {label:?} is missing from {current_path}"));
+            continue;
+        };
+        let Json::Obj(fields) = base_row else { continue };
+        for (field, base_val) in fields {
+            let Some(higher_is_worse) = gated_direction(field) else { continue };
+            let Some(base) = base_val.as_num() else { continue };
+            // A gated field the current run no longer emits is itself a
+            // regression — a renamed metric must not silently un-gate.
+            let Some(cur) = cur_row.get(field).and_then(Json::as_num) else {
+                failures.push(format!(
+                    "{label} :: gated field {field:?} is missing from {current_path}"
+                ));
+                continue;
+            };
+            checked += 1;
+            let (limit, regressed, change_pct) = if higher_is_worse {
+                (base * slack, cur > base * slack, (cur / base - 1.0) * 100.0)
+            } else {
+                (base / slack, cur < base / slack, (1.0 - cur / base) * 100.0)
+            };
+            let verdict = if regressed { "REGRESSED" } else { "ok" };
+            println!(
+                "  {label} :: {field}: baseline {base:.1}, current {cur:.1}, \
+                 limit {limit:.1}  [{verdict}]"
+            );
+            if regressed {
+                failures.push(format!(
+                    "{label} :: {field} regressed {change_pct:.1}% \
+                     (baseline {base:.1}, current {cur:.1}, allowed {max_regress_pct}%)"
+                ));
+            }
+        }
+    }
+
+    if checked == 0 && failures.is_empty() {
+        eprintln!(
+            "bench_gate: no gated metrics matched (filter: {only:?}) — refusing to pass \
+             an empty gate"
+        );
+        exit(1);
+    }
+    if failures.is_empty() {
+        println!("bench_gate: OK ({checked} metrics within {max_regress_pct}%)");
+    } else {
+        println!("bench_gate: FAILED:");
+        for f in &failures {
+            println!("  - {f}");
+        }
+        exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_bench_record() {
+        let doc = Parser::parse(
+            r#"{
+  "bench": "fused_gemm",
+  "smoke": true,
+  "cases": [
+    {"label": "decode M=1 4096x4096 g128", "ns_per_iter": 1500000, "speedup_vs_oracle": 12.5},
+    {"label": "batch", "act_order": false, "chunk_budget": null, "ns_per_iter": 3e6}
+  ]
+}"#,
+        )
+        .unwrap();
+        let rows = labeled_cases(&doc);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, "decode M=1 4096x4096 g128");
+        assert_eq!(rows[0].1.get("ns_per_iter").and_then(Json::as_num), Some(1_500_000.0));
+        assert_eq!(rows[1].1.get("ns_per_iter").and_then(Json::as_num), Some(3_000_000.0));
+        assert_eq!(rows[1].1.get("chunk_budget"), Some(&Json::Null));
+        assert_eq!(doc.get("smoke"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn parses_escapes_and_negative_numbers() {
+        let doc = Parser::parse(r#"{"s": "a\"b\\c\nd", "v": -2.5e-1}"#).unwrap();
+        assert_eq!(doc.get("s").and_then(Json::as_str), Some("a\"b\\c\nd"));
+        assert_eq!(doc.get("v").and_then(Json::as_num), Some(-0.25));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Parser::parse("{").is_err());
+        assert!(Parser::parse("[1, 2,]").is_err());
+        assert!(Parser::parse("{\"a\": 1} extra").is_err());
+    }
+
+    #[test]
+    fn gating_directions() {
+        assert_eq!(gated_direction("ns_per_iter"), Some(true));
+        assert_eq!(gated_direction("recompute_ns"), Some(true));
+        assert_eq!(gated_direction("skip_ns"), Some(true));
+        assert_eq!(gated_direction("speedup_vs_oracle"), Some(false));
+        assert_eq!(gated_direction("speedup_best_of"), Some(false));
+        assert_eq!(gated_direction("gb_per_s"), None);
+        assert_eq!(gated_direction("prefix_len"), None);
+    }
+}
