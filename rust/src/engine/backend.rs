@@ -152,6 +152,21 @@ pub trait Backend {
     /// A sequence finished or was preempted; backends holding
     /// per-sequence state (e.g. dense lane maps) drop it here.
     fn release_seq(&mut self, _seq_id: usize) {}
+
+    /// A preempted sequence's blocks are being evicted under memory
+    /// pressure: copy their contents to a host-side spill pool keyed by
+    /// `seq_id` (table order).  The engine calls this at the end of the
+    /// preempting step, **before** the same block ids arrive at
+    /// [`Backend::release_blocks`] — the data is still intact when the
+    /// copy runs.  Backends without physical K/V ignore it.
+    fn swap_out(&mut self, _seq_id: usize, _blocks: &[BlockId]) {}
+
+    /// A swapped-out sequence is resuming on freshly-allocated `blocks`
+    /// (same table order, different physical ids): restore its spilled
+    /// K/V before the step that resumes it executes.  The spill entry is
+    /// consumed; [`Backend::release_seq`] drops it for sequences that
+    /// finish (or are rejected) while still swapped out.
+    fn swap_in(&mut self, _seq_id: usize, _blocks: &[BlockId]) {}
 }
 
 /// Simulated backend: paper model × optimization config on the DCU model.
@@ -161,7 +176,6 @@ pub struct SimBackend {
     pub perf: PerfModel,
     max_batch: usize,
     max_seq_len: usize,
-    rng: Rng,
     /// Reduced logits vocabulary (full 152k logits per step would only
     /// slow the simulation; token identity is irrelevant here).
     sim_vocab: usize,
@@ -169,24 +183,26 @@ pub struct SimBackend {
 
 impl SimBackend {
     pub fn new(model: &'static ModelSpec, opt: OptConfig, max_batch: usize) -> SimBackend {
-        SimBackend {
-            model,
-            opt,
-            perf: PerfModel::z100(),
-            max_batch,
-            max_seq_len: 4096,
-            rng: Rng::new(0x5e17_ba5e),
-            sim_vocab: 512,
-        }
+        SimBackend { model, opt, perf: PerfModel::z100(), max_batch, max_seq_len: 4096, sim_vocab: 512 }
     }
 
-    fn fake_logits(&mut self, n: usize) -> Vec<f32> {
-        // Perf (§Perf item 4): token identity is irrelevant for the
-        // throughput/latency figures (lengths are forced via max_tokens),
-        // so a flat bit-mapped distribution replaces Box–Muller normals —
-        // no transcendental calls on the per-step path.
-        (0..n)
-            .map(|_| (self.rng.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32) - 0.5)
+    /// Synthetic logits as a pure function of (sequence, position).
+    ///
+    /// Purity is load-bearing: a sequence's logits at position `p` are
+    /// the same whether it runs alone, batched, preempted-and-recomputed
+    /// or swapped-out-and-resumed — so trace-replay parity tests can
+    /// compare scheduling policies on the sim backend exactly as the CPU
+    /// backend's real math allows (its rows are batch-independent).  A
+    /// flat bit-mapped distribution keeps transcendentals off the
+    /// per-step path (lengths are forced via max_tokens anyway).
+    fn fake_logits(&self, seq_id: usize, pos: usize) -> Vec<f32> {
+        let mut rng = Rng::new(
+            0x5e17_ba5e
+                ^ (seq_id as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                ^ (pos as u64).wrapping_mul(0xd1b5_4a32_d192_ed03),
+        );
+        (0..self.sim_vocab)
+            .map(|_| (rng.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32) - 0.5)
             .collect()
     }
 }
@@ -238,11 +254,16 @@ impl Backend for SimBackend {
                 self.opt,
             );
         }
+        // Logit positions mirror the real backends: a final chunk samples
+        // at its last token's position, a decode row at `context_len` —
+        // so a swap-resumed 1-token final chunk reproduces exactly the
+        // decode row it replaces.
         let prefill_logits = prefills
             .iter()
-            .map(|p| p.is_last.then(|| self.fake_logits(self.sim_vocab)))
+            .map(|p| p.is_last.then(|| self.fake_logits(p.seq_id, p.start + p.tokens.len() - 1)))
             .collect();
-        let decode_logits = (0..decodes.len()).map(|_| self.fake_logits(self.sim_vocab)).collect();
+        let decode_logits =
+            decodes.iter().map(|e| self.fake_logits(e.seq_id, e.context_len)).collect();
         Ok(StepOutput { prefill_logits, decode_logits, secs })
     }
 }
@@ -309,6 +330,27 @@ mod tests {
         let dec_only = b.step(&[], &dec).unwrap();
         let sum = pre_only.secs + dec_only.secs;
         assert!((out.secs - sum).abs() < 1e-12, "mixed step must cost both parts: {} vs {sum}", out.secs);
+    }
+
+    #[test]
+    fn sim_logits_are_pure_in_sequence_and_position() {
+        // Purity pin (see fake_logits): batch composition, call order and
+        // chunk-vs-decode framing must not change a row's logits — the
+        // trace-replay parity properties stand on this.
+        let m = by_name("Llama-2-7B-GPTQ").unwrap();
+        let mut b = SimBackend::new(m, OptConfig::BASELINE, 8);
+        let (alone, _) = b.decode(&[decode_desc(3, 17)]).unwrap();
+        let batch: Vec<DecodeDesc> = (0..4).map(|i| decode_desc(i, 17)).collect();
+        let (batched, _) = b.decode(&batch).unwrap();
+        assert_eq!(alone[0], batched[3], "logits must not depend on batch composition");
+        assert_ne!(batched[0], batched[1], "distinct seqs draw distinct logits");
+        // A swap-resumed 1-token final chunk reproduces the decode row it
+        // replaces: same sequence, same position, same logits.
+        let toks = [1u32];
+        let chunk =
+            PrefillDesc { seq_id: 3, tokens: &toks, start: 17, is_last: true, block_table: &[] };
+        let out = b.step(&[chunk], &[]).unwrap();
+        assert_eq!(out.prefill_logits[0].as_deref().unwrap(), alone[0].as_slice());
     }
 
     #[test]

@@ -48,6 +48,21 @@ pub struct BlockManager {
     /// Sequence ids fully freed (finished or preempted) since the last
     /// drain; forwarded to [`crate::engine::Backend::release_seq`].
     released_seqs: Vec<usize>,
+    /// Sequences swapped out to the host-side spill pool: id → number of
+    /// blocks whose contents live in the backend's spill buffer.  A
+    /// swapped sequence holds **no** physical blocks (its table is gone),
+    /// but its K/V is preserved — unlike a recompute-preempted sequence.
+    swapped: HashMap<usize, usize>,
+    /// (seq, table) pairs swapped out since the last
+    /// [`BlockManager::take_swap_outs`] drain.  The engine forwards these
+    /// to [`crate::engine::Backend::swap_out`] **before** draining
+    /// `freed_log` — the spill copy must read the blocks ahead of the
+    /// poison/recycle pass.
+    swap_out_log: Vec<(usize, Vec<BlockId>)>,
+    /// (seq, restore-span) pairs swapped back in since the last
+    /// [`BlockManager::take_swap_ins`] drain; the engine forwards these
+    /// to [`crate::engine::Backend::swap_in`] before the resuming step.
+    swap_in_log: Vec<(usize, Vec<BlockId>)>,
 }
 
 impl BlockManager {
@@ -64,6 +79,9 @@ impl BlockManager {
             prefix_hits: 0,
             freed_log: Vec::new(),
             released_seqs: Vec::new(),
+            swapped: HashMap::new(),
+            swap_out_log: Vec::new(),
+            swap_in_log: Vec::new(),
         }
     }
 
@@ -73,6 +91,86 @@ impl BlockManager {
     /// once per step, after execution and before the next `schedule()`).
     pub fn take_released(&mut self) -> (Vec<BlockId>, Vec<usize>) {
         (std::mem::take(&mut self.freed_log), std::mem::take(&mut self.released_seqs))
+    }
+
+    /// Drain the swap-out log: (seq, its former table) per swap-out.
+    /// Must be drained **before** [`BlockManager::take_released`] each
+    /// step — the backend's spill copy has to read the blocks before the
+    /// release pass poisons them.
+    pub fn take_swap_outs(&mut self) -> Vec<(usize, Vec<BlockId>)> {
+        std::mem::take(&mut self.swap_out_log)
+    }
+
+    /// Drain the swap-in log: (seq, blocks to restore into) per swap-in.
+    pub fn take_swap_ins(&mut self) -> Vec<(usize, Vec<BlockId>)> {
+        std::mem::take(&mut self.swap_in_log)
+    }
+
+    /// Is this sequence currently swapped out (K/V preserved in the
+    /// backend spill pool, no physical blocks held)?
+    pub fn is_swapped(&self, seq_id: usize) -> bool {
+        self.swapped.contains_key(&seq_id)
+    }
+
+    /// Evict a sequence's blocks to the spill pool: the table is freed
+    /// exactly like [`BlockManager::free_sequence`] (shared prefix blocks
+    /// just drop a reference; private ones return to the free list), but
+    /// the sequence is recorded as swapped and the (seq, table) pair is
+    /// logged so the backend copies the contents out before the freed
+    /// blocks are poisoned or recycled.  No `released_seqs` entry is
+    /// pushed — the backend must keep the spill alive for the swap-in.
+    pub fn swap_out(&mut self, seq_id: usize) {
+        let table = self.tables.remove(&seq_id).expect("swap_out of unallocated sequence");
+        self.swapped.insert(seq_id, table.len());
+        for &b in &table {
+            self.release_block(b);
+        }
+        self.swap_out_log.push((seq_id, table));
+    }
+
+    /// Can the swapped-out sequence resume right now on a table covering
+    /// `total_tokens` positions?
+    pub fn can_swap_in(&self, seq_id: usize, total_tokens: usize) -> bool {
+        match self.swapped.get(&seq_id) {
+            Some(&n) => n.max(self.blocks_needed(total_tokens)) <= self.free.len(),
+            None => false,
+        }
+    }
+
+    /// Resume a swapped-out sequence: allocate a fresh private table
+    /// covering `total_tokens` positions (at least as many blocks as
+    /// were spilled), log the restore span, and hand the table back to
+    /// the sequence.  The first `n_spilled` blocks receive the spilled
+    /// contents (table order is preserved, so logical positions land
+    /// where they were); any extra blocks cover positions the resumed
+    /// prefill is about to write.  Returns false when the pool cannot
+    /// hold the table yet.
+    ///
+    /// Restored blocks are private and uncomputed: the prefix-cache
+    /// association was dropped at swap-out and is not resurrected
+    /// (`mark_computed` re-marks them as the resumed prefill advances,
+    /// but without a hash they are never prefix-hit).
+    pub fn swap_in(&mut self, seq_id: usize, total_tokens: usize) -> bool {
+        if !self.can_swap_in(seq_id, total_tokens) {
+            return false;
+        }
+        let n_spilled = self.swapped.remove(&seq_id).expect("checked by can_swap_in");
+        let needed = n_spilled.max(self.blocks_needed(total_tokens));
+        let mut table = Vec::with_capacity(needed);
+        for _ in 0..needed {
+            let b = self.free.pop().expect("checked by can_swap_in");
+            // Freed earlier in this drain window → it must leave the
+            // freed log, or the end-of-step drain would poison a block
+            // the restore just wrote (see append_token).
+            self.freed_log.retain(|&x| x != b);
+            self.blocks[b].refcount = 1;
+            self.blocks[b].prefix_hash = None;
+            self.blocks[b].computed = false;
+            table.push(b);
+        }
+        self.swap_in_log.push((seq_id, table[..n_spilled].to_vec()));
+        self.tables.insert(seq_id, table);
+        true
     }
 
     pub fn free_blocks(&self) -> usize {
@@ -220,13 +318,18 @@ impl BlockManager {
         }
     }
 
-    /// Free a sequence's entire table (finish or preemption).
+    /// Free a sequence's entire table (finish or preemption).  A
+    /// sequence freed while swapped out holds no blocks, but its spill
+    /// entry must still be retired (the `released_seqs` drain tells the
+    /// backend to drop the buffer).
     pub fn free_sequence(&mut self, seq_id: usize) {
         if let Some(table) = self.tables.remove(&seq_id) {
             self.released_seqs.push(seq_id);
             for b in table {
                 self.release_block(b);
             }
+        } else if self.swapped.remove(&seq_id).is_some() {
+            self.released_seqs.push(seq_id);
         }
     }
 
@@ -283,6 +386,13 @@ impl BlockManager {
                         return Err(format!("block {b} hash {k:#x} missing from prefix index"));
                     }
                 }
+            }
+        }
+        // A swapped-out sequence lives in the spill pool, not the block
+        // pool: it must hold no table.
+        for &id in self.swapped.keys() {
+            if self.tables.contains_key(&id) {
+                return Err(format!("swapped seq {id} still holds a block table"));
             }
         }
         Ok(())
@@ -498,6 +608,121 @@ mod tests {
         // run must stop at the divergence even though block 0 is hit.
         let b: Vec<u32> = vec![0, 1, 2, 3, 9, 9, 9, 9];
         assert_eq!(bm.allocate(2, &b), Some(4));
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn swap_out_frees_blocks_and_logs_the_table() {
+        let mut bm = BlockManager::new(8, 4);
+        assert!(bm.allocate(1, &[1, 2, 3, 4, 5]).is_some());
+        let table = bm.table(1).unwrap().to_vec();
+        bm.take_released();
+        bm.swap_out(1);
+        assert!(bm.is_swapped(1));
+        assert!(bm.table(1).is_none());
+        assert_eq!(bm.free_blocks(), 8, "swapped seq must hold no blocks");
+        // The spill copy sees the exact former table; the freed blocks
+        // are reported separately (the drain order is the engine's job).
+        assert_eq!(bm.take_swap_outs(), vec![(1, table)]);
+        let (freed, seqs) = bm.take_released();
+        assert_eq!(freed.len(), 2);
+        assert!(seqs.is_empty(), "swap-out must NOT retire the seq (spill stays alive)");
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn swap_in_restores_onto_fresh_blocks() {
+        let mut bm = BlockManager::new(4, 4);
+        assert!(bm.allocate(1, &[1, 2, 3, 4, 5]).is_some());
+        bm.swap_out(1);
+        assert!(bm.can_swap_in(1, 5));
+        assert!(bm.swap_in(1, 5));
+        assert!(!bm.is_swapped(1));
+        assert_eq!(bm.table(1).unwrap().len(), 2);
+        let ins = bm.take_swap_ins();
+        assert_eq!(ins.len(), 1);
+        assert_eq!(ins[0].0, 1);
+        assert_eq!(ins[0].1, bm.table(1).unwrap()[..2].to_vec());
+        bm.check_invariants().unwrap();
+        // Restored blocks are private and uncomputed: an identical
+        // prompt cannot prefix-hit them.
+        assert_eq!(bm.allocate(2, &[1, 2, 3, 4, 5]), Some(0));
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn swap_in_grows_the_table_when_the_resume_needs_more_room() {
+        // A self-preempted decode can be swapped with its table one
+        // block short of the next position (the failed append): swap-in
+        // must cover `total_tokens`, not just the spilled span.
+        let mut bm = BlockManager::new(4, 4);
+        assert!(bm.allocate(1, &[1, 2, 3, 4, 5, 6, 7, 8]).is_some()); // exactly 2 blocks
+        bm.swap_out(1);
+        assert!(bm.swap_in(1, 9)); // resume must write position 8
+        assert_eq!(bm.table(1).unwrap().len(), 3, "one extra block past the spill");
+        assert_eq!(bm.take_swap_ins()[0].1.len(), 2, "restore span is the spilled blocks only");
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn swap_in_waits_for_room() {
+        let mut bm = BlockManager::new(2, 4);
+        assert!(bm.allocate(1, &[1, 1, 1, 1, 2, 2, 2, 2]).is_some());
+        bm.swap_out(1);
+        assert!(bm.allocate(2, &[9, 9, 9, 9, 8, 8, 8, 8]).is_some()); // takes the whole pool
+        assert!(!bm.can_swap_in(1, 8));
+        assert!(!bm.swap_in(1, 8));
+        assert!(bm.is_swapped(1), "failed swap-in must leave the spill record intact");
+        bm.free_sequence(2);
+        assert!(bm.swap_in(1, 8));
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn freeing_a_swapped_sequence_retires_its_spill() {
+        let mut bm = BlockManager::new(4, 4);
+        assert!(bm.allocate(1, &[1, 2, 3, 4]).is_some());
+        bm.swap_out(1);
+        bm.take_released();
+        bm.free_sequence(1); // finished/rejected while swapped out
+        assert!(!bm.is_swapped(1));
+        let (freed, seqs) = bm.take_released();
+        assert!(freed.is_empty(), "no physical blocks were held");
+        assert_eq!(seqs, vec![1], "the backend must be told to drop the spill");
+        assert!(!bm.can_swap_in(1, 4));
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn swap_in_reusing_a_just_freed_block_leaves_the_freed_log() {
+        // Swap-in inside the same drain window as a free (one engine
+        // step): the reused block must leave the freed log, or the
+        // end-of-step poison pass would clobber the restored K/V.
+        let mut bm = BlockManager::new(1, 4);
+        assert!(bm.allocate(1, &[1, 2, 3]).is_some());
+        bm.swap_out(1);
+        assert!(bm.swap_in(1, 3));
+        let (freed, _) = bm.take_released();
+        assert!(freed.is_empty(), "reused block must not be poisoned: {freed:?}");
+        bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn swap_preserves_shared_prefix_references() {
+        let mut bm = BlockManager::new(8, 4);
+        let prompt: Vec<u32> = (0..8).collect();
+        assert!(bm.allocate(1, &prompt).is_some());
+        bm.mark_computed(1, 8);
+        assert!(bm.allocate(2, &prompt).is_some()); // fully shared
+        bm.take_released();
+        bm.swap_out(2);
+        // Seq 2's references were shared: nothing is physically freed,
+        // and seq 1's table is untouched.
+        let (freed, _) = bm.take_released();
+        assert!(freed.is_empty(), "shared blocks must survive a peer's swap-out");
+        assert_eq!(bm.table(1).unwrap().len(), 2);
+        assert!(bm.swap_in(2, 8));
+        assert_ne!(bm.table(1).unwrap(), bm.table(2).unwrap(), "restored table is private");
         bm.check_invariants().unwrap();
     }
 

@@ -125,6 +125,10 @@ pub struct CpuBackend {
     layers: Vec<LayerWeights>,
     lm_head: PreparedTensor,
     kv: PagedKvCache,
+    /// Host-side spill pool: per swapped-out sequence, its blocks' K/V
+    /// copied out of the paged pool (the "CPU swap space" of
+    /// vLLM-style preemption-by-swap).
+    spill: std::collections::HashMap<usize, (Vec<f32>, Vec<f32>)>,
 }
 
 fn quantized(rng: &mut Rng, k: usize, n: usize, g: usize, std: f32) -> PreparedTensor {
@@ -202,6 +206,7 @@ impl CpuBackend {
             lm_head,
             // Empty pool; grown by bind_kv or on demand (direct use).
             kv: PagedKvCache::new(0, DEFAULT_BLOCK_SIZE, cfg.n_layers, d),
+            spill: std::collections::HashMap::new(),
         })
     }
 
@@ -413,6 +418,23 @@ impl Backend for CpuBackend {
     fn release_blocks(&mut self, blocks: &[BlockId]) {
         // Returned memory: debug builds poison it (stale reads -> NaN).
         self.kv.release_blocks(blocks);
+    }
+
+    fn release_seq(&mut self, seq_id: usize) {
+        // A sequence that finished (or was rejected) while swapped out
+        // never swaps back in; drop its spill.
+        self.spill.remove(&seq_id);
+    }
+
+    fn swap_out(&mut self, seq_id: usize, blocks: &[BlockId]) {
+        // Runs before release_blocks poisons these ids (engine drain
+        // order), so the copy reads intact K/V.
+        self.spill.insert(seq_id, self.kv.spill_blocks(blocks));
+    }
+
+    fn swap_in(&mut self, seq_id: usize, blocks: &[BlockId]) {
+        let (k, v) = self.spill.remove(&seq_id).expect("swap_in without spill");
+        self.kv.restore_blocks(blocks, &k, &v);
     }
 }
 

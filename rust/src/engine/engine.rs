@@ -7,6 +7,15 @@
 //! ([`super::sequence::Sequence::prefill_pos`]); a sequence joins the
 //! decode batch only after its final chunk executes and its first token
 //! is sampled from that chunk's logits.
+//!
+//! Requests carry a virtual arrival time: until the engine clock
+//! reaches it, a request sits in a pending set the scheduler never
+//! sees.  When everything admitted has drained and arrivals remain, the
+//! clock jumps forward to the next one.  Swap-preemption plumbing lives
+//! here too, with a strict drain order per step: freshly swapped-in
+//! tables reach the backend (spill restored) *before* the step
+//! executes, and swap-out spill copies happen *before* freed blocks are
+//! released (poisoned/recycled) after it.
 
 use std::collections::HashMap;
 
@@ -38,6 +47,9 @@ pub struct Engine<B: Backend> {
     pub metrics: Metrics,
     rngs: HashMap<usize, Rng>,
     outputs: Vec<RequestOutput>,
+    /// Requests whose arrival time the clock has not reached yet —
+    /// invisible to the scheduler until then.
+    pending: Vec<Request>,
 }
 
 impl<B: Backend> Engine<B> {
@@ -55,6 +67,7 @@ impl<B: Backend> Engine<B> {
             metrics: Metrics::default(),
             rngs: HashMap::new(),
             outputs: Vec::new(),
+            pending: Vec::new(),
             cfg,
         }
     }
@@ -62,18 +75,51 @@ impl<B: Backend> Engine<B> {
     pub fn add_request(&mut self, req: Request) {
         self.rngs.insert(req.id, Rng::new(req.sampling.seed ^ req.id as u64));
         self.metrics.prompt_tokens += req.prompt.len();
-        self.scheduler.add_request(&req);
+        if req.arrival <= self.clock {
+            self.scheduler.add_request(&req);
+        } else {
+            self.pending.push(req);
+        }
+    }
+
+    /// Move pending requests whose arrival the clock has reached into
+    /// the scheduler's queue.
+    fn admit_arrivals(&mut self) {
+        let clock = self.clock;
+        let mut i = 0;
+        while i < self.pending.len() {
+            if self.pending[i].arrival <= clock {
+                let req = self.pending.swap_remove(i);
+                self.scheduler.add_request(&req);
+            } else {
+                i += 1;
+            }
+        }
     }
 
     /// Run one engine step.  Returns false when there is no work left.
     pub fn step(&mut self) -> Result<bool> {
-        match self.scheduler.schedule() {
-            ScheduledWork::Idle => Ok(false),
-            ScheduledWork::Step { prefills, decodes } => {
-                self.run_step(prefills, decodes)?;
-                self.metrics.engine_steps += 1;
-                self.drain_releases();
-                Ok(true)
+        loop {
+            self.admit_arrivals();
+            match self.scheduler.schedule(self.clock) {
+                ScheduledWork::Idle => {
+                    // Nothing runnable now; if future arrivals remain,
+                    // jump the clock to the next one and retry.
+                    let next =
+                        self.pending.iter().map(|r| r.arrival).fold(f64::INFINITY, f64::min);
+                    if next.is_finite() {
+                        self.clock = self.clock.max(next);
+                        continue;
+                    }
+                    return Ok(false);
+                }
+                ScheduledWork::Step { prefills, decodes } => {
+                    self.restore_swapped();
+                    self.run_step(prefills, decodes)?;
+                    self.metrics.engine_steps += 1;
+                    self.drain_releases();
+                    return Ok(true);
+                }
             }
         }
     }
@@ -84,7 +130,19 @@ impl<B: Backend> Engine<B> {
         self.metrics.elapsed = self.clock;
         self.metrics.preemptions = self.scheduler.preemption_count;
         self.metrics.prefill_tokens_skipped = self.scheduler.prefill_tokens_skipped;
+        self.metrics.swap_outs = self.scheduler.swap_out_count;
+        self.metrics.swap_ins = self.scheduler.swap_in_count;
+        self.metrics.swap_restored_tokens = self.scheduler.swap_restored_tokens;
         Ok(EngineReport { outputs: std::mem::take(&mut self.outputs), metrics: self.metrics.clone() })
+    }
+
+    /// Hand freshly swapped-in sequences' new block tables to the
+    /// backend so it can restore their spilled K/V — strictly before
+    /// the step executes through those tables.
+    fn restore_swapped(&mut self) {
+        for (seq_id, blocks) in self.scheduler.blocks.take_swap_ins() {
+            self.backend.swap_in(seq_id, &blocks);
+        }
     }
 
     /// Forward blocks/sequences the scheduler released during this step
@@ -92,6 +150,12 @@ impl<B: Backend> Engine<B> {
     /// `schedule()` can re-allocate the freed blocks, so a paged backend
     /// may safely poison or recycle the memory.
     fn drain_releases(&mut self) {
+        // Spill swap-out victims' K/V first: their freed blocks are in
+        // the released list below, and the copy must happen before the
+        // backend can poison or rewrite that memory.
+        for (seq_id, blocks) in self.scheduler.blocks.take_swap_outs() {
+            self.backend.swap_out(seq_id, &blocks);
+        }
         let (blocks, seqs) = self.scheduler.blocks.take_released();
         if !blocks.is_empty() {
             self.backend.release_blocks(&blocks);
@@ -162,6 +226,13 @@ impl<B: Backend> Engine<B> {
         // Prefill bookkeeping: advance every chunk's cursor; final
         // chunks sample their first token and join the decode batch.
         for (i, chunk) in prefills.iter().enumerate() {
+            // An earlier append in this same loop may have preempted
+            // this chunk's sequence (KV exhaustion); its cursor must
+            // not move — recompute restarts, swap resumes from where
+            // the cursor froze.
+            if self.scheduler.seqs[&chunk.seq_id].state != SeqState::Prefilling {
+                continue;
+            }
             self.scheduler.advance_prefill(chunk);
             if !chunk.is_last {
                 continue;
@@ -216,13 +287,18 @@ impl<B: Backend> Engine<B> {
             self.scheduler.finish(id);
             let seq = &self.scheduler.seqs[&id];
             let latency = self.clock - seq.arrival;
+            let ttft = seq.first_token_time.unwrap_or(self.clock) - seq.arrival;
             self.metrics.latencies.push(latency);
+            self.metrics.queue_times.push(seq.admitted_time.unwrap_or(seq.arrival) - seq.arrival);
+            if seq.generated.len() > 1 {
+                self.metrics.tpots.push((latency - ttft) / (seq.generated.len() - 1) as f64);
+            }
             self.outputs.push(RequestOutput {
                 id,
                 prompt_len: seq.prompt.len(),
                 tokens: seq.generated.clone(),
                 finish: reason,
-                ttft: seq.first_token_time.unwrap_or(self.clock) - seq.arrival,
+                ttft,
                 latency,
                 preemptions: seq.preemptions,
             });
@@ -410,6 +486,71 @@ mod tests {
             "second identical prompt must skip its cached prefix"
         );
         e.scheduler.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn arrival_clock_gates_admission() {
+        let mut e = engine(4);
+        e.add_request(req(0, 8, 3));
+        let mut late = req(1, 8, 3);
+        late.arrival = 10.0;
+        e.add_request(late);
+        // Request 0 finishes in well under 10 virtual seconds; the
+        // engine must then jump the clock to request 1's arrival
+        // instead of going idle.
+        let report = e.run().unwrap();
+        assert_eq!(report.outputs.len(), 2);
+        assert!(report.metrics.elapsed >= 10.0, "clock must reach the late arrival");
+        let out1 = report.outputs.iter().find(|o| o.id == 1).unwrap();
+        assert!(
+            out1.ttft < 5.0,
+            "ttft {} must be measured from arrival, not from t=0",
+            out1.ttft
+        );
+        assert_eq!(e.scheduler.seqs[&1].admitted_time, Some(10.0));
+    }
+
+    #[test]
+    fn swap_and_recompute_preemption_generate_identical_tokens() {
+        // Same block-pressured workload through both preemption paths;
+        // sampled tokens must agree bit-for-bit with each other (and
+        // they both must actually preempt for the run to prove much).
+        let run = |swap: bool| {
+            let m = by_name("Llama-2-7B-GPTQ").unwrap();
+            let be = SimBackend::new(m, OptConfig::BASELINE, 4);
+            let mut e = Engine::new(
+                EngineConfig {
+                    max_batch: 4,
+                    block_size: 4,
+                    total_blocks: 40,
+                    max_seq_len: 128,
+                    prefill_budget: 64,
+                    prefix_skip: true,
+                    swap_preempt: swap,
+                },
+                be,
+            );
+            for i in 0..6 {
+                let mut r = req(i, 12, 30);
+                r.prompt = vec![i as u32 + 1; 12];
+                r.sampling.temperature = 0.8;
+                r.sampling.top_k = 32;
+                r.sampling.seed = 7;
+                e.add_request(r);
+            }
+            let report = e.run().unwrap();
+            assert!(report.metrics.preemptions > 0, "this config must preempt");
+            e.scheduler.check_invariants().unwrap();
+            let mut toks: Vec<(usize, Vec<u32>)> =
+                report.outputs.iter().map(|o| (o.id, o.tokens.clone())).collect();
+            toks.sort();
+            (toks, report.metrics.swap_outs)
+        };
+        let (swap_toks, swap_outs) = run(true);
+        let (recompute_toks, no_swap_outs) = run(false);
+        assert!(swap_outs > 0, "swap mode must actually swap");
+        assert_eq!(no_swap_outs, 0);
+        assert_eq!(swap_toks, recompute_toks);
     }
 
     #[test]

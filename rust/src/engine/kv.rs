@@ -118,6 +118,45 @@ impl PagedKvCache {
         &self.v[off..off + self.d]
     }
 
+    /// Copy the given blocks' contents out of the pool (swap-out to a
+    /// host-side spill buffer), in table order: entry `i` of the result
+    /// holds block `blocks[i]`'s full `[block_size × n_layers × d]`
+    /// stride.  Blocks past the pool (allocated but never written) spill
+    /// as zeros.  Must run **before** the same blocks are poisoned or
+    /// recycled — the engine drains swap-outs ahead of block releases.
+    pub fn spill_blocks(&self, blocks: &[BlockId]) -> (Vec<f32>, Vec<f32>) {
+        let stride = self.block_size * self.n_layers * self.d;
+        let mut k = vec![0.0; blocks.len() * stride];
+        let mut v = vec![0.0; blocks.len() * stride];
+        for (i, &b) in blocks.iter().enumerate() {
+            if b >= self.n_blocks {
+                continue; // never written -> spill zeros
+            }
+            let src = b * stride;
+            k[i * stride..(i + 1) * stride].copy_from_slice(&self.k[src..src + stride]);
+            v[i * stride..(i + 1) * stride].copy_from_slice(&self.v[src..src + stride]);
+        }
+        (k, v)
+    }
+
+    /// Write spilled contents back into the pool at a (generally new) set
+    /// of physical blocks: stride `i` of `k`/`v` lands in `blocks[i]`,
+    /// preserving table order — a swapped-in sequence reads the exact
+    /// K/V it swapped out, just at different physical addresses.
+    pub fn restore_blocks(&mut self, blocks: &[BlockId], k: &[f32], v: &[f32]) {
+        let stride = self.block_size * self.n_layers * self.d;
+        assert_eq!(k.len(), blocks.len() * stride, "spill/table shape mismatch");
+        assert_eq!(v.len(), blocks.len() * stride, "spill/table shape mismatch");
+        if let Some(&max) = blocks.iter().max() {
+            self.ensure_blocks(max + 1);
+        }
+        for (i, &b) in blocks.iter().enumerate() {
+            let dst = b * stride;
+            self.k[dst..dst + stride].copy_from_slice(&k[i * stride..(i + 1) * stride]);
+            self.v[dst..dst + stride].copy_from_slice(&v[i * stride..(i + 1) * stride]);
+        }
+    }
+
     /// Accept blocks back from the allocator (refcount reached zero).
     /// Debug builds poison the returned memory so stale reads through a
     /// dangling table surface as NaN instead of a recycled sequence's
@@ -198,5 +237,59 @@ mod tests {
         assert_eq!(kv.k_row(1, 0, 0), &rows(4, 2.0)[..]);
         // ids past the pool are ignored, not a panic
         kv.poison_blocks(&[99]);
+    }
+
+    #[test]
+    fn spill_restore_roundtrip_across_physical_blocks() {
+        let mut kv = PagedKvCache::new(4, 2, 2, 4);
+        let table = [3usize, 1];
+        for pos in 0..4 {
+            for layer in 0..2 {
+                let fill = (pos * 10 + layer) as f32;
+                kv.write(&table, pos, layer, &rows(4, fill), &rows(4, -fill));
+            }
+        }
+        let (sk, sv) = kv.spill_blocks(&table);
+        // Swap-out: the old blocks are poisoned (freed), then the spill
+        // is restored at *different* physical blocks.
+        kv.poison_blocks(&table);
+        let new_table = [0usize, 2];
+        kv.restore_blocks(&new_table, &sk, &sv);
+        for pos in 0..4 {
+            for layer in 0..2 {
+                let fill = (pos * 10 + layer) as f32;
+                let (b, o) = (new_table[pos / 2], pos % 2);
+                assert_eq!(kv.k_row(b, o, layer), &rows(4, fill)[..], "pos {pos} layer {layer}");
+                assert_eq!(kv.v_row(b, o, layer), &rows(4, -fill)[..]);
+            }
+        }
+    }
+
+    #[test]
+    fn spill_restore_survives_poison_of_source() {
+        // The exact engine ordering: spill first, poison after — the
+        // spilled copy must be NaN-free even though the source block is
+        // poisoned before the restore happens.
+        let mut kv = PagedKvCache::new(2, 4, 1, 4);
+        kv.write(&[0], 1, 0, &rows(4, 5.0), &rows(4, 6.0));
+        let (sk, sv) = kv.spill_blocks(&[0]);
+        kv.release_blocks(&[0]); // debug builds poison here
+        kv.restore_blocks(&[1], &sk, &sv);
+        assert!(kv.k_row(1, 1, 0).iter().all(|x| x.is_finite()), "restored K must be NaN-free");
+        assert_eq!(kv.k_row(1, 1, 0), &rows(4, 5.0)[..]);
+        assert_eq!(kv.v_row(1, 1, 0), &rows(4, 6.0)[..]);
+    }
+
+    #[test]
+    fn spill_of_never_written_block_is_zeros_and_restore_grows() {
+        let kv = PagedKvCache::new(1, 2, 1, 2);
+        // Block 7 is past the 1-block pool: allocated on paper, never
+        // written — it spills as zeros instead of panicking.
+        let (sk, sv) = kv.spill_blocks(&[7]);
+        assert!(sk.iter().chain(&sv).all(|&x| x == 0.0));
+        let mut kv2 = PagedKvCache::new(1, 2, 1, 2);
+        kv2.restore_blocks(&[5], &sk, &sv); // grows the pool on demand
+        assert!(kv2.n_blocks() >= 6);
+        assert!(kv2.k_row(5, 0, 0).iter().all(|&x| x == 0.0));
     }
 }

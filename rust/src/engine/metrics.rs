@@ -1,4 +1,31 @@
-//! Serving metrics: the quantities Figures 2–3 report.
+//! Serving metrics: the quantities Figures 2–3 report, plus the
+//! per-request SLO quantities (TTFT/TPOT/queue time) of trace-driven
+//! serving.
+
+/// p50/p95/p99 of one metric's per-request samples, computed with a
+/// single sort.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Quantiles {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl Quantiles {
+    /// All-zero for an empty sample set; a single sample pins all three.
+    pub fn compute(samples: &[f64]) -> Quantiles {
+        if samples.is_empty() {
+            return Quantiles::default();
+        }
+        let mut xs = samples.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Quantiles {
+            p50: crate::benchkit::percentile(&xs, 0.50),
+            p95: crate::benchkit::percentile(&xs, 0.95),
+            p99: crate::benchkit::percentile(&xs, 0.99),
+        }
+    }
+}
 
 /// Aggregated over one engine run.
 #[derive(Debug, Clone, Default)]
@@ -26,6 +53,18 @@ pub struct Metrics {
     pub latencies: Vec<f64>,
     /// Per-request time-to-first-token, seconds.
     pub ttfts: Vec<f64>,
+    /// Per-request queue time (arrival → first admission), seconds.
+    pub queue_times: Vec<f64>,
+    /// Per-request mean time-per-output-token after the first, seconds
+    /// (requests generating a single token contribute no sample).
+    pub tpots: Vec<f64>,
+    /// Preemptions that spilled K/V to the host pool instead of
+    /// discarding it (a subset of `preemptions`).
+    pub swap_outs: usize,
+    /// Swapped victims resumed by restoring their spill.
+    pub swap_ins: usize,
+    /// Tokens restored from spill rather than recomputed.
+    pub swap_restored_tokens: usize,
 }
 
 impl Metrics {
@@ -55,12 +94,27 @@ impl Metrics {
     }
 
     pub fn p95_latency(&self) -> f64 {
-        if self.latencies.is_empty() {
-            return 0.0;
-        }
-        let mut xs = self.latencies.clone();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        crate::benchkit::percentile(&xs, 0.95)
+        self.latency_quantiles().p95
+    }
+
+    /// p50/p95/p99 end-to-end latency (one sort for all three).
+    pub fn latency_quantiles(&self) -> Quantiles {
+        Quantiles::compute(&self.latencies)
+    }
+
+    /// p50/p95/p99 time-to-first-token.
+    pub fn ttft_quantiles(&self) -> Quantiles {
+        Quantiles::compute(&self.ttfts)
+    }
+
+    /// p50/p95/p99 time-per-output-token.
+    pub fn tpot_quantiles(&self) -> Quantiles {
+        Quantiles::compute(&self.tpots)
+    }
+
+    /// p50/p95/p99 queue time (arrival → first admission).
+    pub fn queue_time_quantiles(&self) -> Quantiles {
+        Quantiles::compute(&self.queue_times)
     }
 
     pub fn mean_ttft(&self) -> f64 {
@@ -68,6 +122,13 @@ impl Metrics {
             return 0.0;
         }
         self.ttfts.iter().sum::<f64>() / self.ttfts.len() as f64
+    }
+
+    pub fn mean_tpot(&self) -> f64 {
+        if self.tpots.is_empty() {
+            return 0.0;
+        }
+        self.tpots.iter().sum::<f64>() / self.tpots.len() as f64
     }
 
     pub fn mean_decode_batch(&self) -> f64 {
@@ -123,5 +184,36 @@ mod tests {
         };
         assert!((m.mean_latency() - 2.0).abs() < 1e-12);
         assert!(m.p95_latency() >= 2.0);
+    }
+
+    #[test]
+    fn quantiles_of_empty_are_zero() {
+        assert_eq!(Quantiles::compute(&[]), Quantiles::default());
+        let m = Metrics::default();
+        assert_eq!(m.ttft_quantiles(), Quantiles::default());
+        assert_eq!(m.tpot_quantiles(), Quantiles::default());
+        assert_eq!(m.queue_time_quantiles(), Quantiles::default());
+        assert_eq!(m.mean_tpot(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_of_single_sample_pin_all_three() {
+        let q = Quantiles::compute(&[4.5]);
+        assert_eq!(q, Quantiles { p50: 4.5, p95: 4.5, p99: 4.5 });
+    }
+
+    #[test]
+    fn quantiles_of_tied_samples_are_the_tie() {
+        let q = Quantiles::compute(&[2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(q, Quantiles { p50: 2.0, p95: 2.0, p99: 2.0 });
+    }
+
+    #[test]
+    fn quantiles_are_ordered_and_sort_input() {
+        // Deliberately unsorted input: compute() must sort internally.
+        let q = Quantiles::compute(&[9.0, 1.0, 5.0, 3.0, 7.0, 2.0, 8.0, 4.0, 6.0, 10.0]);
+        assert!(q.p50 <= q.p95 && q.p95 <= q.p99);
+        assert!(q.p50 >= 5.0 && q.p50 <= 6.0, "p50 {}", q.p50);
+        assert!(q.p99 <= 10.0);
     }
 }

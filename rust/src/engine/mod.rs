@@ -32,6 +32,33 @@
 //! recompute paths are bit-identical (pinned by
 //! `rust/tests/backend_integration.rs` and `benches/prefix_prefill.rs`).
 //!
+//! **Arrival clock and admission.** Requests carry a virtual arrival
+//! time ([`request::Request::arrival`]): the engine holds each one in a
+//! pending set, invisible to the scheduler, until the engine clock
+//! reaches its arrival — when every admitted sequence has drained and
+//! arrivals remain, the clock jumps forward to the next one.  Admission
+//! order is priority-then-FCFS (higher [`request::Request::priority`]
+//! first; ties by arrival, then id), with resumed victims ahead of
+//! fresh peers of equal priority, and a fairness guard that defers
+//! fresh admissions which would leave the decode batch without append
+//! headroom (so a prefill wave cannot starve running decodes into a
+//! preemption storm).
+//!
+//! **Swap lifecycle.** A sequence moves `Waiting → Prefilling → Running
+//! → Finished`; under memory pressure a `Prefilling`/`Running` victim
+//! either re-enters `Waiting`-like recompute (`Preempted`, the
+//! [`EngineConfig::swap_preempt`]` = false` path: blocks freed, prefill
+//! restarts from scratch) or becomes `Swapped`: the block manager
+//! releases its physical blocks but logs the table, the engine copies
+//! the K/V out to the backend's host-side spill pool *before* the
+//! blocks can be poisoned or rewritten, and the sequence keeps its
+//! exact `prefill_pos`/`cached_len`.  On resume the scheduler allocates
+//! fresh blocks (growing the table if a failed self-append left it one
+//! block short), the engine restores the spill *before* the next
+//! [`backend::Backend::step`], and prefill continues from the cursor —
+//! the swapped span is never recomputed, and replay stays bit-identical
+//! to an unpreempted run (pinned by `rust/tests/serve_chaos.rs`).
+//!
 //! Backends:
 //!
 //! * [`backend::SimBackend`] — advances a *virtual clock* using the
@@ -64,7 +91,7 @@ pub use block_manager::{BlockId, BlockManager};
 pub use cpu_backend::{CpuBackend, CpuModelConfig};
 pub use kv::PagedKvCache;
 pub use engine::{Engine, EngineReport};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, Quantiles};
 pub use request::{FinishReason, Request, RequestOutput, SamplingParams};
 pub use scheduler::{PrefillChunk, ScheduledWork, Scheduler, SchedulerConfig};
 pub use sequence::{SeqState, Sequence};
@@ -93,6 +120,15 @@ pub struct EngineConfig {
     /// flips the *default* to forced recompute for differential testing;
     /// explicit field settings always win.
     pub prefix_skip: bool,
+    /// Preempt by **swapping K/V out** to the backend's host-side spill
+    /// pool instead of discarding and recomputing: the victim's blocks
+    /// are copied out before they are recycled, and its resume restores
+    /// them onto fresh blocks and continues from its exact prefill
+    /// cursor — no recompute of the swapped span.  `OPT4GPTQ_SWAP=0`
+    /// flips the *default* back to discard-and-recompute (differential
+    /// testing); explicit field settings always win.  Victims with
+    /// nothing materialized yet fall back to recompute either way.
+    pub swap_preempt: bool,
 }
 
 /// Default for [`EngineConfig::prefix_skip`]: enabled unless the
@@ -100,6 +136,13 @@ pub struct EngineConfig {
 /// the recompute path stays reachable without a rebuild).
 pub fn prefix_skip_default() -> bool {
     !matches!(std::env::var("OPT4GPTQ_PREFIX_SKIP").as_deref(), Ok("0"))
+}
+
+/// Default for [`EngineConfig::swap_preempt`]: enabled unless the
+/// `OPT4GPTQ_SWAP=0` escape hatch is set (differential testing — the
+/// discard-and-recompute path stays reachable without a rebuild).
+pub fn swap_preempt_default() -> bool {
+    !matches!(std::env::var("OPT4GPTQ_SWAP").as_deref(), Ok("0"))
 }
 
 impl Default for EngineConfig {
@@ -111,6 +154,7 @@ impl Default for EngineConfig {
             max_seq_len: 2048,
             prefill_budget: 512,
             prefix_skip: prefix_skip_default(),
+            swap_preempt: swap_preempt_default(),
         }
     }
 }

@@ -25,13 +25,19 @@ pub struct Request {
     pub id: usize,
     pub prompt: Vec<u32>,
     pub sampling: SamplingParams,
-    /// Virtual arrival time (seconds); 0 for batch workloads.
+    /// Virtual arrival time (seconds); 0 for batch workloads.  The
+    /// engine keeps a request invisible to the scheduler until the
+    /// virtual clock reaches its arrival.
     pub arrival: f64,
+    /// Admission priority: higher values are admitted first; ties are
+    /// FCFS by arrival, then id.  Preemption never evicts a victim of
+    /// strictly higher priority on behalf of a lower-priority appender.
+    pub priority: i32,
 }
 
 impl Request {
     pub fn new(id: usize, prompt: Vec<u32>, sampling: SamplingParams) -> Request {
-        Request { id, prompt, sampling, arrival: 0.0 }
+        Request { id, prompt, sampling, arrival: 0.0, priority: 0 }
     }
 }
 

@@ -6,23 +6,37 @@
 //! Policy:
 //!
 //! 1. Continue partially-prefilled sequences first (one block-aligned
-//!    chunk each, in admission order), then admit waiting (or preempted)
-//!    sequences while budget and batch room remain.  Admission allocates
-//!    the block table the backend will execute through, and the
-//!    allocator reports `cached_len` — the leading tokens whose K/V
-//!    already live in fully-computed shared prefix blocks.  With
-//!    `prefix_skip` on, those tokens are *never sent to the backend*:
-//!    the first chunk starts at `cached_len` (clamped to keep at least
-//!    the final token computable for logits).
+//!    chunk each, in admission order), then admit queued sequences while
+//!    budget and batch room remain.  Admission order is priority (higher
+//!    first), then resumed victims ahead of fresh peers, then FCFS by
+//!    arrival, then id.  A fresh prompt is additionally held back by a
+//!    **fairness guard**: it is only admitted when, after its
+//!    allocation, every running decode could still append one token —
+//!    so a prefill wave cannot starve the decode batch into a
+//!    preemption storm (resumed victims are exempt; they must get back
+//!    in to make progress).  Admission allocates the block table the
+//!    backend will execute through, and the allocator reports
+//!    `cached_len` — the leading tokens whose K/V already live in
+//!    fully-computed shared prefix blocks.  With `prefix_skip` on,
+//!    those tokens are *never sent to the backend*: the first chunk
+//!    starts at `cached_len` (clamped to keep at least the final token
+//!    computable for logits).
 //! 2. Chunk bounds are block-aligned whenever that still makes progress
 //!    (a budget smaller than the block size degrades to unaligned but
 //!    still bit-identical chunks).
 //! 3. On KV exhaustion while appending a generated token, preempt the
-//!    most recently arrived running sequence (recompute semantics: its
-//!    blocks are freed, its prefill progress resets, and it re-prefills
-//!    later with its generated tokens folded into the prompt).
+//!    lowest-priority, most recently arrived running or prefilling
+//!    sequence whose priority does not exceed the appender's.  With
+//!    [`EngineConfig::swap_preempt`] on (the default), the victim's K/V
+//!    is **swapped out** — the block manager logs its table for the
+//!    engine to spill, and the sequence keeps its exact prefill cursor,
+//!    so the resume restores the spill onto fresh blocks and recomputes
+//!    nothing.  With it off (or when the victim has nothing
+//!    materialized), classic recompute: blocks freed, progress reset,
+//!    generated tokens folded into the prompt for re-prefill.
 
-use std::collections::{HashMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::HashMap;
 
 use super::block_manager::BlockManager;
 use super::request::Request;
@@ -59,7 +73,9 @@ pub struct Scheduler {
     pub cfg: SchedulerConfig,
     pub blocks: BlockManager,
     pub seqs: HashMap<usize, Sequence>,
-    waiting: VecDeque<usize>,
+    /// Queued sequence ids (fresh, preempted, and swapped alike);
+    /// re-sorted into admission order at the top of every [`schedule`].
+    waiting: Vec<usize>,
     running: Vec<usize>,
     /// Admitted sequences whose prompts are mid-prefill, in admission
     /// order (each gets at most one chunk per step).
@@ -68,6 +84,16 @@ pub struct Scheduler {
     /// Prompt tokens never sent to the backend because their K/V was
     /// already cached (summed over all admissions).
     pub prefill_tokens_skipped: usize,
+    /// Preemptions that spilled K/V instead of discarding it.
+    pub swap_out_count: usize,
+    /// Swap-outs that hit a sequence mid-prefill / mid-decode.
+    pub swap_out_mid_prefill: usize,
+    pub swap_out_mid_decode: usize,
+    /// Swapped victims resumed by restoring their spill.
+    pub swap_in_count: usize,
+    /// Tokens whose K/V was restored from spill rather than recomputed
+    /// (summed over all swap-ins).
+    pub swap_restored_tokens: usize,
 }
 
 impl Scheduler {
@@ -75,18 +101,23 @@ impl Scheduler {
         Scheduler {
             blocks: BlockManager::new(cfg.total_blocks, cfg.block_size),
             seqs: HashMap::new(),
-            waiting: VecDeque::new(),
+            waiting: Vec::new(),
             running: Vec::new(),
             prefilling: Vec::new(),
             preemption_count: 0,
             prefill_tokens_skipped: 0,
+            swap_out_count: 0,
+            swap_out_mid_prefill: 0,
+            swap_out_mid_decode: 0,
+            swap_in_count: 0,
+            swap_restored_tokens: 0,
             cfg,
         }
     }
 
     pub fn add_request(&mut self, req: &Request) {
         let seq = Sequence::new(req);
-        self.waiting.push_back(seq.id);
+        self.waiting.push(seq.id);
         self.seqs.insert(seq.id, seq);
     }
 
@@ -127,8 +158,17 @@ impl Scheduler {
         PrefillChunk { seq_id: id, start: pos, len: end - pos, is_last: end == prompt_len }
     }
 
-    /// Decide the next step's work.
-    pub fn schedule(&mut self) -> ScheduledWork {
+    /// Decide the next step's work.  `now` is the engine clock, stamped
+    /// onto each sequence's first admission for queue-time accounting.
+    pub fn schedule(&mut self, now: f64) -> ScheduledWork {
+        // Admission order: priority (higher first), resumed victims
+        // ahead of fresh peers, then FCFS by arrival, then id.  The
+        // sort key is total and deterministic (ids are unique).
+        self.waiting.sort_by_key(|&id| {
+            let s = &self.seqs[&id];
+            let fresh = (s.state == SeqState::Waiting) as u8;
+            (Reverse(s.priority), fresh, s.arrival.to_bits(), s.id)
+        });
         let mut budget = self.cfg.prefill_budget.max(1);
         let mut prefills = Vec::new();
         // 1. Continue in-flight prefills, one chunk each.
@@ -140,21 +180,50 @@ impl Scheduler {
             budget -= chunk.len;
             prefills.push(chunk);
         }
-        // 2. Admit waiting sequences while budget and batch room remain.
+        // 2. Admit queued sequences while budget and batch room remain.
         while budget > 0 && self.running.len() + self.prefilling.len() < self.cfg.max_batch {
-            let Some(&cand) = self.waiting.front() else { break };
+            let Some(&cand) = self.waiting.first() else { break };
+            if self.seqs[&cand].state == SeqState::Swapped {
+                // Resume a swapped victim: fresh blocks, spill restored
+                // by the engine before the step, cursor untouched.
+                let total = self.seqs[&cand].total_tokens();
+                if !self.blocks.can_swap_in(cand, total) {
+                    break; // no KV room; decodes will free blocks later
+                }
+                self.waiting.remove(0);
+                assert!(self.blocks.swap_in(cand, total), "can_swap_in checked");
+                self.swap_in_count += 1;
+                let seq = self.seqs.get_mut(&cand).unwrap();
+                seq.state = SeqState::Prefilling;
+                seq.admitted_time.get_or_insert(now);
+                self.swap_restored_tokens += seq.prefill_pos;
+                self.prefilling.push(cand);
+                let chunk = self.next_chunk(cand, budget);
+                budget -= chunk.len;
+                prefills.push(chunk);
+                continue;
+            }
+            let fresh = self.seqs[&cand].state == SeqState::Waiting;
             let prompt = self.seqs[&cand].effective_prompt();
             if prompt.len() + 1 > self.cfg.max_seq_len {
                 // Oversized request: reject by finishing immediately.
-                self.waiting.pop_front();
-                let seq = self.seqs.get_mut(&cand).unwrap();
-                seq.state = SeqState::Finished;
+                self.waiting.remove(0);
+                self.reject(cand);
                 continue;
             }
             if !self.blocks.can_allocate(prompt.len() + 1) {
                 break; // no KV room; decodes will free blocks later
             }
-            self.waiting.pop_front();
+            // Fairness guard: admit a *fresh* prompt only if, after its
+            // allocation, every running decode could still append one
+            // token.  Resumed (preempted) victims are exempt.
+            if fresh
+                && self.blocks.blocks_needed(prompt.len() + 1) + self.running.len()
+                    > self.blocks.free_blocks()
+            {
+                break;
+            }
+            self.waiting.remove(0);
             let cached = self.blocks.allocate(cand, &prompt).expect("can_allocate checked");
             // Keep at least the final prompt token computable: its
             // hidden state feeds the lm_head for the first sampled
@@ -165,6 +234,7 @@ impl Scheduler {
             self.prefill_tokens_skipped += cached;
             let seq = self.seqs.get_mut(&cand).unwrap();
             seq.state = SeqState::Prefilling;
+            seq.admitted_time.get_or_insert(now);
             seq.cached_len = cached;
             seq.prefill_pos = cached;
             self.prefilling.push(cand);
@@ -176,15 +246,24 @@ impl Scheduler {
         if prefills.is_empty() && decodes.is_empty() {
             if !self.waiting.is_empty() {
                 // Nothing running, yet the head of the queue cannot be
-                // admitted: only possible when the prompt alone exceeds
-                // KV capacity.  Reject it to guarantee progress.
-                let id = self.waiting.pop_front().unwrap();
-                self.seqs.get_mut(&id).unwrap().state = SeqState::Finished;
-                return self.schedule();
+                // admitted: the prompt (or a swapped victim's grown
+                // table) exceeds KV capacity outright.  Reject it to
+                // guarantee progress.
+                let id = self.waiting.remove(0);
+                self.reject(id);
+                return self.schedule(now);
             }
             return ScheduledWork::Idle;
         }
         ScheduledWork::Step { prefills, decodes }
+    }
+
+    /// Reject a queued sequence outright (oversized, or provably never
+    /// admittable): any spill is retired and it finishes with whatever
+    /// it generated.
+    fn reject(&mut self, id: usize) {
+        self.blocks.free_sequence(id);
+        self.seqs.get_mut(&id).expect("unknown seq").state = SeqState::Finished;
     }
 
     /// Record that a chunk executed: advance the sequence's prefill
@@ -211,25 +290,30 @@ impl Scheduler {
         self.running.push(id);
     }
 
-    /// Reserve KV room for one appended token; preempts the youngest
-    /// other running sequence on exhaustion.  Returns false if `id`
-    /// itself had to be preempted (no other victim available).
+    /// Reserve KV room for one appended token; preempts the
+    /// lowest-priority, youngest other running or prefilling sequence
+    /// on exhaustion — never one of strictly higher priority than the
+    /// appender.  Returns false if `id` itself had to be preempted (no
+    /// eligible victim available).
     pub fn append_token(&mut self, id: usize) -> bool {
+        let appender_priority = self.seqs[&id].priority;
         loop {
             let total = self.seqs[&id].total_tokens();
             if self.blocks.append_token(id, total) {
                 return true;
             }
-            // Out of blocks: preempt the most recent *other* running seq.
+            // Out of blocks: evict the least-valuable *other* victim.
             let victim = self
                 .running
                 .iter()
+                .chain(self.prefilling.iter())
                 .copied()
-                .filter(|&v| v != id)
-                .max_by_key(|&v| {
-                    // youngest = largest arrival, break ties by id
+                .filter(|&v| v != id && self.seqs[&v].priority <= appender_priority)
+                .min_by_key(|&v| {
+                    // lowest priority, then youngest (largest arrival),
+                    // then largest id
                     let s = &self.seqs[&v];
-                    (s.arrival.to_bits(), s.id)
+                    (s.priority, Reverse(s.arrival.to_bits()), Reverse(s.id))
                 });
             match victim {
                 Some(v) => self.preempt(v),
@@ -244,12 +328,34 @@ impl Scheduler {
     fn preempt(&mut self, id: usize) {
         self.running.retain(|&r| r != id);
         self.prefilling.retain(|&p| p != id);
-        self.blocks.free_sequence(id);
-        self.seqs.get_mut(&id).expect("unknown seq").preempt();
+        let seq = self.seqs.get_mut(&id).expect("unknown seq");
+        // Tokens whose K/V is actually materialized (a decode victim's
+        // last sampled token never was; a prefill victim stops at its
+        // cursor).  Nothing materialized → spilling is pointless, fall
+        // back to recompute even in swap mode.
+        let materialized = match seq.state {
+            SeqState::Prefilling => seq.prefill_pos,
+            _ => seq.total_tokens() - 1,
+        };
+        if self.cfg.swap_preempt && materialized > 0 {
+            if seq.state == SeqState::Prefilling {
+                self.swap_out_mid_prefill += 1;
+            } else {
+                self.swap_out_mid_decode += 1;
+            }
+            seq.swap_out();
+            // Logs the table for the engine to spill *before* the freed
+            // blocks can be poisoned or rewritten.
+            self.blocks.swap_out(id);
+            self.swap_out_count += 1;
+        } else {
+            seq.preempt();
+            self.blocks.free_sequence(id);
+        }
         self.preemption_count += 1;
-        // Preempted sequences go to the *front*: they already hold
-        // generated tokens and should resume first (vLLM recompute).
-        self.waiting.push_front(id);
+        // Re-queue; the admission sort puts resumed victims ahead of
+        // fresh peers of equal priority (vLLM resume-first).
+        self.waiting.push(id);
     }
 
     /// Finish a sequence: free its KV blocks (the engine drains the
@@ -299,13 +405,22 @@ impl Scheduler {
         if self.running.len() + self.prefilling.len() > self.cfg.max_batch {
             return Err("decode batch exceeds max_batch".into());
         }
-        // Waiting/preempted/finished sequences must hold no KV blocks.
+        // Waiting/preempted/swapped/finished sequences must hold no KV
+        // blocks; swapped ones must be queued with a live spill record.
         for (id, s) in &self.seqs {
             let holds_blocks = self.blocks.table(*id).is_some();
             let may_hold =
                 matches!(s.state, SeqState::Running | SeqState::Prefilling);
             if holds_blocks && !may_hold {
                 return Err(format!("seq {id} in state {:?} still holds blocks", s.state));
+            }
+            if s.state == SeqState::Swapped {
+                if !self.waiting.contains(id) {
+                    return Err(format!("swapped seq {id} not in waiting queue"));
+                }
+                if !self.blocks.is_swapped(*id) {
+                    return Err(format!("swapped seq {id} has no spill record"));
+                }
             }
         }
         Ok(())
@@ -324,9 +439,11 @@ mod tests {
             total_blocks: 16,
             max_seq_len: 64,
             prefill_budget: 8,
-            // Pinned on purpose: these are unit tests OF the skip
-            // mechanism, independent of the OPT4GPTQ_PREFIX_SKIP env.
+            // Pinned on purpose: these are unit tests OF the skip and
+            // recompute mechanisms, independent of the
+            // OPT4GPTQ_PREFIX_SKIP / OPT4GPTQ_SWAP env hatches.
             prefix_skip: true,
+            swap_preempt: false,
         }
     }
 
@@ -359,7 +476,7 @@ mod tests {
             s.add_request(&req(i, 4, 4));
         }
         // Budget 8 = two 4-token prompts; the third waits.
-        match s.schedule() {
+        match s.schedule(0.0) {
             ScheduledWork::Step { prefills, decodes } => {
                 assert_eq!(
                     prefills,
@@ -380,18 +497,18 @@ mod tests {
     fn long_prompt_is_chunked_block_aligned_across_steps() {
         let mut s = Scheduler::new(SchedulerConfig { max_seq_len: 64, ..cfg() });
         s.add_request(&req(0, 10, 4)); // 10 tokens, budget 8, block 4
-        let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+        let ScheduledWork::Step { prefills, .. } = s.schedule(0.0) else { panic!() };
         assert_eq!(prefills, vec![PrefillChunk { seq_id: 0, start: 0, len: 8, is_last: false }]);
         run_prefills(&mut s, &prefills);
         s.check_invariants().unwrap();
         // Next step finishes the prompt (2 remaining) and has room to
         // admit more — none waiting, so just the tail chunk.
-        let ScheduledWork::Step { prefills, decodes } = s.schedule() else { panic!() };
+        let ScheduledWork::Step { prefills, decodes } = s.schedule(0.0) else { panic!() };
         assert_eq!(prefills, vec![PrefillChunk { seq_id: 0, start: 8, len: 2, is_last: true }]);
         assert!(decodes.is_empty());
         run_prefills(&mut s, &prefills);
         // Fully prefilled: next step is a pure decode.
-        let ScheduledWork::Step { prefills, decodes } = s.schedule() else { panic!() };
+        let ScheduledWork::Step { prefills, decodes } = s.schedule(0.0) else { panic!() };
         assert!(prefills.is_empty());
         assert_eq!(decodes, vec![0]);
         s.check_invariants().unwrap();
@@ -403,7 +520,7 @@ mod tests {
         s.add_request(&req(0, 6, 4));
         let mut starts = Vec::new();
         loop {
-            let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+            let ScheduledWork::Step { prefills, .. } = s.schedule(0.0) else { panic!() };
             if prefills.is_empty() {
                 break;
             }
@@ -431,14 +548,14 @@ mod tests {
     fn decodes_mix_with_prefill_chunks() {
         let mut s = Scheduler::new(cfg());
         s.add_request(&req(0, 4, 4));
-        let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+        let ScheduledWork::Step { prefills, .. } = s.schedule(0.0) else { panic!() };
         run_prefills(&mut s, &prefills);
         // Seq 0 is decoding; a new long prompt arrives: one mixed step.
         // Distinct content — no prefix sharing with seq 0's blocks.
         let mut r1 = req(1, 10, 4);
         r1.prompt = (100..110).collect();
         s.add_request(&r1);
-        let ScheduledWork::Step { prefills, decodes } = s.schedule() else { panic!() };
+        let ScheduledWork::Step { prefills, decodes } = s.schedule(0.0) else { panic!() };
         assert_eq!(decodes, vec![0]);
         assert_eq!(prefills.len(), 1);
         assert_eq!(prefills[0].seq_id, 1);
@@ -450,14 +567,14 @@ mod tests {
     fn cached_prefix_is_skipped_at_admission() {
         let mut s = Scheduler::new(SchedulerConfig { prefill_budget: 64, ..cfg() });
         s.add_request(&req(0, 10, 4)); // 2 full blocks + tail
-        let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+        let ScheduledWork::Step { prefills, .. } = s.schedule(0.0) else { panic!() };
         assert_eq!(prefills[0], PrefillChunk { seq_id: 0, start: 0, len: 10, is_last: true });
         run_prefills(&mut s, &prefills);
         assert_eq!(s.prefill_tokens_skipped, 0);
         // Identical prompt: the two full blocks are computed now, so the
         // second sequence's first chunk starts at 8.
         s.add_request(&req(1, 10, 4));
-        let ScheduledWork::Step { prefills, decodes } = s.schedule() else { panic!() };
+        let ScheduledWork::Step { prefills, decodes } = s.schedule(0.0) else { panic!() };
         assert_eq!(decodes, vec![0]);
         assert_eq!(prefills, vec![PrefillChunk { seq_id: 1, start: 8, len: 2, is_last: true }]);
         assert_eq!(s.prefill_tokens_skipped, 8);
@@ -471,12 +588,12 @@ mod tests {
         let mut r0 = req(0, 8, 4); // exactly 2 full blocks
         r0.prompt = (0..8).collect();
         s.add_request(&r0);
-        let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+        let ScheduledWork::Step { prefills, .. } = s.schedule(0.0) else { panic!() };
         run_prefills(&mut s, &prefills);
         let mut r1 = req(1, 8, 4);
         r1.prompt = (0..8).collect();
         s.add_request(&r1);
-        let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+        let ScheduledWork::Step { prefills, .. } = s.schedule(0.0) else { panic!() };
         // Whole prompt cached: clamp keeps the final token computable.
         assert_eq!(prefills, vec![PrefillChunk { seq_id: 1, start: 7, len: 1, is_last: true }]);
         assert_eq!(s.prefill_tokens_skipped, 7);
@@ -491,10 +608,10 @@ mod tests {
             ..cfg()
         });
         s.add_request(&req(0, 10, 4));
-        let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+        let ScheduledWork::Step { prefills, .. } = s.schedule(0.0) else { panic!() };
         run_prefills(&mut s, &prefills);
         s.add_request(&req(1, 10, 4));
-        let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+        let ScheduledWork::Step { prefills, .. } = s.schedule(0.0) else { panic!() };
         assert_eq!(prefills, vec![PrefillChunk { seq_id: 1, start: 0, len: 10, is_last: true }]);
         assert_eq!(s.prefill_tokens_skipped, 0, "escape hatch must force full recompute");
         s.check_invariants().unwrap();
@@ -504,7 +621,7 @@ mod tests {
     fn oversized_prompt_is_rejected_not_deadlocked() {
         let mut s = Scheduler::new(cfg());
         s.add_request(&req(0, 100, 4)); // exceeds max_seq_len
-        assert_eq!(s.schedule(), ScheduledWork::Idle);
+        assert_eq!(s.schedule(0.0), ScheduledWork::Idle);
         assert_eq!(s.seqs[&0].state, SeqState::Finished);
     }
 
@@ -517,6 +634,7 @@ mod tests {
             max_seq_len: 64,
             prefill_budget: 32,
             prefix_skip: true,
+            swap_preempt: false, // this test pins recompute semantics
         });
         // Distinct prompt contents so the prefix cache cannot share blocks.
         let mut r0 = req(0, 7, 30);
@@ -525,7 +643,7 @@ mod tests {
         r1.prompt = vec![2; 7];
         s.add_request(&Request { arrival: 0.0, ..r0 });
         s.add_request(&Request { arrival: 1.0, ..r1 });
-        let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+        let ScheduledWork::Step { prefills, .. } = s.schedule(0.0) else { panic!() };
         assert_eq!(prefills.len(), 2);
         run_prefills(&mut s, &prefills);
         // Each seq has 8 tokens in 2 blocks; all 4 blocks used.  The next
@@ -547,7 +665,7 @@ mod tests {
     fn finish_releases_blocks_and_reports_them() {
         let mut s = Scheduler::new(cfg());
         s.add_request(&req(0, 4, 4));
-        let ScheduledWork::Step { prefills, .. } = s.schedule() else { panic!() };
+        let ScheduledWork::Step { prefills, .. } = s.schedule(0.0) else { panic!() };
         let free_before = s.blocks.free_blocks();
         run_prefills(&mut s, &prefills);
         s.blocks.take_released(); // discard pre-finish noise
@@ -560,6 +678,190 @@ mod tests {
         s.check_invariants().unwrap();
         // batch room is reusable
         s.add_request(&req(5, 4, 4));
-        assert!(matches!(s.schedule(), ScheduledWork::Step { .. }));
+        assert!(matches!(s.schedule(0.0), ScheduledWork::Step { .. }));
+    }
+
+    #[test]
+    fn swap_preempt_keeps_progress_and_resumes_without_recompute() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_batch: 2,
+            block_size: 4,
+            total_blocks: 4,
+            max_seq_len: 64,
+            prefill_budget: 32,
+            prefix_skip: true,
+            swap_preempt: true,
+        });
+        let mut r0 = req(0, 7, 30);
+        r0.prompt = vec![1; 7];
+        let mut r1 = req(1, 7, 30);
+        r1.prompt = vec![2; 7];
+        s.add_request(&Request { arrival: 0.0, ..r0 });
+        s.add_request(&Request { arrival: 1.0, ..r1 });
+        let ScheduledWork::Step { prefills, .. } = s.schedule(0.0) else { panic!() };
+        run_prefills(&mut s, &prefills);
+        // All 4 blocks used; appending to seq 0 evicts seq 1 — but as a
+        // swap, not a recompute: the cursor freezes one short of total.
+        s.seqs.get_mut(&0).unwrap().generated.push(2);
+        assert!(s.append_token(0));
+        assert_eq!(s.seqs[&1].state, SeqState::Swapped);
+        assert_eq!(s.seqs[&1].prefill_pos, 7, "everything but the last sampled token");
+        assert_eq!((s.swap_out_count, s.swap_out_mid_decode), (1, 1));
+        assert_eq!(s.preemption_count, 1);
+        let spilled = s.blocks.take_swap_outs();
+        assert_eq!(spilled.len(), 1);
+        assert_eq!(spilled[0].0, 1);
+        assert_eq!(spilled[0].1.len(), 2, "2 blocks of K/V to spill");
+        s.check_invariants().unwrap();
+        // Room frees up: the resume is a single-token final chunk at the
+        // frozen cursor — no recompute of the swapped span.
+        s.finish(0);
+        let ScheduledWork::Step { prefills, .. } = s.schedule(5.0) else { panic!() };
+        assert_eq!(prefills, vec![PrefillChunk { seq_id: 1, start: 7, len: 1, is_last: true }]);
+        assert_eq!((s.swap_in_count, s.swap_restored_tokens), (1, 7));
+        assert_eq!(s.seqs[&1].admitted_time, Some(0.0), "first admission, not the resume");
+        let restored = s.blocks.take_swap_ins();
+        assert_eq!(restored.len(), 1);
+        assert_eq!(restored[0].1.len(), 2);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn swap_preempt_mid_prefill_keeps_cursor() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_batch: 2,
+            block_size: 4,
+            total_blocks: 5,
+            max_seq_len: 64,
+            prefill_budget: 4,
+            prefix_skip: true,
+            swap_preempt: true,
+        });
+        let mut r0 = req(0, 7, 30);
+        r0.prompt = vec![1; 7];
+        s.add_request(&r0);
+        // Budget 4: two chunks to finish seq 0's prompt.
+        for _ in 0..2 {
+            let ScheduledWork::Step { prefills, .. } = s.schedule(0.0) else { panic!() };
+            run_prefills(&mut s, &prefills);
+        }
+        assert_eq!(s.num_running(), 1);
+        // Seq 1 arrives and gets one 4-token chunk in, then stalls.
+        let mut r1 = req(1, 7, 30);
+        r1.prompt = vec![2; 7];
+        s.add_request(&Request { arrival: 1.0, ..r1 });
+        let ScheduledWork::Step { prefills, decodes } = s.schedule(1.0) else { panic!() };
+        assert_eq!(decodes, vec![0]);
+        assert_eq!(prefills, vec![PrefillChunk { seq_id: 1, start: 0, len: 4, is_last: false }]);
+        s.advance_prefill(&prefills[0]);
+        // Seq 0 keeps decoding until the pool runs dry; the mid-prefill
+        // seq 1 is the only eligible victim.
+        for _ in 0..5 {
+            s.seqs.get_mut(&0).unwrap().generated.push(9);
+            assert!(s.append_token(0));
+        }
+        assert_eq!(s.seqs[&1].state, SeqState::Swapped);
+        assert_eq!(s.seqs[&1].prefill_pos, 4, "chunk cursor frozen, not reset");
+        assert_eq!((s.swap_out_count, s.swap_out_mid_prefill), (1, 1));
+        s.check_invariants().unwrap();
+        // On resume the next chunk continues exactly at the cursor.
+        s.finish(0);
+        let ScheduledWork::Step { prefills, .. } = s.schedule(9.0) else { panic!() };
+        assert_eq!(prefills, vec![PrefillChunk { seq_id: 1, start: 4, len: 3, is_last: true }]);
+        assert_eq!(s.swap_restored_tokens, 4);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_is_priority_then_fcfs() {
+        let mut s = Scheduler::new(SchedulerConfig { prefill_budget: 64, ..cfg() });
+        let mk = |id: usize, fill: u32, arrival: f64, priority: i32| {
+            let mut r = req(id, 4, 4);
+            r.prompt = vec![fill; 4];
+            r.arrival = arrival;
+            r.priority = priority;
+            r
+        };
+        s.add_request(&mk(0, 10, 0.0, 0));
+        s.add_request(&mk(1, 20, 1.0, 1));
+        s.add_request(&mk(2, 30, 0.5, 0));
+        let ScheduledWork::Step { prefills, .. } = s.schedule(0.0) else { panic!() };
+        let order: Vec<usize> = prefills.iter().map(|c| c.seq_id).collect();
+        assert_eq!(order, vec![1, 0, 2], "priority first, then FCFS by arrival");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fairness_guard_defers_fresh_prompts_without_decode_headroom() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_batch: 4,
+            block_size: 4,
+            total_blocks: 4,
+            max_seq_len: 64,
+            prefill_budget: 32,
+            prefix_skip: true,
+            swap_preempt: true,
+        });
+        let mut r0 = req(0, 7, 30);
+        r0.prompt = vec![1; 7];
+        s.add_request(&r0);
+        let ScheduledWork::Step { prefills, .. } = s.schedule(0.0) else { panic!() };
+        run_prefills(&mut s, &prefills);
+        // 2 of 4 blocks free.  Seq 1's allocation alone would fit
+        // (can_allocate passes), but it would leave the running decode
+        // with no append headroom — deferred, not admitted.
+        let mut r1 = req(1, 7, 30);
+        r1.prompt = vec![2; 7];
+        s.add_request(&Request { arrival: 1.0, ..r1 });
+        let ScheduledWork::Step { prefills, decodes } = s.schedule(1.0) else { panic!() };
+        assert!(prefills.is_empty(), "fresh prompt must wait for headroom");
+        assert_eq!(decodes, vec![0]);
+        assert_eq!(s.seqs[&1].state, SeqState::Waiting);
+        s.check_invariants().unwrap();
+        // Once the decode finishes, the guard clears.
+        s.finish(0);
+        let ScheduledWork::Step { prefills, .. } = s.schedule(2.0) else { panic!() };
+        assert_eq!(prefills.len(), 1);
+        assert_eq!(prefills[0].seq_id, 1);
+    }
+
+    #[test]
+    fn preemption_never_evicts_higher_priority_victims() {
+        let build = || {
+            let mut s = Scheduler::new(SchedulerConfig {
+                max_batch: 2,
+                block_size: 4,
+                total_blocks: 4,
+                max_seq_len: 64,
+                prefill_budget: 32,
+                prefix_skip: true,
+                swap_preempt: false,
+            });
+            let mut r0 = req(0, 7, 30);
+            r0.prompt = vec![1; 7];
+            let mut r1 = req(1, 7, 30);
+            r1.prompt = vec![2; 7];
+            r1.arrival = 1.0;
+            r1.priority = 1;
+            s.add_request(&r0);
+            s.add_request(&r1);
+            let ScheduledWork::Step { prefills, .. } = s.schedule(0.0) else { panic!() };
+            run_prefills(&mut s, &prefills);
+            s
+        };
+        // High-priority appender may evict the low-priority peer...
+        let mut s = build();
+        s.seqs.get_mut(&1).unwrap().generated.push(9);
+        assert!(s.append_token(1));
+        assert_eq!(s.seqs[&0].state, SeqState::Preempted);
+        s.check_invariants().unwrap();
+        // ...but a low-priority appender must not touch the
+        // high-priority peer: it self-preempts instead.
+        let mut s = build();
+        s.seqs.get_mut(&0).unwrap().generated.push(9);
+        assert!(!s.append_token(0));
+        assert_eq!(s.seqs[&0].state, SeqState::Preempted);
+        assert_eq!(s.seqs[&1].state, SeqState::Running);
+        s.check_invariants().unwrap();
     }
 }

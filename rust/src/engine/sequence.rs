@@ -15,6 +15,13 @@ pub enum SeqState {
     Running,
     /// Evicted under memory pressure; will re-prefill from scratch.
     Preempted,
+    /// Evicted under memory pressure with its K/V spilled to the
+    /// backend's host-side pool; [`Sequence::prefill_pos`] still counts
+    /// the materialized span, so the resume recomputes nothing — a
+    /// swap-in restores the spill and continues exactly where the
+    /// sequence stopped (mid-prefill: the remaining chunks; mid-decode:
+    /// a single-token final chunk feeding the last sampled token).
+    Swapped,
     Finished,
 }
 
@@ -27,6 +34,11 @@ pub struct Sequence {
     pub sampling: SamplingParams,
     pub state: SeqState,
     pub arrival: f64,
+    /// Request priority (higher = served first); ties fall back to FCFS.
+    pub priority: i32,
+    /// Virtual-clock time of the *first* admission (None while still
+    /// queued): `admitted_time - arrival` is the request's queue time.
+    pub admitted_time: Option<f64>,
     pub first_token_time: Option<f64>,
     pub finish_time: Option<f64>,
     pub preemptions: usize,
@@ -49,6 +61,8 @@ impl Sequence {
             sampling: req.sampling,
             state: SeqState::Waiting,
             arrival: req.arrival,
+            priority: req.priority,
+            admitted_time: None,
             first_token_time: None,
             finish_time: None,
             preemptions: 0,
@@ -106,6 +120,26 @@ impl Sequence {
         self.preemptions += 1;
         self.cached_len = 0;
         self.prefill_pos = 0;
+    }
+
+    /// Evict with K/V preserved: the blocks move to the backend's spill
+    /// pool, so prefill progress is *kept* — the resumed sequence never
+    /// recomputes the swapped span.  A mid-prefill victim keeps its
+    /// chunk cursor as-is; a decode-phase victim has everything but its
+    /// last sampled token materialized, so the cursor lands one short of
+    /// the total and the resume is a single-token final chunk (which
+    /// re-samples through the same per-request RNG stream a decode step
+    /// would have used — bit-identical replay).  `cached_len` survives
+    /// too: the skipped prefix was materialized before the swap, and
+    /// `prefill_pos >= cached_len` still holds since the cursor only
+    /// ever grew from `cached_len`.
+    pub fn swap_out(&mut self) {
+        debug_assert!(matches!(self.state, SeqState::Prefilling | SeqState::Running));
+        if self.state == SeqState::Running {
+            self.prefill_pos = self.total_tokens() - 1;
+        }
+        self.state = SeqState::Swapped;
+        self.preemptions += 1;
     }
 
     /// The effective prompt for (re-)prefill: original prompt plus
@@ -196,6 +230,29 @@ mod tests {
         assert_eq!(s.effective_prompt(), vec![1, 2, 3, 4, 5]);
         assert_eq!(s.preemptions, 1);
         assert_eq!((s.cached_len, s.prefill_pos), (0, 0), "prefill progress must reset");
+    }
+
+    #[test]
+    fn swap_out_keeps_prefill_progress() {
+        // Mid-prefill victim: the cursor freezes where it was.
+        let mut s = seq(10); // prompt [1, 2, 3]
+        s.state = SeqState::Prefilling;
+        s.cached_len = 1;
+        s.prefill_pos = 2;
+        s.swap_out();
+        assert_eq!(s.state, SeqState::Swapped);
+        assert_eq!((s.cached_len, s.prefill_pos), (1, 2), "swap must not reset progress");
+        assert_eq!(s.preemptions, 1);
+
+        // Decode-phase victim: everything but the last sampled token is
+        // materialized — the resume is a 1-token final chunk.
+        let mut s = seq(10);
+        s.generated.extend([4, 5]);
+        s.state = SeqState::Running;
+        s.prefill_pos = 3;
+        s.swap_out();
+        assert_eq!(s.prefill_pos, 4, "one short of total_tokens (5)");
+        assert_eq!(s.prefill_remaining(), 1);
     }
 
     #[test]

@@ -52,9 +52,12 @@ fn usage() {
   serve     --backend cpu|pjrt --requests N --max-tokens N [--temperature T]
             [--blocks N --block-size N]  (paged-KV pool geometry)
             [--prefill-budget N]  (prefill chunk tokens per mixed step)
+            [--arrival-rate R]  (Poisson arrivals, req/s; 0 = all at t=0)
+            [--preempt swap|recompute]  (KV spill vs discard on eviction)
             (cpu: in-crate fused-kernel transformer over paged KV;
              pjrt: --artifacts DIR, needs the `pjrt` build feature;
-             OPT4GPTQ_PREFIX_SKIP=0 forces cached-prefix recompute)
+             OPT4GPTQ_PREFIX_SKIP=0 forces cached-prefix recompute;
+             OPT4GPTQ_SWAP=0 flips the default to discard-and-recompute)
   simulate  --model NAME --requests N [--opt baseline|smb|vml|ila|opt4gptq]
   kernel    --m M --k K --n N [--group G]
   accuracy  --model NAME [--split arc_c|arc_e]
@@ -141,11 +144,24 @@ fn serve_with<B: Backend>(backend: B, args: &Args, whole_prompt_only: bool) -> o
     let block_size = args.get_usize("block-size", default_cfg.block_size);
     let mut prefill_budget = args.get_usize("prefill-budget", default_cfg.prefill_budget);
     let mut prefix_skip = default_cfg.prefix_skip;
+    let mut swap_preempt = match args.get("preempt") {
+        Some("swap") => true,
+        Some("recompute") => false,
+        Some(other) => {
+            eprintln!("unknown --preempt {other:?} (expected swap|recompute)");
+            std::process::exit(2);
+        }
+        None => default_cfg.swap_preempt,
+    };
+    let arrival_rate = args.get_f64("arrival-rate", 0.0);
     if whole_prompt_only {
         // Unbounded: the budget is shared across same-step admissions,
-        // so anything finite could still split a second prompt.
+        // so anything finite could still split a second prompt.  Swap
+        // resume would also create mid-prompt chunks (start > 0), which
+        // whole-prompt backends reject — recompute preemption only.
         prefill_budget = usize::MAX;
         prefix_skip = false;
+        swap_preempt = false;
     }
     let budget_label = if prefill_budget == usize::MAX {
         "unbounded".to_string()
@@ -154,9 +170,10 @@ fn serve_with<B: Backend>(backend: B, args: &Args, whole_prompt_only: bool) -> o
     };
     println!(
         "paged KV: {total_blocks} blocks x {block_size} tokens ({} max cached tokens); \
-         prefill budget {budget_label}, prefix skip {}",
+         prefill budget {budget_label}, prefix skip {}, preempt by {}",
         total_blocks * block_size,
-        if prefix_skip { "on" } else { "off" }
+        if prefix_skip { "on" } else { "off" },
+        if swap_preempt { "swap" } else { "recompute" },
     );
     let mut engine = Engine::new(
         EngineConfig {
@@ -166,11 +183,12 @@ fn serve_with<B: Backend>(backend: B, args: &Args, whole_prompt_only: bool) -> o
             block_size,
             prefill_budget,
             prefix_skip,
+            swap_preempt,
         },
         backend,
     );
 
-    let trace = RequestTrace::generate_with(
+    let mut trace = RequestTrace::generate_with(
         n,
         42,
         opt4gptq::trace::sharegpt::TraceConfig {
@@ -180,8 +198,12 @@ fn serve_with<B: Backend>(backend: B, args: &Args, whole_prompt_only: bool) -> o
             ..Default::default()
         },
     );
+    if arrival_rate > 0.0 {
+        trace = trace.with_arrivals(arrival_rate, 42);
+        println!("arrivals: Poisson at {arrival_rate} req/s (virtual clock)");
+    }
     for r in &trace.requests {
-        engine.add_request(Request::new(
+        let mut req = Request::new(
             r.id,
             r.prompt.clone(),
             SamplingParams {
@@ -191,7 +213,9 @@ fn serve_with<B: Backend>(backend: B, args: &Args, whole_prompt_only: bool) -> o
                 seed: r.id as u64,
                 ..Default::default()
             },
-        ));
+        );
+        req.arrival = r.arrival;
+        engine.add_request(req);
     }
     let report = engine.run()?;
     println!(
@@ -202,6 +226,20 @@ fn serve_with<B: Backend>(backend: B, args: &Args, whole_prompt_only: bool) -> o
         report.metrics.mean_latency(),
         report.metrics.mean_ttft(),
         report.metrics.mean_decode_batch(),
+    );
+    let ttft = report.metrics.ttft_quantiles();
+    let tpot = report.metrics.tpot_quantiles();
+    let queue = report.metrics.queue_time_quantiles();
+    println!(
+        "SLO: TTFT p50 {:.3}s p99 {:.3}s; TPOT p50 {:.4}s p99 {:.4}s; queue p50 {:.3}s p99 {:.3}s",
+        ttft.p50, ttft.p99, tpot.p50, tpot.p99, queue.p50, queue.p99,
+    );
+    println!(
+        "preemptions: {} total ({} swapped out, {} swapped in, {} tokens restored from spill)",
+        report.metrics.preemptions,
+        report.metrics.swap_outs,
+        report.metrics.swap_ins,
+        report.metrics.swap_restored_tokens,
     );
     println!(
         "prefix-cache hits: {} (shared blocks are physically shared in the paged pool)",

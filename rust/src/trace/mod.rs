@@ -12,4 +12,4 @@ pub mod arc;
 pub mod sharegpt;
 
 pub use arc::{ArcDataset, ArcQuestion, ArcSplit};
-pub use sharegpt::{RequestTrace, TraceRequest};
+pub use sharegpt::{RequestTrace, TraceConfig, TraceRequest};

@@ -11,7 +11,7 @@
 use crate::rng::Rng;
 
 /// One serving request of the trace.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TraceRequest {
     pub id: usize,
     /// Prompt token ids (synthetic, uniform over the tokenizer range).
@@ -19,6 +19,10 @@ pub struct TraceRequest {
     /// Number of tokens the "conversation" answer has — the generation
     /// length the serving engine must produce.
     pub response_len: usize,
+    /// Virtual arrival time, seconds since trace start.  `generate`
+    /// emits 0.0 (batch workload); [`RequestTrace::with_arrivals`]
+    /// stamps Poisson arrivals for trace-driven replay.
+    pub arrival: f64,
 }
 
 /// A deterministic batch of requests.
@@ -75,9 +79,26 @@ impl RequestTrace {
             let rlen = (r.lognormal(cfg.response_mu, cfg.response_sigma) as usize)
                 .clamp(cfg.response_min, cfg.response_max);
             let prompt = (0..plen).map(|_| r.next_u32() % cfg.vocab).collect();
-            requests.push(TraceRequest { id, prompt, response_len: rlen });
+            requests.push(TraceRequest { id, prompt, response_len: rlen, arrival: 0.0 });
         }
         RequestTrace { requests, seed }
+    }
+
+    /// Stamp Poisson arrivals at `rate` requests/second (exponential
+    /// inter-arrival gaps), deterministically in `seed`.  Arrivals are
+    /// non-decreasing and independent of the length sampling, so the
+    /// same trace can be replayed open-loop at different loads.
+    pub fn with_arrivals(mut self, rate: f64, seed: u64) -> RequestTrace {
+        assert!(rate > 0.0, "arrival rate must be positive");
+        let mut rng = Rng::new(seed ^ 0xa441_7a1e_5eed_0001);
+        let mut t = 0.0;
+        for r in &mut self.requests {
+            // Inverse-CDF exponential; (1 - f64()) keeps ln's argument
+            // in (0, 1].
+            t += -(1.0 - rng.f64()).ln() / rate;
+            r.arrival = t;
+        }
+        self
     }
 
     pub fn total_prompt_tokens(&self) -> usize {
@@ -150,5 +171,49 @@ mod tests {
         let a = RequestTrace::generate(10, 9);
         let b = RequestTrace::generate(100, 9);
         assert_eq!(a.requests[5], b.requests[5]);
+    }
+
+    #[test]
+    fn golden_stats_generate() {
+        // Pinned per seed: any change to the RNG, the fork scheme, or
+        // the length sampling shows up here before it silently shifts
+        // every serving benchmark built on these traces.
+        let t = RequestTrace::generate(100, 42);
+        assert_eq!(t.total_prompt_tokens(), 5304);
+        assert_eq!(t.total_response_tokens(), 17715);
+        assert!((t.mean_decode_context() - 141.615).abs() < 1e-9);
+    }
+
+    #[test]
+    fn golden_stats_generate_with_clamped_config() {
+        // The serve-path configuration (short prompts and responses).
+        let cfg = TraceConfig { prompt_max: 48, response_max: 32, ..Default::default() };
+        let t = RequestTrace::generate_with(64, 7, cfg);
+        assert_eq!(t.total_prompt_tokens(), 2014);
+        assert_eq!(t.total_response_tokens(), 2048);
+        assert!((t.mean_decode_context() - 47.46875).abs() < 1e-9);
+    }
+
+    #[test]
+    fn arrivals_are_monotone_deterministic_and_rate_scaled() {
+        let t = RequestTrace::generate(64, 7).with_arrivals(20.0, 11);
+        let arr: Vec<f64> = t.requests.iter().map(|r| r.arrival).collect();
+        assert!(arr[0] > 0.0);
+        for w in arr.windows(2) {
+            assert!(w[0] <= w[1], "arrivals must be non-decreasing");
+        }
+        // Deterministic in (trace, rate, seed)...
+        let t2 = RequestTrace::generate(64, 7).with_arrivals(20.0, 11);
+        assert_eq!(t.requests, t2.requests);
+        // ...independent of the length sampling (same arrival seed,
+        // different trace seed → same stamps)...
+        let t3 = RequestTrace::generate(64, 3).with_arrivals(20.0, 11);
+        assert_eq!(t3.requests[63].arrival, arr[63]);
+        // ...and pinned golden: 64 arrivals at 20 req/s span ~3.2 s.
+        assert!((arr[0] - 0.018447980744852613).abs() < 1e-9);
+        assert!((arr[63] - 3.0056598433548283).abs() < 1e-9);
+        // Doubling the rate halves every gap exactly (same exp draws).
+        let fast = RequestTrace::generate(64, 7).with_arrivals(40.0, 11);
+        assert!((fast.requests[63].arrival - arr[63] / 2.0).abs() < 1e-9);
     }
 }

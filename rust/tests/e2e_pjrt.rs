@@ -107,9 +107,11 @@ fn pjrt_generation_is_deterministic() {
                 block_size: 16,
                 total_blocks: 128,
                 // Dense-lane HLO artifacts need whole prompts: no
-                // chunking, no cached-prefix skipping.
+                // chunking, no cached-prefix skipping, and no swap
+                // resume (its start > 0 chunks would be rejected).
                 prefill_budget: 4096,
                 prefix_skip: false,
+                swap_preempt: false,
             },
             backend,
         );

@@ -8,7 +8,11 @@
 //! * GPTQ pack/unpack as exact inverses on arbitrary codes;
 //! * f16 rounding invariants (monotonicity, idempotence);
 //! * engine conservation: every admitted request finishes exactly once
-//!   with exactly `max_tokens` tokens.
+//!   with exactly `max_tokens` tokens;
+//! * trace-replay equivalence: batched serving under arrivals,
+//!   priorities and preemption (swap or recompute) yields per-request
+//!   tokens bit-identical to a serial one-request-at-a-time replay,
+//!   and leaks no KV blocks after draining.
 
 use opt4gptq::engine::block_manager::BlockManager;
 use opt4gptq::engine::{Engine, EngineConfig, Request, SamplingParams, SimBackend};
@@ -236,6 +240,133 @@ fn prop_engine_conservation() {
                 report.metrics.output_tokens == reqs.iter().map(|r| r.1).sum::<usize>(),
                 "token accounting",
             )
+        },
+    );
+}
+
+#[test]
+fn prop_trace_replay_matches_serial() {
+    // Continuous batching is an *optimization*: whatever the scheduler
+    // does — arrival gating, priority admission, chunked prefill, swap
+    // or recompute preemption — each request's sampled tokens must be
+    // exactly what a serial one-request-at-a-time replay produces, and
+    // the pool must be whole once everything drains.
+    //
+    // Sizing keeps every request admittable (max 22 total tokens = 6
+    // blocks of 4, pool ≥ 7) so "all complete" is a hard invariant,
+    // not a statement about rejects.
+    check(
+        "batched trace replay == serial replay",
+        Config { cases: 20, seed: 0x7ace },
+        |r| {
+            let n_req = r.range_usize(2, 10);
+            let max_batch = r.range_usize(1, 4);
+            let total_blocks = r.range_usize(7, 40);
+            let prefill_budget = r.range_usize(1, 24);
+            let swap = r.below(2) == 0;
+            let reqs: Vec<(usize, usize, i32, f64)> = (0..n_req)
+                .map(|_| {
+                    let plen = r.range_usize(1, 12);
+                    let gen = r.range_usize(1, 10);
+                    let priority = r.range_usize(0, 4) as i32 - 2;
+                    // Mix bursts at t=0 with spread-out arrivals.
+                    let arrival = if r.below(2) == 0 { 0.0 } else { r.f64() * 2.0 };
+                    (plen, gen, priority, arrival)
+                })
+                .collect();
+            (max_batch, total_blocks, prefill_budget, swap, reqs)
+        },
+        |(max_batch, total_blocks, prefill_budget, swap, reqs)| {
+            let mk_req = |i: usize, plen: usize, gen: usize, priority: i32, arrival: f64| {
+                // Distinct per-request prompts: prefix sharing may still
+                // occur on accidental overlaps, which is the point.
+                let mut rng = Rng::new(0x5eed ^ i as u64);
+                let prompt: Vec<u32> = (0..plen).map(|_| rng.next_u32() % 500).collect();
+                let mut req = Request::new(
+                    i,
+                    prompt,
+                    SamplingParams {
+                        max_tokens: gen,
+                        temperature: 0.7,
+                        top_k: 16,
+                        seed: 11,
+                        ..Default::default()
+                    },
+                );
+                req.priority = priority;
+                req.arrival = arrival;
+                req
+            };
+            // Batched replay under block pressure.
+            let mut e = Engine::new(
+                EngineConfig {
+                    max_batch: *max_batch,
+                    block_size: 4,
+                    total_blocks: *total_blocks,
+                    max_seq_len: 256,
+                    prefill_budget: *prefill_budget,
+                    prefix_skip: true,
+                    swap_preempt: *swap,
+                },
+                SimBackend::new(
+                    by_name("Qwen1.5-1.8B-Chat-GPTQ-Int4").unwrap(),
+                    OptConfig::OPT4GPTQ,
+                    *max_batch,
+                ),
+            );
+            for (i, &(plen, gen, priority, arrival)) in reqs.iter().enumerate() {
+                e.add_request(mk_req(i, plen, gen, priority, arrival));
+            }
+            let report = e.run().map_err(|er| er.to_string())?;
+            ensure(
+                report.outputs.len() == reqs.len(),
+                format!("finished {} of {}", report.outputs.len(), reqs.len()),
+            )?;
+            e.scheduler.check_invariants()?;
+            ensure(
+                e.scheduler.blocks.free_blocks() == *total_blocks,
+                format!(
+                    "block leak after drain: {} free of {}",
+                    e.scheduler.blocks.free_blocks(),
+                    total_blocks
+                ),
+            )?;
+            // Serial reference: each request alone in a roomy engine,
+            // arriving at t=0 — no chunking pressure, no preemption.
+            for (i, &(plen, gen, priority, _)) in reqs.iter().enumerate() {
+                let mut solo = Engine::new(
+                    EngineConfig {
+                        max_batch: 1,
+                        block_size: 4,
+                        total_blocks: 256,
+                        max_seq_len: 256,
+                        prefill_budget: 64,
+                        prefix_skip: true,
+                        swap_preempt: false,
+                    },
+                    SimBackend::new(
+                        by_name("Qwen1.5-1.8B-Chat-GPTQ-Int4").unwrap(),
+                        OptConfig::OPT4GPTQ,
+                        1,
+                    ),
+                );
+                solo.add_request(mk_req(i, plen, gen, priority, 0.0));
+                let serial = solo.run().map_err(|er| er.to_string())?;
+                let batched = report
+                    .outputs
+                    .iter()
+                    .find(|o| o.id == i)
+                    .ok_or(format!("req {i} missing from batched outputs"))?;
+                ensure(
+                    serial.outputs[0].tokens == batched.tokens,
+                    format!(
+                        "req {i}: batched tokens diverge from serial replay \
+                         (batched {:?} vs serial {:?})",
+                        batched.tokens, serial.outputs[0].tokens
+                    ),
+                )?;
+            }
+            Ok(())
         },
     );
 }

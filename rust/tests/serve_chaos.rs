@@ -1,0 +1,137 @@
+//! Swap-storm chaos test: an adversarial burst through a KV pool far too
+//! small for the offered load, on the **real** CPU backend (physical
+//! paged K/V, fused kernels, debug NaN-poisoning of freed blocks).
+//!
+//! The pool is sized so that even two fully-grown sequences cannot
+//! coexist (6 requests × 14 blocks of demand through a 24-block pool),
+//! which forces preemption over and over — hitting victims both
+//! mid-prefill (tiny chunk budget keeps a prefill in flight for six
+//! steps while admitted decodes grow) and mid-decode (pure-decode
+//! phases between admissions).  Under swap-preemption every eviction
+//! spills real K/V and every resume restores it onto fresh blocks.
+//!
+//! The teeth: per-request generated tokens must be **bit-identical**
+//! across (a) a roomy run that never preempts, (b) the storm with
+//! swap-preemption, and (c) the storm with discard-and-recompute.  Any
+//! stale read through a recycled block surfaces as NaN logits in debug
+//! builds (the sampler panics on NaN) or as a token divergence — either
+//! way, loudly.
+
+use opt4gptq::engine::{
+    CpuBackend, CpuModelConfig, Engine, EngineConfig, Request, SamplingParams,
+};
+
+const N_REQ: usize = 6;
+const PLEN: usize = 24; // 6 blocks of 4
+const GEN: usize = 32; // grows each sequence to 14 blocks
+
+fn backend() -> CpuBackend {
+    CpuBackend::new(CpuModelConfig { max_batch: 4, ..Default::default() }).unwrap()
+}
+
+fn requests() -> Vec<Request> {
+    (0..N_REQ)
+        .map(|i| {
+            // Distinct leading tokens: no prefix sharing softens the
+            // block pressure (vocab is 256 — the byte tokenizer range).
+            let prompt: Vec<u32> =
+                (0..PLEN).map(|j| ((i * 37 + j * 11 + 5) % 256) as u32).collect();
+            Request::new(
+                i,
+                prompt,
+                SamplingParams {
+                    max_tokens: GEN,
+                    temperature: 0.9,
+                    top_k: 24,
+                    seed: 3,
+                    ..Default::default()
+                },
+            )
+        })
+        .collect()
+}
+
+fn run(cfg: EngineConfig) -> (Vec<(usize, Vec<u32>)>, Engine<CpuBackend>) {
+    let mut e = Engine::new(cfg, backend());
+    for r in requests() {
+        e.add_request(r);
+    }
+    let report = e.run().unwrap();
+    assert_eq!(report.outputs.len(), N_REQ, "every request must complete");
+    for o in &report.outputs {
+        assert_eq!(o.tokens.len(), GEN, "req {} generated {}", o.id, o.tokens.len());
+        assert!(o.tokens.iter().all(|&t| t < 256), "req {} sampled out-of-vocab", o.id);
+    }
+    e.scheduler.check_invariants().unwrap();
+    let mut toks: Vec<(usize, Vec<u32>)> =
+        report.outputs.iter().map(|o| (o.id, o.tokens.clone())).collect();
+    toks.sort();
+    (toks, e)
+}
+
+fn storm_cfg(swap_preempt: bool) -> EngineConfig {
+    EngineConfig {
+        max_batch: 4,
+        block_size: 4,
+        total_blocks: 24,
+        max_seq_len: 128,
+        // One block per step: a 24-token prompt prefills across six
+        // steps, so exhaustion keeps catching sequences mid-prefill.
+        prefill_budget: 4,
+        prefix_skip: true,
+        swap_preempt,
+    }
+}
+
+#[test]
+fn swap_storm_is_bit_identical_to_unpreempted_run() {
+    // (a) Roomy reference: same workload, pool big enough to never evict.
+    let (reference, ref_engine) = run(EngineConfig {
+        max_batch: 4,
+        block_size: 4,
+        total_blocks: 512,
+        max_seq_len: 128,
+        prefill_budget: 64,
+        prefix_skip: true,
+        swap_preempt: true,
+    });
+    assert_eq!(
+        ref_engine.scheduler.preemption_count, 0,
+        "the reference run must not preempt at all"
+    );
+
+    // (b) The storm under swap-preemption.
+    let (swapped, e) = run(storm_cfg(true));
+    let s = &e.scheduler;
+    assert!(s.swap_out_count > 0, "the storm must force swap-outs");
+    assert!(
+        s.swap_out_mid_prefill > 0,
+        "no victim was caught mid-prefill (budget/pool sizing drifted?)"
+    );
+    assert!(
+        s.swap_out_mid_decode > 0,
+        "no victim was caught mid-decode (budget/pool sizing drifted?)"
+    );
+    assert!(s.swap_in_count > 0, "swapped victims must resume by restoring spill");
+    assert!(s.swap_restored_tokens > 0);
+    assert_eq!(
+        s.blocks.free_blocks(),
+        24,
+        "the drained pool must be whole — no spilled-and-lost blocks"
+    );
+    assert_eq!(
+        swapped, reference,
+        "swap-preempted replay diverged from the unpreempted run"
+    );
+
+    // (c) The same storm under discard-and-recompute: same tokens, no
+    // spills (differential check that swap vs recompute is purely a
+    // performance choice, never a correctness one).
+    let (recomputed, e) = run(storm_cfg(false));
+    assert_eq!(e.scheduler.swap_out_count, 0);
+    assert!(e.scheduler.preemption_count > 0, "the storm must still preempt");
+    assert_eq!(
+        recomputed, reference,
+        "recompute-preempted replay diverged from the unpreempted run"
+    );
+}
