@@ -1,0 +1,148 @@
+//! Quantized paged-KV bench: the attention block walk at every
+//! [`KvDtype`], plus the capacity win that motivates compressing the
+//! pool in the first place.
+//!
+//! Two measurement families:
+//!
+//! * **`kv_walk <dtype>`** — single-sequence decode on the real
+//!   [`CpuBackend`] at a fixed context length: every step walks the
+//!   whole paged K/V through the dtype's read path (f32 borrow, f16
+//!   `vcvtph2ps` slice dequant, kv4 nibble dequant into the scratch
+//!   tile).  Wall-clock, machine-dependent — reported, not gated.
+//!
+//! * **`kv_capacity`** — resident tokens a fixed byte budget holds per
+//!   dtype, straight from [`KvDtype`] layout arithmetic.  Fully
+//!   deterministic, so CI gates it tightly (`tools/bench_gate.rs
+//!   --only kv_capacity`) against `BENCH_kv_cache.baseline.json`, and
+//!   this bench itself enforces the acceptance floors in *both* modes:
+//!   f16 must hold ≥ 1.9× the f32 tokens, kv4 ≥ 3.5×.
+//!
+//! Run: `cargo bench --bench kv_cache` — or with `-- --smoke` for the
+//! CI-sized run (short context, fewer iters, floors still enforced
+//! because they are layout facts, not timings).
+
+use opt4gptq::benchkit::{bench, fmt_duration, Table};
+use opt4gptq::engine::{Backend, CpuBackend, CpuModelConfig, DecodeDesc, KvDtype, PrefillDesc};
+
+const BLOCK_SIZE: usize = 16;
+const N_LAYERS: usize = 2;
+const D_MODEL: usize = 128;
+/// Capacity budget the `kv_capacity` row is computed against.
+const BUDGET_BYTES: usize = 1 << 20;
+
+fn backend() -> CpuBackend {
+    CpuBackend::new(CpuModelConfig {
+        max_seq: 512,
+        d_model: D_MODEL,
+        n_layers: N_LAYERS,
+        n_heads: 4,
+        d_ff: 256,
+        ..Default::default()
+    })
+    .expect("backend config")
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!(
+        "quantized paged-KV bench{}",
+        if smoke { "  [smoke mode: reduced shapes]" } else { "" }
+    );
+
+    let ctx = if smoke { 48 } else { 192 };
+    let iters = if smoke { 3 } else { 9 };
+    let prompt: Vec<u32> = (0..ctx).map(|i| ((i * 37 + 11) % 256) as u32).collect();
+    let table_blocks: Vec<usize> = (0..(ctx + 1).div_ceil(BLOCK_SIZE)).collect();
+
+    let mut out = Table::new(
+        "attention block walk by KV dtype (CpuBackend wall clock)",
+        &["dtype", "ctx", "decode p50", "tok/s", "pool bytes", "B/token"],
+    );
+    let mut failures: Vec<String> = Vec::new();
+    let mut json_rows: Vec<String> = Vec::new();
+
+    for dtype in KvDtype::ALL {
+        let mut be = backend();
+        be.bind_kv(table_blocks.len(), BLOCK_SIZE, dtype);
+        let (logits, _) = be
+            .prefill(PrefillDesc {
+                seq_id: 0,
+                tokens: &prompt,
+                start: 0,
+                is_last: true,
+                block_table: &table_blocks,
+            })
+            .expect("prefill");
+        if !logits.iter().all(|v| v.is_finite()) {
+            failures.push(format!("{dtype}: prefill produced non-finite logits"));
+        }
+        // Same position every iteration: each decode re-walks the full
+        // context through the dtype's read path, which is the measured
+        // cost; the rewritten row just requantizes in place.
+        let desc = DecodeDesc { seq_id: 0, context_len: ctx, token: 7, block_table: &table_blocks };
+        let stats = bench(&format!("kv_walk {dtype} ctx {ctx}"), 1, iters, || {
+            std::hint::black_box(be.decode(&[desc]).expect("decode").0);
+        });
+        let tok_per_s = 1.0 / stats.p50;
+        let pool_bytes = be.kv().bytes();
+        let bytes_per_token = be.kv().bytes_per_token();
+        out.row(vec![
+            dtype.to_string(),
+            format!("{ctx}"),
+            fmt_duration(stats.p50),
+            format!("{tok_per_s:.0}"),
+            format!("{pool_bytes}"),
+            format!("{bytes_per_token}"),
+        ]);
+        json_rows.push(format!(
+            "    {{\"label\": \"kv_walk {dtype}\", \"dtype\": \"{dtype}\", \
+             \"ctx\": {ctx}, \"walk_p50_ns_ungated\": {:.0}, \
+             \"walk_tok_per_s\": {tok_per_s:.1}, \"pool_bytes\": {pool_bytes}, \
+             \"bytes_per_token\": {bytes_per_token}}}",
+            stats.p50 * 1e9,
+        ));
+    }
+    out.print();
+
+    // Capacity: tokens a fixed budget keeps resident, per dtype.  Pure
+    // layout arithmetic — deterministic across machines, so the floors
+    // hold in smoke mode too and CI can gate the row at 1%.
+    let tokens_of = |d: KvDtype| BUDGET_BYTES / (2 * N_LAYERS * d.row_bytes(D_MODEL));
+    let (t32, t16, t4) = (tokens_of(KvDtype::F32), tokens_of(KvDtype::F16), tokens_of(KvDtype::Kv4));
+    let cap_f16 = t16 as f64 / t32 as f64;
+    let cap_kv4 = t4 as f64 / t32 as f64;
+    println!(
+        "\ncapacity at {} KiB: f32 {t32} tokens, f16 {t16} ({cap_f16:.2}x), kv4 {t4} ({cap_kv4:.2}x)",
+        BUDGET_BYTES / 1024
+    );
+    if cap_f16 < 1.9 {
+        failures.push(format!("f16 capacity {cap_f16:.3}x is below the 1.9x floor"));
+    }
+    if cap_kv4 < 3.5 {
+        failures.push(format!("kv4 capacity {cap_kv4:.3}x is below the 3.5x floor"));
+    }
+    json_rows.push(format!(
+        "    {{\"label\": \"kv_capacity\", \"budget_bytes\": {BUDGET_BYTES}, \
+         \"d_model\": {D_MODEL}, \"n_layers\": {N_LAYERS}, \
+         \"tokens_f32\": {t32}, \"tokens_f16\": {t16}, \"tokens_kv4\": {t4}, \
+         \"speedup_capacity_f16\": {cap_f16:.3}, \"speedup_capacity_kv4\": {cap_kv4:.3}}}"
+    ));
+
+    let json = format!(
+        "{{\n  \"bench\": \"kv_cache\",\n  \"smoke\": {smoke},\n  \
+         \"block_size\": {BLOCK_SIZE},\n  \"cases\": [\n{}\n  ]\n}}\n",
+        json_rows.join(",\n"),
+    );
+    std::fs::write("BENCH_kv_cache.json", &json).expect("failed to write BENCH_kv_cache.json");
+    println!("\nwrote BENCH_kv_cache.json ({} rows)", json_rows.len());
+
+    if failures.is_empty() {
+        println!("\nshape check: OK (capacity floors f16 >= 1.9x, kv4 >= 3.5x; walks finite)");
+    } else {
+        println!("\nshape check FAILED:");
+        for f in &failures {
+            println!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -43,7 +43,7 @@ fn backend(max_seq: usize) -> CpuBackend {
         ..Default::default()
     })
     .expect("backend config");
-    be.bind_kv(64, BLOCK_SIZE);
+    be.bind_kv(64, BLOCK_SIZE, opt4gptq::engine::kv_dtype_default());
     be
 }
 

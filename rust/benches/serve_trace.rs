@@ -20,12 +20,17 @@
 //! Every measurement lands in `BENCH_serve_trace.json` under stable
 //! `label` keys; CI's `tools/bench_gate.rs` step gates the
 //! `swap_vs_recompute pressured` row's `speedup_tokens_per_s` against
-//! the committed `BENCH_serve_trace.baseline.json`.  Run: `cargo bench
-//! --bench serve_trace` — or with `-- --smoke` for the CI-sized run
-//! (fewer requests, no perf floors, JSON still emitted).
+//! the committed `BENCH_serve_trace.baseline.json`.  The pressured swap
+//! run is additionally replayed at every compressed [`KvDtype`]: tokens
+//! must be identical (the sim backend is dtype-blind) while accounted
+//! spill traffic shrinks in exact packed-block proportion.  Run: `cargo
+//! bench --bench serve_trace` — or with `-- --smoke` for the CI-sized
+//! run (fewer requests, no perf floors, JSON still emitted).
 
 use opt4gptq::benchkit::Table;
-use opt4gptq::engine::{Engine, EngineConfig, EngineReport, Request, SamplingParams, SimBackend};
+use opt4gptq::engine::{
+    Engine, EngineConfig, EngineReport, KvDtype, Request, SamplingParams, SimBackend,
+};
 use opt4gptq::models::by_name;
 use opt4gptq::trace::{RequestTrace, TraceConfig};
 use opt4gptq::OptConfig;
@@ -41,7 +46,11 @@ fn trace(n: usize) -> RequestTrace {
     RequestTrace::generate_with(n, 7, cfg).with_arrivals(ARRIVAL_RATE, 42)
 }
 
-fn run(trace: &RequestTrace, swap_preempt: bool) -> (Vec<(usize, Vec<u32>)>, EngineReport) {
+fn run(
+    trace: &RequestTrace,
+    swap_preempt: bool,
+    kv_dtype: KvDtype,
+) -> (Vec<(usize, Vec<u32>)>, EngineReport) {
     let model = by_name("Llama-2-7B-GPTQ").unwrap();
     let mut e = Engine::new(
         EngineConfig {
@@ -52,6 +61,7 @@ fn run(trace: &RequestTrace, swap_preempt: bool) -> (Vec<(usize, Vec<u32>)>, Eng
             prefill_budget: 64,
             prefix_skip: true,
             swap_preempt,
+            kv_dtype,
         },
         SimBackend::new(model, OptConfig::OPT4GPTQ, MAX_BATCH),
     );
@@ -93,8 +103,8 @@ fn main() {
     );
 
     let t = trace(n);
-    let (swap_toks, swap) = run(&t, true);
-    let (rec_toks, rec) = run(&t, false);
+    let (swap_toks, swap) = run(&t, true, KvDtype::F32);
+    let (rec_toks, rec) = run(&t, false, KvDtype::F32);
     assert_eq!(
         swap_toks, rec_toks,
         "swap and recompute replays must generate bit-identical tokens"
@@ -155,6 +165,55 @@ fn main() {
     ));
     table.print();
     println!("\nswap vs recompute: {speedup:.3}x generation tokens/s");
+
+    // The same pressured swap run at the compressed KV dtypes: the sim
+    // backend's logits are dtype-blind, so tokens — and therefore the
+    // whole eviction schedule — must be identical, while the accounted
+    // spill traffic shrinks in *exact* proportion to the packed block
+    // size (asserted by cross-multiplication, which also holds at zero
+    // spills in smoke mode).
+    let model = by_name("Llama-2-7B-GPTQ").unwrap();
+    let block_bytes = |d: KvDtype| d.block_bytes(16, model.n_layers, model.kv_dim());
+    let f32_spilled = swap.metrics.swap_spilled_bytes;
+    let mut spill_rows: Vec<(KvDtype, usize)> = vec![(KvDtype::F32, f32_spilled)];
+    for kv_dtype in [KvDtype::F16, KvDtype::Kv4] {
+        let (toks, rep) = run(&t, true, kv_dtype);
+        assert_eq!(
+            toks, swap_toks,
+            "{kv_dtype}: the sim backend's tokens must not depend on the KV dtype"
+        );
+        let spilled = rep.metrics.swap_spilled_bytes;
+        assert_eq!(
+            spilled as u128 * block_bytes(KvDtype::F32) as u128,
+            f32_spilled as u128 * block_bytes(kv_dtype) as u128,
+            "{kv_dtype}: spill traffic must shrink in exact packed-block proportion"
+        );
+        if f32_spilled > 0 {
+            assert!(
+                spilled < f32_spilled,
+                "{kv_dtype}: spill volume {spilled} did not shrink below f32's {f32_spilled}"
+            );
+        }
+        spill_rows.push((kv_dtype, spilled));
+    }
+    println!("spill traffic under pressure:");
+    for (kv_dtype, spilled) in &spill_rows {
+        println!(
+            "  {kv_dtype:>4}: {:.1} KiB ({:.2}x f32)",
+            *spilled as f64 / 1024.0,
+            if f32_spilled > 0 { *spilled as f64 / f32_spilled as f64 } else { 0.0 },
+        );
+    }
+    json_rows.push(format!(
+        "    {{\"label\": \"kv_dtype spill pressured\", \
+         \"spilled_bytes_f32\": {f32_spilled}, \
+         \"spilled_bytes_f16\": {}, \"spilled_bytes_kv4\": {}, \
+         \"shrink_f16\": {:.4}, \"shrink_kv4\": {:.4}}}",
+        spill_rows[1].1,
+        spill_rows[2].1,
+        block_bytes(KvDtype::F16) as f64 / block_bytes(KvDtype::F32) as f64,
+        block_bytes(KvDtype::Kv4) as f64 / block_bytes(KvDtype::F32) as f64,
+    ));
 
     let json = format!(
         "{{\n  \"bench\": \"serve_trace\",\n  \"smoke\": {smoke},\n  \

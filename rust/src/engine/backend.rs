@@ -44,6 +44,23 @@ use crate::OptConfig;
 use crate::Result;
 
 use super::block_manager::BlockId;
+use super::kv::KvDtype;
+
+/// KV-memory accounting a backend can surface after a run (see
+/// [`Backend::kv_stats`]): how many bytes the paged pool holds, what one
+/// resident token costs, and how much spill traffic preemption moved —
+/// all dtype-aware, so the f16/kv4 capacity wins show up as numbers.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KvStats {
+    /// Bytes held by the paged K/V pool (both sides, all layers).
+    pub pool_bytes: usize,
+    /// Bytes one resident token costs across both sides and all layers.
+    pub bytes_per_token: usize,
+    /// Bytes currently parked in the host-side spill pool.
+    pub spill_bytes: usize,
+    /// High-water mark of the spill pool over the run.
+    pub spill_peak_bytes: usize,
+}
 
 /// One prefill **chunk**: a contiguous span of a sequence's prompt,
 /// written through the block table starting at position `start`.
@@ -111,10 +128,12 @@ pub trait Backend {
     fn max_seq_len(&self) -> usize;
     fn vocab(&self) -> usize;
 
-    /// Announce the paged-KV geometry before any work is scheduled.
-    /// Backends owning physical K/V storage size their block pool here;
-    /// simulated/dense-lane backends may ignore it.
-    fn bind_kv(&mut self, _total_blocks: usize, _block_size: usize) {}
+    /// Announce the paged-KV geometry — block count/size and the storage
+    /// dtype — before any work is scheduled.  Backends owning physical
+    /// K/V storage size their block pool here; simulated/dense-lane
+    /// backends may ignore it (though [`SimBackend`] records it to price
+    /// spill volume).
+    fn bind_kv(&mut self, _total_blocks: usize, _block_size: usize, _dtype: KvDtype) {}
 
     /// Run one **mixed batch**: every prefill chunk and every decode row
     /// in a single call (backends fold them into one forward pass, so
@@ -158,8 +177,12 @@ pub trait Backend {
     /// `seq_id` (table order).  The engine calls this at the end of the
     /// preempting step, **before** the same block ids arrive at
     /// [`Backend::release_blocks`] — the data is still intact when the
-    /// copy runs.  Backends without physical K/V ignore it.
-    fn swap_out(&mut self, _seq_id: usize, _blocks: &[BlockId]) {}
+    /// copy runs.  Returns the **packed** payload size in bytes (spill
+    /// volume shrinks with the KV dtype); backends without physical K/V
+    /// may return a virtual size, or 0 to opt out of the accounting.
+    fn swap_out(&mut self, _seq_id: usize, _blocks: &[BlockId]) -> usize {
+        0
+    }
 
     /// A swapped-out sequence is resuming on freshly-allocated `blocks`
     /// (same table order, different physical ids): restore its spilled
@@ -167,6 +190,13 @@ pub trait Backend {
     /// consumed; [`Backend::release_seq`] drops it for sequences that
     /// finish (or are rejected) while still swapped out.
     fn swap_in(&mut self, _seq_id: usize, _blocks: &[BlockId]) {}
+
+    /// KV-memory accounting, if this backend tracks it: pool bytes,
+    /// bytes per resident token, and spill volume (see [`KvStats`]).
+    /// `None` for backends with no KV accounting at all.
+    fn kv_stats(&self) -> Option<KvStats> {
+        None
+    }
 }
 
 /// Simulated backend: paper model × optimization config on the DCU model.
@@ -179,11 +209,34 @@ pub struct SimBackend {
     /// Reduced logits vocabulary (full 152k logits per step would only
     /// slow the simulation; token identity is irrelevant here).
     sim_vocab: usize,
+    /// Bound paged-KV geometry: no physical pool exists here, but spill
+    /// volume is *priced* from it at the paper model's real KV width, so
+    /// the trace benches see dtype-proportional swap traffic.
+    kv_dtype: KvDtype,
+    kv_block_size: usize,
+    kv_total_blocks: usize,
+    /// Virtual bytes per swapped-out sequence (consumed on swap-in).
+    spill_sizes: std::collections::HashMap<usize, usize>,
+    spill_bytes: usize,
+    spill_peak_bytes: usize,
 }
 
 impl SimBackend {
     pub fn new(model: &'static ModelSpec, opt: OptConfig, max_batch: usize) -> SimBackend {
-        SimBackend { model, opt, perf: PerfModel::z100(), max_batch, max_seq_len: 4096, sim_vocab: 512 }
+        SimBackend {
+            model,
+            opt,
+            perf: PerfModel::z100(),
+            max_batch,
+            max_seq_len: 4096,
+            sim_vocab: 512,
+            kv_dtype: KvDtype::F32,
+            kv_block_size: 16,
+            kv_total_blocks: 0,
+            spill_sizes: std::collections::HashMap::new(),
+            spill_bytes: 0,
+            spill_peak_bytes: 0,
+        }
     }
 
     /// Synthetic logits as a pure function of (sequence, position).
@@ -218,6 +271,51 @@ impl Backend for SimBackend {
 
     fn vocab(&self) -> usize {
         self.sim_vocab
+    }
+
+    fn bind_kv(&mut self, total_blocks: usize, block_size: usize, dtype: KvDtype) {
+        self.kv_total_blocks = total_blocks;
+        self.kv_block_size = block_size.max(1);
+        self.kv_dtype = dtype;
+        self.spill_sizes.clear();
+        self.spill_bytes = 0;
+        self.spill_peak_bytes = 0;
+    }
+
+    fn swap_out(&mut self, seq_id: usize, blocks: &[BlockId]) -> usize {
+        // Price the packed payload at the *paper model's* KV width — the
+        // simulation has no pool, but the bytes a real swap-out of these
+        // blocks would move are fully determined by the geometry.
+        let bytes =
+            blocks.len() * self.kv_dtype.block_bytes(self.kv_block_size, self.model.n_layers, self.model.kv_dim());
+        if let Some(old) = self.spill_sizes.insert(seq_id, bytes) {
+            self.spill_bytes -= old;
+        }
+        self.spill_bytes += bytes;
+        self.spill_peak_bytes = self.spill_peak_bytes.max(self.spill_bytes);
+        bytes
+    }
+
+    fn swap_in(&mut self, seq_id: usize, _blocks: &[BlockId]) {
+        if let Some(bytes) = self.spill_sizes.remove(&seq_id) {
+            self.spill_bytes -= bytes;
+        }
+    }
+
+    fn release_seq(&mut self, seq_id: usize) {
+        if let Some(bytes) = self.spill_sizes.remove(&seq_id) {
+            self.spill_bytes -= bytes;
+        }
+    }
+
+    fn kv_stats(&self) -> Option<KvStats> {
+        Some(KvStats {
+            pool_bytes: self.kv_total_blocks
+                * self.kv_dtype.block_bytes(self.kv_block_size, self.model.n_layers, self.model.kv_dim()),
+            bytes_per_token: 2 * self.model.n_layers * self.kv_dtype.row_bytes(self.model.kv_dim()),
+            spill_bytes: self.spill_bytes,
+            spill_peak_bytes: self.spill_peak_bytes,
+        })
     }
 
     fn step(
@@ -351,6 +449,37 @@ mod tests {
             PrefillDesc { seq_id: 3, tokens: &toks, start: 17, is_last: true, block_table: &[] };
         let out = b.step(&[chunk], &[]).unwrap();
         assert_eq!(out.prefill_logits[0].as_deref().unwrap(), alone[0].as_slice());
+    }
+
+    #[test]
+    fn sim_spill_accounting_prices_the_packed_dtype() {
+        let m = by_name("Llama-2-7B-GPTQ").unwrap();
+        let blocks = [0usize, 1, 2];
+        let mut sizes = Vec::new();
+        for dtype in KvDtype::ALL {
+            let mut b = SimBackend::new(m, OptConfig::OPT4GPTQ, 8);
+            b.bind_kv(64, 16, dtype);
+            let bytes = b.swap_out(7, &blocks);
+            assert_eq!(bytes, 3 * dtype.block_bytes(16, m.n_layers, m.kv_dim()));
+            let stats = b.kv_stats().unwrap();
+            assert_eq!(stats.spill_bytes, bytes);
+            assert_eq!(stats.spill_peak_bytes, bytes);
+            assert_eq!(stats.pool_bytes, 64 * dtype.block_bytes(16, m.n_layers, m.kv_dim()));
+            // Swap-in consumes the entry; the peak stays.
+            b.swap_in(7, &blocks);
+            let drained = b.kv_stats().unwrap();
+            assert_eq!(drained.spill_bytes, 0);
+            assert_eq!(drained.spill_peak_bytes, bytes);
+            // A re-swap of the same seq replaces, not double-counts.
+            b.swap_out(7, &blocks[..2]);
+            b.swap_out(7, &blocks);
+            assert_eq!(b.kv_stats().unwrap().spill_bytes, bytes);
+            b.release_seq(7);
+            assert_eq!(b.kv_stats().unwrap().spill_bytes, 0);
+            sizes.push(bytes);
+        }
+        // Spill volume shrinks with the dtype: f32 > f16 > kv4.
+        assert!(sizes[0] > sizes[1] && sizes[1] > sizes[2], "{sizes:?}");
     }
 
     #[test]

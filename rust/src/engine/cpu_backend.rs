@@ -16,15 +16,20 @@
 //! lane width the resolved dispatch streams — is computed once at model
 //! build, never on the serve path.
 //!
-//! KV layout: a [`PagedKvCache`] pool `[n_blocks × block_size × n_layers
-//! × d_model]` per cache side, addressed exclusively through the block
-//! tables the engine hands down in [`PrefillDesc`]/[`DecodeDesc`] — the
-//! same tables [`super::block_manager::BlockManager`] allocates, so a
-//! prefix-cache hit aliases real memory here and attention walks the
-//! table block-by-block (there is no dense `(layer, slot, pos)` array
-//! and no notion of a backend slot).  Blocks the allocator retires come
-//! back through [`Backend::release_blocks`]; debug builds poison them
-//! with NaN so a read through a stale table fails parity tests loudly.
+//! KV layout: a [`PagedKvCache`] pool `[n_blocks × n_layers × block_size
+//! × d_model]` per cache side — dtype-parameterized ([`KvDtype`]: f32,
+//! f16, or 4-bit `kv4`), addressed exclusively through the block tables
+//! the engine hands down in [`PrefillDesc`]/[`DecodeDesc`] — the same
+//! tables [`super::block_manager::BlockManager`] allocates, so a
+//! prefix-cache hit aliases real (packed) memory here and attention
+//! walks the table block-by-block: each (block, layer) tile is
+//! dequantized **once per pass** into a reused scratch tile (the
+//! SMB-Opt pattern applied to the cache; the f32 pool borrows the tile
+//! zero-copy), then every head reads from the scratch.  Blocks the
+//! allocator retires come back through [`Backend::release_blocks`];
+//! debug builds poison them — NaN fill for f32/f16, the reserved NaN
+//! scale pattern for kv4 — so a read through a stale table fails parity
+//! tests loudly at every dtype.
 //!
 //! The engine's scheduler/block-manager/sampler stack drives this backend
 //! exactly as it drives the simulated one; `rust/tests/backend_integration.rs`
@@ -42,9 +47,9 @@ use crate::gptq::{
 use crate::rng::Rng;
 use crate::Result;
 
-use super::backend::{Backend, DecodeDesc, PrefillDesc, StepOutput};
+use super::backend::{Backend, DecodeDesc, KvStats, PrefillDesc, StepOutput};
 use super::block_manager::BlockId;
-use super::kv::PagedKvCache;
+use super::kv::{KvDtype, KvSpill, PagedKvCache};
 
 /// Block size used when the backend is driven directly (tests, examples)
 /// before/without an engine calling [`Backend::bind_kv`].
@@ -125,10 +130,13 @@ pub struct CpuBackend {
     layers: Vec<LayerWeights>,
     lm_head: PreparedTensor,
     kv: PagedKvCache,
-    /// Host-side spill pool: per swapped-out sequence, its blocks' K/V
-    /// copied out of the paged pool (the "CPU swap space" of
-    /// vLLM-style preemption-by-swap).
-    spill: std::collections::HashMap<usize, (Vec<f32>, Vec<f32>)>,
+    /// Host-side spill pool: per swapped-out sequence, its blocks'
+    /// **packed** K/V copied out of the paged pool (the "CPU swap space"
+    /// of vLLM-style preemption-by-swap) — spill volume shrinks with the
+    /// KV dtype.
+    spill: std::collections::HashMap<usize, KvSpill>,
+    spill_bytes: usize,
+    spill_peak_bytes: usize,
 }
 
 fn quantized(rng: &mut Rng, k: usize, n: usize, g: usize, std: f32) -> PreparedTensor {
@@ -205,8 +213,19 @@ impl CpuBackend {
             layers,
             lm_head,
             // Empty pool; grown by bind_kv or on demand (direct use).
-            kv: PagedKvCache::new(0, DEFAULT_BLOCK_SIZE, cfg.n_layers, d),
+            // Directly-driven backends (tests, benches) honor the
+            // OPT4GPTQ_KV default so the CI dtype matrix reaches them;
+            // an engine's bind_kv re-pools with its configured dtype.
+            kv: PagedKvCache::with_dtype(
+                0,
+                DEFAULT_BLOCK_SIZE,
+                cfg.n_layers,
+                d,
+                super::kv_dtype_default(),
+            ),
             spill: std::collections::HashMap::new(),
+            spill_bytes: 0,
+            spill_peak_bytes: 0,
         })
     }
 
@@ -280,6 +299,13 @@ impl CpuBackend {
             }
         }
 
+        // Reused scratch tiles for the attention block walk: each
+        // (block, layer) K/V tile is dequantized into these once per
+        // pass (the f32 pool bypasses them with a zero-copy borrow).
+        // Allocated once per forward, never per block.
+        let mut k_tile = vec![0.0f32; self.kv.tile_len()];
+        let mut v_tile = vec![0.0f32; self.kv.tile_len()];
+
         for li in 0..cfg.n_layers {
             // ---- attention ----
             let a = rmsnorm_rows(&h);
@@ -304,6 +330,8 @@ impl CpuBackend {
                     qm.row(i),
                     pos + 1,
                     &mut att.data[i * d..(i + 1) * d],
+                    &mut k_tile,
+                    &mut v_tile,
                 );
             }
             let o = gemm_fused_prepared(&att, &self.layers[li].wo);
@@ -337,8 +365,17 @@ impl Backend for CpuBackend {
         self.cfg.vocab
     }
 
-    fn bind_kv(&mut self, total_blocks: usize, block_size: usize) {
-        self.kv = PagedKvCache::new(total_blocks, block_size, self.cfg.n_layers, self.cfg.d_model);
+    fn bind_kv(&mut self, total_blocks: usize, block_size: usize, dtype: KvDtype) {
+        self.kv = PagedKvCache::with_dtype(
+            total_blocks,
+            block_size,
+            self.cfg.n_layers,
+            self.cfg.d_model,
+            dtype,
+        );
+        self.spill.clear();
+        self.spill_bytes = 0;
+        self.spill_peak_bytes = 0;
     }
 
     fn step(
@@ -423,18 +460,38 @@ impl Backend for CpuBackend {
     fn release_seq(&mut self, seq_id: usize) {
         // A sequence that finished (or was rejected) while swapped out
         // never swaps back in; drop its spill.
-        self.spill.remove(&seq_id);
+        if let Some(old) = self.spill.remove(&seq_id) {
+            self.spill_bytes -= old.bytes();
+        }
     }
 
-    fn swap_out(&mut self, seq_id: usize, blocks: &[BlockId]) {
+    fn swap_out(&mut self, seq_id: usize, blocks: &[BlockId]) -> usize {
         // Runs before release_blocks poisons these ids (engine drain
-        // order), so the copy reads intact K/V.
-        self.spill.insert(seq_id, self.kv.spill_blocks(blocks));
+        // order), so the copy reads intact K/V — still packed, so the
+        // bytes moved shrink with the pool dtype.
+        let spill = self.kv.spill_blocks(blocks);
+        let bytes = spill.bytes();
+        if let Some(old) = self.spill.insert(seq_id, spill) {
+            self.spill_bytes -= old.bytes();
+        }
+        self.spill_bytes += bytes;
+        self.spill_peak_bytes = self.spill_peak_bytes.max(self.spill_bytes);
+        bytes
     }
 
     fn swap_in(&mut self, seq_id: usize, blocks: &[BlockId]) {
-        let (k, v) = self.spill.remove(&seq_id).expect("swap_in without spill");
-        self.kv.restore_blocks(blocks, &k, &v);
+        let spill = self.spill.remove(&seq_id).expect("swap_in without spill");
+        self.spill_bytes -= spill.bytes();
+        self.kv.restore_blocks(blocks, &spill);
+    }
+
+    fn kv_stats(&self) -> Option<KvStats> {
+        Some(KvStats {
+            pool_bytes: self.kv.bytes(),
+            bytes_per_token: self.kv.bytes_per_token(),
+            spill_bytes: self.spill_bytes,
+            spill_peak_bytes: self.spill_peak_bytes,
+        })
     }
 }
 
@@ -466,6 +523,16 @@ fn add_assign(a: &mut Matrix, b: &Matrix) {
 /// Multi-head causal attention for one query row over the cached
 /// `0..ctx` positions addressed through `table`, walking the paged pool
 /// block-by-block; accumulates into `out` (zeroed by the caller).
+///
+/// The walk is **tile-at-a-time**: each (block, layer) tile is
+/// dequantized once into the caller's scratch (`k_tile`/`v_tile`,
+/// length ≥ [`PagedKvCache::tile_len`]) and *all* heads read from the
+/// scratch — the quantized pool is touched once per block per pass, not
+/// once per head.  For the f32 pool the "dequantization" is a zero-copy
+/// borrow, and the per-output-element FP operation sequence is exactly
+/// the pre-tile per-head walk's, so f32 logits stay bit-identical to the
+/// seed backend.
+#[allow(clippy::too_many_arguments)]
 fn attend(
     cfg: &CpuModelConfig,
     kv: &PagedKvCache,
@@ -474,50 +541,75 @@ fn attend(
     qv: &[f32],
     ctx: usize,
     out: &mut [f32],
+    k_tile: &mut [f32],
+    v_tile: &mut [f32],
 ) {
+    let d = cfg.d_model;
     let hd = cfg.d_head();
+    let nh = cfg.n_heads;
     let scale = 1.0 / (hd as f32).sqrt();
     let bs = kv.block_size();
-    let mut scores = vec![0.0f32; ctx];
-    for head in 0..cfg.n_heads {
-        let hoff = head * hd;
-        let qh = &qv[hoff..hoff + hd];
-        // Score pass: table-ordered block walk over the K pool.
-        let mut max_s = f32::NEG_INFINITY;
-        let mut p = 0;
-        'k_walk: for &blk in table {
-            for pb in 0..bs {
-                if p >= ctx {
-                    break 'k_walk;
-                }
-                let kh = &kv.k_row(blk, pb, layer)[hoff..hoff + hd];
-                let s = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
-                scores[p] = s;
-                max_s = max_s.max(s);
-                p += 1;
-            }
+    // Per-head score rows, position-major within a head: head `h`'s
+    // score for position `p` lives at `h * ctx + p` (each head's row is
+    // filled in ascending-p order, exactly as the per-head walk did).
+    let mut scores = vec![0.0f32; nh * ctx];
+    let mut maxs = vec![f32::NEG_INFINITY; nh];
+    // Score pass: table-ordered block walk over the K pool, one tile
+    // dequant per block.
+    let mut p = 0;
+    'k_walk: for &blk in table {
+        if p >= ctx {
+            break;
         }
+        let kt = kv.k_block(blk, layer, k_tile);
+        for pb in 0..bs {
+            if p >= ctx {
+                break 'k_walk;
+            }
+            let krow = &kt[pb * d..pb * d + d];
+            for head in 0..nh {
+                let hoff = head * hd;
+                let qh = &qv[hoff..hoff + hd];
+                let kh = &krow[hoff..hoff + hd];
+                let s = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
+                scores[head * ctx + p] = s;
+                maxs[head] = maxs[head].max(s);
+            }
+            p += 1;
+        }
+    }
+    let mut invs = vec![0.0f32; nh];
+    for head in 0..nh {
+        let max_s = maxs[head];
         let mut denom = 0.0f32;
-        for s in scores.iter_mut() {
+        for s in scores[head * ctx..head * ctx + ctx].iter_mut() {
             *s = (*s - max_s).exp();
             denom += *s;
         }
-        let inv = 1.0 / denom;
-        // Value pass: same walk over the V pool.
-        let oh = &mut out[hoff..hoff + hd];
-        let mut p = 0;
-        'v_walk: for &blk in table {
-            for pb in 0..bs {
-                if p >= ctx {
-                    break 'v_walk;
-                }
-                let w = scores[p] * inv;
-                let vh = &kv.v_row(blk, pb, layer)[hoff..hoff + hd];
+        invs[head] = 1.0 / denom;
+    }
+    // Value pass: same walk over the V pool.
+    let mut p = 0;
+    'v_walk: for &blk in table {
+        if p >= ctx {
+            break;
+        }
+        let vt = kv.v_block(blk, layer, v_tile);
+        for pb in 0..bs {
+            if p >= ctx {
+                break 'v_walk;
+            }
+            let vrow = &vt[pb * d..pb * d + d];
+            for head in 0..nh {
+                let hoff = head * hd;
+                let w = scores[head * ctx + p] * invs[head];
+                let oh = &mut out[hoff..hoff + hd];
+                let vh = &vrow[hoff..hoff + hd];
                 for (o, &vv) in oh.iter_mut().zip(vh) {
                     *o += w * vv;
                 }
-                p += 1;
             }
+            p += 1;
         }
     }
 }
@@ -669,12 +761,134 @@ mod tests {
     #[test]
     fn bind_kv_sets_geometry() {
         let mut be = backend();
-        be.bind_kv(32, 4);
+        be.bind_kv(32, 4, KvDtype::F32);
         assert_eq!(be.kv().n_blocks(), 32);
         assert_eq!(be.kv().block_size(), 4);
+        assert_eq!(be.kv().dtype(), KvDtype::F32);
         // 5 tokens now need 2 blocks of 4.
         assert!(be.prefill(prefill_desc(&[1, 2, 3, 4, 5], &[0])).is_err());
         assert!(be.prefill(prefill_desc(&[1, 2, 3, 4, 5], &[0, 1])).is_ok());
+        // Rebinding with a compressed dtype re-pools at the new width.
+        be.bind_kv(32, 4, KvDtype::Kv4);
+        assert_eq!(be.kv().dtype(), KvDtype::Kv4);
+        assert_eq!(be.kv().bytes(), 32 * KvDtype::Kv4.block_bytes(4, 2, 64));
+    }
+
+    #[test]
+    fn every_dtype_generates_finite_discriminating_logits() {
+        let prompt: Vec<u32> = (0..24).map(|i| ((i * 13 + 5) % 256) as u32).collect();
+        for dtype in KvDtype::ALL {
+            let mut be = backend();
+            be.bind_kv(16, DEFAULT_BLOCK_SIZE, dtype);
+            let (l, _) = be.prefill(prefill_desc(&prompt, &[0, 1])).unwrap();
+            assert!(l.iter().all(|v| v.is_finite()), "{dtype} produced non-finite logits");
+            let lo = l.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = l.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert!(hi - lo > 0.05, "{dtype} logit range {} too flat", hi - lo);
+        }
+    }
+
+    #[test]
+    fn f32_dtype_is_bit_identical_to_the_unbound_pool() {
+        // The F32 pool (and the tile-at-a-time walk it takes) must
+        // reproduce the pre-dtype backend exactly — same math, same
+        // per-element FP operation order.
+        let prompt: Vec<u32> = (0..40).map(|i| ((i * 11 + 3) % 256) as u32).collect();
+        let mut a = backend(); // default pool: f32 (absent OPT4GPTQ_KV)
+        let mut b = backend();
+        b.bind_kv(8, DEFAULT_BLOCK_SIZE, KvDtype::F32);
+        let (la, _) = a.prefill(prefill_desc(&prompt, &[0, 1, 2])).unwrap();
+        let (lb, _) = b.prefill(prefill_desc(&prompt, &[0, 1, 2])).unwrap();
+        if a.kv().dtype() == KvDtype::F32 {
+            assert_eq!(la, lb);
+        }
+    }
+
+    #[test]
+    fn compressed_dtypes_track_f32_logits() {
+        // Sanity bound here (the committed regression pins live in
+        // eval::numerics::kv_dtype_drift): quantized-KV logits must stay
+        // close enough to f32 that generation is usable.
+        let prompt: Vec<u32> = (0..32).map(|i| ((i * 7 + 9) % 256) as u32).collect();
+        let mut f32_be = backend();
+        f32_be.bind_kv(8, DEFAULT_BLOCK_SIZE, KvDtype::F32);
+        let (base, _) = f32_be.prefill(prefill_desc(&prompt, &[0, 1])).unwrap();
+        let denom = base.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+        for (dtype, bound) in [(KvDtype::F16, 1e-2f32), (KvDtype::Kv4, 0.35f32)] {
+            let mut be = backend();
+            be.bind_kv(8, DEFAULT_BLOCK_SIZE, dtype);
+            let (l, _) = be.prefill(prefill_desc(&prompt, &[0, 1])).unwrap();
+            let drift = max_diff(&base, &l) / denom;
+            assert!(drift <= bound, "{dtype} relative drift {drift} exceeds {bound}");
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_is_bit_identical_at_every_dtype() {
+        // Within a dtype, chunking must still be invisible: per-row
+        // write-once quantization makes stored K/V a pure function of
+        // the row, never of chunk boundaries.
+        let prompt: Vec<u32> = (0..40).map(|i| ((i * 17 + 2) % 256) as u32).collect();
+        for dtype in KvDtype::ALL {
+            let mut a = backend();
+            a.bind_kv(8, DEFAULT_BLOCK_SIZE, dtype);
+            let (one_shot, _) = a.prefill(prefill_desc(&prompt, &[0, 1, 2])).unwrap();
+            let mut b = backend();
+            b.bind_kv(8, DEFAULT_BLOCK_SIZE, dtype);
+            let mut pos = 0usize;
+            let mut last = Vec::new();
+            for len in [3usize, 5, 8, 24] {
+                let end = pos + len;
+                let out = b
+                    .step(
+                        &[PrefillDesc {
+                            seq_id: 0,
+                            tokens: &prompt[pos..end],
+                            start: pos,
+                            is_last: end == prompt.len(),
+                            block_table: &[0, 1, 2],
+                        }],
+                        &[],
+                    )
+                    .unwrap();
+                if end == prompt.len() {
+                    last = out.prefill_logits[0].clone().expect("final chunk logits");
+                }
+                pos = end;
+            }
+            assert_eq!(last, one_shot, "{dtype}: chunking must stay invisible");
+        }
+    }
+
+    #[test]
+    fn swap_roundtrip_is_bit_exact_at_every_dtype() {
+        // spill → poison → restore at different physical blocks must
+        // reproduce the exact packed K/V (restore is a copy, never a
+        // requantization), so post-swap decodes match unpreempted ones.
+        let prompt: Vec<u32> = (0..24).map(|i| ((i * 19 + 4) % 256) as u32).collect();
+        for dtype in KvDtype::ALL {
+            let mut a = backend();
+            a.bind_kv(8, DEFAULT_BLOCK_SIZE, dtype);
+            a.prefill(prefill_desc(&prompt, &[0, 1])).unwrap();
+            let (want, _) = a
+                .decode(&[DecodeDesc { seq_id: 0, context_len: 24, token: 9, block_table: &[0, 1] }])
+                .unwrap();
+
+            let mut b = backend();
+            b.bind_kv(8, DEFAULT_BLOCK_SIZE, dtype);
+            b.prefill(prefill_desc(&prompt, &[0, 1])).unwrap();
+            let bytes = b.swap_out(0, &[0, 1]);
+            assert_eq!(bytes, 2 * dtype.block_bytes(DEFAULT_BLOCK_SIZE, 2, 64));
+            assert_eq!(b.kv_stats().unwrap().spill_bytes, bytes);
+            b.release_blocks(&[0, 1]); // poison the originals
+            b.swap_in(0, &[3, 5]); // restore elsewhere
+            assert_eq!(b.kv_stats().unwrap().spill_bytes, 0);
+            assert_eq!(b.kv_stats().unwrap().spill_peak_bytes, bytes);
+            let (got, _) = b
+                .decode(&[DecodeDesc { seq_id: 0, context_len: 24, token: 9, block_table: &[3, 5] }])
+                .unwrap();
+            assert_eq!(got[0], want[0], "{dtype}: swap round trip must be invisible");
+        }
     }
 
     #[test]

@@ -59,7 +59,7 @@ impl<B: Backend> Engine<B> {
         // Announce the paged-KV geometry: backends owning physical K/V
         // size their block pool to the manager's, so every BlockId a
         // table can carry is addressable.
-        backend.bind_kv(cfg.total_blocks, cfg.block_size);
+        backend.bind_kv(cfg.total_blocks, cfg.block_size, cfg.kv_dtype);
         Engine {
             scheduler: Scheduler::new(cfg),
             backend,
@@ -133,6 +133,11 @@ impl<B: Backend> Engine<B> {
         self.metrics.swap_outs = self.scheduler.swap_out_count;
         self.metrics.swap_ins = self.scheduler.swap_in_count;
         self.metrics.swap_restored_tokens = self.scheduler.swap_restored_tokens;
+        if let Some(kv) = self.backend.kv_stats() {
+            self.metrics.kv_pool_bytes = kv.pool_bytes;
+            self.metrics.kv_bytes_per_token = kv.bytes_per_token;
+            self.metrics.kv_spill_peak_bytes = kv.spill_peak_bytes;
+        }
         Ok(EngineReport { outputs: std::mem::take(&mut self.outputs), metrics: self.metrics.clone() })
     }
 
@@ -154,7 +159,7 @@ impl<B: Backend> Engine<B> {
         // the released list below, and the copy must happen before the
         // backend can poison or rewrite that memory.
         for (seq_id, blocks) in self.scheduler.blocks.take_swap_outs() {
-            self.backend.swap_out(seq_id, &blocks);
+            self.metrics.swap_spilled_bytes += self.backend.swap_out(seq_id, &blocks);
         }
         let (blocks, seqs) = self.scheduler.blocks.take_released();
         if !blocks.is_empty() {
@@ -527,6 +532,7 @@ mod tests {
                     prefill_budget: 64,
                     prefix_skip: true,
                     swap_preempt: swap,
+                    kv_dtype: crate::engine::KvDtype::F32,
                 },
                 be,
             );

@@ -6,51 +6,431 @@
 //! live in one flat pool laid out as
 //!
 //! ```text
-//! [n_blocks × block_size × n_layers × d]
+//! [n_blocks × n_layers × block_size × d]
 //! ```
 //!
-//! so a (block, in-block position, layer) triple names one contiguous
-//! `d`-float row.  A sequence reaches position `p` through its table:
-//! `block = table[p / block_size]`, `offset = p % block_size`.  Two
-//! tables containing the same [`BlockId`] therefore *share physical
-//! memory* — a prefix-cache hit in the block manager is a real aliased
-//! read here, not a bookkeeping fiction — and attention kernels walk the
-//! pool block-by-block exactly as the paper's paged layout prescribes
-//! (layers innermost so one token's whole stack is cache-adjacent when a
-//! layer loop revisits the same position).
+//! so a (block, layer) pair names one contiguous `[block_size × d]`
+//! **tile** — the unit attention kernels dequantize at a time — and a
+//! (block, layer, in-block position) triple names one `d`-element row.
+//! A sequence reaches position `p` through its table: `block =
+//! table[p / block_size]`, `offset = p % block_size`.  Two tables
+//! containing the same [`BlockId`] therefore *share physical memory* — a
+//! prefix-cache hit in the block manager is a real aliased read here (of
+//! the **packed** payload, whatever the dtype), not a bookkeeping
+//! fiction — and attention kernels walk the pool block-by-block exactly
+//! as the paper's paged layout prescribes.
 //!
-//! Freeing is explicit: when the engine reports blocks whose refcount
-//! reached zero ([`PagedKvCache::release_blocks`]), debug builds poison
-//! their contents with NaN so any read through a stale table blows up
-//! parity tests loudly instead of silently serving a recycled sequence's
-//! K/V.  Release is therefore a *return* of memory, not an overwrite
-//! convention.
+//! # Storage dtypes
+//!
+//! The pool is dtype-parameterized behind [`KvDtype`] — the paper's
+//! co-design of memory layout and computation, extended from the weights
+//! to the cache itself.  Per `d`-element row (both sides store
+//! identically):
+//!
+//! | dtype | layout per row            | bytes/row (d=64) | drift vs f32 | freed-block poison          |
+//! |-------|---------------------------|------------------|--------------|-----------------------------|
+//! | `f32` | `d × f32`                 | 256              | 0 (bit-identical) | rows filled with `f32::NAN` |
+//! | `f16` | `d × binary16`            | 128              | ≤ 1e-2 relative logit drift | rows filled with `0x7E00` (f16 NaN) |
+//! | `kv4` | `d/2` nibble bytes + f32 scale + f32 zero | 40 | pinned empirically (`eval::numerics`) | scale/zero set to NaN — every lane dequantizes to NaN |
+//!
+//! `f16` rows round-trip through the [`crate::gptq::simd`] converter
+//! dispatch (F16C `vcvtph2ps`/`vcvtps2ph` under a vector kernel, the
+//! software [`crate::f16::F16`] converter under scalar dispatch).  `kv4`
+//! rows are 4-bit affine-quantized **at append time** against their own
+//! min/max (`x̂ = zero + code·scale`, codes 0..=15) and dequantized
+//! tile-at-a-time into a reused scratch buffer on the attention walk —
+//! the SMB-Opt stack-scratch pattern applied to the cache.
+//!
+//! Quantization is **per row, write-once**: a row's stored bits are a
+//! pure function of the values written, never of write history or of
+//! neighbors landing later in the same block.  That is what keeps
+//! chunked-vs-one-shot prefill and swap-storm-vs-roomy replays
+//! bit-identical *within* a dtype (the chaos and property suites run at
+//! every dtype) — a shared per-block scale would make stored K/V depend
+//! on which rows happened to exist when the scale was chosen.  The
+//! cross-dtype accuracy cost is pinned separately by the
+//! `eval::numerics` drift harness.
+//!
+//! Spill ([`PagedKvCache::spill_blocks`]) and restore move the **packed**
+//! payload as [`KvSpill`] — swap volume shrinks with the dtype exactly
+//! as the pool does.  Freeing is explicit: when the engine reports blocks
+//! whose refcount reached zero ([`PagedKvCache::release_blocks`]), debug
+//! builds poison their contents (see the table) so any read through a
+//! stale table blows up parity tests loudly instead of silently serving
+//! a recycled sequence's K/V.  Release is therefore a *return* of
+//! memory, not an overwrite convention.
+
+use crate::f16::F16;
+use crate::gptq::simd::{f16_dequant_slice, f16_quant_slice};
 
 use super::block_manager::BlockId;
 
-/// Flat paged K/V pool (see module docs for the layout).
+/// Storage dtype of a [`PagedKvCache`] pool (see module docs table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvDtype {
+    /// Raw f32 rows — bit-identical to the pre-quantization pool.
+    F32,
+    /// IEEE binary16 rows (via [`crate::f16::F16`] / F16C).
+    F16,
+    /// 4-bit affine rows: packed nibbles + per-row f32 scale/zero.
+    Kv4,
+}
+
+impl KvDtype {
+    /// Every dtype, in widening-compression order (`OPT4GPTQ_KV` values,
+    /// the CI dtype matrix, and tests iterate this).
+    pub const ALL: [KvDtype; 3] = [KvDtype::F32, KvDtype::F16, KvDtype::Kv4];
+
+    /// Stable lowercase name (`--kv-dtype` / `OPT4GPTQ_KV` value, bench
+    /// JSON, CI matrix leg).
+    pub fn name(self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::F16 => "f16",
+            KvDtype::Kv4 => "kv4",
+        }
+    }
+
+    /// Resolve a name (case-insensitive) to a dtype.
+    pub fn parse(s: &str) -> Option<KvDtype> {
+        KvDtype::ALL.into_iter().find(|d| d.name() == s.to_ascii_lowercase())
+    }
+
+    /// Bytes one side stores per `d`-element row.
+    pub fn row_bytes(self, d: usize) -> usize {
+        match self {
+            KvDtype::F32 => d * std::mem::size_of::<f32>(),
+            KvDtype::F16 => d * std::mem::size_of::<u16>(),
+            // Two codes per byte, plus the per-row f32 scale and zero.
+            KvDtype::Kv4 => d.div_ceil(2) + 2 * std::mem::size_of::<f32>(),
+        }
+    }
+
+    /// Bytes one block occupies across **both** sides and all layers —
+    /// the unit capacity planning and spill accounting price in.
+    pub fn block_bytes(self, block_size: usize, n_layers: usize, d: usize) -> usize {
+        2 * block_size * n_layers * self.row_bytes(d)
+    }
+}
+
+impl std::fmt::Display for KvDtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One side's storage (K or V), matching the pool dtype.
+#[derive(Debug, Clone)]
+enum Pool {
+    F32(Vec<f32>),
+    /// binary16 bit patterns.
+    F16(Vec<u16>),
+    /// Per row: `d.div_ceil(2)` nibble bytes in `packed` plus one
+    /// `scale`/`zero` pair (`x̂ = zero + code·scale`).
+    Kv4 { packed: Vec<u8>, scale: Vec<f32>, zero: Vec<f32> },
+}
+
+impl Pool {
+    fn new(dtype: KvDtype, rows: usize, d: usize) -> Pool {
+        match dtype {
+            KvDtype::F32 => Pool::F32(vec![0.0; rows * d]),
+            KvDtype::F16 => Pool::F16(vec![0; rows * d]),
+            KvDtype::Kv4 => Pool::Kv4 {
+                packed: vec![0; rows * d.div_ceil(2)],
+                scale: vec![0.0; rows],
+                zero: vec![0.0; rows],
+            },
+        }
+    }
+
+    fn resize(&mut self, rows: usize, d: usize) {
+        match self {
+            Pool::F32(data) => data.resize(rows * d, 0.0),
+            Pool::F16(data) => data.resize(rows * d, 0),
+            Pool::Kv4 { packed, scale, zero } => {
+                packed.resize(rows * d.div_ceil(2), 0);
+                scale.resize(rows, 0.0);
+                zero.resize(rows, 0.0);
+            }
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            Pool::F32(data) => data.len() * std::mem::size_of::<f32>(),
+            Pool::F16(data) => data.len() * std::mem::size_of::<u16>(),
+            Pool::Kv4 { packed, scale, zero } => {
+                packed.len() + (scale.len() + zero.len()) * std::mem::size_of::<f32>()
+            }
+        }
+    }
+
+    /// Quantize and store one row (write-once: the stored bits are a
+    /// pure function of `src`).
+    fn write_row(&mut self, row: usize, d: usize, src: &[f32]) {
+        match self {
+            Pool::F32(data) => data[row * d..row * d + d].copy_from_slice(src),
+            Pool::F16(data) => f16_quant_slice(src, &mut data[row * d..row * d + d]),
+            Pool::Kv4 { packed, scale, zero } => {
+                let pb = d.div_ceil(2);
+                kv4_quant_row(src, &mut packed[row * pb..row * pb + pb], &mut scale[row], &mut zero[row]);
+            }
+        }
+    }
+
+    /// Dequantize one row into `dst`.
+    fn read_row(&self, row: usize, d: usize, dst: &mut [f32]) {
+        match self {
+            Pool::F32(data) => dst.copy_from_slice(&data[row * d..row * d + d]),
+            Pool::F16(data) => f16_dequant_slice(&data[row * d..row * d + d], dst),
+            Pool::Kv4 { packed, scale, zero } => {
+                let pb = d.div_ceil(2);
+                kv4_dequant_row(&packed[row * pb..row * pb + pb], scale[row], zero[row], dst);
+            }
+        }
+    }
+
+    /// Dequantize `n_rows` consecutive rows starting at `row0` into
+    /// `scratch`, or return the pool slice directly when it is already
+    /// f32 (the zero-copy fast path of the attention walk).
+    fn read_tile<'a>(&'a self, row0: usize, n_rows: usize, d: usize, scratch: &'a mut [f32]) -> &'a [f32] {
+        let len = n_rows * d;
+        match self {
+            Pool::F32(data) => &data[row0 * d..row0 * d + len],
+            Pool::F16(data) => {
+                f16_dequant_slice(&data[row0 * d..row0 * d + len], &mut scratch[..len]);
+                &scratch[..len]
+            }
+            Pool::Kv4 { packed, scale, zero } => {
+                let pb = d.div_ceil(2);
+                for r in 0..n_rows {
+                    let row = row0 + r;
+                    kv4_dequant_row(
+                        &packed[row * pb..row * pb + pb],
+                        scale[row],
+                        zero[row],
+                        &mut scratch[r * d..r * d + d],
+                    );
+                }
+                &scratch[..len]
+            }
+        }
+    }
+
+    /// Poison `n_rows` consecutive rows so any dequantized read yields
+    /// NaN (the dtype analogue of the f32 NaN fill — for kv4 the
+    /// *reserved poison scale pattern* is a NaN scale/zero pair, which
+    /// every code dequantizes through).
+    fn poison_rows(&mut self, row0: usize, n_rows: usize, d: usize) {
+        match self {
+            Pool::F32(data) => data[row0 * d..(row0 + n_rows) * d].fill(f32::NAN),
+            Pool::F16(data) => data[row0 * d..(row0 + n_rows) * d].fill(F16::NAN.0),
+            Pool::Kv4 { packed, scale, zero } => {
+                let pb = d.div_ceil(2);
+                packed[row0 * pb..(row0 + n_rows) * pb].fill(0);
+                scale[row0..row0 + n_rows].fill(f32::NAN);
+                zero[row0..row0 + n_rows].fill(f32::NAN);
+            }
+        }
+    }
+
+    /// Copy `n_rows` packed rows out into a freshly-shaped spill side.
+    fn spill_rows(&self, ranges: &[Option<usize>], n_rows: usize, d: usize) -> SpillSide {
+        match self {
+            Pool::F32(data) => {
+                let mut out = vec![0.0; ranges.len() * n_rows * d];
+                for (i, r0) in ranges.iter().enumerate() {
+                    if let Some(row0) = r0 {
+                        out[i * n_rows * d..(i + 1) * n_rows * d]
+                            .copy_from_slice(&data[row0 * d..(row0 + n_rows) * d]);
+                    }
+                }
+                SpillSide::F32(out)
+            }
+            Pool::F16(data) => {
+                let mut out = vec![0u16; ranges.len() * n_rows * d];
+                for (i, r0) in ranges.iter().enumerate() {
+                    if let Some(row0) = r0 {
+                        out[i * n_rows * d..(i + 1) * n_rows * d]
+                            .copy_from_slice(&data[row0 * d..(row0 + n_rows) * d]);
+                    }
+                }
+                SpillSide::F16(out)
+            }
+            Pool::Kv4 { packed, scale, zero } => {
+                let pb = d.div_ceil(2);
+                let mut sp = vec![0u8; ranges.len() * n_rows * pb];
+                let mut ss = vec![0.0; ranges.len() * n_rows];
+                let mut sz = vec![0.0; ranges.len() * n_rows];
+                for (i, r0) in ranges.iter().enumerate() {
+                    if let Some(row0) = r0 {
+                        sp[i * n_rows * pb..(i + 1) * n_rows * pb]
+                            .copy_from_slice(&packed[row0 * pb..(row0 + n_rows) * pb]);
+                        ss[i * n_rows..(i + 1) * n_rows]
+                            .copy_from_slice(&scale[row0..row0 + n_rows]);
+                        sz[i * n_rows..(i + 1) * n_rows]
+                            .copy_from_slice(&zero[row0..row0 + n_rows]);
+                    }
+                }
+                SpillSide::Kv4 { packed: sp, scale: ss, zero: sz }
+            }
+        }
+    }
+
+    /// Copy spilled stride `i` back into `n_rows` rows at `row0`.
+    fn restore_rows(&mut self, side: &SpillSide, i: usize, row0: usize, n_rows: usize, d: usize) {
+        match (self, side) {
+            (Pool::F32(data), SpillSide::F32(src)) => {
+                data[row0 * d..(row0 + n_rows) * d]
+                    .copy_from_slice(&src[i * n_rows * d..(i + 1) * n_rows * d]);
+            }
+            (Pool::F16(data), SpillSide::F16(src)) => {
+                data[row0 * d..(row0 + n_rows) * d]
+                    .copy_from_slice(&src[i * n_rows * d..(i + 1) * n_rows * d]);
+            }
+            (
+                Pool::Kv4 { packed, scale, zero },
+                SpillSide::Kv4 { packed: sp, scale: ss, zero: sz },
+            ) => {
+                let pb = d.div_ceil(2);
+                packed[row0 * pb..(row0 + n_rows) * pb]
+                    .copy_from_slice(&sp[i * n_rows * pb..(i + 1) * n_rows * pb]);
+                scale[row0..row0 + n_rows].copy_from_slice(&ss[i * n_rows..(i + 1) * n_rows]);
+                zero[row0..row0 + n_rows].copy_from_slice(&sz[i * n_rows..(i + 1) * n_rows]);
+            }
+            _ => unreachable!("restore_blocks asserts the spill dtype matches the pool"),
+        }
+    }
+}
+
+/// 4-bit affine row quantization against the row's own min/max.  Rows
+/// containing any non-finite value — and degenerate ranges whose scale
+/// would not be finite — store the reserved NaN scale/zero pattern so
+/// every read is loudly NaN rather than silently clamped.
+fn kv4_quant_row(src: &[f32], packed: &mut [u8], scale: &mut f32, zero: &mut f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    let mut finite = true;
+    for &x in src {
+        if !x.is_finite() {
+            finite = false;
+            break;
+        }
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    let s = (hi - lo) / 15.0;
+    packed.fill(0);
+    if !finite || !s.is_finite() {
+        *scale = f32::NAN;
+        *zero = f32::NAN;
+        return;
+    }
+    *scale = s;
+    *zero = lo;
+    if s > 0.0 {
+        let inv = 1.0 / s;
+        for (i, &x) in src.iter().enumerate() {
+            let code = ((x - lo) * inv).round().clamp(0.0, 15.0) as u8;
+            packed[i / 2] |= code << ((i % 2) * 4);
+        }
+    }
+}
+
+fn kv4_dequant_row(packed: &[u8], scale: f32, zero: f32, dst: &mut [f32]) {
+    for (i, o) in dst.iter_mut().enumerate() {
+        let code = (packed[i / 2] >> ((i % 2) * 4)) & 0xF;
+        // A constant row stores scale 0 (codes 0, x̂ = zero); a poisoned
+        // row stores scale NaN — both fall out of the one expression.
+        *o = zero + code as f32 * scale;
+    }
+}
+
+/// One side of a [`KvSpill`]: the packed payload of the spilled blocks,
+/// in table order, shaped exactly like the pool side it came from.
+#[derive(Debug, Clone)]
+pub enum SpillSide {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+    Kv4 { packed: Vec<u8>, scale: Vec<f32>, zero: Vec<f32> },
+}
+
+impl SpillSide {
+    pub fn bytes(&self) -> usize {
+        match self {
+            SpillSide::F32(v) => v.len() * std::mem::size_of::<f32>(),
+            SpillSide::F16(v) => v.len() * std::mem::size_of::<u16>(),
+            SpillSide::Kv4 { packed, scale, zero } => {
+                packed.len() + (scale.len() + zero.len()) * std::mem::size_of::<f32>()
+            }
+        }
+    }
+}
+
+/// A swapped-out sequence's K/V payload, **still packed** in the pool's
+/// dtype: spill volume shrinks with the dtype exactly as residency
+/// does, and restore is a copy, never a requantization (so a
+/// swap-out/swap-in round trip is bit-exact at every dtype).
+#[derive(Debug, Clone)]
+pub struct KvSpill {
+    dtype: KvDtype,
+    n_blocks: usize,
+    k: SpillSide,
+    v: SpillSide,
+}
+
+impl KvSpill {
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
+    /// Spilled blocks (table order length).
+    pub fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+
+    /// Host-side bytes this spill occupies (both sides).
+    pub fn bytes(&self) -> usize {
+        self.k.bytes() + self.v.bytes()
+    }
+}
+
+/// Flat paged K/V pool (see module docs for the layout and dtypes).
 #[derive(Debug)]
 pub struct PagedKvCache {
     block_size: usize,
     n_layers: usize,
-    /// Floats per (position, layer) row — `d_model` for MHA backends.
+    /// Values per (position, layer) row — `d_model` for MHA backends.
     d: usize,
     n_blocks: usize,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    dtype: KvDtype,
+    k: Pool,
+    v: Pool,
 }
 
 impl PagedKvCache {
+    /// An f32 pool — bit-identical to the pre-[`KvDtype`] cache.
     pub fn new(n_blocks: usize, block_size: usize, n_layers: usize, d: usize) -> PagedKvCache {
+        PagedKvCache::with_dtype(n_blocks, block_size, n_layers, d, KvDtype::F32)
+    }
+
+    pub fn with_dtype(
+        n_blocks: usize,
+        block_size: usize,
+        n_layers: usize,
+        d: usize,
+        dtype: KvDtype,
+    ) -> PagedKvCache {
         assert!(block_size > 0 && n_layers > 0 && d > 0);
-        let len = n_blocks * block_size * n_layers * d;
+        let rows = n_blocks * n_layers * block_size;
         PagedKvCache {
             block_size,
             n_layers,
             d,
             n_blocks,
-            k: vec![0.0; len],
-            v: vec![0.0; len],
+            dtype,
+            k: Pool::new(dtype, rows, d),
+            v: Pool::new(dtype, rows, d),
         }
     }
 
@@ -62,31 +442,56 @@ impl PagedKvCache {
         self.n_blocks
     }
 
-    /// Bytes held by both pools (capacity accounting for callers).
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
+    }
+
+    /// Bytes held by both pools (dtype-aware capacity accounting).
     pub fn bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+        self.k.bytes() + self.v.bytes()
+    }
+
+    /// Bytes one resident token costs across both sides and all layers —
+    /// the per-dtype density figure capacity planning divides by.
+    pub fn bytes_per_token(&self) -> usize {
+        2 * self.n_layers * self.dtype.row_bytes(self.d)
+    }
+
+    /// f32 values in one (block, layer) tile — the scratch size
+    /// [`Self::k_block`]/[`Self::v_block`] dequantize into.
+    pub fn tile_len(&self) -> usize {
+        self.block_size * self.d
     }
 
     /// Grow the pool so every id `< n_blocks` is addressable (no-op when
     /// already large enough; never shrinks).
     pub fn ensure_blocks(&mut self, n_blocks: usize) {
         if n_blocks > self.n_blocks {
-            let len = n_blocks * self.block_size * self.n_layers * self.d;
-            self.k.resize(len, 0.0);
-            self.v.resize(len, 0.0);
+            let rows = n_blocks * self.n_layers * self.block_size;
+            self.k.resize(rows, self.d);
+            self.v.resize(rows, self.d);
             self.n_blocks = n_blocks;
         }
     }
 
+    /// Row index of one (block, layer, in-block position) cell — layer
+    /// outer of position, so a (block, layer) tile is contiguous.
     #[inline]
-    fn offset(&self, block: BlockId, pos_in_block: usize, layer: usize) -> usize {
+    fn row_index(&self, block: BlockId, pos_in_block: usize, layer: usize) -> usize {
         debug_assert!(pos_in_block < self.block_size && layer < self.n_layers);
-        ((block * self.block_size + pos_in_block) * self.n_layers + layer) * self.d
+        (block * self.n_layers + layer) * self.block_size + pos_in_block
     }
 
-    /// Write one position's K and V rows through a block table.  Grows
-    /// the pool on demand so directly-driven backends need no up-front
-    /// geometry binding.
+    /// Rows per block (all layers × all in-block positions).
+    #[inline]
+    fn rows_per_block(&self) -> usize {
+        self.n_layers * self.block_size
+    }
+
+    /// Write one position's K and V rows through a block table,
+    /// quantizing to the pool dtype at append time.  Grows the pool on
+    /// demand so directly-driven backends need no up-front geometry
+    /// binding.
     pub fn write(
         &mut self,
         table: &[BlockId],
@@ -99,61 +504,89 @@ impl PagedKvCache {
         debug_assert_eq!(v_row.len(), self.d);
         let block = table[pos / self.block_size];
         self.ensure_blocks(block + 1);
-        let off = self.offset(block, pos % self.block_size, layer);
-        self.k[off..off + self.d].copy_from_slice(k_row);
-        self.v[off..off + self.d].copy_from_slice(v_row);
+        let row = self.row_index(block, pos % self.block_size, layer);
+        self.k.write_row(row, self.d, k_row);
+        self.v.write_row(row, self.d, v_row);
     }
 
-    /// K row of one (block, in-block position, layer) cell, `d` floats.
+    /// Dequantized K row of one (block, in-block position, layer) cell,
+    /// `d` floats (inspection/test path — the attention walk reads whole
+    /// tiles through [`Self::k_block`] instead).
+    pub fn k_row(&self, block: BlockId, pos_in_block: usize, layer: usize) -> Vec<f32> {
+        let mut out = vec![0.0; self.d];
+        self.k.read_row(self.row_index(block, pos_in_block, layer), self.d, &mut out);
+        out
+    }
+
+    /// Dequantized V row of one (block, in-block position, layer) cell.
+    pub fn v_row(&self, block: BlockId, pos_in_block: usize, layer: usize) -> Vec<f32> {
+        let mut out = vec![0.0; self.d];
+        self.v.read_row(self.row_index(block, pos_in_block, layer), self.d, &mut out);
+        out
+    }
+
+    /// One (block, layer) K tile as `block_size × d` f32s: a zero-copy
+    /// borrow of the pool for `f32`, a single-call dequantization into
+    /// `scratch` (length ≥ [`Self::tile_len`]) otherwise — the hot unit
+    /// of the attention block walk.
     #[inline]
-    pub fn k_row(&self, block: BlockId, pos_in_block: usize, layer: usize) -> &[f32] {
-        let off = self.offset(block, pos_in_block, layer);
-        &self.k[off..off + self.d]
+    pub fn k_block<'a>(
+        &'a self,
+        block: BlockId,
+        layer: usize,
+        scratch: &'a mut [f32],
+    ) -> &'a [f32] {
+        let row0 = self.row_index(block, 0, layer);
+        self.k.read_tile(row0, self.block_size, self.d, scratch)
     }
 
-    /// V row of one (block, in-block position, layer) cell, `d` floats.
+    /// One (block, layer) V tile (see [`Self::k_block`]).
     #[inline]
-    pub fn v_row(&self, block: BlockId, pos_in_block: usize, layer: usize) -> &[f32] {
-        let off = self.offset(block, pos_in_block, layer);
-        &self.v[off..off + self.d]
+    pub fn v_block<'a>(
+        &'a self,
+        block: BlockId,
+        layer: usize,
+        scratch: &'a mut [f32],
+    ) -> &'a [f32] {
+        let row0 = self.row_index(block, 0, layer);
+        self.v.read_tile(row0, self.block_size, self.d, scratch)
     }
 
-    /// Copy the given blocks' contents out of the pool (swap-out to a
-    /// host-side spill buffer), in table order: entry `i` of the result
-    /// holds block `blocks[i]`'s full `[block_size × n_layers × d]`
-    /// stride.  Blocks past the pool (allocated but never written) spill
-    /// as zeros.  Must run **before** the same blocks are poisoned or
-    /// recycled — the engine drains swap-outs ahead of block releases.
-    pub fn spill_blocks(&self, blocks: &[BlockId]) -> (Vec<f32>, Vec<f32>) {
-        let stride = self.block_size * self.n_layers * self.d;
-        let mut k = vec![0.0; blocks.len() * stride];
-        let mut v = vec![0.0; blocks.len() * stride];
-        for (i, &b) in blocks.iter().enumerate() {
-            if b >= self.n_blocks {
-                continue; // never written -> spill zeros
-            }
-            let src = b * stride;
-            k[i * stride..(i + 1) * stride].copy_from_slice(&self.k[src..src + stride]);
-            v[i * stride..(i + 1) * stride].copy_from_slice(&self.v[src..src + stride]);
+    /// Copy the given blocks' **packed** contents out of the pool
+    /// (swap-out to a host-side spill buffer), in table order: stride
+    /// `i` of the result holds block `blocks[i]`'s full payload.  Blocks
+    /// past the pool (allocated but never written) spill as zeros.  Must
+    /// run **before** the same blocks are poisoned or recycled — the
+    /// engine drains swap-outs ahead of block releases.
+    pub fn spill_blocks(&self, blocks: &[BlockId]) -> KvSpill {
+        let rpb = self.rows_per_block();
+        let ranges: Vec<Option<usize>> = blocks
+            .iter()
+            .map(|&b| (b < self.n_blocks).then_some(b * rpb))
+            .collect();
+        KvSpill {
+            dtype: self.dtype,
+            n_blocks: blocks.len(),
+            k: self.k.spill_rows(&ranges, rpb, self.d),
+            v: self.v.spill_rows(&ranges, rpb, self.d),
         }
-        (k, v)
     }
 
-    /// Write spilled contents back into the pool at a (generally new) set
-    /// of physical blocks: stride `i` of `k`/`v` lands in `blocks[i]`,
-    /// preserving table order — a swapped-in sequence reads the exact
-    /// K/V it swapped out, just at different physical addresses.
-    pub fn restore_blocks(&mut self, blocks: &[BlockId], k: &[f32], v: &[f32]) {
-        let stride = self.block_size * self.n_layers * self.d;
-        assert_eq!(k.len(), blocks.len() * stride, "spill/table shape mismatch");
-        assert_eq!(v.len(), blocks.len() * stride, "spill/table shape mismatch");
+    /// Write spilled contents back into the pool at a (generally new)
+    /// set of physical blocks: stride `i` of the spill lands in
+    /// `blocks[i]`, preserving table order — a swapped-in sequence reads
+    /// the exact packed K/V it swapped out, just at different physical
+    /// addresses.  The spill's dtype must match the pool's.
+    pub fn restore_blocks(&mut self, blocks: &[BlockId], spill: &KvSpill) {
+        assert_eq!(spill.dtype, self.dtype, "spill/pool dtype mismatch");
+        assert_eq!(spill.n_blocks, blocks.len(), "spill/table shape mismatch");
         if let Some(&max) = blocks.iter().max() {
             self.ensure_blocks(max + 1);
         }
+        let rpb = self.rows_per_block();
         for (i, &b) in blocks.iter().enumerate() {
-            let dst = b * stride;
-            self.k[dst..dst + stride].copy_from_slice(&k[i * stride..(i + 1) * stride]);
-            self.v[dst..dst + stride].copy_from_slice(&v[i * stride..(i + 1) * stride]);
+            self.k.restore_rows(&spill.k, i, b * rpb, rpb, self.d);
+            self.v.restore_rows(&spill.v, i, b * rpb, rpb, self.d);
         }
     }
 
@@ -168,17 +601,18 @@ impl PagedKvCache {
         }
     }
 
-    /// Unconditionally fill the given blocks with NaN (test hook; the
-    /// debug-build free path routes through here).
+    /// Unconditionally poison the given blocks so every read dequantizes
+    /// to NaN (test hook; the debug-build free path routes through
+    /// here).  For `kv4` this is the reserved poison scale pattern —
+    /// NaN scale/zero — rather than a value fill.
     pub fn poison_blocks(&mut self, blocks: &[BlockId]) {
-        let stride = self.block_size * self.n_layers * self.d;
+        let rpb = self.rows_per_block();
         for &b in blocks {
             if b >= self.n_blocks {
                 continue; // never written -> nothing to poison
             }
-            let off = b * stride;
-            self.k[off..off + stride].fill(f32::NAN);
-            self.v[off..off + stride].fill(f32::NAN);
+            self.k.poison_rows(b * rpb, rpb, self.d);
+            self.v.poison_rows(b * rpb, rpb, self.d);
         }
     }
 }
@@ -198,20 +632,24 @@ mod tests {
         kv.write(&table, 1, 0, &rows(8, 1.5), &rows(8, -2.0));
         kv.write(&table, 5, 1, &rows(8, 3.0), &rows(8, 4.0));
         // pos 1 -> block table[0]=2 offset 1; pos 5 -> table[1]=0 offset 1
-        assert_eq!(kv.k_row(2, 1, 0), &rows(8, 1.5)[..]);
-        assert_eq!(kv.v_row(2, 1, 0), &rows(8, -2.0)[..]);
-        assert_eq!(kv.k_row(0, 1, 1), &rows(8, 3.0)[..]);
-        assert_eq!(kv.v_row(0, 1, 1), &rows(8, 4.0)[..]);
+        assert_eq!(kv.k_row(2, 1, 0), rows(8, 1.5));
+        assert_eq!(kv.v_row(2, 1, 0), rows(8, -2.0));
+        assert_eq!(kv.k_row(0, 1, 1), rows(8, 3.0));
+        assert_eq!(kv.v_row(0, 1, 1), rows(8, 4.0));
     }
 
     #[test]
     fn shared_block_is_shared_memory() {
-        let mut kv = PagedKvCache::new(4, 4, 1, 4);
-        let table_a = [1usize, 2];
-        let table_b = [1usize, 3]; // shares physical block 1 with a
-        kv.write(&table_a, 0, 0, &rows(4, 7.0), &rows(4, 8.0));
-        // Reading position 0 through b's table sees a's write.
-        assert_eq!(kv.k_row(table_b[0], 0, 0), &rows(4, 7.0)[..]);
+        for dtype in KvDtype::ALL {
+            let mut kv = PagedKvCache::with_dtype(4, 4, 1, 4, dtype);
+            let table_a = [1usize, 2];
+            let table_b = [1usize, 3]; // shares physical block 1 with a
+            kv.write(&table_a, 0, 0, &rows(4, 7.0), &rows(4, 8.0));
+            // Reading position 0 through b's table sees a's write —
+            // exactly, at every dtype (a constant row is exactly
+            // representable even at 4 bits).
+            assert_eq!(kv.k_row(table_b[0], 0, 0), rows(4, 7.0), "dtype {dtype}");
+        }
     }
 
     #[test]
@@ -220,47 +658,59 @@ mod tests {
         assert_eq!(kv.n_blocks(), 0);
         kv.write(&[5], 2, 0, &rows(4, 1.0), &rows(4, 2.0));
         assert!(kv.n_blocks() >= 6);
-        assert_eq!(kv.k_row(5, 2, 0), &rows(4, 1.0)[..]);
+        assert_eq!(kv.k_row(5, 2, 0), rows(4, 1.0));
         // earlier blocks exist and are zeroed
         assert!(kv.k_row(0, 0, 0).iter().all(|&x| x == 0.0));
     }
 
     #[test]
     fn poison_marks_freed_blocks_with_nan() {
-        let mut kv = PagedKvCache::new(2, 4, 2, 4);
-        kv.write(&[0], 0, 0, &rows(4, 1.0), &rows(4, 1.0));
-        kv.write(&[1], 0, 0, &rows(4, 2.0), &rows(4, 2.0));
-        kv.poison_blocks(&[0]);
-        assert!(kv.k_row(0, 0, 0).iter().all(|x| x.is_nan()), "freed block must read NaN");
-        assert!(kv.v_row(0, 0, 0).iter().all(|x| x.is_nan()));
-        // other blocks untouched
-        assert_eq!(kv.k_row(1, 0, 0), &rows(4, 2.0)[..]);
-        // ids past the pool are ignored, not a panic
-        kv.poison_blocks(&[99]);
+        for dtype in KvDtype::ALL {
+            let mut kv = PagedKvCache::with_dtype(2, 4, 2, 4, dtype);
+            kv.write(&[0], 0, 0, &rows(4, 1.0), &rows(4, 1.0));
+            kv.write(&[1], 0, 0, &rows(4, 2.0), &rows(4, 2.0));
+            kv.poison_blocks(&[0]);
+            assert!(
+                kv.k_row(0, 0, 0).iter().all(|x| x.is_nan()),
+                "freed block must read NaN under {dtype}"
+            );
+            assert!(kv.v_row(0, 0, 0).iter().all(|x| x.is_nan()));
+            // other blocks untouched
+            assert_eq!(kv.k_row(1, 0, 0), rows(4, 2.0));
+            // ids past the pool are ignored, not a panic
+            kv.poison_blocks(&[99]);
+        }
     }
 
     #[test]
     fn spill_restore_roundtrip_across_physical_blocks() {
-        let mut kv = PagedKvCache::new(4, 2, 2, 4);
-        let table = [3usize, 1];
-        for pos in 0..4 {
-            for layer in 0..2 {
-                let fill = (pos * 10 + layer) as f32;
-                kv.write(&table, pos, layer, &rows(4, fill), &rows(4, -fill));
+        for dtype in KvDtype::ALL {
+            let mut kv = PagedKvCache::with_dtype(4, 2, 2, 4, dtype);
+            let table = [3usize, 1];
+            for pos in 0..4 {
+                for layer in 0..2 {
+                    let fill = (pos * 10 + layer) as f32;
+                    kv.write(&table, pos, layer, &rows(4, fill), &rows(4, -fill));
+                }
             }
-        }
-        let (sk, sv) = kv.spill_blocks(&table);
-        // Swap-out: the old blocks are poisoned (freed), then the spill
-        // is restored at *different* physical blocks.
-        kv.poison_blocks(&table);
-        let new_table = [0usize, 2];
-        kv.restore_blocks(&new_table, &sk, &sv);
-        for pos in 0..4 {
-            for layer in 0..2 {
-                let fill = (pos * 10 + layer) as f32;
-                let (b, o) = (new_table[pos / 2], pos % 2);
-                assert_eq!(kv.k_row(b, o, layer), &rows(4, fill)[..], "pos {pos} layer {layer}");
-                assert_eq!(kv.v_row(b, o, layer), &rows(4, -fill)[..]);
+            let spill = kv.spill_blocks(&table);
+            assert_eq!(spill.dtype(), dtype);
+            assert_eq!(spill.n_blocks(), 2);
+            assert_eq!(spill.bytes(), dtype.block_bytes(2, 2, 4) * 2);
+            // Swap-out: the old blocks are poisoned (freed), then the
+            // spill is restored at *different* physical blocks.
+            kv.poison_blocks(&table);
+            let new_table = [0usize, 2];
+            kv.restore_blocks(&new_table, &spill);
+            for pos in 0..4 {
+                for layer in 0..2 {
+                    let fill = (pos * 10 + layer) as f32;
+                    let (b, o) = (new_table[pos / 2], pos % 2);
+                    // Restore moves packed bits: the round trip is exact
+                    // at every dtype (constant rows quantize exactly).
+                    assert_eq!(kv.k_row(b, o, layer), rows(4, fill), "{dtype} pos {pos} layer {layer}");
+                    assert_eq!(kv.v_row(b, o, layer), rows(4, -fill));
+                }
             }
         }
     }
@@ -270,14 +720,19 @@ mod tests {
         // The exact engine ordering: spill first, poison after — the
         // spilled copy must be NaN-free even though the source block is
         // poisoned before the restore happens.
-        let mut kv = PagedKvCache::new(2, 4, 1, 4);
-        kv.write(&[0], 1, 0, &rows(4, 5.0), &rows(4, 6.0));
-        let (sk, sv) = kv.spill_blocks(&[0]);
-        kv.release_blocks(&[0]); // debug builds poison here
-        kv.restore_blocks(&[1], &sk, &sv);
-        assert!(kv.k_row(1, 1, 0).iter().all(|x| x.is_finite()), "restored K must be NaN-free");
-        assert_eq!(kv.k_row(1, 1, 0), &rows(4, 5.0)[..]);
-        assert_eq!(kv.v_row(1, 1, 0), &rows(4, 6.0)[..]);
+        for dtype in KvDtype::ALL {
+            let mut kv = PagedKvCache::with_dtype(2, 4, 1, 4, dtype);
+            kv.write(&[0], 1, 0, &rows(4, 5.0), &rows(4, 6.0));
+            let spill = kv.spill_blocks(&[0]);
+            kv.release_blocks(&[0]); // debug builds poison here
+            kv.restore_blocks(&[1], &spill);
+            assert!(
+                kv.k_row(1, 1, 0).iter().all(|x| x.is_finite()),
+                "restored K must be NaN-free under {dtype}"
+            );
+            assert_eq!(kv.k_row(1, 1, 0), rows(4, 5.0));
+            assert_eq!(kv.v_row(1, 1, 0), rows(4, 6.0));
+        }
     }
 
     #[test]
@@ -285,11 +740,130 @@ mod tests {
         let kv = PagedKvCache::new(1, 2, 1, 2);
         // Block 7 is past the 1-block pool: allocated on paper, never
         // written — it spills as zeros instead of panicking.
-        let (sk, sv) = kv.spill_blocks(&[7]);
-        assert!(sk.iter().chain(&sv).all(|&x| x == 0.0));
+        let spill = kv.spill_blocks(&[7]);
         let mut kv2 = PagedKvCache::new(1, 2, 1, 2);
-        kv2.restore_blocks(&[5], &sk, &sv); // grows the pool on demand
+        kv2.restore_blocks(&[5], &spill); // grows the pool on demand
         assert!(kv2.n_blocks() >= 6);
         assert!(kv2.k_row(5, 0, 0).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "spill/pool dtype mismatch")]
+    fn restore_rejects_mismatched_dtype() {
+        let kv = PagedKvCache::with_dtype(1, 2, 1, 2, KvDtype::F16);
+        let spill = kv.spill_blocks(&[0]);
+        let mut f32_pool = PagedKvCache::new(1, 2, 1, 2);
+        f32_pool.restore_blocks(&[0], &spill);
+    }
+
+    #[test]
+    fn dtype_names_parse_and_roundtrip() {
+        for dtype in KvDtype::ALL {
+            assert_eq!(KvDtype::parse(dtype.name()), Some(dtype));
+            assert_eq!(KvDtype::parse(&dtype.name().to_ascii_uppercase()), Some(dtype));
+            assert_eq!(format!("{dtype}"), dtype.name());
+        }
+        assert_eq!(KvDtype::parse("int8"), None);
+    }
+
+    #[test]
+    fn bytes_accounting_is_dtype_aware() {
+        // d=64 rows: f32 256 B, f16 128 B (2x), kv4 40 B (6.4x) per side.
+        assert_eq!(KvDtype::F32.row_bytes(64), 256);
+        assert_eq!(KvDtype::F16.row_bytes(64), 128);
+        assert_eq!(KvDtype::Kv4.row_bytes(64), 40);
+        for dtype in KvDtype::ALL {
+            let kv = PagedKvCache::with_dtype(3, 4, 2, 64, dtype);
+            assert_eq!(kv.bytes(), 3 * dtype.block_bytes(4, 2, 64));
+            assert_eq!(kv.bytes_per_token(), 2 * 2 * dtype.row_bytes(64));
+        }
+        // The compression ratios the capacity bench gates.
+        let f32b = KvDtype::F32.block_bytes(16, 2, 64) as f64;
+        assert!(f32b / KvDtype::F16.block_bytes(16, 2, 64) as f64 >= 1.9);
+        assert!(f32b / KvDtype::Kv4.block_bytes(16, 2, 64) as f64 >= 3.5);
+    }
+
+    #[test]
+    fn f16_rows_roundtrip_representable_values_exactly() {
+        let mut kv = PagedKvCache::with_dtype(1, 2, 1, 4, KvDtype::F16);
+        // All exactly representable in binary16.
+        let vals = [1.5f32, -0.25, 1024.0, 0.0009765625];
+        kv.write(&[0], 0, 0, &vals, &vals);
+        assert_eq!(kv.k_row(0, 0, 0), vals.to_vec());
+        // A value needing rounding lands within half an ulp.
+        let fine = [0.1f32, 0.2, 0.3, 0.4];
+        kv.write(&[0], 1, 0, &fine, &fine);
+        for (got, want) in kv.k_row(0, 1, 0).iter().zip(&fine) {
+            assert!((got - want).abs() <= want.abs() * 1e-3, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn kv4_rows_quantize_within_scale_and_pin_extremes() {
+        let mut kv = PagedKvCache::with_dtype(1, 2, 1, 8, KvDtype::Kv4);
+        let vals = [-3.0f32, -1.0, 0.0, 0.5, 1.0, 2.0, 2.5, 3.0];
+        kv.write(&[0], 0, 0, &vals, &vals);
+        let got = kv.k_row(0, 0, 0);
+        // Affine 4-bit: error bounded by half a step; min/max exact.
+        let step = (3.0 - -3.0) / 15.0;
+        for (g, w) in got.iter().zip(&vals) {
+            assert!((g - w).abs() <= step / 2.0 + 1e-6, "{g} vs {w}");
+        }
+        assert_eq!(got[0], -3.0, "row min must be a code endpoint");
+        assert_eq!(got[7], 3.0, "row max must be a code endpoint");
+    }
+
+    #[test]
+    fn kv4_write_is_a_pure_function_of_the_row() {
+        // Write-once purity: the same row value always stores the same
+        // bits, regardless of what was in the cell before (requantize
+        // history must not exist — chunked-prefill parity rides on it).
+        let vals: Vec<f32> = (0..8).map(|i| (i as f32).sin()).collect();
+        let mut a = PagedKvCache::with_dtype(1, 2, 1, 8, KvDtype::Kv4);
+        a.write(&[0], 0, 0, &vals, &vals);
+        let mut b = PagedKvCache::with_dtype(1, 2, 1, 8, KvDtype::Kv4);
+        b.write(&[0], 0, 0, &rows(8, 1e6), &rows(8, -1e6)); // unrelated prior write
+        b.write(&[0], 0, 0, &vals, &vals);
+        assert_eq!(a.k_row(0, 0, 0), b.k_row(0, 0, 0));
+        assert_eq!(a.v_row(0, 0, 0), b.v_row(0, 0, 0));
+    }
+
+    #[test]
+    fn kv4_nan_input_stores_the_poison_pattern() {
+        let mut kv = PagedKvCache::with_dtype(1, 2, 1, 4, KvDtype::Kv4);
+        kv.write(&[0], 0, 0, &[1.0, f32::NAN, 2.0, 3.0], &rows(4, 1.0));
+        assert!(kv.k_row(0, 0, 0).iter().all(|x| x.is_nan()), "NaN rows must stay loud");
+        assert_eq!(kv.v_row(0, 0, 0), rows(4, 1.0), "the clean side is unaffected");
+    }
+
+    #[test]
+    fn block_tiles_match_row_reads() {
+        for dtype in KvDtype::ALL {
+            let mut kv = PagedKvCache::with_dtype(2, 4, 2, 8, KvDtype::F32);
+            let mut qkv = PagedKvCache::with_dtype(2, 4, 2, 8, dtype);
+            for pos in 0..8 {
+                for layer in 0..2 {
+                    let row: Vec<f32> =
+                        (0..8).map(|c| ((pos * 31 + layer * 7 + c) as f32 * 0.37).sin()).collect();
+                    kv.write(&[0, 1], pos, layer, &row, &row);
+                    qkv.write(&[0, 1], pos, layer, &row, &row);
+                }
+            }
+            let mut scratch = vec![0.0; qkv.tile_len()];
+            for blk in 0..2 {
+                for layer in 0..2 {
+                    let tile = qkv.k_block(blk, layer, &mut scratch).to_vec();
+                    for pb in 0..4 {
+                        assert_eq!(
+                            &tile[pb * 8..pb * 8 + 8],
+                            &qkv.k_row(blk, pb, layer)[..],
+                            "{dtype}: tile and row reads must agree (blk {blk} layer {layer} pb {pb})"
+                        );
+                    }
+                    let vtile = qkv.v_block(blk, layer, &mut scratch).to_vec();
+                    assert_eq!(&vtile[..8], &qkv.v_row(blk, 0, layer)[..]);
+                }
+            }
+        }
     }
 }

@@ -65,6 +65,16 @@ pub struct Metrics {
     pub swap_ins: usize,
     /// Tokens restored from spill rather than recomputed.
     pub swap_restored_tokens: usize,
+    /// Total **packed** bytes moved by swap-outs over the run (the
+    /// spill-traffic volume — shrinks with [`super::KvDtype`]).
+    pub swap_spilled_bytes: usize,
+    /// Bytes the paged K/V pool holds (both sides, all layers,
+    /// dtype-aware; 0 when the backend has no KV accounting).
+    pub kv_pool_bytes: usize,
+    /// Bytes one resident token costs across both sides and all layers.
+    pub kv_bytes_per_token: usize,
+    /// High-water mark of the host-side spill pool.
+    pub kv_spill_peak_bytes: usize,
 }
 
 impl Metrics {

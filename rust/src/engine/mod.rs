@@ -86,10 +86,10 @@ pub mod scheduler;
 pub mod sequence;
 pub mod tokenizer;
 
-pub use backend::{Backend, DecodeDesc, PrefillDesc, SimBackend, StepOutput};
+pub use backend::{Backend, DecodeDesc, KvStats, PrefillDesc, SimBackend, StepOutput};
 pub use block_manager::{BlockId, BlockManager};
 pub use cpu_backend::{CpuBackend, CpuModelConfig};
-pub use kv::PagedKvCache;
+pub use kv::{KvDtype, KvSpill, PagedKvCache};
 pub use engine::{Engine, EngineReport};
 pub use metrics::{Metrics, Quantiles};
 pub use request::{FinishReason, Request, RequestOutput, SamplingParams};
@@ -129,6 +129,13 @@ pub struct EngineConfig {
     /// testing); explicit field settings always win.  Victims with
     /// nothing materialized yet fall back to recompute either way.
     pub swap_preempt: bool,
+    /// Storage dtype of the paged KV pool (see [`kv::KvDtype`] and the
+    /// `engine::kv` module docs table): `F32` is bit-identical to the
+    /// pre-quantization cache; `F16`/`Kv4` shrink residency and spill
+    /// volume 2×/6.4× at a pinned logit-drift cost.  `OPT4GPTQ_KV`
+    /// overrides the *default* (`f32|f16|kv4|auto`, unknown values warn
+    /// once and fall back to `f32`); explicit field settings always win.
+    pub kv_dtype: KvDtype,
 }
 
 /// Default for [`EngineConfig::prefix_skip`]: enabled unless the
@@ -145,6 +152,31 @@ pub fn swap_preempt_default() -> bool {
     !matches!(std::env::var("OPT4GPTQ_SWAP").as_deref(), Ok("0"))
 }
 
+/// Default for [`EngineConfig::kv_dtype`]: `f32` unless `OPT4GPTQ_KV`
+/// names another dtype (the CI dtype-matrix hook, mirroring
+/// `OPT4GPTQ_KERNEL`).  Unset, empty, and `auto` mean `f32`; an
+/// unrecognized value warns once on stderr and falls back to `f32`
+/// rather than aborting (same graceful-fallback shape as the kernel
+/// dispatch override).
+pub fn kv_dtype_default() -> KvDtype {
+    match std::env::var("OPT4GPTQ_KV") {
+        Ok(raw) if !raw.is_empty() && raw != "auto" => match KvDtype::parse(&raw) {
+            Some(dtype) => dtype,
+            None => {
+                static WARNED: std::sync::OnceLock<()> = std::sync::OnceLock::new();
+                WARNED.get_or_init(|| {
+                    eprintln!(
+                        "opt4gptq: OPT4GPTQ_KV={raw:?} is not a KV dtype \
+                         (expected f32|f16|kv4|auto); falling back to f32"
+                    );
+                });
+                KvDtype::F32
+            }
+        },
+        _ => KvDtype::F32,
+    }
+}
+
 impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
@@ -155,6 +187,7 @@ impl Default for EngineConfig {
             prefill_budget: 512,
             prefix_skip: prefix_skip_default(),
             swap_preempt: swap_preempt_default(),
+            kv_dtype: kv_dtype_default(),
         }
     }
 }

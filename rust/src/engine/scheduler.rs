@@ -444,6 +444,7 @@ mod tests {
             // OPT4GPTQ_PREFIX_SKIP / OPT4GPTQ_SWAP env hatches.
             prefix_skip: true,
             swap_preempt: false,
+            kv_dtype: super::KvDtype::F32,
         }
     }
 
@@ -635,6 +636,7 @@ mod tests {
             prefill_budget: 32,
             prefix_skip: true,
             swap_preempt: false, // this test pins recompute semantics
+            kv_dtype: super::KvDtype::F32,
         });
         // Distinct prompt contents so the prefix cache cannot share blocks.
         let mut r0 = req(0, 7, 30);
@@ -691,6 +693,7 @@ mod tests {
             prefill_budget: 32,
             prefix_skip: true,
             swap_preempt: true,
+            kv_dtype: super::KvDtype::F32,
         });
         let mut r0 = req(0, 7, 30);
         r0.prompt = vec![1; 7];
@@ -736,6 +739,7 @@ mod tests {
             prefill_budget: 4,
             prefix_skip: true,
             swap_preempt: true,
+            kv_dtype: super::KvDtype::F32,
         });
         let mut r0 = req(0, 7, 30);
         r0.prompt = vec![1; 7];
@@ -801,6 +805,7 @@ mod tests {
             prefill_budget: 32,
             prefix_skip: true,
             swap_preempt: true,
+            kv_dtype: super::KvDtype::F32,
         });
         let mut r0 = req(0, 7, 30);
         r0.prompt = vec![1; 7];
@@ -836,6 +841,7 @@ mod tests {
                 prefill_budget: 32,
                 prefix_skip: true,
                 swap_preempt: false,
+                kv_dtype: super::KvDtype::F32,
             });
             let mut r0 = req(0, 7, 30);
             r0.prompt = vec![1; 7];

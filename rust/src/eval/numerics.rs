@@ -16,6 +16,7 @@
 //! seeded by the (config, call) pair — the honest simulator analogue of
 //! re-running the experiment on a machine whose schedule shifted.
 
+use crate::engine::{Backend, CpuBackend, CpuModelConfig, DecodeDesc, KvDtype, PrefillDesc};
 use crate::f16::{self, F16};
 use crate::gptq::{pack, QuantizedTensor};
 use crate::rng::{hash64, Rng};
@@ -117,6 +118,80 @@ pub fn gemv_f16_variant(
     out
 }
 
+/// Worst relative logit drift a compressed KV pool introduces on the CPU
+/// backend, against a bit-identical f32-pool run of the same workload
+/// (48-token prefill + 16 greedy decode steps, tokens chosen from the f32
+/// run so both backends always feed the same inputs).
+///
+/// The committed accuracy pins (asserted in this module's tests) are:
+///
+/// | dtype | pinned bound | expectation |
+/// |-------|--------------|-------------|
+/// | `f32` | exactly 0.0  | pool layout is internal; math unchanged |
+/// | `f16` | ≤ 1e-2       | ≤2^-11 per-element rounding, accumulated |
+/// | `kv4` | ≤ 0.35       | empirical: 4-bit affine KV on the tiny model |
+///
+/// Drift is `max_i |a_i - b_i| / max(max_i |a_i|, 1e-6)`, maximised over
+/// the prefill logits and every decode step's logits.
+pub fn kv_dtype_drift(dtype: KvDtype) -> f64 {
+    const BLOCK: usize = 16;
+    let backend = || CpuBackend::new(CpuModelConfig::default()).unwrap();
+    let mut base = backend();
+    base.bind_kv(8, BLOCK, KvDtype::F32);
+    let mut test = backend();
+    test.bind_kv(8, BLOCK, dtype);
+
+    let prompt: Vec<u32> = (0..48).map(|i| ((i * 29 + 7) % 256) as u32).collect();
+    let table: Vec<usize> = (0..5).collect(); // 80 positions: 48 + 16 decodes
+    let prefill = |be: &mut CpuBackend| {
+        be.prefill(PrefillDesc {
+            seq_id: 0,
+            tokens: &prompt,
+            start: 0,
+            is_last: true,
+            block_table: &table,
+        })
+        .unwrap()
+        .0
+    };
+    let rel_drift = |a: &[f32], b: &[f32]| -> f64 {
+        let denom = a.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6) as f64;
+        a.iter()
+            .zip(b)
+            .fold(0.0f64, |m, (x, y)| m.max((x - y).abs() as f64))
+            / denom
+    };
+    let argmax = |l: &[f32]| -> u32 {
+        let mut best = 0usize;
+        for (i, v) in l.iter().enumerate() {
+            if *v > l[best] {
+                best = i;
+            }
+        }
+        best as u32
+    };
+
+    let la = prefill(&mut base);
+    let lb = prefill(&mut test);
+    let mut worst = rel_drift(&la, &lb);
+    let mut ctx = prompt.len();
+    let mut token = argmax(&la);
+    for _ in 0..16 {
+        let step = |be: &mut CpuBackend| {
+            be.decode(&[DecodeDesc { seq_id: 0, context_len: ctx, token, block_table: &table }])
+                .unwrap()
+                .0
+                .remove(0)
+        };
+        let da = step(&mut base);
+        let db = step(&mut test);
+        worst = worst.max(rel_drift(&da, &db));
+        ctx += 1;
+        token = argmax(&da);
+    }
+    worst
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,6 +260,29 @@ mod tests {
         let a = gemv_f16_variant(&x, &q, crate::OptConfig::SMB, 1);
         let b = gemv_f16_variant(&x, &q, crate::OptConfig::SMB, 2);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn kv_dtype_drift_pins() {
+        // The committed accuracy pins of the quantized KV pool (see the
+        // table on `kv_dtype_drift`).  f32 is a layout change only, so it
+        // must be *exactly* zero — any nonzero drift means the tile walk
+        // reordered floating-point operations.
+        assert_eq!(kv_dtype_drift(KvDtype::F32), 0.0, "f32 pool must be bit-identical");
+        let f16 = kv_dtype_drift(KvDtype::F16);
+        assert!(f16 > 0.0, "f16 KV should measurably round");
+        assert!(f16 <= 1e-2, "f16 relative logit drift {f16} exceeds the 1e-2 pin");
+        let kv4 = kv_dtype_drift(KvDtype::Kv4);
+        assert!(kv4 >= f16, "4-bit KV ({kv4}) should drift at least as much as f16 ({f16})");
+        assert!(kv4 <= 0.35, "kv4 relative logit drift {kv4} exceeds the 0.35 pin");
+    }
+
+    #[test]
+    fn kv_dtype_drift_is_deterministic() {
+        // The harness drives both backends with tokens picked from the f32
+        // run, so repeated measurements are exactly reproducible — the pins
+        // above are stable numbers, not flaky samples.
+        assert_eq!(kv_dtype_drift(KvDtype::Kv4), kv_dtype_drift(KvDtype::Kv4));
     }
 
     #[test]

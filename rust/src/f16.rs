@@ -202,6 +202,37 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_all_bit_patterns_through_f32() {
+        // Exhaustive over every one of the 65536 bit patterns, through the
+        // *f32* conversion pair the KV pool uses (`to_f32` → `from_f32`):
+        // finite values (normals, subnormals, ±0) must round-trip to the
+        // identical bit pattern, ±inf must map to the canonical infinities,
+        // and every NaN encoding must come back as *some* NaN (payloads are
+        // canonicalised to 0x7E00, not preserved).
+        for bits in 0u16..=0xFFFF {
+            let h = F16(bits);
+            let x = h.to_f32();
+            let back = F16::from_f32(x);
+            if h.is_nan() {
+                assert!(x.is_nan(), "bits={bits:#06x} NaN decoded as {x}");
+                assert!(back.is_nan(), "bits={bits:#06x} NaN class lost");
+                assert_eq!(back.0, F16::NAN.0, "bits={bits:#06x} not canonicalised");
+            } else if h.is_infinite() {
+                assert!(x.is_infinite(), "bits={bits:#06x} decoded as {x}");
+                assert_eq!(x.is_sign_negative(), bits & 0x8000 != 0);
+                assert_eq!(back.0, bits, "bits={bits:#06x}");
+            } else {
+                assert!(x.is_finite(), "bits={bits:#06x} decoded as {x}");
+                // f32 has 24 mantissa bits and covers the full f16 exponent
+                // range, so the decode is exact — including subnormals.
+                assert_eq!(back.0, bits, "bits={bits:#06x} via {x}");
+                // Sign must survive even at zero (−0 keeps its bit).
+                assert_eq!(x.is_sign_negative(), bits & 0x8000 != 0, "bits={bits:#06x}");
+            }
+        }
+    }
+
+    #[test]
     fn known_encodings() {
         assert_eq!(F16::from_f64(1.0).0, 0x3C00);
         assert_eq!(F16::from_f64(-2.0).0, 0xC000);

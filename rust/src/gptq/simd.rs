@@ -275,6 +275,128 @@ pub fn active_kernel() -> Kernel {
     KernelDispatch::get().kernel
 }
 
+/// Process-wide binary16 slice converter, resolved once like
+/// [`KernelDispatch`]: the F16C `vcvtph2ps`/`vcvtps2ph` fast path when
+/// the host has it **and** the active kernel is vectorized, the
+/// software [`crate::f16::F16`] converter otherwise — so
+/// `OPT4GPTQ_KERNEL=scalar` forces the scalar converter too and the CI
+/// forced-kernel matrix sweeps both paths.  The two agree bitwise on
+/// every non-NaN value (NaNs stay NaNs but may differ in payload);
+/// pinned by `f16_slice_converters_match_software` below.
+struct F16Converter {
+    dequant: fn(&[u16], &mut [f32]),
+    quant: fn(&[f32], &mut [u16]),
+    name: &'static str,
+}
+
+static F16_CONVERTER: OnceLock<F16Converter> = OnceLock::new();
+
+fn f16_converter() -> &'static F16Converter {
+    F16_CONVERTER.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if active_kernel() != Kernel::Scalar && is_x86_feature_detected!("f16c") {
+                return F16Converter {
+                    dequant: f16c::dequant_slice,
+                    quant: f16c::quant_slice,
+                    name: "f16c",
+                };
+            }
+        }
+        F16Converter {
+            dequant: f16_dequant_scalar,
+            quant: f16_quant_scalar,
+            name: "scalar",
+        }
+    })
+}
+
+/// Name of the resolved binary16 converter (`"f16c"` or `"scalar"`).
+pub fn f16_converter_name() -> &'static str {
+    f16_converter().name
+}
+
+/// Convert a slice of IEEE binary16 bit patterns to f32 (the quantized
+/// KV cache's hot read path — one call per block tile, never a
+/// per-element scalar round-trip under a vector kernel).
+pub fn f16_dequant_slice(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "f16 dequant length mismatch");
+    (f16_converter().dequant)(src, dst)
+}
+
+/// Convert a slice of f32 values to IEEE binary16 bit patterns
+/// (round-to-nearest-even; the KV cache's append path).
+pub fn f16_quant_slice(src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len(), "f16 quant length mismatch");
+    (f16_converter().quant)(src, dst)
+}
+
+/// Software converter half of the dispatch (also the sub-octet tail of
+/// the F16C path).
+fn f16_dequant_scalar(src: &[u16], dst: &mut [f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = crate::f16::F16(s).to_f32();
+    }
+}
+
+fn f16_quant_scalar(src: &[f32], dst: &mut [u16]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = crate::f16::F16::from_f32(s).0;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod f16c {
+    use std::arch::x86_64::*;
+
+    pub(super) fn dequant_slice(src: &[u16], dst: &mut [f32]) {
+        assert!(
+            is_x86_feature_detected!("f16c"),
+            "F16C converter dispatched on a host without f16c"
+        );
+        // SAFETY: F16C presence asserted above.
+        unsafe { dequant_impl(src, dst) }
+    }
+
+    pub(super) fn quant_slice(src: &[f32], dst: &mut [u16]) {
+        assert!(
+            is_x86_feature_detected!("f16c"),
+            "F16C converter dispatched on a host without f16c"
+        );
+        // SAFETY: F16C presence asserted above.
+        unsafe { quant_impl(src, dst) }
+    }
+
+    /// # Safety
+    /// Caller must have verified F16C at runtime; `src.len() == dst.len()`.
+    #[target_feature(enable = "f16c")]
+    unsafe fn dequant_impl(src: &[u16], dst: &mut [f32]) {
+        let n8 = src.len() / 8 * 8;
+        let mut i = 0;
+        while i < n8 {
+            let h = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_cvtph_ps(h));
+            i += 8;
+        }
+        super::f16_dequant_scalar(&src[n8..], &mut dst[n8..]);
+    }
+
+    /// # Safety
+    /// Caller must have verified F16C at runtime; `src.len() == dst.len()`.
+    #[target_feature(enable = "f16c")]
+    unsafe fn quant_impl(src: &[f32], dst: &mut [u16]) {
+        let n8 = src.len() / 8 * 8;
+        let mut i = 0;
+        while i < n8 {
+            let v = _mm256_loadu_ps(src.as_ptr().add(i));
+            let h = _mm256_cvtps_ph::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(v);
+            _mm_storeu_si128(dst.as_mut_ptr().add(i) as *mut __m128i, h);
+            i += 8;
+        }
+        super::f16_quant_scalar(&src[n8..], &mut dst[n8..]);
+    }
+}
+
 /// AVX2+FMA panel kernel: same contract as `fused::fused_panel_cols`
 /// (column window `[c0, c0+cn)` of one gathered M-block, `out` a zeroed
 /// `[mb, cn]` window), plus an optional swizzled weight view for aligned
@@ -869,6 +991,73 @@ mod tests {
         for kernel in [Kernel::Scalar, Kernel::Avx2, Kernel::Avx512] {
             assert_eq!(kernel.info().kernel, kernel);
             assert_eq!(kernel.col_align(), kernel.swizzle_width().unwrap_or(NIBBLES_PER_WORD));
+        }
+    }
+
+    #[test]
+    fn f16_slice_converters_match_software() {
+        // Dequant: every one of the 65536 bit patterns must agree with
+        // the software converter bitwise (NaNs: class only — hardware
+        // preserves payloads, software canonicalizes).
+        let src: Vec<u16> = (0..=u16::MAX).collect();
+        let mut dst = vec![0f32; src.len()];
+        f16_dequant_slice(&src, &mut dst);
+        for (i, &x) in dst.iter().enumerate() {
+            let sw = crate::f16::F16(i as u16).to_f32();
+            if sw.is_nan() {
+                assert!(x.is_nan(), "pattern {i:#06x} must dequantize to NaN");
+            } else {
+                assert_eq!(
+                    x.to_bits(),
+                    sw.to_bits(),
+                    "pattern {i:#06x}: dispatched {x} vs software {sw}"
+                );
+            }
+        }
+        // Quant: every exactly-representable value round-trips to its
+        // own bit pattern; rounding behavior on arbitrary f32s matches
+        // the software converter (single RNE, overflow >= 65520 -> inf).
+        let mut back = vec![0u16; dst.len()];
+        f16_quant_slice(&dst, &mut back);
+        for (i, &b) in back.iter().enumerate() {
+            let h = crate::f16::F16(i as u16);
+            if h.is_nan() {
+                assert!(crate::f16::F16(b).is_nan());
+            } else {
+                assert_eq!(b, i as u16, "pattern {i:#06x} failed the quant round-trip");
+            }
+        }
+        let mut rng = crate::rng::Rng::new(0xf16c);
+        let mut vals = rng.normal_vec_f32(4096, 100.0);
+        vals.extend_from_slice(&[
+            0.0,
+            -0.0,
+            65519.9,
+            65520.0,
+            -65520.0,
+            1e-8,
+            -1e-8,
+            6.1e-5, // around the subnormal boundary
+            f32::MAX,
+            f32::MIN,
+        ]);
+        let mut dispatched = vec![0u16; vals.len()];
+        f16_quant_slice(&vals, &mut dispatched);
+        for (&x, &got) in vals.iter().zip(&dispatched) {
+            let sw = crate::f16::F16::from_f32(x).0;
+            assert_eq!(got, sw, "quant({x}) = {got:#06x}, software says {sw:#06x}");
+        }
+    }
+
+    #[test]
+    fn f16_converter_resolution_is_stable() {
+        let name = f16_converter_name();
+        assert!(matches!(name, "f16c" | "scalar"));
+        assert_eq!(f16_converter_name(), name, "resolution must be process-wide");
+        // Under scalar kernel dispatch the converter must be scalar too
+        // (the forced-kernel CI matrix relies on this coupling).
+        if active_kernel() == Kernel::Scalar {
+            assert_eq!(name, "scalar");
         }
     }
 

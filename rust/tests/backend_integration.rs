@@ -175,7 +175,7 @@ fn prefix_sharing_is_physical_and_bit_exact() {
     let block_size = 16;
     let mut bm = BlockManager::new(64, block_size);
     let mut be = cpu_backend();
-    be.bind_kv(64, block_size);
+    be.bind_kv(64, block_size, opt4gptq::engine::kv_dtype_default());
 
     // 36 tokens: two full (shareable) blocks + a private tail block.
     let prompt: Vec<u32> = (0..36).map(|i| ((i * 13 + 5) % 256) as u32).collect();
@@ -202,7 +202,7 @@ fn prefix_sharing_is_physical_and_bit_exact() {
     let (l2, _) =
         be.prefill(PrefillDesc { seq_id: 2, tokens: &prompt, start: 0, is_last: true, block_table: &t2 }).unwrap();
     let mut fresh = cpu_backend();
-    fresh.bind_kv(64, block_size);
+    fresh.bind_kv(64, block_size, opt4gptq::engine::kv_dtype_default());
     let fresh_table: Vec<usize> = (10..13).collect();
     let (oracle, _) = fresh
         .prefill(PrefillDesc { seq_id: 9, tokens: &prompt, start: 0, is_last: true, block_table: &fresh_table })

@@ -112,6 +112,7 @@ fn pjrt_generation_is_deterministic() {
                 prefill_budget: 4096,
                 prefix_skip: false,
                 swap_preempt: false,
+                kv_dtype: opt4gptq::engine::KvDtype::F32,
             },
             backend,
         );

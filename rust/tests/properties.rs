@@ -15,7 +15,7 @@
 //!   and leaks no KV blocks after draining.
 
 use opt4gptq::engine::block_manager::BlockManager;
-use opt4gptq::engine::{Engine, EngineConfig, Request, SamplingParams, SimBackend};
+use opt4gptq::engine::{Engine, EngineConfig, KvDtype, Request, SamplingParams, SimBackend};
 use opt4gptq::f16::{self, F16};
 use opt4gptq::gptq::{pack, quantize_rtn, Matrix};
 use opt4gptq::models::by_name;
@@ -264,6 +264,10 @@ fn prop_trace_replay_matches_serial() {
             let total_blocks = r.range_usize(7, 40);
             let prefill_budget = r.range_usize(1, 24);
             let swap = r.below(2) == 0;
+            // Random KV dtype per case, applied to BOTH engines: replay
+            // parity must hold at every pool dtype (the sim backend's
+            // spill pricing changes with it, its logits do not).
+            let kv_dtype = KvDtype::ALL[r.range_usize(0, KvDtype::ALL.len() - 1)];
             let reqs: Vec<(usize, usize, i32, f64)> = (0..n_req)
                 .map(|_| {
                     let plen = r.range_usize(1, 12);
@@ -274,9 +278,9 @@ fn prop_trace_replay_matches_serial() {
                     (plen, gen, priority, arrival)
                 })
                 .collect();
-            (max_batch, total_blocks, prefill_budget, swap, reqs)
+            (max_batch, total_blocks, prefill_budget, swap, kv_dtype, reqs)
         },
-        |(max_batch, total_blocks, prefill_budget, swap, reqs)| {
+        |(max_batch, total_blocks, prefill_budget, swap, kv_dtype, reqs)| {
             let mk_req = |i: usize, plen: usize, gen: usize, priority: i32, arrival: f64| {
                 // Distinct per-request prompts: prefix sharing may still
                 // occur on accidental overlaps, which is the point.
@@ -307,6 +311,7 @@ fn prop_trace_replay_matches_serial() {
                     prefill_budget: *prefill_budget,
                     prefix_skip: true,
                     swap_preempt: *swap,
+                    kv_dtype: *kv_dtype,
                 },
                 SimBackend::new(
                     by_name("Qwen1.5-1.8B-Chat-GPTQ-Int4").unwrap(),
@@ -343,6 +348,7 @@ fn prop_trace_replay_matches_serial() {
                         prefill_budget: 64,
                         prefix_skip: true,
                         swap_preempt: false,
+                        kv_dtype: *kv_dtype,
                     },
                     SimBackend::new(
                         by_name("Qwen1.5-1.8B-Chat-GPTQ-Int4").unwrap(),
