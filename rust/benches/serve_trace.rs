@@ -62,6 +62,10 @@ fn run(
             prefix_skip: true,
             swap_preempt,
             kv_dtype,
+            max_waiting: usize::MAX,
+            // Pinned fault-free: this is a performance benchmark; an
+            // env-injected fault plan would poison the gated numbers.
+            faults: opt4gptq::engine::FaultPlan::NONE,
         },
         SimBackend::new(model, OptConfig::OPT4GPTQ, MAX_BATCH),
     );

@@ -44,7 +44,47 @@ use crate::OptConfig;
 use crate::Result;
 
 use super::block_manager::BlockId;
-use super::kv::KvDtype;
+use super::kv::{KvDtype, PagedKvCache};
+
+/// A typed failure from a backend seam ([`Backend::step`],
+/// [`Backend::swap_out`], [`Backend::swap_in`]) — the error contract the
+/// engine's retry/shed/fail lifecycle is built on.  The discriminant is
+/// the recovery policy:
+///
+/// * `Transient` — the step may succeed if re-driven: the engine discards
+///   the failed step's partial output, preempts the batch through the
+///   normal swap/recompute machinery and retries with bounded backoff.
+/// * `Permanent` — retrying is pointless: every sequence scheduled into
+///   the failed call resolves as [`super::RequestOutcome::Failed`] (with
+///   full block/spill reclamation) and the engine keeps serving the rest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StepError {
+    Transient(String),
+    Permanent(String),
+}
+
+impl StepError {
+    pub fn is_transient(&self) -> bool {
+        matches!(self, StepError::Transient(_))
+    }
+
+    pub fn reason(&self) -> &str {
+        match self {
+            StepError::Transient(r) | StepError::Permanent(r) => r,
+        }
+    }
+}
+
+impl std::fmt::Display for StepError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StepError::Transient(r) => write!(f, "transient backend error: {r}"),
+            StepError::Permanent(r) => write!(f, "permanent backend error: {r}"),
+        }
+    }
+}
+
+impl std::error::Error for StepError {}
 
 /// KV-memory accounting a backend can surface after a run (see
 /// [`Backend::kv_stats`]): how many bytes the paged pool holds, what one
@@ -139,11 +179,16 @@ pub trait Backend {
     /// in a single call (backends fold them into one forward pass, so
     /// prefill chunks keep the fused GEMM at M ≫ 1 while decodes ride
     /// along).  Either slice may be empty, but not both.
+    ///
+    /// Errors are typed ([`StepError`]): `Transient` failures are retried
+    /// by the engine after re-driving the preemption machinery, so a
+    /// failing backend MUST NOT have committed partial K/V or clock state
+    /// for the batch — fail before mutating, or roll back.
     fn step(
         &mut self,
         prefills: &[PrefillDesc<'_>],
         decodes: &[DecodeDesc<'_>],
-    ) -> Result<StepOutput>;
+    ) -> Result<StepOutput, StepError>;
 
     /// Convenience: run one whole-prompt (or final-chunk) prefill alone;
     /// returns (next-token logits, elapsed seconds).  The descriptor
@@ -179,17 +224,36 @@ pub trait Backend {
     /// [`Backend::release_blocks`] — the data is still intact when the
     /// copy runs.  Returns the **packed** payload size in bytes (spill
     /// volume shrinks with the KV dtype); backends without physical K/V
-    /// may return a virtual size, or 0 to opt out of the accounting.
-    fn swap_out(&mut self, _seq_id: usize, _blocks: &[BlockId]) -> usize {
-        0
+    /// may return a virtual size, or 0 to opt out of the accounting.  On
+    /// `Err` no spill entry may exist for `seq_id` afterwards — the
+    /// engine demotes the victim to a recompute preemption instead.
+    fn swap_out(&mut self, _seq_id: usize, _blocks: &[BlockId]) -> Result<usize, StepError> {
+        Ok(0)
     }
 
     /// A swapped-out sequence is resuming on freshly-allocated `blocks`
     /// (same table order, different physical ids): restore its spilled
     /// K/V before the step that resumes it executes.  The spill entry is
     /// consumed; [`Backend::release_seq`] drops it for sequences that
-    /// finish (or are rejected) while still swapped out.
-    fn swap_in(&mut self, _seq_id: usize, _blocks: &[BlockId]) {}
+    /// finish (or are rejected) while still swapped out.  On `Err` the
+    /// restore did not happen — the engine drops the (now unusable)
+    /// spill entry via [`Backend::drop_spill`] and demotes the sequence
+    /// to recompute.
+    fn swap_in(&mut self, _seq_id: usize, _blocks: &[BlockId]) -> Result<(), StepError> {
+        Ok(())
+    }
+
+    /// Discard a spill entry without restoring it (failed restore,
+    /// cancelled swapped-out sequence).  Idempotent; backends without a
+    /// spill pool ignore it.
+    fn drop_spill(&mut self, _seq_id: usize) {}
+
+    /// The physical paged K/V pool, for backends that own one — lets the
+    /// post-drain auditor cross-check the pool's free blocks against the
+    /// block manager's free list.  `None` for virtual backends.
+    fn paged_kv(&self) -> Option<&PagedKvCache> {
+        None
+    }
 
     /// KV-memory accounting, if this backend tracks it: pool bytes,
     /// bytes per resident token, and spill volume (see [`KvStats`]).
@@ -282,7 +346,7 @@ impl Backend for SimBackend {
         self.spill_peak_bytes = 0;
     }
 
-    fn swap_out(&mut self, seq_id: usize, blocks: &[BlockId]) -> usize {
+    fn swap_out(&mut self, seq_id: usize, blocks: &[BlockId]) -> Result<usize, StepError> {
         // Price the packed payload at the *paper model's* KV width — the
         // simulation has no pool, but the bytes a real swap-out of these
         // blocks would move are fully determined by the geometry.
@@ -293,19 +357,24 @@ impl Backend for SimBackend {
         }
         self.spill_bytes += bytes;
         self.spill_peak_bytes = self.spill_peak_bytes.max(self.spill_bytes);
-        bytes
+        Ok(bytes)
     }
 
-    fn swap_in(&mut self, seq_id: usize, _blocks: &[BlockId]) {
+    fn swap_in(&mut self, seq_id: usize, _blocks: &[BlockId]) -> Result<(), StepError> {
+        if let Some(bytes) = self.spill_sizes.remove(&seq_id) {
+            self.spill_bytes -= bytes;
+        }
+        Ok(())
+    }
+
+    fn drop_spill(&mut self, seq_id: usize) {
         if let Some(bytes) = self.spill_sizes.remove(&seq_id) {
             self.spill_bytes -= bytes;
         }
     }
 
     fn release_seq(&mut self, seq_id: usize) {
-        if let Some(bytes) = self.spill_sizes.remove(&seq_id) {
-            self.spill_bytes -= bytes;
-        }
+        self.drop_spill(seq_id);
     }
 
     fn kv_stats(&self) -> Option<KvStats> {
@@ -322,7 +391,7 @@ impl Backend for SimBackend {
         &mut self,
         prefills: &[PrefillDesc<'_>],
         decodes: &[DecodeDesc<'_>],
-    ) -> Result<StepOutput> {
+    ) -> Result<StepOutput, StepError> {
         assert!(!prefills.is_empty() || !decodes.is_empty(), "empty backend step");
         let mut secs = 0.0;
         // Each chunk is priced independently as the *incremental* cost of
@@ -459,20 +528,20 @@ mod tests {
         for dtype in KvDtype::ALL {
             let mut b = SimBackend::new(m, OptConfig::OPT4GPTQ, 8);
             b.bind_kv(64, 16, dtype);
-            let bytes = b.swap_out(7, &blocks);
+            let bytes = b.swap_out(7, &blocks).unwrap();
             assert_eq!(bytes, 3 * dtype.block_bytes(16, m.n_layers, m.kv_dim()));
             let stats = b.kv_stats().unwrap();
             assert_eq!(stats.spill_bytes, bytes);
             assert_eq!(stats.spill_peak_bytes, bytes);
             assert_eq!(stats.pool_bytes, 64 * dtype.block_bytes(16, m.n_layers, m.kv_dim()));
             // Swap-in consumes the entry; the peak stays.
-            b.swap_in(7, &blocks);
+            b.swap_in(7, &blocks).unwrap();
             let drained = b.kv_stats().unwrap();
             assert_eq!(drained.spill_bytes, 0);
             assert_eq!(drained.spill_peak_bytes, bytes);
             // A re-swap of the same seq replaces, not double-counts.
-            b.swap_out(7, &blocks[..2]);
-            b.swap_out(7, &blocks);
+            b.swap_out(7, &blocks[..2]).unwrap();
+            b.swap_out(7, &blocks).unwrap();
             assert_eq!(b.kv_stats().unwrap().spill_bytes, bytes);
             b.release_seq(7);
             assert_eq!(b.kv_stats().unwrap().spill_bytes, 0);
@@ -480,6 +549,19 @@ mod tests {
         }
         // Spill volume shrinks with the dtype: f32 > f16 > kv4.
         assert!(sizes[0] > sizes[1] && sizes[1] > sizes[2], "{sizes:?}");
+    }
+
+    #[test]
+    fn step_error_classifies_and_converts() {
+        let t = StepError::Transient("dma stall".into());
+        let p = StepError::Permanent("ecc fault".into());
+        assert!(t.is_transient() && !p.is_transient());
+        assert_eq!(t.reason(), "dma stall");
+        // `?` in the conveniences relies on the anyhow conversion; the
+        // engine recovers the typed error by downcast.
+        let any: anyhow::Error = p.clone().into();
+        assert_eq!(any.downcast_ref::<StepError>(), Some(&p));
+        assert!(any.to_string().contains("permanent"));
     }
 
     #[test]

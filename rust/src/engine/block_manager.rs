@@ -337,6 +337,56 @@ impl BlockManager {
         self.tables.get(&seq_id).map(|t| t.as_slice())
     }
 
+    /// Blocks currently free — the post-drain auditor cross-checks these
+    /// ids against the paged pool's poison state.
+    pub fn free_list(&self) -> &[BlockId] {
+        &self.free
+    }
+
+    /// Forget a swap-out whose spill write failed: the sequence is no
+    /// longer swapped (its K/V is gone; the caller demotes it to a
+    /// recompute preemption — the blocks themselves were already freed
+    /// by [`BlockManager::swap_out`]).  Returns false when the sequence
+    /// was not swapped.
+    pub fn abort_swap(&mut self, seq_id: usize) -> bool {
+        self.swapped.remove(&seq_id).is_some()
+    }
+
+    /// End-of-run audit: after the engine drains, no sequence may hold a
+    /// block table or a spill reservation, every block must be back on
+    /// the free list, and every release/swap log must have been
+    /// forwarded to the backend.  Includes the full
+    /// [`BlockManager::check_invariants`] pass.
+    pub fn assert_drained(&self) -> Result<(), String> {
+        self.check_invariants()?;
+        if !self.tables.is_empty() {
+            let mut ids: Vec<_> = self.tables.keys().copied().collect();
+            ids.sort_unstable();
+            return Err(format!("leaked block tables for sequences {ids:?}"));
+        }
+        if !self.swapped.is_empty() {
+            let mut ids: Vec<_> = self.swapped.keys().copied().collect();
+            ids.sort_unstable();
+            return Err(format!("leaked spill reservations for sequences {ids:?}"));
+        }
+        if self.free.len() != self.blocks.len() {
+            return Err(format!(
+                "{} of {} blocks leaked (free list holds {})",
+                self.blocks.len() - self.free.len(),
+                self.blocks.len(),
+                self.free.len()
+            ));
+        }
+        if !self.freed_log.is_empty()
+            || !self.released_seqs.is_empty()
+            || !self.swap_out_log.is_empty()
+            || !self.swap_in_log.is_empty()
+        {
+            return Err("undrained release/swap logs".into());
+        }
+        Ok(())
+    }
+
     /// Invariant check used by property tests: refcounts, free list and
     /// tables must be mutually consistent.
     pub fn check_invariants(&self) -> Result<(), String> {
@@ -724,6 +774,42 @@ mod tests {
         assert!(bm.swap_in(2, 8));
         assert_ne!(bm.table(1).unwrap(), bm.table(2).unwrap(), "restored table is private");
         bm.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn abort_swap_forgets_the_spill_reservation() {
+        let mut bm = BlockManager::new(4, 4);
+        assert!(bm.allocate(1, &[1, 2, 3, 4]).is_some());
+        bm.swap_out(1);
+        assert!(bm.abort_swap(1), "swapped seq must be abortable");
+        assert!(!bm.is_swapped(1));
+        assert!(!bm.can_swap_in(1, 4), "aborted swap cannot be restored");
+        assert!(!bm.abort_swap(1), "abort is not repeatable");
+        bm.take_swap_outs();
+        bm.take_released();
+        bm.assert_drained().unwrap();
+    }
+
+    #[test]
+    fn assert_drained_catches_every_leak_class() {
+        // Clean pool drains.
+        let mut bm = BlockManager::new(4, 4);
+        bm.assert_drained().unwrap();
+        // A live table is a leak.
+        assert!(bm.allocate(1, &[1, 2, 3]).is_some());
+        assert!(bm.assert_drained().unwrap_err().contains("block tables"));
+        // A spill reservation is a leak.
+        bm.swap_out(1);
+        bm.take_swap_outs();
+        bm.take_released();
+        assert!(bm.assert_drained().unwrap_err().contains("spill reservations"));
+        // An unforwarded log is a leak.
+        assert!(bm.swap_in(1, 3));
+        bm.free_sequence(1);
+        assert!(bm.assert_drained().unwrap_err().contains("undrained"));
+        bm.take_swap_ins();
+        bm.take_released();
+        bm.assert_drained().unwrap();
     }
 
     #[test]

@@ -47,7 +47,7 @@ use crate::gptq::{
 use crate::rng::Rng;
 use crate::Result;
 
-use super::backend::{Backend, DecodeDesc, KvStats, PrefillDesc, StepOutput};
+use super::backend::{Backend, DecodeDesc, KvStats, PrefillDesc, StepError, StepOutput};
 use super::block_manager::BlockId;
 use super::kv::{KvDtype, KvSpill, PagedKvCache};
 
@@ -382,14 +382,14 @@ impl Backend for CpuBackend {
         &mut self,
         prefills: &[PrefillDesc<'_>],
         decodes: &[DecodeDesc<'_>],
-    ) -> Result<StepOutput> {
+    ) -> Result<StepOutput, StepError> {
         let t0 = Instant::now();
         if prefills.is_empty() && decodes.is_empty() {
-            bail!("empty backend step");
+            return Err(StepError::Permanent("empty backend step".into()));
         }
         for p in prefills {
             if p.tokens.is_empty() {
-                bail!("cannot prefill an empty chunk");
+                return Err(StepError::Permanent("cannot prefill an empty chunk".into()));
             }
         }
         // One forward pass over everything: prefill chunks (each starting
@@ -404,7 +404,11 @@ impl Backend for CpuBackend {
         for (e, tok) in decodes.iter().zip(&fed) {
             spans.push(SeqSpan { table: e.block_table, start: e.context_len, tokens: tok });
         }
-        let hidden = self.forward(&spans)?;
+        // Validation/shape failures are non-retryable by construction —
+        // the same descriptors would fail again (forward fails *before*
+        // writing any K/V, so a Permanent step never half-mutates the
+        // pool).
+        let hidden = self.forward(&spans).map_err(|e| StepError::Permanent(e.to_string()))?;
 
         // lm_head only for rows that produce logits: the last token of
         // every final chunk plus every decode row — batched into one
@@ -460,12 +464,16 @@ impl Backend for CpuBackend {
     fn release_seq(&mut self, seq_id: usize) {
         // A sequence that finished (or was rejected) while swapped out
         // never swaps back in; drop its spill.
+        self.drop_spill(seq_id);
+    }
+
+    fn drop_spill(&mut self, seq_id: usize) {
         if let Some(old) = self.spill.remove(&seq_id) {
             self.spill_bytes -= old.bytes();
         }
     }
 
-    fn swap_out(&mut self, seq_id: usize, blocks: &[BlockId]) -> usize {
+    fn swap_out(&mut self, seq_id: usize, blocks: &[BlockId]) -> Result<usize, StepError> {
         // Runs before release_blocks poisons these ids (engine drain
         // order), so the copy reads intact K/V — still packed, so the
         // bytes moved shrink with the pool dtype.
@@ -476,13 +484,20 @@ impl Backend for CpuBackend {
         }
         self.spill_bytes += bytes;
         self.spill_peak_bytes = self.spill_peak_bytes.max(self.spill_bytes);
-        bytes
+        Ok(bytes)
     }
 
-    fn swap_in(&mut self, seq_id: usize, blocks: &[BlockId]) {
-        let spill = self.spill.remove(&seq_id).expect("swap_in without spill");
+    fn swap_in(&mut self, seq_id: usize, blocks: &[BlockId]) -> Result<(), StepError> {
+        let spill = self.spill.remove(&seq_id).ok_or_else(|| {
+            StepError::Permanent(format!("swap_in for seq {seq_id} without a spill entry"))
+        })?;
         self.spill_bytes -= spill.bytes();
         self.kv.restore_blocks(blocks, &spill);
+        Ok(())
+    }
+
+    fn paged_kv(&self) -> Option<&PagedKvCache> {
+        Some(&self.kv)
     }
 
     fn kv_stats(&self) -> Option<KvStats> {
@@ -877,11 +892,11 @@ mod tests {
             let mut b = backend();
             b.bind_kv(8, DEFAULT_BLOCK_SIZE, dtype);
             b.prefill(prefill_desc(&prompt, &[0, 1])).unwrap();
-            let bytes = b.swap_out(0, &[0, 1]);
+            let bytes = b.swap_out(0, &[0, 1]).unwrap();
             assert_eq!(bytes, 2 * dtype.block_bytes(DEFAULT_BLOCK_SIZE, 2, 64));
             assert_eq!(b.kv_stats().unwrap().spill_bytes, bytes);
             b.release_blocks(&[0, 1]); // poison the originals
-            b.swap_in(0, &[3, 5]); // restore elsewhere
+            b.swap_in(0, &[3, 5]).unwrap(); // restore elsewhere
             assert_eq!(b.kv_stats().unwrap().spill_bytes, 0);
             assert_eq!(b.kv_stats().unwrap().spill_peak_bytes, bytes);
             let (got, _) = b
@@ -889,6 +904,22 @@ mod tests {
                 .unwrap();
             assert_eq!(got[0], want[0], "{dtype}: swap round trip must be invisible");
         }
+    }
+
+    #[test]
+    fn swap_in_without_spill_is_a_typed_error() {
+        let mut be = backend();
+        be.bind_kv(8, DEFAULT_BLOCK_SIZE, KvDtype::F32);
+        let err = be.swap_in(42, &[0]).unwrap_err();
+        assert!(!err.is_transient(), "missing spill is not retryable");
+        // drop_spill is idempotent and zeroes the accounting.
+        be.prefill(prefill_desc(&[1, 2, 3], &[0])).unwrap();
+        be.swap_out(0, &[0]).unwrap();
+        assert!(be.kv_stats().unwrap().spill_bytes > 0);
+        be.drop_spill(0);
+        be.drop_spill(0);
+        assert_eq!(be.kv_stats().unwrap().spill_bytes, 0);
+        assert!(be.swap_in(0, &[1]).is_err(), "dropped spill cannot be restored");
     }
 
     #[test]

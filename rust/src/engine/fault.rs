@@ -1,0 +1,355 @@
+//! Deterministic, seeded fault injection at the engine↔backend seams.
+//!
+//! A [`FaultPlan`] names a seed and a per-seam probability; a
+//! [`FaultSchedule`] turns it into replayable injection decisions: each
+//! seam keeps a draw counter, and draw `i` at seam `s` is a pure
+//! function of `(seed, s, i)` — re-running the same engine
+//! configuration over the same workload replays the exact same faults,
+//! independent of wall time and of every other RNG stream in the
+//! process (request sampling streams are never touched, which is what
+//! keeps completed-request tokens bit-identical to a fault-free run).
+//!
+//! The five seams (see the table in `engine/mod.rs`):
+//!
+//! | seam            | injects                                    | recovery                         |
+//! |-----------------|--------------------------------------------|----------------------------------|
+//! | `StepTransient` | `Backend::step` fails retryably            | bounded backoff + preempt/retry  |
+//! | `StepPermanent` | `Backend::step` fails terminally           | batch resolves `Failed`          |
+//! | `SpillOut`      | swap-out spill write fails                 | demote to discard-and-recompute  |
+//! | `SpillIn`       | swap-in restore fails                      | drop spill, recompute from zero  |
+//! | `Alloc`         | block allocation / append refused          | defer admission / preempt self   |
+//!
+//! Faults are injected *engine-side*, before the backend call they
+//! model would run, so backend state (the paged pool, the spill map,
+//! the virtual clock) is never half-mutated by a failed operation.
+//!
+//! The default plan comes from `OPT4GPTQ_FAULTS` (resolved through
+//! [`crate::envcfg`], warn-once like every other override) with spec
+//! syntax `seed=42,step=0.05,step_perm=0.01,spill_out=0.1,spill_in=0.1,alloc=0.05`
+//! — every key optional, unknown keys rejected.
+
+use std::sync::OnceLock;
+
+use crate::envcfg::{self, EnvOverride};
+use crate::rng::Rng;
+
+/// One engine↔backend seam a fault can fire at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSeam {
+    /// `Backend::step` returns a retryable [`StepError::Transient`](super::StepError).
+    StepTransient,
+    /// `Backend::step` returns a terminal [`StepError::Permanent`](super::StepError).
+    StepPermanent,
+    /// A swap-out spill write fails before any payload moves.
+    SpillOut,
+    /// A swap-in restore fails before any payload moves.
+    SpillIn,
+    /// A block allocation (admission headroom or decode append) is refused.
+    Alloc,
+}
+
+impl FaultSeam {
+    const ALL: [FaultSeam; 5] = [
+        FaultSeam::StepTransient,
+        FaultSeam::StepPermanent,
+        FaultSeam::SpillOut,
+        FaultSeam::SpillIn,
+        FaultSeam::Alloc,
+    ];
+
+    fn index(self) -> usize {
+        match self {
+            FaultSeam::StepTransient => 0,
+            FaultSeam::StepPermanent => 1,
+            FaultSeam::SpillOut => 2,
+            FaultSeam::SpillIn => 3,
+            FaultSeam::Alloc => 4,
+        }
+    }
+
+    /// Per-seam salt so the five decision streams are independent even
+    /// under one seed.
+    fn salt(self) -> u64 {
+        [
+            0x7374_6570_5f74_7261, // "step_tra"
+            0x7374_6570_5f70_6572, // "step_per"
+            0x7370_696c_6c5f_6f75, // "spill_ou"
+            0x7370_696c_6c5f_696e, // "spill_in"
+            0x616c_6c6f_635f_5f5f, // "alloc___"
+        ][self.index()]
+    }
+
+    /// The spec key naming this seam in `OPT4GPTQ_FAULTS`.
+    pub fn spec_key(self) -> &'static str {
+        ["step", "step_perm", "spill_out", "spill_in", "alloc"][self.index()]
+    }
+}
+
+/// A seeded fault-injection configuration: probabilities per seam.
+/// `Copy` so it rides inside [`EngineConfig`](super::EngineConfig).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for the injection decision streams (independent of every
+    /// sampling RNG).
+    pub seed: u64,
+    /// P(transient `step()` failure) per engine step.
+    pub step_transient: f64,
+    /// P(permanent `step()` failure) per engine step.
+    pub step_permanent: f64,
+    /// P(spill write failure) per swapped-out sequence.
+    pub spill_out: f64,
+    /// P(restore failure) per swapped-in sequence.
+    pub spill_in: f64,
+    /// P(allocation refusal) per admission/append allocation.
+    pub alloc: f64,
+}
+
+impl FaultPlan {
+    /// No faults: every seam at probability zero.
+    pub const NONE: FaultPlan = FaultPlan {
+        seed: 0,
+        step_transient: 0.0,
+        step_permanent: 0.0,
+        spill_out: 0.0,
+        spill_in: 0.0,
+        alloc: 0.0,
+    };
+
+    fn probability(&self, seam: FaultSeam) -> f64 {
+        match seam {
+            FaultSeam::StepTransient => self.step_transient,
+            FaultSeam::StepPermanent => self.step_permanent,
+            FaultSeam::SpillOut => self.spill_out,
+            FaultSeam::SpillIn => self.spill_in,
+            FaultSeam::Alloc => self.alloc,
+        }
+    }
+
+    /// True when no seam can ever fire.
+    pub fn is_none(&self) -> bool {
+        FaultSeam::ALL.iter().all(|&s| self.probability(s) <= 0.0)
+    }
+
+    /// Parse the `OPT4GPTQ_FAULTS` spec:
+    /// `seed=42,step=0.05,step_perm=0.01,spill_out=0.1,spill_in=0.1,alloc=0.05`.
+    /// Every key is optional (missing seams stay at 0.0, missing seed
+    /// stays 0); unknown keys, non-numeric values and probabilities
+    /// outside `[0, 1]` are rejected.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::NONE;
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((key, value)) = part.split_once('=') else {
+                return Err(format!("fault spec item {part:?} is not key=value"));
+            };
+            let (key, value) = (key.trim(), value.trim());
+            if key == "seed" {
+                plan.seed = value
+                    .parse()
+                    .map_err(|_| format!("fault spec seed {value:?} is not a u64"))?;
+                continue;
+            }
+            let p: f64 = value
+                .parse()
+                .map_err(|_| format!("fault spec {key}={value:?} is not a probability"))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("fault spec {key}={p} is outside [0, 1]"));
+            }
+            match key {
+                "step" => plan.step_transient = p,
+                "step_perm" => plan.step_permanent = p,
+                "spill_out" => plan.spill_out = p,
+                "spill_in" => plan.spill_in = p,
+                "alloc" => plan.alloc = p,
+                other => {
+                    return Err(format!(
+                        "unknown fault spec key {other:?} (valid: seed, step, step_perm, \
+                         spill_out, spill_in, alloc)"
+                    ))
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::NONE
+    }
+}
+
+static FAULTS_ENV: OnceLock<EnvOverride<FaultPlan>> = OnceLock::new();
+
+/// The process-default fault plan: `OPT4GPTQ_FAULTS` when set and valid
+/// (warn-once fallback otherwise), [`FaultPlan::NONE`] when absent.
+/// Feeds `EngineConfig::default()`; explicit configs override it.
+pub fn fault_plan_default() -> FaultPlan {
+    envcfg::env_override(&FAULTS_ENV, "OPT4GPTQ_FAULTS", |raw| {
+        FaultPlan::parse(raw)
+            .map_err(|e| format!("ignoring OPT4GPTQ_FAULTS: {e}; running fault-free"))
+    })
+    .value()
+    .copied()
+    .unwrap_or(FaultPlan::NONE)
+}
+
+/// The live injection schedule: a plan plus per-seam draw counters.
+#[derive(Debug, Clone)]
+pub struct FaultSchedule {
+    plan: FaultPlan,
+    draws: [u64; 5],
+    fired: [u64; 5],
+}
+
+impl FaultSchedule {
+    /// A schedule that never fires (the unit-test default).
+    pub fn none() -> FaultSchedule {
+        FaultSchedule::new(FaultPlan::NONE)
+    }
+
+    pub fn new(plan: FaultPlan) -> FaultSchedule {
+        FaultSchedule { plan, draws: [0; 5], fired: [0; 5] }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// True when no seam can ever fire (the fast path skips the draw
+    /// bookkeeping entirely).
+    pub fn is_none(&self) -> bool {
+        self.plan.is_none()
+    }
+
+    /// Decide whether draw `i` at `seam` fires, advancing the seam's
+    /// counter.  Pure in `(seed, seam, i)`: replays are bit-identical.
+    pub fn fire(&mut self, seam: FaultSeam) -> bool {
+        let p = self.plan.probability(seam);
+        if self.plan.is_none() {
+            return false;
+        }
+        let i = self.draws[seam.index()];
+        self.draws[seam.index()] += 1;
+        if p <= 0.0 {
+            return false;
+        }
+        let mut rng = Rng::new(
+            self.plan
+                .seed
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(seam.salt())
+                ^ i.wrapping_mul(0xA24B_AED4_963E_E407),
+        );
+        let fires = rng.f64() < p;
+        if fires {
+            self.fired[seam.index()] += 1;
+        }
+        fires
+    }
+
+    /// How many times `seam` has fired so far (test/metrics hook).
+    pub fn fired(&self, seam: FaultSeam) -> u64 {
+        self.fired[seam.index()]
+    }
+
+    /// Total faults fired across all seams.
+    pub fn total_fired(&self) -> u64 {
+        self.fired.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_fires() {
+        let mut s = FaultSchedule::none();
+        assert!(s.is_none());
+        for _ in 0..1000 {
+            for seam in FaultSeam::ALL {
+                assert!(!s.fire(seam));
+            }
+        }
+        assert_eq!(s.total_fired(), 0);
+    }
+
+    #[test]
+    fn draws_are_replayable() {
+        let plan = FaultPlan { seed: 0xfa17, step_transient: 0.3, alloc: 0.5, ..FaultPlan::NONE };
+        let mut a = FaultSchedule::new(plan);
+        let mut b = FaultSchedule::new(plan);
+        for i in 0..500 {
+            for seam in FaultSeam::ALL {
+                assert_eq!(a.fire(seam), b.fire(seam), "draw {i} at {seam:?} diverged");
+            }
+        }
+        assert_eq!(a.fired(FaultSeam::StepTransient), b.fired(FaultSeam::StepTransient));
+    }
+
+    #[test]
+    fn fire_rate_tracks_probability() {
+        let plan = FaultPlan { seed: 7, step_transient: 0.25, ..FaultPlan::NONE };
+        let mut s = FaultSchedule::new(plan);
+        let n = 20_000;
+        for _ in 0..n {
+            s.fire(FaultSeam::StepTransient);
+        }
+        let rate = s.fired(FaultSeam::StepTransient) as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.02, "rate={rate}");
+        // Zero-probability seams never fire even while others draw.
+        assert_eq!(s.fired(FaultSeam::Alloc), 0);
+    }
+
+    #[test]
+    fn seams_draw_independent_streams() {
+        let plan = FaultPlan {
+            seed: 11,
+            step_transient: 0.5,
+            spill_out: 0.5,
+            ..FaultPlan::NONE
+        };
+        let mut s = FaultSchedule::new(plan);
+        let a: Vec<bool> = (0..64).map(|_| s.fire(FaultSeam::StepTransient)).collect();
+        let b: Vec<bool> = (0..64).map(|_| s.fire(FaultSeam::SpillOut)).collect();
+        assert_ne!(a, b, "same-seed seams must not mirror each other");
+    }
+
+    #[test]
+    fn spec_parses_every_key() {
+        let p = FaultPlan::parse(
+            "seed=42, step=0.05, step_perm=0.01, spill_out=0.1, spill_in=0.2, alloc=0.3",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.step_transient, 0.05);
+        assert_eq!(p.step_permanent, 0.01);
+        assert_eq!(p.spill_out, 0.1);
+        assert_eq!(p.spill_in, 0.2);
+        assert_eq!(p.alloc, 0.3);
+        assert!(!p.is_none());
+    }
+
+    #[test]
+    fn spec_defaults_missing_keys_to_zero() {
+        let p = FaultPlan::parse("step=0.5").unwrap();
+        assert_eq!(p.seed, 0);
+        assert_eq!(p.step_permanent, 0.0);
+        assert!(!p.is_none());
+        assert!(FaultPlan::parse("").unwrap().is_none());
+    }
+
+    #[test]
+    fn spec_rejects_junk() {
+        assert!(FaultPlan::parse("bogus=0.5").is_err());
+        assert!(FaultPlan::parse("step").is_err());
+        assert!(FaultPlan::parse("step=nan-ish").is_err());
+        assert!(FaultPlan::parse("step=1.5").is_err());
+        assert!(FaultPlan::parse("step=-0.1").is_err());
+        assert!(FaultPlan::parse("seed=notanumber").is_err());
+    }
+}

@@ -601,6 +601,42 @@ impl PagedKvCache {
         }
     }
 
+    /// Post-drain audit: every block the allocator reports free must be
+    /// unreadable — poisoned (all-NaN, the debug free path) or never
+    /// written (all zeros).  A free block holding live-looking values
+    /// means a release was skipped or a stale table wrote into freed
+    /// memory.  The scan needs the debug poison to discriminate, so it
+    /// only runs under `cfg!(debug_assertions)` (tier-1 `cargo test` is
+    /// a debug build, so CI exercises it on every engine run); release
+    /// builds return Ok without reading the pool.
+    pub fn audit(&self, free: &[BlockId]) -> Result<(), String> {
+        if !cfg!(debug_assertions) {
+            return Ok(());
+        }
+        let mut row = vec![0.0f32; self.d];
+        for &b in free {
+            if b >= self.n_blocks {
+                continue; // allocated on paper, never materialized
+            }
+            for layer in 0..self.n_layers {
+                for pb in 0..self.block_size {
+                    let r = self.row_index(b, pb, layer);
+                    for (side, pool) in [("K", &self.k), ("V", &self.v)] {
+                        pool.read_row(r, self.d, &mut row);
+                        let clean =
+                            row.iter().all(|x| x.is_nan()) || row.iter().all(|&x| x == 0.0);
+                        if !clean {
+                            return Err(format!(
+                                "free block {b} {side} row (layer {layer}, pos {pb}) holds live values"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Unconditionally poison the given blocks so every read dequantizes
     /// to NaN (test hook; the debug-build free path routes through
     /// here).  For `kv4` this is the reserved poison scale pattern —
@@ -834,6 +870,26 @@ mod tests {
         kv.write(&[0], 0, 0, &[1.0, f32::NAN, 2.0, 3.0], &rows(4, 1.0));
         assert!(kv.k_row(0, 0, 0).iter().all(|x| x.is_nan()), "NaN rows must stay loud");
         assert_eq!(kv.v_row(0, 0, 0), rows(4, 1.0), "the clean side is unaffected");
+    }
+
+    #[test]
+    fn audit_accepts_poisoned_and_virgin_blocks_only() {
+        for dtype in KvDtype::ALL {
+            let mut kv = PagedKvCache::with_dtype(3, 2, 1, 4, dtype);
+            // Fresh pool: every block is virgin — audit is clean.
+            kv.audit(&[0, 1, 2]).unwrap();
+            // Ids past the pool are "allocated on paper", also clean.
+            kv.audit(&[0, 1, 2, 9]).unwrap();
+            kv.write(&[1], 0, 0, &rows(4, 3.0), &rows(4, 3.0));
+            if cfg!(debug_assertions) {
+                let err = kv.audit(&[1]).unwrap_err();
+                assert!(err.contains("block 1"), "{err}");
+            }
+            kv.audit(&[0, 2]).unwrap();
+            // The normal free path (debug poison) restores cleanliness.
+            kv.release_blocks(&[1]);
+            kv.audit(&[0, 1, 2]).unwrap();
+        }
     }
 
     #[test]

@@ -75,6 +75,29 @@ pub struct Metrics {
     pub kv_bytes_per_token: usize,
     /// High-water mark of the host-side spill pool.
     pub kv_spill_peak_bytes: usize,
+    /// Requests shed from the bounded waiting queue (a subset of
+    /// `rejected_requests`).
+    pub shed_requests: usize,
+    /// Requests resolved as [`super::RequestOutcome::Rejected`]
+    /// (oversized, provably never admittable, or shed).
+    pub rejected_requests: usize,
+    /// Requests cancelled past their deadline
+    /// ([`super::RequestOutcome::TimedOut`]).
+    pub timed_out_requests: usize,
+    /// Requests resolved as [`super::RequestOutcome::Failed`] by a
+    /// permanent (or retry-exhausted) backend error.
+    pub failed_requests: usize,
+    /// Engine steps discarded and re-driven after a transient backend
+    /// error (each bumps the retry backoff).
+    pub step_retries: usize,
+    /// Swap spill writes/restores that failed and were recovered by
+    /// demoting the victim to recompute.
+    pub spill_faults: usize,
+    /// Output tokens delivered by *completed* requests only — tokens
+    /// generated for requests that later timed out, failed or were
+    /// preempt-discarded never count.  `output_tokens` is raw
+    /// throughput; this is goodput.
+    pub goodput_tokens: usize,
 }
 
 impl Metrics {
@@ -84,6 +107,17 @@ impl Metrics {
             return 0.0;
         }
         self.output_tokens as f64 / self.elapsed
+    }
+
+    /// Goodput, tokens/s: only tokens delivered by requests that
+    /// actually completed.  Equals [`Metrics::throughput`] on a
+    /// fault-free run with no deadlines; diverges exactly by the work
+    /// wasted on timed-out/failed/shed requests and discarded retries.
+    pub fn goodput(&self) -> f64 {
+        if self.elapsed <= 0.0 {
+            return 0.0;
+        }
+        self.goodput_tokens as f64 / self.elapsed
     }
 
     /// Total throughput including prompt processing (vLLM also reports
@@ -177,6 +211,19 @@ mod tests {
         assert_eq!(m.throughput(), 0.0);
         assert_eq!(m.mean_latency(), 0.0);
         assert_eq!(m.p95_latency(), 0.0);
+    }
+
+    #[test]
+    fn goodput_math() {
+        let m = Metrics {
+            elapsed: 2.0,
+            output_tokens: 100,
+            goodput_tokens: 80,
+            ..Default::default()
+        };
+        assert_eq!(m.throughput(), 50.0);
+        assert_eq!(m.goodput(), 40.0);
+        assert_eq!(Metrics::default().goodput(), 0.0);
     }
 
     #[test]

@@ -59,6 +59,58 @@
 //! the swapped span is never recomputed, and replay stays bit-identical
 //! to an unpreempted run (pinned by `rust/tests/serve_chaos.rs`).
 //!
+//! **Request lifecycle and outcomes.** Every request resolves to
+//! exactly one [`request::RequestOutcome`]:
+//!
+//! ```text
+//!            (arrival clock)        schedule            step/sample
+//!  pending ───────────────▶ waiting ─────▶ prefilling ─────▶ running ──▶ completed
+//!     │                      │  ▲            │    ▲            │
+//!     │ deadline             │  └─ preempt ──┴────┴─ swap ⇄ ───┘
+//!     │                      │       (recompute or spill/restore)
+//!     ▼                      ▼
+//!  timed-out          rejected (shed / never fits)      failed (permanent
+//!  (any live state; full     │                           step error or
+//!   block+spill reclamation) ▼                           retry exhaustion)
+//!                        timed-out
+//! ```
+//!
+//! * **`Completed`** — finished normally; its tokens are bit-identical
+//!   to a fault-free run (retries discard the failed step *before* any
+//!   sampler RNG or cursor advances).
+//! * **`Rejected { reason }`** — never admitted: oversized for the
+//!   pool/context (`scheduler`'s progress guarantee resolves the head
+//!   instead of stalling the queue), or shed because the bounded
+//!   waiting queue ([`EngineConfig::max_waiting`]) was full — shedding
+//!   evicts the lowest-priority, latest-arrival *fresh* request, never
+//!   a preempted one holding generation progress.
+//! * **`TimedOut`** — [`request::Request::deadline`] passed while
+//!   pending, waiting, swapped, or mid-generation; the engine cancels
+//!   it wherever it is and reclaims blocks and spill entries in full.
+//! * **`Failed { reason }`** — a permanent backend error, or transient
+//!   retries exhausted.
+//!
+//! **Fault plane.** [`fault::FaultSchedule`] (config: [`EngineConfig::faults`],
+//! env default: `OPT4GPTQ_FAULTS`, resolved through [`crate::envcfg`])
+//! injects deterministic, seeded failures at the engine↔backend seams:
+//!
+//! | seam (`fault::FaultSeam`) | where it fires                        | recovery path                                    |
+//! |---------------------------|---------------------------------------|--------------------------------------------------|
+//! | `StepTransient`           | before [`backend::Backend::step`]     | bounded-backoff retry: batch preempted through the swap/recompute machinery, step discarded |
+//! | `StepPermanent`           | before [`backend::Backend::step`]     | scheduled batch resolves `Failed`, engine keeps serving |
+//! | `SpillOut`                | before `Backend::swap_out`            | victim demoted to discard-and-recompute          |
+//! | `SpillIn`                 | before `Backend::swap_in`             | spill dropped, blocks freed, recompute from zero |
+//! | `Alloc`                   | admission headroom / decode append    | admission deferred (engine backs off) / appender preempted |
+//!
+//! Faults fire *before* the backend call they model, so no backend
+//! state is half-mutated; completed-request tokens stay bit-identical
+//! to a fault-free run (pinned by `serve_chaos.rs` fault storms and the
+//! `properties.rs` trace-replay property).  After every drain,
+//! [`engine::Engine::audit`] proves the invariants: no leaked blocks
+//! ([`block_manager::BlockManager`] cross-check), no orphaned spill
+//! entries, and every freed pool block poisoned-or-never-written
+//! ([`kv::PagedKvCache::audit`]).
+//!
 //! Backends:
 //!
 //! * [`backend::SimBackend`] — advances a *virtual clock* using the
@@ -78,6 +130,7 @@ pub mod backend;
 pub mod block_manager;
 pub mod cpu_backend;
 pub mod engine;
+pub mod fault;
 pub mod kv;
 pub mod metrics;
 pub mod request;
@@ -86,13 +139,14 @@ pub mod scheduler;
 pub mod sequence;
 pub mod tokenizer;
 
-pub use backend::{Backend, DecodeDesc, KvStats, PrefillDesc, SimBackend, StepOutput};
+pub use backend::{Backend, DecodeDesc, KvStats, PrefillDesc, SimBackend, StepError, StepOutput};
 pub use block_manager::{BlockId, BlockManager};
 pub use cpu_backend::{CpuBackend, CpuModelConfig};
+pub use fault::{fault_plan_default, FaultPlan, FaultSchedule, FaultSeam};
 pub use kv::{KvDtype, KvSpill, PagedKvCache};
 pub use engine::{Engine, EngineReport};
 pub use metrics::{Metrics, Quantiles};
-pub use request::{FinishReason, Request, RequestOutput, SamplingParams};
+pub use request::{FinishReason, Request, RequestOutcome, RequestOutput, SamplingParams};
 pub use scheduler::{PrefillChunk, ScheduledWork, Scheduler, SchedulerConfig};
 pub use sequence::{SeqState, Sequence};
 
@@ -136,45 +190,77 @@ pub struct EngineConfig {
     /// overrides the *default* (`f32|f16|kv4|auto`, unknown values warn
     /// once and fall back to `f32`); explicit field settings always win.
     pub kv_dtype: KvDtype,
+    /// Bound on the scheduler's waiting queue: admitting a fresh request
+    /// past this bound sheds the lowest-priority, latest-arrival fresh
+    /// waiter (possibly the newcomer itself) as
+    /// [`RequestOutcome::Rejected`].  Preempted sequences re-entering
+    /// the queue never count against the bound and are never shed —
+    /// their generation progress is not discarded by load shedding.
+    /// `usize::MAX` (the default) disables shedding.
+    pub max_waiting: usize,
+    /// Seeded fault-injection plan for the engine↔backend seams (see
+    /// [`fault`]).  `OPT4GPTQ_FAULTS` sets the *default*
+    /// (`seed=42,step=0.05,...`, warn-once fallback to fault-free on a
+    /// bad spec); explicit field settings always win.  The chaos/CI
+    /// suites drive storms through this; production configs leave it at
+    /// [`FaultPlan::NONE`].
+    pub faults: FaultPlan,
 }
+
+static PREFIX_SKIP_ENV: std::sync::OnceLock<crate::envcfg::EnvOverride<bool>> =
+    std::sync::OnceLock::new();
 
 /// Default for [`EngineConfig::prefix_skip`]: enabled unless the
 /// `OPT4GPTQ_PREFIX_SKIP=0` escape hatch is set (differential testing —
-/// the recompute path stays reachable without a rebuild).
+/// the recompute path stays reachable without a rebuild).  Resolved
+/// warn-once through [`crate::envcfg`].
 pub fn prefix_skip_default() -> bool {
-    !matches!(std::env::var("OPT4GPTQ_PREFIX_SKIP").as_deref(), Ok("0"))
+    crate::envcfg::env_override(&PREFIX_SKIP_ENV, "OPT4GPTQ_PREFIX_SKIP", |raw| {
+        crate::envcfg::parse_bool(raw)
+            .map_err(|e| format!("OPT4GPTQ_PREFIX_SKIP: {e} (prefix skip stays on)"))
+    })
+    .value()
+    .copied()
+    .unwrap_or(true)
 }
+
+static SWAP_ENV: std::sync::OnceLock<crate::envcfg::EnvOverride<bool>> =
+    std::sync::OnceLock::new();
 
 /// Default for [`EngineConfig::swap_preempt`]: enabled unless the
 /// `OPT4GPTQ_SWAP=0` escape hatch is set (differential testing — the
 /// discard-and-recompute path stays reachable without a rebuild).
+/// Resolved warn-once through [`crate::envcfg`].
 pub fn swap_preempt_default() -> bool {
-    !matches!(std::env::var("OPT4GPTQ_SWAP").as_deref(), Ok("0"))
+    crate::envcfg::env_override(&SWAP_ENV, "OPT4GPTQ_SWAP", |raw| {
+        crate::envcfg::parse_bool(raw)
+            .map_err(|e| format!("OPT4GPTQ_SWAP: {e} (swap preemption stays on)"))
+    })
+    .value()
+    .copied()
+    .unwrap_or(true)
 }
+
+static KV_ENV: std::sync::OnceLock<crate::envcfg::EnvOverride<KvDtype>> =
+    std::sync::OnceLock::new();
 
 /// Default for [`EngineConfig::kv_dtype`]: `f32` unless `OPT4GPTQ_KV`
 /// names another dtype (the CI dtype-matrix hook, mirroring
 /// `OPT4GPTQ_KERNEL`).  Unset, empty, and `auto` mean `f32`; an
 /// unrecognized value warns once on stderr and falls back to `f32`
-/// rather than aborting (same graceful-fallback shape as the kernel
-/// dispatch override).
+/// rather than aborting.  Resolved warn-once through [`crate::envcfg`].
 pub fn kv_dtype_default() -> KvDtype {
-    match std::env::var("OPT4GPTQ_KV") {
-        Ok(raw) if !raw.is_empty() && raw != "auto" => match KvDtype::parse(&raw) {
-            Some(dtype) => dtype,
-            None => {
-                static WARNED: std::sync::OnceLock<()> = std::sync::OnceLock::new();
-                WARNED.get_or_init(|| {
-                    eprintln!(
-                        "opt4gptq: OPT4GPTQ_KV={raw:?} is not a KV dtype \
-                         (expected f32|f16|kv4|auto); falling back to f32"
-                    );
-                });
-                KvDtype::F32
-            }
-        },
-        _ => KvDtype::F32,
-    }
+    crate::envcfg::env_override(&KV_ENV, "OPT4GPTQ_KV", |raw| {
+        KvDtype::parse(raw).ok_or_else(|| {
+            format!(
+                "OPT4GPTQ_KV={raw:?} is not a KV dtype (expected f32|f16|kv4|auto); \
+                 falling back to f32"
+            )
+        })
+    })
+    .value()
+    .copied()
+    .unwrap_or(KvDtype::F32)
 }
 
 impl Default for EngineConfig {
@@ -188,6 +274,8 @@ impl Default for EngineConfig {
             prefix_skip: prefix_skip_default(),
             swap_preempt: swap_preempt_default(),
             kv_dtype: kv_dtype_default(),
+            max_waiting: usize::MAX,
+            faults: fault_plan_default(),
         }
     }
 }

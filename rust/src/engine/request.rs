@@ -33,11 +33,17 @@ pub struct Request {
     /// FCFS by arrival, then id.  Preemption never evicts a victim of
     /// strictly higher priority on behalf of a lower-priority appender.
     pub priority: i32,
+    /// Absolute virtual/wall deadline (seconds on the engine clock).
+    /// When the clock passes it before the request completes, the
+    /// request is cancelled wherever it is — pending, waiting, swapped,
+    /// or mid-generation — with full block/spill reclamation, and
+    /// resolves as [`RequestOutcome::TimedOut`].  `None` = no deadline.
+    pub deadline: Option<f64>,
 }
 
 impl Request {
     pub fn new(id: usize, prompt: Vec<u32>, sampling: SamplingParams) -> Request {
-        Request { id, prompt, sampling, arrival: 0.0, priority: 0 }
+        Request { id, prompt, sampling, arrival: 0.0, priority: 0, deadline: None }
     }
 }
 
@@ -48,6 +54,42 @@ pub enum FinishReason {
     StopToken,
     /// Context window exhausted.
     LengthCap,
+}
+
+/// How a request resolved.  Every request submitted to the engine ends
+/// in exactly one of these (surfaced through
+/// [`EngineReport::outcomes`](crate::engine::EngineReport) and the
+/// shed/timeout/failure counters in [`crate::engine::Metrics`]); only
+/// `Completed` requests appear in `EngineReport::outputs`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestOutcome {
+    /// Finished normally; tokens are in the matching [`RequestOutput`].
+    Completed,
+    /// Never admitted: oversized for the pool/context, unable to ever
+    /// fit (the scheduler's progress guarantee), or shed from a full
+    /// bounded waiting queue.
+    Rejected {
+        reason: String,
+    },
+    /// The request's deadline passed before completion; cancelled with
+    /// full block/spill reclamation.
+    TimedOut,
+    /// A permanent backend error, or transient step retries exhausted.
+    Failed {
+        reason: String,
+    },
+}
+
+impl RequestOutcome {
+    /// Short stable label for logs/serve output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RequestOutcome::Completed => "completed",
+            RequestOutcome::Rejected { .. } => "rejected",
+            RequestOutcome::TimedOut => "timed-out",
+            RequestOutcome::Failed { .. } => "failed",
+        }
+    }
 }
 
 /// Completed request, as returned by [`crate::engine::Engine`].
@@ -81,5 +123,14 @@ mod tests {
         let r = Request::new(1, vec![1, 2, 3], SamplingParams::default());
         assert_eq!(r.prompt.len(), 3);
         assert_eq!(r.arrival, 0.0);
+        assert_eq!(r.deadline, None);
+    }
+
+    #[test]
+    fn outcome_labels_are_stable() {
+        assert_eq!(RequestOutcome::Completed.label(), "completed");
+        assert_eq!(RequestOutcome::Rejected { reason: "x".into() }.label(), "rejected");
+        assert_eq!(RequestOutcome::TimedOut.label(), "timed-out");
+        assert_eq!(RequestOutcome::Failed { reason: "y".into() }.label(), "failed");
     }
 }

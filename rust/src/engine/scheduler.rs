@@ -39,6 +39,7 @@ use std::cmp::Reverse;
 use std::collections::HashMap;
 
 use super::block_manager::BlockManager;
+use super::fault::{FaultSchedule, FaultSeam};
 use super::request::Request;
 use super::sequence::{SeqState, Sequence};
 use super::EngineConfig;
@@ -94,6 +95,20 @@ pub struct Scheduler {
     /// Tokens whose K/V was restored from spill rather than recomputed
     /// (summed over all swap-ins).
     pub swap_restored_tokens: usize,
+    /// Deterministic fault plan ([`super::fault`]): the scheduler owns
+    /// the per-run draw state so every seam — here and in the engine —
+    /// consumes one replayable stream.
+    pub faults: FaultSchedule,
+    /// Sequences resolved as Rejected since the last
+    /// [`Scheduler::take_rejected`] drain, with the typed reason
+    /// (oversized / never-fitting / shed).
+    rejected: Vec<(usize, String)>,
+    /// Fresh requests shed from the bounded waiting queue.
+    pub shed_count: usize,
+    /// An injected allocation refusal stalled the current `schedule`
+    /// pass: the empty step is a transient fault, not a capacity proof,
+    /// so the progress-guarantee reject must not fire.
+    fault_stalled: bool,
 }
 
 impl Scheduler {
@@ -111,6 +126,10 @@ impl Scheduler {
             swap_out_mid_decode: 0,
             swap_in_count: 0,
             swap_restored_tokens: 0,
+            faults: FaultSchedule::new(cfg.faults),
+            rejected: Vec::new(),
+            shed_count: 0,
+            fault_stalled: false,
             cfg,
         }
     }
@@ -119,6 +138,33 @@ impl Scheduler {
         let seq = Sequence::new(req);
         self.waiting.push(seq.id);
         self.seqs.insert(seq.id, seq);
+        // Bounded waiting queue with priority load-shedding: only
+        // *fresh* requests count against (and may be shed from) the
+        // bound — preempted/swapped re-entries must always requeue, or
+        // eviction would become silent request loss.  The shed victim is
+        // the least valuable fresh waiter (lowest priority, then
+        // youngest arrival, then largest id) — possibly the newcomer.
+        let fresh: Vec<usize> = self
+            .waiting
+            .iter()
+            .copied()
+            .filter(|w| self.seqs[w].state == SeqState::Waiting)
+            .collect();
+        if fresh.len() > self.cfg.max_waiting {
+            let &victim = fresh
+                .iter()
+                .max_by_key(|&&w| {
+                    let s = &self.seqs[&w];
+                    (Reverse(s.priority), s.arrival.to_bits(), s.id)
+                })
+                .expect("fresh is nonempty past the bound");
+            self.waiting.retain(|&w| w != victim);
+            self.shed_count += 1;
+            self.reject(
+                victim,
+                format!("shed: waiting queue full (max_waiting={})", self.cfg.max_waiting),
+            );
+        }
     }
 
     pub fn num_waiting(&self) -> usize {
@@ -161,6 +207,7 @@ impl Scheduler {
     /// Decide the next step's work.  `now` is the engine clock, stamped
     /// onto each sequence's first admission for queue-time accounting.
     pub fn schedule(&mut self, now: f64) -> ScheduledWork {
+        self.fault_stalled = false;
         // Admission order: priority (higher first), resumed victims
         // ahead of fresh peers, then FCFS by arrival, then id.  The
         // sort key is total and deterministic (ids are unique).
@@ -183,6 +230,14 @@ impl Scheduler {
         // 2. Admit queued sequences while budget and batch room remain.
         while budget > 0 && self.running.len() + self.prefilling.len() < self.cfg.max_batch {
             let Some(&cand) = self.waiting.first() else { break };
+            if self.faults.fire(FaultSeam::Alloc) {
+                // Injected block-allocation refusal: defer this
+                // admission wave exactly as a full pool would.  The
+                // stall flag keeps the progress-guarantee reject from
+                // mistaking the transient fault for a capacity proof.
+                self.fault_stalled = true;
+                break;
+            }
             if self.seqs[&cand].state == SeqState::Swapped {
                 // Resume a swapped victim: fresh blocks, spill restored
                 // by the engine before the step, cursor untouched.
@@ -208,7 +263,12 @@ impl Scheduler {
             if prompt.len() + 1 > self.cfg.max_seq_len {
                 // Oversized request: reject by finishing immediately.
                 self.waiting.remove(0);
-                self.reject(cand);
+                let reason = format!(
+                    "oversized: {} effective prompt tokens + 1 generated exceed max_seq_len {}",
+                    prompt.len(),
+                    self.cfg.max_seq_len
+                );
+                self.reject(cand, reason);
                 continue;
             }
             if !self.blocks.can_allocate(prompt.len() + 1) {
@@ -245,12 +305,24 @@ impl Scheduler {
         let decodes = self.running.clone();
         if prefills.is_empty() && decodes.is_empty() {
             if !self.waiting.is_empty() {
+                if self.fault_stalled {
+                    // The empty step came from an injected allocation
+                    // refusal, not a capacity proof: idle this step and
+                    // let the engine's backoff retry admission.
+                    return ScheduledWork::Idle;
+                }
                 // Nothing running, yet the head of the queue cannot be
                 // admitted: the prompt (or a swapped victim's grown
                 // table) exceeds KV capacity outright.  Reject it to
                 // guarantee progress.
                 let id = self.waiting.remove(0);
-                self.reject(id);
+                let s = &self.seqs[&id];
+                let needed = self.blocks.blocks_needed(s.total_tokens() + 1);
+                let reason = format!(
+                    "cannot ever fit: needs {needed} KV blocks, pool holds {}",
+                    self.cfg.total_blocks
+                );
+                self.reject(id, reason);
                 return self.schedule(now);
             }
             return ScheduledWork::Idle;
@@ -258,12 +330,59 @@ impl Scheduler {
         ScheduledWork::Step { prefills, decodes }
     }
 
-    /// Reject a queued sequence outright (oversized, or provably never
-    /// admittable): any spill is retired and it finishes with whatever
-    /// it generated.
-    fn reject(&mut self, id: usize) {
+    /// Reject a queued sequence outright (oversized, provably never
+    /// admittable, or shed from a full waiting queue): any blocks/spill
+    /// are retired, the typed reason is logged for the engine to drain
+    /// into a [`super::RequestOutcome::Rejected`], and the sequence
+    /// finishes with whatever it generated.
+    fn reject(&mut self, id: usize, reason: String) {
         self.blocks.free_sequence(id);
         self.seqs.get_mut(&id).expect("unknown seq").state = SeqState::Finished;
+        self.rejected.push((id, reason));
+    }
+
+    /// Drain the typed rejections since the last call (the engine turns
+    /// each into a `RequestOutcome::Rejected` and a metrics tick).
+    pub fn take_rejected(&mut self) -> Vec<(usize, String)> {
+        std::mem::take(&mut self.rejected)
+    }
+
+    /// Retire a sequence from every queue with full block/spill
+    /// reclamation — the deadline-cancel and permanent-failure path.
+    /// The engine drains the resulting block/sequence releases to the
+    /// backend after the step and records the outcome (TimedOut or
+    /// Failed) itself.
+    pub fn retire(&mut self, id: usize) {
+        self.waiting.retain(|&w| w != id);
+        self.running.retain(|&r| r != id);
+        self.prefilling.retain(|&p| p != id);
+        self.blocks.free_sequence(id);
+        self.seqs.get_mut(&id).expect("unknown seq").state = SeqState::Finished;
+    }
+
+    /// A swap-out's spill write failed before any bytes moved: forget
+    /// the spill reservation and demote the victim (already queued by
+    /// the preemption) to a recompute — its K/V is gone, so resuming at
+    /// the frozen cursor would read garbage.
+    pub fn demote_swap(&mut self, id: usize) {
+        assert!(self.blocks.abort_swap(id), "demoting a non-swapped sequence");
+        let seq = self.seqs.get_mut(&id).expect("unknown seq");
+        debug_assert_eq!(seq.state, SeqState::Swapped);
+        seq.demote_to_recompute();
+    }
+
+    /// A swapped victim's restore failed after re-admission: free the
+    /// freshly-allocated table, demote to recompute and requeue.  The
+    /// engine drops the backend's (unusable) spill entry itself.
+    pub fn fail_restore(&mut self, id: usize) {
+        self.prefilling.retain(|&p| p != id);
+        self.blocks.free_sequence(id);
+        let seq = self.seqs.get_mut(&id).expect("unknown seq");
+        // The restore never happened: take the restored-token credit
+        // back so the swap stats stay honest.
+        self.swap_restored_tokens -= seq.prefill_pos;
+        seq.demote_to_recompute();
+        self.waiting.push(id);
     }
 
     /// Record that a chunk executed: advance the sequence's prefill
@@ -297,11 +416,16 @@ impl Scheduler {
     /// eligible victim available).
     pub fn append_token(&mut self, id: usize) -> bool {
         let appender_priority = self.seqs[&id].priority;
+        // Injected allocation refusal: treat exactly one allocator call
+        // as failed, driving the identical preemption machinery a full
+        // pool would.
+        let mut injected = self.faults.fire(FaultSeam::Alloc);
         loop {
             let total = self.seqs[&id].total_tokens();
-            if self.blocks.append_token(id, total) {
+            if !injected && self.blocks.append_token(id, total) {
                 return true;
             }
+            injected = false;
             // Out of blocks: evict the least-valuable *other* victim.
             let victim = self
                 .running
@@ -321,6 +445,20 @@ impl Scheduler {
                     self.preempt(id);
                     return false;
                 }
+            }
+        }
+    }
+
+    /// Transient-step recovery: the engine discarded a failed step's
+    /// output, so every batch member still live is preempted through
+    /// the regular swap/recompute machinery — the retry then resumes
+    /// them exactly like any other preemption victim, which is what
+    /// keeps the eventually-completed tokens bit-identical to a
+    /// fault-free run.
+    pub fn preempt_for_retry(&mut self, ids: &[usize]) {
+        for &id in ids {
+            if self.running.contains(&id) || self.prefilling.contains(&id) {
+                self.preempt(id);
             }
         }
     }
@@ -430,6 +568,7 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::fault::FaultPlan;
     use crate::engine::request::SamplingParams;
 
     fn cfg() -> SchedulerConfig {
@@ -441,10 +580,13 @@ mod tests {
             prefill_budget: 8,
             // Pinned on purpose: these are unit tests OF the skip and
             // recompute mechanisms, independent of the
-            // OPT4GPTQ_PREFIX_SKIP / OPT4GPTQ_SWAP env hatches.
+            // OPT4GPTQ_PREFIX_SKIP / OPT4GPTQ_SWAP / OPT4GPTQ_FAULTS
+            // env hatches.
             prefix_skip: true,
             swap_preempt: false,
             kv_dtype: super::KvDtype::F32,
+            max_waiting: usize::MAX,
+            faults: FaultPlan::NONE,
         }
     }
 
@@ -637,6 +779,8 @@ mod tests {
             prefix_skip: true,
             swap_preempt: false, // this test pins recompute semantics
             kv_dtype: super::KvDtype::F32,
+            max_waiting: usize::MAX,
+            faults: FaultPlan::NONE,
         });
         // Distinct prompt contents so the prefix cache cannot share blocks.
         let mut r0 = req(0, 7, 30);
@@ -694,6 +838,8 @@ mod tests {
             prefix_skip: true,
             swap_preempt: true,
             kv_dtype: super::KvDtype::F32,
+            max_waiting: usize::MAX,
+            faults: FaultPlan::NONE,
         });
         let mut r0 = req(0, 7, 30);
         r0.prompt = vec![1; 7];
@@ -740,6 +886,8 @@ mod tests {
             prefix_skip: true,
             swap_preempt: true,
             kv_dtype: super::KvDtype::F32,
+            max_waiting: usize::MAX,
+            faults: FaultPlan::NONE,
         });
         let mut r0 = req(0, 7, 30);
         r0.prompt = vec![1; 7];
@@ -806,6 +954,8 @@ mod tests {
             prefix_skip: true,
             swap_preempt: true,
             kv_dtype: super::KvDtype::F32,
+            max_waiting: usize::MAX,
+            faults: FaultPlan::NONE,
         });
         let mut r0 = req(0, 7, 30);
         r0.prompt = vec![1; 7];
@@ -842,6 +992,8 @@ mod tests {
                 prefix_skip: true,
                 swap_preempt: false,
                 kv_dtype: super::KvDtype::F32,
+                max_waiting: usize::MAX,
+                faults: FaultPlan::NONE,
             });
             let mut r0 = req(0, 7, 30);
             r0.prompt = vec![1; 7];
@@ -868,6 +1020,138 @@ mod tests {
         assert!(!s.append_token(0));
         assert_eq!(s.seqs[&0].state, SeqState::Preempted);
         assert_eq!(s.seqs[&1].state, SeqState::Running);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn never_fitting_request_is_rejected_with_a_typed_reason() {
+        // A prompt whose KV footprint exceeds the whole pool can never be
+        // admitted; the progress guard must resolve it as a typed rejection
+        // instead of spinning forever (or panicking).
+        let mut s = Scheduler::new(SchedulerConfig {
+            total_blocks: 2, // pool holds 8 token slots
+            ..cfg()
+        });
+        s.add_request(&req(0, 30, 4)); // needs ceil(31/4) = 8 blocks
+        assert!(matches!(s.schedule(0.0), ScheduledWork::Idle));
+        let rejected = s.take_rejected();
+        assert_eq!(rejected.len(), 1);
+        assert_eq!(rejected[0].0, 0);
+        assert!(
+            rejected[0].1.contains("cannot ever fit"),
+            "unexpected reason: {}",
+            rejected[0].1
+        );
+        assert_eq!(s.seqs[&0].state, SeqState::Finished);
+        assert!(s.take_rejected().is_empty(), "rejection drained twice");
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oversized_prompt_is_rejected_before_admission() {
+        let mut s = Scheduler::new(cfg()); // max_seq_len: 64
+        s.add_request(&req(0, 70, 4));
+        assert!(matches!(s.schedule(0.0), ScheduledWork::Idle));
+        let rejected = s.take_rejected();
+        assert_eq!(rejected.len(), 1);
+        assert!(rejected[0].1.contains("oversized"), "reason: {}", rejected[0].1);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn bounded_waiting_queue_sheds_lowest_priority_fresh_request() {
+        let mut s = Scheduler::new(SchedulerConfig { max_waiting: 2, ..cfg() });
+        let mut r0 = req(0, 4, 8);
+        r0.priority = 5;
+        let mut r1 = req(1, 4, 8);
+        r1.priority = 1; // lowest priority -> shed victim
+        r1.arrival = 0.5;
+        let mut r2 = req(2, 4, 8);
+        r2.priority = 3;
+        r2.arrival = 1.0;
+        s.add_request(&r0);
+        s.add_request(&r1);
+        s.add_request(&r2); // overflows max_waiting = 2
+        assert_eq!(s.shed_count, 1);
+        let rejected = s.take_rejected();
+        assert_eq!(rejected.len(), 1);
+        assert_eq!(rejected[0].0, 1, "shed must pick the lowest-priority waiter");
+        assert!(rejected[0].1.contains("shed"), "reason: {}", rejected[0].1);
+        assert_eq!(s.seqs[&1].state, SeqState::Finished);
+        // Survivors are untouched and still schedulable.
+        let ScheduledWork::Step { prefills, .. } = s.schedule(2.0) else {
+            panic!("survivors should schedule")
+        };
+        let ids: Vec<usize> = prefills.iter().map(|p| p.seq_id).collect();
+        assert_eq!(ids, vec![0, 2]);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn preempted_reentries_do_not_count_toward_the_waiting_bound() {
+        // Fill the pool so an append forces a recompute preemption, then
+        // verify the preempted sequence re-enters the waiting queue without
+        // being shed even though max_waiting is already saturated by fresh
+        // arrivals.
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_batch: 1,
+            total_blocks: 2,
+            max_waiting: 1,
+            ..cfg()
+        });
+        s.add_request(&req(0, 4, 30));
+        let ScheduledWork::Step { prefills, .. } = s.schedule(0.0) else { panic!() };
+        run_prefills(&mut s, &prefills);
+        // Exhaust the pool from under seq 0, then append past its block.
+        for t in 5..=9 {
+            s.seqs.get_mut(&0).unwrap().generated.push(t);
+            if !s.append_token(0) {
+                break;
+            }
+        }
+        assert_eq!(s.seqs[&0].state, SeqState::Preempted);
+        assert!(s.waiting.contains(&0));
+        // A fresh arrival saturates the bound; the preempted seq must not be
+        // shed (only FRESH waiters are candidates).
+        s.add_request(&req(1, 4, 8));
+        assert_eq!(s.shed_count, 0);
+        assert!(s.take_rejected().is_empty());
+        assert!(s.waiting.contains(&0));
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn alloc_fault_stalls_admission_instead_of_rejecting() {
+        let plan = FaultPlan { seed: 7, alloc: 1.0, ..FaultPlan::NONE };
+        let mut s = Scheduler::new(SchedulerConfig { faults: plan, ..cfg() });
+        s.add_request(&req(0, 4, 8));
+        // Every admission draw fires -> scheduler reports Idle (a transient
+        // stall), never a capacity rejection.
+        for _ in 0..4 {
+            assert!(matches!(s.schedule(0.0), ScheduledWork::Idle));
+        }
+        assert!(s.take_rejected().is_empty(), "alloc fault must not reject");
+        assert_eq!(s.seqs[&0].state, SeqState::Waiting);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn alloc_fault_on_append_takes_the_preemption_path() {
+        let plan = FaultPlan { seed: 7, alloc: 1.0, ..FaultPlan::NONE };
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_batch: 1,
+            faults: FaultPlan::NONE, // admit cleanly...
+            ..cfg()
+        });
+        s.add_request(&req(0, 4, 30));
+        let ScheduledWork::Step { prefills, .. } = s.schedule(0.0) else { panic!() };
+        run_prefills(&mut s, &prefills);
+        // ...then flip faults on so the next block allocation is refused.
+        s.faults = FaultSchedule::new(plan);
+        s.seqs.get_mut(&0).unwrap().generated.push(9);
+        assert!(!s.append_token(0), "refused alloc must preempt, not succeed");
+        assert_eq!(s.seqs[&0].state, SeqState::Preempted);
+        assert!(s.waiting.contains(&0));
         s.check_invariants().unwrap();
     }
 }

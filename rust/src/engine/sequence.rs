@@ -36,6 +36,9 @@ pub struct Sequence {
     pub arrival: f64,
     /// Request priority (higher = served first); ties fall back to FCFS.
     pub priority: i32,
+    /// Absolute deadline on the engine clock (None = unbounded); checked
+    /// by the engine every step, in every state.
+    pub deadline: Option<f64>,
     /// Virtual-clock time of the *first* admission (None while still
     /// queued): `admitted_time - arrival` is the request's queue time.
     pub admitted_time: Option<f64>,
@@ -62,6 +65,7 @@ impl Sequence {
             state: SeqState::Waiting,
             arrival: req.arrival,
             priority: req.priority,
+            deadline: req.deadline,
             admitted_time: None,
             first_token_time: None,
             finish_time: None,
@@ -140,6 +144,18 @@ impl Sequence {
         }
         self.state = SeqState::Swapped;
         self.preemptions += 1;
+    }
+
+    /// Convert an in-flight swap into a recompute: the spill write or
+    /// restore failed, so the materialized span is unrecoverable —
+    /// reset the prefill cursors exactly like a recompute preemption,
+    /// but without counting a second preemption (the original eviction
+    /// already did).  Generated tokens are kept and replayed through
+    /// the same RNG stream, so completed tokens stay bit-identical.
+    pub fn demote_to_recompute(&mut self) {
+        self.state = SeqState::Preempted;
+        self.cached_len = 0;
+        self.prefill_pos = 0;
     }
 
     /// The effective prompt for (re-)prefill: original prompt plus

@@ -1,0 +1,166 @@
+//! Warn-once environment-override resolution shared by every
+//! `OPT4GPTQ_*` knob.
+//!
+//! Before this module each override (`OPT4GPTQ_KERNEL`, `OPT4GPTQ_KV`,
+//! `OPT4GPTQ_SWAP`, `OPT4GPTQ_PREFIX_SKIP`) carried its own copy of the
+//! same pattern: read the variable once through a `OnceLock`, treat
+//! empty/`auto` as "use the default", warn **once** on stderr for an
+//! invalid value and fall back.  [`env_override`] is that pattern,
+//! factored: callers supply the cell, the variable name and a parse
+//! closure; the closure's `Err` message *is* the one-time warning.
+//! `OPT4GPTQ_FAULTS` (the fault-injection plane) resolves through the
+//! same helper.
+//!
+//! The pure half, [`resolve`], takes the raw value explicitly so unit
+//! tests can cover every branch without mutating process-global
+//! environment state.
+
+use std::sync::OnceLock;
+
+/// The resolved state of one environment override.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EnvOverride<T> {
+    /// The variable is not set.
+    Unset,
+    /// The variable is set to `""` or `auto` — an explicit request for
+    /// the built-in default.
+    Auto,
+    /// A parsed override value.
+    Value(T),
+    /// The variable is set to something the parser rejected; the
+    /// warning has been emitted (once) and the caller's default applies.
+    Invalid,
+}
+
+impl<T> EnvOverride<T> {
+    /// The override value, if one parsed (`Unset`/`Auto`/`Invalid` all
+    /// mean "use the default").
+    pub fn value(&self) -> Option<&T> {
+        match self {
+            EnvOverride::Value(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Pure resolution: map a raw variable value (or `None` = unset) through
+/// `parse`.  Returns the override plus the warning the process-global
+/// wrapper should print once, if any.  `parse` receives the trimmed
+/// value and returns `Err(message)` to reject it — the message is the
+/// full warning text (minus the `opt4gptq: ` prefix).
+pub fn resolve<T>(
+    raw: Option<&str>,
+    parse: impl FnOnce(&str) -> Result<T, String>,
+) -> (EnvOverride<T>, Option<String>) {
+    let Some(raw) = raw else {
+        return (EnvOverride::Unset, None);
+    };
+    let trimmed = raw.trim();
+    if trimmed.is_empty() || trimmed.eq_ignore_ascii_case("auto") {
+        return (EnvOverride::Auto, None);
+    }
+    match parse(trimmed) {
+        Ok(v) => (EnvOverride::Value(v), None),
+        Err(msg) => (EnvOverride::Invalid, Some(msg)),
+    }
+}
+
+/// Resolve `name` exactly once per process through `cell`: the
+/// environment is read on first call, the parse runs on first call, and
+/// an invalid value warns on stderr exactly once — later calls return
+/// the cached resolution whatever the environment says now.
+pub fn env_override<T>(
+    cell: &'static OnceLock<EnvOverride<T>>,
+    name: &str,
+    parse: impl FnOnce(&str) -> Result<T, String>,
+) -> &'static EnvOverride<T> {
+    cell.get_or_init(|| {
+        let raw = std::env::var(name).ok();
+        let (resolved, warning) = resolve(raw.as_deref(), parse);
+        if let Some(msg) = warning {
+            eprintln!("opt4gptq: {msg}");
+        }
+        resolved
+    })
+}
+
+/// Shared boolean parser for on/off knobs (`OPT4GPTQ_SWAP`,
+/// `OPT4GPTQ_PREFIX_SKIP`): `0|false|off|no` disable, `1|true|on|yes`
+/// enable, anything else is invalid (warn once, keep the default).
+pub fn parse_bool(raw: &str) -> Result<bool, String> {
+    match raw.to_ascii_lowercase().as_str() {
+        "0" | "false" | "off" | "no" => Ok(false),
+        "1" | "true" | "on" | "yes" => Ok(true),
+        other => Err(format!(
+            "unrecognized boolean {other:?} (expected 0|false|off|no or 1|true|on|yes); \
+             keeping the default"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_digit(raw: &str) -> Result<u32, String> {
+        raw.parse().map_err(|_| format!("bad digit {raw:?}"))
+    }
+
+    #[test]
+    fn unset_resolves_unset_without_warning() {
+        let (r, warn) = resolve(None, parse_digit);
+        assert_eq!(r, EnvOverride::Unset);
+        assert_eq!(warn, None);
+        assert_eq!(r.value(), None);
+    }
+
+    #[test]
+    fn empty_and_auto_resolve_auto() {
+        for raw in ["", "  ", "auto", "AUTO", " Auto "] {
+            let (r, warn) = resolve(Some(raw), parse_digit);
+            assert_eq!(r, EnvOverride::Auto, "raw={raw:?}");
+            assert_eq!(warn, None);
+        }
+    }
+
+    #[test]
+    fn valid_value_parses_trimmed() {
+        let (r, warn) = resolve(Some(" 7 "), parse_digit);
+        assert_eq!(r, EnvOverride::Value(7));
+        assert_eq!(r.value(), Some(&7));
+        assert_eq!(warn, None);
+    }
+
+    #[test]
+    fn invalid_value_warns_once_with_the_parser_message() {
+        let (r, warn) = resolve(Some("seven"), parse_digit);
+        assert_eq!(r, EnvOverride::Invalid);
+        assert_eq!(warn.as_deref(), Some("bad digit \"seven\""));
+        assert_eq!(r.value(), None);
+    }
+
+    #[test]
+    fn bool_parser_accepts_the_documented_spellings() {
+        for raw in ["0", "false", "OFF", "no"] {
+            assert_eq!(parse_bool(raw), Ok(false), "raw={raw:?}");
+        }
+        for raw in ["1", "true", "ON", "yes"] {
+            assert_eq!(parse_bool(raw), Ok(true), "raw={raw:?}");
+        }
+        assert!(parse_bool("maybe").is_err());
+    }
+
+    #[test]
+    fn env_override_caches_the_first_resolution() {
+        static CELL: OnceLock<EnvOverride<u32>> = OnceLock::new();
+        // The variable name is unique to this test and never set, so the
+        // first read resolves Unset and later reads return the cache
+        // (parse is never consulted again).
+        let a = env_override(&CELL, "OPT4GPTQ_TEST_NEVER_SET", parse_digit);
+        assert_eq!(*a, EnvOverride::Unset);
+        let b = env_override(&CELL, "OPT4GPTQ_TEST_NEVER_SET", |_| {
+            panic!("cached resolution must not re-parse")
+        });
+        assert_eq!(*b, EnvOverride::Unset);
+    }
+}

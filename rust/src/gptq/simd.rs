@@ -214,46 +214,51 @@ pub struct KernelDispatch {
 }
 
 static DISPATCH: OnceLock<KernelDispatch> = OnceLock::new();
+static DISPATCH_ENV: OnceLock<crate::envcfg::EnvOverride<Kernel>> = OnceLock::new();
 
 impl KernelDispatch {
     /// The resolved process-wide dispatch entry.  The environment is read
-    /// exactly once — later changes to `OPT4GPTQ_KERNEL` have no effect,
-    /// and any override warning is emitted exactly once, here.
+    /// exactly once through [`crate::envcfg`] — later changes to
+    /// `OPT4GPTQ_KERNEL` have no effect, and any override warning is
+    /// emitted exactly once.  Empty and `auto` mean feature detection; a
+    /// known-but-unsupported or unknown kernel name warns and falls back
+    /// to detection (`source: "fallback"`).
     pub fn get() -> KernelDispatch {
         *DISPATCH.get_or_init(|| {
-            let Ok(requested) = std::env::var("OPT4GPTQ_KERNEL") else {
-                return KernelDispatch::auto();
-            };
-            let requested = requested.to_ascii_lowercase();
-            if requested.is_empty() || requested == "auto" {
-                return KernelDispatch::auto();
-            }
-            match kernel_registry().iter().find(|info| info.name == requested) {
-                Some(info) if supports(info.kernel) => {
-                    KernelDispatch { kernel: info.kernel, source: "env" }
+            let resolved =
+                crate::envcfg::env_override(&DISPATCH_ENV, "OPT4GPTQ_KERNEL", |raw| {
+                    let requested = raw.to_ascii_lowercase();
+                    match kernel_registry().iter().find(|info| info.name == requested) {
+                        Some(info) if supports(info.kernel) => Ok(info.kernel),
+                        Some(info) => Err(format!(
+                            "OPT4GPTQ_KERNEL={} requested, but this host cannot run \
+                             it (needs {}, or the toolchain compiled it out); falling \
+                             back to auto-detected '{}'",
+                            info.name,
+                            info.required_features.join("+"),
+                            KernelDispatch::auto().kernel,
+                        )),
+                        None => {
+                            let valid: Vec<&str> =
+                                kernel_registry().iter().map(|i| i.name).collect();
+                            Err(format!(
+                                "unknown OPT4GPTQ_KERNEL={requested:?} (valid values: \
+                                 {}|auto); falling back to auto-detected '{}'",
+                                valid.join("|"),
+                                KernelDispatch::auto().kernel,
+                            ))
+                        }
+                    }
+                });
+            match resolved {
+                crate::envcfg::EnvOverride::Value(k) => {
+                    KernelDispatch { kernel: *k, source: "env" }
                 }
-                Some(info) => {
-                    let auto = KernelDispatch::auto();
-                    eprintln!(
-                        "opt4gptq: OPT4GPTQ_KERNEL={} requested, but this host cannot run \
-                         it (needs {}, or the toolchain compiled it out); falling back to \
-                         auto-detected '{}'",
-                        info.name,
-                        info.required_features.join("+"),
-                        auto.kernel,
-                    );
-                    KernelDispatch { kernel: auto.kernel, source: "fallback" }
+                crate::envcfg::EnvOverride::Invalid => {
+                    KernelDispatch { kernel: KernelDispatch::auto().kernel, source: "fallback" }
                 }
-                None => {
-                    let auto = KernelDispatch::auto();
-                    let valid: Vec<&str> = kernel_registry().iter().map(|i| i.name).collect();
-                    eprintln!(
-                        "opt4gptq: unknown OPT4GPTQ_KERNEL={requested:?} (valid values: \
-                         {}|auto); falling back to auto-detected '{}'",
-                        valid.join("|"),
-                        auto.kernel,
-                    );
-                    KernelDispatch { kernel: auto.kernel, source: "fallback" }
+                crate::envcfg::EnvOverride::Unset | crate::envcfg::EnvOverride::Auto => {
+                    KernelDispatch::auto()
                 }
             }
         })

@@ -39,6 +39,7 @@ pub mod benchkit;
 pub mod cli;
 pub mod dcusim;
 pub mod engine;
+pub mod envcfg;
 pub mod eval;
 pub mod f16;
 pub mod gptq;

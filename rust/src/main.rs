@@ -15,8 +15,8 @@ use opt4gptq::cli::Args;
 use opt4gptq::dcusim::kernels::KernelParams;
 use opt4gptq::dcusim::{Device, GemvKernel};
 use opt4gptq::engine::{
-    Backend, CpuBackend, CpuModelConfig, Engine, EngineConfig, KvDtype, Request,
-    SamplingParams, SimBackend,
+    Backend, CpuBackend, CpuModelConfig, Engine, EngineConfig, FaultPlan, KvDtype, Request,
+    RequestOutcome, SamplingParams, SimBackend,
 };
 use opt4gptq::eval::accuracy::evaluate;
 use opt4gptq::gptq::{quantize_gptq, quantize_rtn, reconstruction_error, GptqConfig, Matrix};
@@ -56,11 +56,18 @@ fn usage() {
             [--preempt swap|recompute]  (KV spill vs discard on eviction)
             [--kv-dtype f32|f16|kv4]  (paged-KV storage dtype; kv4 packs
              4-bit rows + per-row scale/zero — ~6.4x denser than f32)
+            [--deadline SECS]  (per-request SLO: cancel as timed-out when
+             not finished within SECS of arrival)
+            [--max-waiting N]  (bounded waiting queue: shed the least
+             valuable fresh request past N waiters)
+            [--faults SPEC]  (seeded fault injection, e.g.
+             seed=42,step=0.05,spill_out=0.1,spill_in=0.1,alloc=0.05)
             (cpu: in-crate fused-kernel transformer over paged KV;
              pjrt: --artifacts DIR, needs the `pjrt` build feature;
              OPT4GPTQ_PREFIX_SKIP=0 forces cached-prefix recompute;
              OPT4GPTQ_SWAP=0 flips the default to discard-and-recompute;
-             OPT4GPTQ_KV=f32|f16|kv4 overrides the KV dtype default)
+             OPT4GPTQ_KV=f32|f16|kv4 overrides the KV dtype default;
+             OPT4GPTQ_FAULTS=SPEC sets the fault-plan default)
   simulate  --model NAME --requests N [--opt baseline|smb|vml|ila|opt4gptq]
   kernel    --m M --k K --n N [--group G]
   accuracy  --model NAME [--split arc_c|arc_e]
@@ -167,6 +174,18 @@ fn serve_with<B: Backend>(backend: B, args: &Args, whole_prompt_only: bool) -> o
         None => default_cfg.kv_dtype,
     };
     let arrival_rate = args.get_f64("arrival-rate", 0.0);
+    let deadline_secs = args.get_f64("deadline", 0.0);
+    let max_waiting = args.get_usize("max-waiting", default_cfg.max_waiting);
+    let faults = match args.get("faults") {
+        Some(spec) => match FaultPlan::parse(spec) {
+            Ok(plan) => plan,
+            Err(e) => {
+                eprintln!("bad --faults spec: {e}");
+                std::process::exit(2);
+            }
+        },
+        None => default_cfg.faults,
+    };
     if whole_prompt_only {
         // Unbounded: the budget is shared across same-step admissions,
         // so anything finite could still split a second prompt.  Swap
@@ -188,6 +207,17 @@ fn serve_with<B: Backend>(backend: B, args: &Args, whole_prompt_only: bool) -> o
         if prefix_skip { "on" } else { "off" },
         if swap_preempt { "swap" } else { "recompute" },
     );
+    if !faults.is_none() {
+        println!(
+            "fault injection: seed={} step={}/{} spill={}/{} alloc={}",
+            faults.seed,
+            faults.step_transient,
+            faults.step_permanent,
+            faults.spill_out,
+            faults.spill_in,
+            faults.alloc,
+        );
+    }
     let mut engine = Engine::new(
         EngineConfig {
             max_batch,
@@ -198,6 +228,8 @@ fn serve_with<B: Backend>(backend: B, args: &Args, whole_prompt_only: bool) -> o
             prefix_skip,
             swap_preempt,
             kv_dtype,
+            max_waiting,
+            faults,
         },
         backend,
     );
@@ -229,18 +261,48 @@ fn serve_with<B: Backend>(backend: B, args: &Args, whole_prompt_only: bool) -> o
             },
         );
         req.arrival = r.arrival;
+        if deadline_secs > 0.0 {
+            req.deadline = Some(r.arrival + deadline_secs);
+        }
         engine.add_request(req);
     }
     let report = engine.run()?;
+    let count = |f: fn(&RequestOutcome) -> bool| {
+        report.outcomes.iter().filter(|(_, o)| f(o)).count()
+    };
+    let completed = count(|o| matches!(o, RequestOutcome::Completed));
     println!(
-        "served {} requests: {:.1} tok/s gen, {:.1} tok/s total, mean latency {:.3}s, mean TTFT {:.3}s, mean batch {:.2}",
-        report.outputs.len(),
+        "served {n} requests: {completed} completed, {} rejected/shed, {} timed out, {} failed",
+        count(|o| matches!(o, RequestOutcome::Rejected { .. })),
+        count(|o| matches!(o, RequestOutcome::TimedOut)),
+        count(|o| matches!(o, RequestOutcome::Failed { .. })),
+    );
+    for (id, outcome) in &report.outcomes {
+        match outcome {
+            RequestOutcome::Completed => {}
+            RequestOutcome::Rejected { reason } | RequestOutcome::Failed { reason } => {
+                println!("  request {id}: {} ({reason})", outcome.label());
+            }
+            RequestOutcome::TimedOut => {
+                println!("  request {id}: {} (deadline {deadline_secs}s)", outcome.label());
+            }
+        }
+    }
+    println!(
+        "throughput: {:.1} tok/s gen ({:.1} tok/s goodput), {:.1} tok/s total, mean latency {:.3}s, mean TTFT {:.3}s, mean batch {:.2}",
         report.metrics.throughput(),
+        report.metrics.goodput(),
         report.metrics.total_throughput(),
         report.metrics.mean_latency(),
         report.metrics.mean_ttft(),
         report.metrics.mean_decode_batch(),
     );
+    if report.metrics.step_retries > 0 || report.metrics.spill_faults > 0 {
+        println!(
+            "faults survived: {} step retries, {} spill faults recovered by recompute",
+            report.metrics.step_retries, report.metrics.spill_faults,
+        );
+    }
     let ttft = report.metrics.ttft_quantiles();
     let tpot = report.metrics.tpot_quantiles();
     let queue = report.metrics.queue_time_quantiles();

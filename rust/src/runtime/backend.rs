@@ -24,7 +24,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context};
 
-use crate::engine::backend::{Backend, DecodeDesc, PrefillDesc, StepOutput};
+use crate::engine::backend::{Backend, DecodeDesc, PrefillDesc, StepError, StepOutput};
 use crate::Result;
 
 use super::client::Runtime;
@@ -193,7 +193,7 @@ impl Backend for PjrtBackend {
         &mut self,
         prefills: &[PrefillDesc<'_>],
         decodes: &[DecodeDesc<'_>],
-    ) -> Result<StepOutput> {
+    ) -> Result<StepOutput, StepError> {
         let t0 = Instant::now();
         let mut prefill_logits = Vec::with_capacity(prefills.len());
         for p in prefills {
@@ -201,19 +201,27 @@ impl Backend for PjrtBackend {
             // dense lane: chunk resumption and cached-prefix skipping
             // have no lane-level representation here.  Serve this
             // backend with a prefill budget ≥ the longest prompt and
-            // `prefix_skip` off (see `cmd_serve_pjrt`).
+            // `prefix_skip` off (see `cmd_serve_pjrt`).  A chunked or
+            // resumed span is a configuration error, not a glitch —
+            // permanent, so the engine fails the batch instead of
+            // retrying the same impossible call.
             if p.start != 0 || !p.is_last {
-                bail!(
+                return Err(StepError::Permanent(format!(
                     "PjrtBackend cannot resume a prefill chunk at position {} \
                      (dense-lane HLO artifacts need whole prompts; disable \
                      prefix skip and raise --prefill-budget)",
                     p.start
-                );
+                )));
             }
-            prefill_logits.push(Some(self.prefill_whole(p)?));
+            prefill_logits.push(Some(
+                self.prefill_whole(p).map_err(|e| StepError::Permanent(e.to_string()))?,
+            ));
         }
-        let decode_logits =
-            if decodes.is_empty() { Vec::new() } else { self.decode_batch(decodes)? };
+        let decode_logits = if decodes.is_empty() {
+            Vec::new()
+        } else {
+            self.decode_batch(decodes).map_err(|e| StepError::Permanent(e.to_string()))?
+        };
         Ok(StepOutput { prefill_logits, decode_logits, secs: t0.elapsed().as_secs_f64() })
     }
 

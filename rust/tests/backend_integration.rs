@@ -7,8 +7,8 @@
 //! entries aliasing the same pool memory with oracle-identical logits.
 
 use opt4gptq::engine::{
-    Backend, BlockManager, CpuBackend, CpuModelConfig, Engine, EngineConfig, PrefillDesc,
-    Request, SamplingParams, SimBackend,
+    Backend, BlockManager, CpuBackend, CpuModelConfig, Engine, EngineConfig, FaultPlan,
+    PrefillDesc, Request, SamplingParams, SimBackend,
 };
 use opt4gptq::models::by_name;
 use opt4gptq::OptConfig;
@@ -265,6 +265,10 @@ fn prefix_skip_engine_matches_forced_recompute() {
             EngineConfig {
                 prefill_budget: 48,
                 prefix_skip,
+                // Pinned: the exact skipped-token counts below assert the
+                // fault-free prefill schedule; an env-injected fault's
+                // preemptions would legitimately change them.
+                faults: FaultPlan::NONE,
                 ..roomy()
             },
             cpu_backend(),
@@ -300,7 +304,9 @@ fn chunked_prefill_engine_matches_one_shot() {
         .collect();
     let run = |prefill_budget: usize| {
         let mut e = Engine::new(
-            EngineConfig { prefill_budget, ..roomy() },
+            // Pinned fault-free: the exact chunk counts below describe
+            // the undisturbed prefill schedule.
+            EngineConfig { prefill_budget, faults: FaultPlan::NONE, ..roomy() },
             cpu_backend(),
         );
         for (i, prompt) in workload.iter().enumerate() {

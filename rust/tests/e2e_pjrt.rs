@@ -113,6 +113,10 @@ fn pjrt_generation_is_deterministic() {
                 prefix_skip: false,
                 swap_preempt: false,
                 kv_dtype: opt4gptq::engine::KvDtype::F32,
+                max_waiting: usize::MAX,
+                // Pinned: injected faults would force chunk-resume paths
+                // the dense-lane HLO artifacts cannot express.
+                faults: opt4gptq::engine::FaultPlan::NONE,
             },
             backend,
         );

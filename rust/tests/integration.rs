@@ -54,7 +54,14 @@ fn engine_times_scale_with_model_cost() {
         let model = by_name(name).unwrap();
         let backend = SimBackend::new(model, OptConfig::BASELINE, 8);
         let mut e = Engine::new(
-            EngineConfig { max_batch: 8, total_blocks: 8192, ..Default::default() },
+            // Pinned fault-free: this compares virtual elapsed times, and
+            // injected-fault retry backoffs would distort the ratio.
+            EngineConfig {
+                max_batch: 8,
+                total_blocks: 8192,
+                faults: opt4gptq::engine::FaultPlan::NONE,
+                ..Default::default()
+            },
             backend,
         );
         for r in &trace.requests {
@@ -81,7 +88,14 @@ fn kernel_gains_survive_to_serving_for_all_models() {
         for opt in [OptConfig::BASELINE, OptConfig::OPT4GPTQ] {
             let backend = SimBackend::new(model, opt, 8);
             let mut e = Engine::new(
-                EngineConfig { max_batch: 8, total_blocks: 8192, ..Default::default() },
+                // Pinned fault-free: the gain band asserts the undisturbed
+                // cost model, not serving-under-chaos throughput.
+                EngineConfig {
+                    max_batch: 8,
+                    total_blocks: 8192,
+                    faults: opt4gptq::engine::FaultPlan::NONE,
+                    ..Default::default()
+                },
                 backend,
             );
             for r in &trace.requests {

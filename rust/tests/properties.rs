@@ -10,12 +10,15 @@
 //! * engine conservation: every admitted request finishes exactly once
 //!   with exactly `max_tokens` tokens;
 //! * trace-replay equivalence: batched serving under arrivals,
-//!   priorities and preemption (swap or recompute) yields per-request
-//!   tokens bit-identical to a serial one-request-at-a-time replay,
-//!   and leaks no KV blocks after draining.
+//!   priorities, preemption (swap or recompute) AND a randomized
+//!   recoverable fault schedule yields per-request tokens bit-identical
+//!   to a fault-free serial one-request-at-a-time replay, resolves every
+//!   request as Completed, and passes the post-drain invariant audit.
 
 use opt4gptq::engine::block_manager::BlockManager;
-use opt4gptq::engine::{Engine, EngineConfig, KvDtype, Request, SamplingParams, SimBackend};
+use opt4gptq::engine::{
+    Engine, EngineConfig, FaultPlan, KvDtype, Request, SamplingParams, SimBackend,
+};
 use opt4gptq::f16::{self, F16};
 use opt4gptq::gptq::{pack, quantize_rtn, Matrix};
 use opt4gptq::models::by_name;
@@ -248,9 +251,10 @@ fn prop_engine_conservation() {
 fn prop_trace_replay_matches_serial() {
     // Continuous batching is an *optimization*: whatever the scheduler
     // does — arrival gating, priority admission, chunked prefill, swap
-    // or recompute preemption — each request's sampled tokens must be
-    // exactly what a serial one-request-at-a-time replay produces, and
-    // the pool must be whole once everything drains.
+    // or recompute preemption, even under an injected recoverable fault
+    // schedule — each request's sampled tokens must be exactly what a
+    // fault-free serial one-request-at-a-time replay produces, and the
+    // pool must be whole once everything drains.
     //
     // Sizing keeps every request admittable (max 22 total tokens = 6
     // blocks of 4, pool ≥ 7) so "all complete" is a hard invariant,
@@ -268,6 +272,18 @@ fn prop_trace_replay_matches_serial() {
             // parity must hold at every pool dtype (the sim backend's
             // spill pricing changes with it, its logits do not).
             let kv_dtype = KvDtype::ALL[r.range_usize(0, KvDtype::ALL.len() - 1)];
+            // Randomized recoverable-only fault schedule for the batched
+            // engine: transient step errors, spill write/restore failures
+            // and allocation refusals.  No permanent faults — every
+            // request must still complete, bit-identically.
+            let faults = FaultPlan {
+                seed: r.next_u64(),
+                step_transient: r.f64() * 0.15,
+                spill_out: r.f64() * 0.2,
+                spill_in: r.f64() * 0.2,
+                alloc: r.f64() * 0.1,
+                ..FaultPlan::NONE
+            };
             let reqs: Vec<(usize, usize, i32, f64)> = (0..n_req)
                 .map(|_| {
                     let plen = r.range_usize(1, 12);
@@ -278,9 +294,9 @@ fn prop_trace_replay_matches_serial() {
                     (plen, gen, priority, arrival)
                 })
                 .collect();
-            (max_batch, total_blocks, prefill_budget, swap, kv_dtype, reqs)
+            (max_batch, total_blocks, prefill_budget, swap, kv_dtype, faults, reqs)
         },
-        |(max_batch, total_blocks, prefill_budget, swap, kv_dtype, reqs)| {
+        |(max_batch, total_blocks, prefill_budget, swap, kv_dtype, faults, reqs)| {
             let mk_req = |i: usize, plen: usize, gen: usize, priority: i32, arrival: f64| {
                 // Distinct per-request prompts: prefix sharing may still
                 // occur on accidental overlaps, which is the point.
@@ -312,6 +328,8 @@ fn prop_trace_replay_matches_serial() {
                     prefix_skip: true,
                     swap_preempt: *swap,
                     kv_dtype: *kv_dtype,
+                    max_waiting: usize::MAX,
+                    faults: *faults,
                 },
                 SimBackend::new(
                     by_name("Qwen1.5-1.8B-Chat-GPTQ-Int4").unwrap(),
@@ -336,8 +354,19 @@ fn prop_trace_replay_matches_serial() {
                     total_blocks
                 ),
             )?;
+            // Every request must resolve as Completed (the fault plan is
+            // recoverable-only), and the full post-drain auditor — block
+            // manager, spill ledger, physical pool — must come up clean.
+            for (id, outcome) in &report.outcomes {
+                if *outcome != opt4gptq::engine::RequestOutcome::Completed {
+                    return Err(format!("req {id}: non-Completed outcome {outcome:?}"));
+                }
+            }
+            e.audit()?;
             // Serial reference: each request alone in a roomy engine,
-            // arriving at t=0 — no chunking pressure, no preemption.
+            // arriving at t=0 — no chunking pressure, no preemption, and
+            // (pinned) no faults: this is the ground truth the faulty
+            // batched run must reproduce bit-for-bit.
             for (i, &(plen, gen, priority, _)) in reqs.iter().enumerate() {
                 let mut solo = Engine::new(
                     EngineConfig {
@@ -349,6 +378,8 @@ fn prop_trace_replay_matches_serial() {
                         prefix_skip: true,
                         swap_preempt: false,
                         kv_dtype: *kv_dtype,
+                        max_waiting: usize::MAX,
+                        faults: FaultPlan::NONE,
                     },
                     SimBackend::new(
                         by_name("Qwen1.5-1.8B-Chat-GPTQ-Int4").unwrap(),

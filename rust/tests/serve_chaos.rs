@@ -25,7 +25,8 @@
 //! whose restore must be byte-exact.
 
 use opt4gptq::engine::{
-    CpuBackend, CpuModelConfig, Engine, EngineConfig, KvDtype, Request, SamplingParams,
+    CpuBackend, CpuModelConfig, Engine, EngineConfig, FaultPlan, KvDtype, Request,
+    RequestOutcome, SamplingParams,
 };
 
 const N_REQ: usize = 6;
@@ -88,6 +89,11 @@ fn storm_cfg(swap_preempt: bool, kv_dtype: KvDtype) -> EngineConfig {
         prefix_skip: true,
         swap_preempt,
         kv_dtype,
+        max_waiting: usize::MAX,
+        // Pinned fault-free: the storm triple pins swap/recompute/roomy
+        // bit-identity on its own; the fault-storm tests below inject on
+        // top of this same workload.
+        faults: FaultPlan::NONE,
     }
 }
 
@@ -101,6 +107,10 @@ fn roomy_cfg(kv_dtype: KvDtype) -> EngineConfig {
         prefix_skip: true,
         swap_preempt: true,
         kv_dtype,
+        max_waiting: usize::MAX,
+        // Pinned: this reference run asserts preemption_count == 0,
+        // which an env-injected alloc/step fault would break.
+        faults: FaultPlan::NONE,
     }
 }
 
@@ -169,6 +179,94 @@ fn swap_storm_is_bit_identical_to_unpreempted_run() {
             "[{kv_dtype}] recompute-preempted replay diverged from the unpreempted run"
         );
     }
+}
+
+#[test]
+fn fault_storm_keeps_completed_tokens_bit_identical() {
+    // The swap storm again, now with a recoverable-only fault plan
+    // injected on top: transient step errors (discard + bounded-backoff
+    // retry), spill write/restore failures (demote to recompute) and
+    // allocation refusals (admission stalls, append preemptions).  Every
+    // request must still complete, with tokens bit-identical to the
+    // fault-free storm, and the pool must drain clean — at every dtype.
+    for kv_dtype in KvDtype::ALL {
+        let (reference, _) = run(storm_cfg(true, kv_dtype));
+        let plan = FaultPlan {
+            seed: 20260808,
+            step_transient: 0.08,
+            spill_out: 0.15,
+            spill_in: 0.15,
+            alloc: 0.08,
+            ..FaultPlan::NONE
+        };
+        let (faulty, e) = run(EngineConfig { faults: plan, ..storm_cfg(true, kv_dtype) });
+        assert!(
+            e.scheduler.faults.total_fired() > 0,
+            "[{kv_dtype}] the plan must actually inject faults"
+        );
+        assert!(
+            e.metrics.step_retries > 0,
+            "[{kv_dtype}] transient step errors must drive retries"
+        );
+        assert_eq!(
+            faulty, reference,
+            "[{kv_dtype}] fault recovery diverged from the fault-free storm"
+        );
+        e.audit().unwrap();
+    }
+}
+
+#[test]
+fn fault_storm_with_permanent_faults_deadlines_and_shedding_types_every_outcome() {
+    // The harshest plane: permanent step faults (batch members fail for
+    // good), per-request deadlines on the accumulated clock, and a
+    // bounded waiting queue that sheds the overflow.  Which requests
+    // time out depends on wall time (the CPU backend's clock is real),
+    // so the assertions are structural: exactly one typed outcome per
+    // request, shed count exact, completed requests bit-identical to
+    // the fault-free storm, pool drained clean.
+    let (reference, _) = run(storm_cfg(true, KvDtype::F32));
+    let plan = FaultPlan {
+        seed: 7,
+        step_transient: 0.05,
+        step_permanent: 0.02,
+        spill_out: 0.1,
+        spill_in: 0.1,
+        alloc: 0.05,
+        ..FaultPlan::NONE
+    };
+    let cfg =
+        EngineConfig { faults: plan, max_waiting: 4, ..storm_cfg(true, KvDtype::F32) };
+    let mut e = Engine::new(cfg, backend());
+    for mut r in requests() {
+        r.deadline = Some(r.arrival + 5.0);
+        e.add_request(r);
+    }
+    let report = e.run().unwrap();
+    assert_eq!(report.outcomes.len(), N_REQ, "one typed outcome per request");
+    let mut ids: Vec<usize> = report.outcomes.iter().map(|(id, _)| *id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), N_REQ, "duplicate or missing outcomes");
+    let shed = report
+        .outcomes
+        .iter()
+        .filter(|(_, o)| matches!(o, RequestOutcome::Rejected { .. }))
+        .count();
+    assert_eq!(shed, N_REQ - 4, "max_waiting=4 must shed exactly the overflow");
+    for o in &report.outputs {
+        let (_, want) = reference.iter().find(|(id, _)| *id == o.id).unwrap();
+        assert_eq!(&o.tokens, want, "req {} diverged under faults", o.id);
+    }
+    for (id, outcome) in &report.outcomes {
+        let has_output = report.outputs.iter().any(|o| o.id == *id);
+        assert_eq!(
+            has_output,
+            *outcome == RequestOutcome::Completed,
+            "request {id}: outputs/outcome disagree ({outcome:?})"
+        );
+    }
+    e.audit().unwrap();
 }
 
 #[test]
