@@ -73,6 +73,21 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// A boolean switch that works both as a bare `--name` flag and as
+    /// an explicit `--name true|false` / `--name=1` option.  The parser
+    /// greedily binds `--name <next>` whenever `<next>` is not itself a
+    /// `--` token, so a switch followed by a value-like argument would
+    /// otherwise silently swallow it; accepting both spellings makes
+    /// switches position-robust.
+    pub fn switch(&self, name: &str) -> bool {
+        if self.flag(name) {
+            return true;
+        }
+        self.get(name)
+            .map(|v| matches!(v.to_ascii_lowercase().as_str(), "1" | "true" | "on" | "yes"))
+            .unwrap_or(false)
+    }
+
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
     }
@@ -108,5 +123,17 @@ mod tests {
         assert_eq!(a.get_or("x", "d"), "d");
         assert_eq!(a.get_f64("y", 2.5), 2.5);
         assert_eq!(a.subcommand(), None);
+    }
+
+    #[test]
+    fn switch_accepts_flag_and_option_spellings() {
+        assert!(parse(&["--restore"]).switch("restore"));
+        assert!(parse(&["--restore", "--other"]).switch("restore"));
+        // Greedy binding turns `--restore true` into an option; the
+        // switch accessor must still see it.
+        assert!(parse(&["--restore", "true"]).switch("restore"));
+        assert!(parse(&["--restore=1"]).switch("restore"));
+        assert!(!parse(&["--restore", "false"]).switch("restore"));
+        assert!(!parse(&[]).switch("restore"));
     }
 }

@@ -44,7 +44,7 @@ use crate::OptConfig;
 use crate::Result;
 
 use super::block_manager::BlockId;
-use super::kv::{KvDtype, PagedKvCache};
+use super::kv::{KvDtype, KvSpill, PagedKvCache};
 
 /// A typed failure from a backend seam ([`Backend::step`],
 /// [`Backend::swap_out`], [`Backend::swap_in`]) — the error contract the
@@ -255,6 +255,40 @@ pub trait Backend {
         None
     }
 
+    /// Checkpoint read path: pack the K/V payload of live `blocks`
+    /// (table order, non-consuming — the blocks stay resident).  `None`
+    /// for backends without physical K/V; a snapshot of those carries
+    /// accounting state only.
+    fn export_kv(&self, _blocks: &[BlockId]) -> Option<KvSpill> {
+        None
+    }
+
+    /// Checkpoint restore path: write a packed payload from
+    /// [`Backend::export_kv`] back onto freshly-bound `blocks` (same
+    /// count and order as the export).  No-op for virtual backends.
+    fn import_kv(&mut self, _blocks: &[BlockId], _payload: &KvSpill) {}
+
+    /// Checkpoint read path for a swapped-out sequence's host-side spill
+    /// entry (non-consuming).  `None` when the backend keeps no payload
+    /// — e.g. [`SimBackend`] prices bytes only, and re-derives them on
+    /// [`Backend::import_spill`].
+    fn export_spill(&self, _seq_id: usize) -> Option<KvSpill> {
+        None
+    }
+
+    /// Checkpoint restore path: recreate a swapped-out sequence's spill
+    /// entry — `n_blocks` spilled blocks, plus the packed payload when
+    /// the exporting backend had one.
+    fn import_spill(&mut self, _seq_id: usize, _n_blocks: usize, _payload: Option<KvSpill>) {}
+
+    /// Arm a one-shot injected fault *inside* the next forward pass (the
+    /// [`super::fault::FaultSeam::MidLayerPoison`] seam): backends with
+    /// real math corrupt one attention tile mid-layer, so the failure
+    /// must be caught by their own output validation — not by the
+    /// engine's seam checks.  Virtual backends ignore it (their logits
+    /// are synthesized, so there is no layer to poison).
+    fn inject_fault(&mut self) {}
+
     /// KV-memory accounting, if this backend tracks it: pool bytes,
     /// bytes per resident token, and spill volume (see [`KvStats`]).
     /// `None` for backends with no KV accounting at all.
@@ -371,6 +405,18 @@ impl Backend for SimBackend {
         if let Some(bytes) = self.spill_sizes.remove(&seq_id) {
             self.spill_bytes -= bytes;
         }
+    }
+
+    fn import_spill(&mut self, seq_id: usize, n_blocks: usize, _payload: Option<KvSpill>) {
+        // No payload survives a snapshot of a virtual backend; the
+        // priced size is a pure function of geometry, so re-derive it.
+        let bytes = n_blocks
+            * self.kv_dtype.block_bytes(self.kv_block_size, self.model.n_layers, self.model.kv_dim());
+        if let Some(old) = self.spill_sizes.insert(seq_id, bytes) {
+            self.spill_bytes -= old;
+        }
+        self.spill_bytes += bytes;
+        self.spill_peak_bytes = self.spill_peak_bytes.max(self.spill_bytes);
     }
 
     fn release_seq(&mut self, seq_id: usize) {

@@ -65,6 +65,26 @@ pub struct BlockManager {
     swap_in_log: Vec<(usize, Vec<BlockId>)>,
 }
 
+/// The allocator's full accounting state as plain data — what a
+/// checkpoint serializes.  Map-backed fields are exported as key-sorted
+/// vectors so snapshot bytes are deterministic; the free list keeps its
+/// exact stack order, because block *placement* (which physical id the
+/// next `free.pop()` hands out) must replay bit-identically after a
+/// restore.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockManagerState {
+    pub block_size: usize,
+    /// Per block, indexed by [`BlockId`]: (refcount, prefix_hash, computed).
+    pub blocks: Vec<(usize, Option<u64>, bool)>,
+    /// Free list in stack (pop) order.
+    pub free: Vec<BlockId>,
+    pub prefix_index: Vec<(u64, BlockId)>,
+    pub tables: Vec<(usize, Vec<BlockId>)>,
+    /// Swapped-out sequences: (seq id, spilled block count).
+    pub swapped: Vec<(usize, usize)>,
+    pub prefix_hits: usize,
+}
+
 impl BlockManager {
     pub fn new(total_blocks: usize, block_size: usize) -> BlockManager {
         assert!(block_size > 0 && total_blocks > 0);
@@ -385,6 +405,70 @@ impl BlockManager {
             return Err("undrained release/swap logs".into());
         }
         Ok(())
+    }
+
+    /// Export the full accounting state for a checkpoint.  Only legal at
+    /// a quiescent point: every release/swap log must have been drained
+    /// (the engine checkpoints after its end-of-step drain), or the
+    /// snapshot would silently drop backend work in flight.
+    pub fn export_state(&self) -> Result<BlockManagerState, String> {
+        if !self.freed_log.is_empty()
+            || !self.released_seqs.is_empty()
+            || !self.swap_out_log.is_empty()
+            || !self.swap_in_log.is_empty()
+        {
+            return Err("cannot snapshot with undrained release/swap logs".into());
+        }
+        let mut prefix_index: Vec<(u64, BlockId)> =
+            self.prefix_index.iter().map(|(&k, &b)| (k, b)).collect();
+        prefix_index.sort_unstable();
+        let mut tables: Vec<(usize, Vec<BlockId>)> =
+            self.tables.iter().map(|(&id, t)| (id, t.clone())).collect();
+        tables.sort_unstable_by_key(|(id, _)| *id);
+        let mut swapped: Vec<(usize, usize)> =
+            self.swapped.iter().map(|(&id, &n)| (id, n)).collect();
+        swapped.sort_unstable();
+        Ok(BlockManagerState {
+            block_size: self.block_size,
+            blocks: self
+                .blocks
+                .iter()
+                .map(|b| (b.refcount, b.prefix_hash, b.computed))
+                .collect(),
+            free: self.free.clone(),
+            prefix_index,
+            tables,
+            swapped,
+            prefix_hits: self.prefix_hits,
+        })
+    }
+
+    /// Rebuild an allocator from persisted [`Self::export_state`] output,
+    /// validating internal consistency before handing it back (a corrupt
+    /// or hand-edited snapshot must fail restore, not corrupt serving).
+    pub fn import_state(state: BlockManagerState) -> Result<BlockManager, String> {
+        if state.block_size == 0 || state.blocks.is_empty() {
+            return Err("snapshot block geometry is degenerate".into());
+        }
+        let bm = BlockManager {
+            block_size: state.block_size,
+            blocks: state
+                .blocks
+                .into_iter()
+                .map(|(refcount, prefix_hash, computed)| Block { refcount, prefix_hash, computed })
+                .collect(),
+            free: state.free,
+            prefix_index: state.prefix_index.into_iter().collect(),
+            tables: state.tables.into_iter().collect(),
+            prefix_hits: state.prefix_hits,
+            freed_log: Vec::new(),
+            released_seqs: Vec::new(),
+            swapped: state.swapped.into_iter().collect(),
+            swap_out_log: Vec::new(),
+            swap_in_log: Vec::new(),
+        };
+        bm.check_invariants().map_err(|e| format!("snapshot allocator state invalid: {e}"))?;
+        Ok(bm)
     }
 
     /// Invariant check used by property tests: refcounts, free list and
@@ -810,6 +894,59 @@ mod tests {
         bm.take_swap_ins();
         bm.take_released();
         bm.assert_drained().unwrap();
+    }
+
+    #[test]
+    fn export_import_roundtrips_exact_state() {
+        let mut bm = BlockManager::new(8, 4);
+        let prompt: Vec<u32> = (0..8).collect();
+        assert!(bm.allocate(1, &prompt).is_some());
+        bm.mark_computed(1, 8);
+        assert!(bm.allocate(2, &prompt).is_some()); // shared, prefix hits
+        assert!(bm.allocate(3, &[9, 9, 9]).is_some());
+        bm.swap_out(3);
+        bm.take_swap_outs();
+        bm.take_released();
+        let state = bm.export_state().unwrap();
+        let restored = BlockManager::import_state(state.clone()).unwrap();
+        // The restored allocator exports the identical state (free-list
+        // order included — block placement must replay bit-identically).
+        assert_eq!(restored.export_state().unwrap(), state);
+        assert_eq!(restored.free_list(), bm.free_list());
+        assert_eq!(restored.table(1), bm.table(1));
+        assert!(restored.is_swapped(3));
+        assert_eq!(restored.prefix_hits, bm.prefix_hits);
+        restored.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn export_refuses_undrained_logs() {
+        let mut bm = BlockManager::new(4, 4);
+        assert!(bm.allocate(1, &[1, 2, 3]).is_some());
+        bm.free_sequence(1);
+        let err = bm.export_state().unwrap_err();
+        assert!(err.contains("undrained"), "{err}");
+        bm.take_released();
+        bm.export_state().unwrap();
+    }
+
+    #[test]
+    fn import_rejects_corrupt_state() {
+        let mut bm = BlockManager::new(4, 4);
+        assert!(bm.allocate(1, &[1, 2, 3]).is_some());
+        let good = bm.export_state().unwrap();
+        // Refcount tampered: table refs no longer match.
+        let mut bad = good.clone();
+        bad.blocks[bm.table(1).unwrap()[0]].0 += 1;
+        assert!(BlockManager::import_state(bad).is_err());
+        // Free-list entry pointing at a held block.
+        let mut bad = good.clone();
+        bad.free.push(bm.table(1).unwrap()[0]);
+        assert!(BlockManager::import_state(bad).is_err());
+        // Degenerate geometry.
+        let mut bad = good;
+        bad.blocks.clear();
+        assert!(BlockManager::import_state(bad).is_err());
     }
 
     #[test]

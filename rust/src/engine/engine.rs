@@ -18,6 +18,7 @@
 //! released (poisoned/recycled) after it.
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 
 use anyhow::bail;
 
@@ -25,8 +26,10 @@ use crate::rng::Rng;
 use crate::Result;
 
 use super::backend::{Backend, DecodeDesc, PrefillDesc, StepError};
+use super::block_manager::BlockManager;
 use super::fault::FaultSeam;
 use super::metrics::Metrics;
+use super::persist::{self, ConfigFingerprint, EngineSnapshot, PendingSnap, SchedSnap, SeqSnap};
 use super::request::{Request, RequestOutcome, RequestOutput};
 use super::sampler;
 use super::scheduler::{PrefillChunk, ScheduledWork, Scheduler};
@@ -80,6 +83,16 @@ pub struct Engine<B: Backend> {
     consecutive_step_failures: u32,
     /// Consecutive admission passes stalled by injected alloc faults.
     fault_stalls: usize,
+    /// Checkpoint directory (None = checkpointing off).
+    persist_dir: Option<PathBuf>,
+    /// Steps between snapshot commits when checkpointing is on.
+    checkpoint_every: usize,
+    steps_since_checkpoint: usize,
+    /// Sequence number the next snapshot file will use.
+    snap_seq: u64,
+    /// Request ids queued by [`Engine::cancel`]; drained at the next
+    /// step boundary.
+    cancel_queue: Vec<usize>,
 }
 
 impl<B: Backend> Engine<B> {
@@ -101,8 +114,30 @@ impl<B: Backend> Engine<B> {
             outcomes: Vec::new(),
             consecutive_step_failures: 0,
             fault_stalls: 0,
+            persist_dir: None,
+            checkpoint_every: 0,
+            steps_since_checkpoint: 0,
+            snap_seq: 0,
+            cancel_queue: Vec::new(),
             cfg,
         }
+    }
+
+    /// Turn on crash-consistent checkpointing: every `every` successful
+    /// steps the full engine state is committed to `dir` (atomic
+    /// rename; the latest few snapshots are retained).  Numbering
+    /// continues from whatever snapshots `dir` already holds, so a
+    /// restored engine keeps appending to the same history.  A no-op
+    /// when `OPT4GPTQ_PERSIST` turned persistence off.
+    pub fn enable_checkpoints(&mut self, dir: impl Into<PathBuf>, every: usize) {
+        if !super::persist_default() {
+            return;
+        }
+        let dir = dir.into();
+        self.snap_seq = persist::next_seq(&dir);
+        self.persist_dir = Some(dir);
+        self.checkpoint_every = every.max(1);
+        self.steps_since_checkpoint = 0;
     }
 
     pub fn add_request(&mut self, req: Request) {
@@ -135,6 +170,7 @@ impl<B: Backend> Engine<B> {
         loop {
             self.admit_arrivals();
             self.expire_deadlines();
+            self.drain_cancellations();
             // Deadline retirements free blocks: forward them to the
             // backend *before* schedule() can hand the same ids out
             // again, or the release-time poison would clobber live K/V.
@@ -186,6 +222,10 @@ impl<B: Backend> Engine<B> {
                     self.run_step(prefills, decodes)?;
                     self.metrics.engine_steps += 1;
                     self.drain_releases();
+                    // Quiescent point: all releases forwarded, no logs
+                    // pending — exactly the state a snapshot can
+                    // capture and a restore can resume from.
+                    self.maybe_checkpoint()?;
                     return Ok(true);
                 }
             }
@@ -223,12 +263,44 @@ impl<B: Backend> Engine<B> {
         }
     }
 
+    /// Cooperatively cancel a request (front-end abort).  Queued here
+    /// and drained at the next step boundary — never mid-batch — so
+    /// the cancelled sequence's blocks and spill entries go through
+    /// the regular reclamation machinery.  Unknown or already-finished
+    /// ids are ignored.
+    pub fn cancel(&mut self, id: usize) {
+        self.cancel_queue.push(id);
+    }
+
+    /// Resolve queued [`Engine::cancel`] calls: wherever the request is
+    /// — pending, waiting, swapped, or mid-generation — it retires with
+    /// full block/spill reclamation and a typed
+    /// [`RequestOutcome::Cancelled`].
+    fn drain_cancellations(&mut self) {
+        if self.cancel_queue.is_empty() {
+            return;
+        }
+        let mut ids = std::mem::take(&mut self.cancel_queue);
+        ids.sort_unstable();
+        ids.dedup();
+        for id in ids {
+            if let Some(pos) = self.pending.iter().position(|r| r.id == id) {
+                self.pending.swap_remove(pos);
+                self.resolve(id, RequestOutcome::Cancelled);
+            } else if self.scheduler.seqs.get(&id).is_some_and(|s| s.state != SeqState::Finished) {
+                self.scheduler.retire(id);
+                self.resolve(id, RequestOutcome::Cancelled);
+            }
+        }
+    }
+
     /// Record a request's terminal outcome and bump its metric.
     fn resolve(&mut self, id: usize, outcome: RequestOutcome) {
         match &outcome {
             RequestOutcome::Completed => {}
             RequestOutcome::Rejected { .. } => self.metrics.rejected_requests += 1,
             RequestOutcome::TimedOut => self.metrics.timed_out_requests += 1,
+            RequestOutcome::Cancelled => self.metrics.cancelled_requests += 1,
             RequestOutcome::Failed { .. } => self.metrics.failed_requests += 1,
         }
         self.outcomes.push((id, outcome));
@@ -289,6 +361,186 @@ impl<B: Backend> Engine<B> {
         }
         if let Some(pool) = self.backend.paged_kv() {
             pool.audit(self.scheduler.blocks.free_list())?;
+        }
+        Ok(())
+    }
+
+    /// Commit a snapshot if checkpointing is on and the interval is
+    /// due.  The two crash seams bracket the commit:
+    /// [`FaultSeam::CrashBeforeCommit`] kills the process (an `Err`
+    /// the caller treats as death) with the previous snapshot still
+    /// the newest on disk; [`FaultSeam::CrashAfterCommit`] kills it
+    /// just after the rename, so restart resumes from the state this
+    /// very step produced.  Either way [`Engine::restore`] must drive
+    /// the run to the same completed tokens.
+    fn maybe_checkpoint(&mut self) -> Result<()> {
+        let Some(dir) = self.persist_dir.clone() else { return Ok(()) };
+        self.steps_since_checkpoint += 1;
+        if self.steps_since_checkpoint < self.checkpoint_every {
+            return Ok(());
+        }
+        self.steps_since_checkpoint = 0;
+        if self.scheduler.faults.fire(FaultSeam::CrashBeforeCommit) {
+            bail!("injected crash before checkpoint commit (seam crash_before)");
+        }
+        let snap = match self.snapshot() {
+            Ok(s) => s,
+            Err(e) => bail!("checkpoint serialization failed: {e}"),
+        };
+        persist::write_snapshot(&dir, self.snap_seq, &snap)?;
+        self.snap_seq += 1;
+        self.metrics.checkpoints_written += 1;
+        if self.scheduler.faults.fire(FaultSeam::CrashAfterCommit) {
+            bail!("injected crash after checkpoint commit (seam crash_after)");
+        }
+        Ok(())
+    }
+
+    /// Capture the full engine state at the current (quiescent) step
+    /// boundary.  Fails if any release/swap log is undrained — the
+    /// engine only calls this right after [`Engine::drain_releases`],
+    /// but an external caller could not.
+    pub fn snapshot(&self) -> std::result::Result<EngineSnapshot, String> {
+        let blocks = self.scheduler.blocks.export_state()?;
+        let (waiting, running, prefilling) = self.scheduler.export_queues()?;
+        let mut sequences: Vec<SeqSnap> = Vec::with_capacity(self.scheduler.seqs.len());
+        let mut ids: Vec<usize> = self.scheduler.seqs.keys().copied().collect();
+        ids.sort_unstable();
+        for id in ids {
+            let rng = self
+                .rngs
+                .get(&id)
+                .ok_or_else(|| format!("sequence {id} has no RNG stream"))?;
+            sequences.push(SeqSnap { seq: self.scheduler.seqs[&id].clone(), rng: rng.state() });
+        }
+        let mut pending: Vec<PendingSnap> = Vec::with_capacity(self.pending.len());
+        let mut preqs: Vec<&Request> = self.pending.iter().collect();
+        preqs.sort_unstable_by_key(|r| r.id);
+        for req in preqs {
+            let rng = self
+                .rngs
+                .get(&req.id)
+                .ok_or_else(|| format!("pending request {} has no RNG stream", req.id))?;
+            pending.push(PendingSnap { req: req.clone(), rng: rng.state() });
+        }
+        let (fault_draws, fault_fired) = self.scheduler.faults.draw_state();
+        let s = &self.scheduler;
+        let sched = SchedSnap {
+            preemption_count: s.preemption_count,
+            prefill_tokens_skipped: s.prefill_tokens_skipped,
+            swap_out_count: s.swap_out_count,
+            swap_out_mid_prefill: s.swap_out_mid_prefill,
+            swap_out_mid_decode: s.swap_out_mid_decode,
+            swap_in_count: s.swap_in_count,
+            swap_restored_tokens: s.swap_restored_tokens,
+            shed_count: s.shed_count,
+            fault_draws,
+            fault_fired,
+        };
+        // Pack every live block's K/V rows in one export, ascending id
+        // — restore replays the same order, so payload and block list
+        // stay aligned.
+        let kv_blocks: Vec<usize> = blocks
+            .blocks
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.0 > 0)
+            .map(|(i, _)| i)
+            .collect();
+        let kv_payload =
+            if kv_blocks.is_empty() { None } else { self.backend.export_kv(&kv_blocks) };
+        let spills = blocks
+            .swapped
+            .iter()
+            .map(|&(id, n)| (id, n, self.backend.export_spill(id)))
+            .collect();
+        Ok(EngineSnapshot {
+            config: ConfigFingerprint::of(&self.cfg),
+            clock: self.clock,
+            consecutive_step_failures: self.consecutive_step_failures,
+            fault_stalls: self.fault_stalls,
+            sequences,
+            pending,
+            waiting,
+            running,
+            prefilling,
+            sched,
+            blocks,
+            outcomes: self.outcomes.clone(),
+            outputs: self.outputs.clone(),
+            metrics: self.metrics.clone(),
+            kv_blocks,
+            kv_payload,
+            spills,
+        })
+    }
+
+    /// Build an engine resumed from the newest valid snapshot in `dir`
+    /// (torn or corrupt trailing commits are skipped).  The engine
+    /// continues mid-prompt and mid-decode exactly where the snapshot
+    /// was taken: with the same (or a crash-free) fault plan it
+    /// produces tokens bit-identical to the uninterrupted run.  The
+    /// same path rehydrates computed shared-prefix blocks for a fresh
+    /// serving process — new requests over the same system prompt skip
+    /// the cached span without re-prefilling.
+    pub fn restore(cfg: EngineConfig, backend: B, dir: &Path) -> Result<Engine<B>> {
+        let (seq_no, snap) = match persist::load_latest(dir) {
+            Ok(Some(x)) => x,
+            Ok(None) => bail!("no snapshot found in {}", dir.display()),
+            Err(e) => bail!("{e}"),
+        };
+        let mut engine = Engine::new(cfg, backend);
+        if let Err(e) = engine.apply_snapshot(snap) {
+            bail!("restore from snapshot {seq_no} failed: {e}");
+        }
+        Ok(engine)
+    }
+
+    /// Rehydrate this (freshly constructed) engine from a snapshot.
+    fn apply_snapshot(&mut self, snap: EngineSnapshot) -> std::result::Result<(), String> {
+        let fp = ConfigFingerprint::of(&self.cfg);
+        if snap.config != fp {
+            return Err(format!("config mismatch: snapshot {:?} vs engine {:?}", snap.config, fp));
+        }
+        self.clock = snap.clock;
+        self.consecutive_step_failures = snap.consecutive_step_failures;
+        self.fault_stalls = snap.fault_stalls;
+        self.scheduler.blocks = BlockManager::import_state(snap.blocks)?;
+        self.rngs.clear();
+        let mut live = 0usize;
+        for s in snap.sequences {
+            if s.seq.state != SeqState::Finished {
+                live += 1;
+            }
+            self.rngs.insert(s.seq.id, Rng::from_state(s.rng.0, s.rng.1));
+            self.scheduler.seqs.insert(s.seq.id, s.seq);
+        }
+        self.pending.clear();
+        for p in snap.pending {
+            live += 1;
+            self.rngs.insert(p.req.id, Rng::from_state(p.rng.0, p.rng.1));
+            self.pending.push(p.req);
+        }
+        self.scheduler.import_queues(snap.waiting, snap.running, snap.prefilling)?;
+        let sc = snap.sched;
+        self.scheduler.preemption_count = sc.preemption_count;
+        self.scheduler.prefill_tokens_skipped = sc.prefill_tokens_skipped;
+        self.scheduler.swap_out_count = sc.swap_out_count;
+        self.scheduler.swap_out_mid_prefill = sc.swap_out_mid_prefill;
+        self.scheduler.swap_out_mid_decode = sc.swap_out_mid_decode;
+        self.scheduler.swap_in_count = sc.swap_in_count;
+        self.scheduler.swap_restored_tokens = sc.swap_restored_tokens;
+        self.scheduler.shed_count = sc.shed_count;
+        self.scheduler.faults.set_draw_state(sc.fault_draws, sc.fault_fired);
+        self.outcomes = snap.outcomes;
+        self.outputs = snap.outputs;
+        self.metrics = snap.metrics;
+        self.metrics.restored_requests = live;
+        if let Some(payload) = &snap.kv_payload {
+            self.backend.import_kv(&snap.kv_blocks, payload);
+        }
+        for (id, n, payload) in snap.spills {
+            self.backend.import_spill(id, n, payload);
         }
         Ok(())
     }
@@ -363,6 +615,13 @@ impl<B: Backend> Engine<B> {
         // advancing exactly once so a plan replays identically.
         let inject_permanent = self.scheduler.faults.fire(FaultSeam::StepPermanent);
         let inject_transient = self.scheduler.faults.fire(FaultSeam::StepTransient);
+        // Unlike the two step seams above (which fail the call from
+        // outside), this one corrupts data *inside* the backend's
+        // forward pass — the error must be detected by the backend's
+        // own output check, not injected at the call site.
+        if self.scheduler.faults.fire(FaultSeam::MidLayerPoison) {
+            self.backend.inject_fault();
+        }
         // Only each chunk's own span is materialized (owned buffers the
         // descriptors borrow from while the backend runs) — never the
         // whole effective prompt per step.
@@ -988,6 +1247,220 @@ mod tests {
             assert!(reason.contains("shed"), "reason: {reason}");
         }
         e.audit().unwrap();
+    }
+
+    #[test]
+    fn cooperative_cancellation_reclaims_and_reports() {
+        let m = by_name("Llama-2-7B-GPTQ").unwrap();
+        let be = SimBackend::new(m, OptConfig::BASELINE, 4);
+        let mut e = Engine::new(
+            EngineConfig {
+                max_batch: 4,
+                total_blocks: 2048,
+                faults: crate::engine::FaultPlan::NONE,
+                ..Default::default()
+            },
+            be,
+        );
+        e.add_request(req(0, 8, 5));
+        e.add_request(req(1, 8, 10_000)); // would decode ~forever
+        let mut late = req(2, 8, 5);
+        late.arrival = 1e9; // pending when cancelled
+        e.add_request(late);
+        // Let both admitted requests get going, then abort mid-decode.
+        for _ in 0..3 {
+            assert!(e.step().unwrap());
+        }
+        e.cancel(1);
+        e.cancel(2);
+        e.cancel(999); // unknown id: ignored
+        let report = e.run().unwrap();
+        assert_eq!(report.outputs.len(), 1, "only request 0 completes");
+        assert_eq!(report.outputs[0].id, 0);
+        assert_eq!(report.outcomes.len(), 3);
+        assert_eq!(report.outcomes[0], (0, RequestOutcome::Completed));
+        assert_eq!(report.outcomes[1], (1, RequestOutcome::Cancelled));
+        assert_eq!(report.outcomes[2], (2, RequestOutcome::Cancelled));
+        assert_eq!(report.metrics.cancelled_requests, 2);
+        assert!(
+            report.metrics.goodput_tokens < report.metrics.output_tokens,
+            "tokens generated for the aborted request must not count as goodput"
+        );
+        e.audit().unwrap();
+    }
+
+    #[test]
+    fn cancelling_a_finished_request_is_a_noop() {
+        let mut e = engine(4);
+        e.add_request(req(0, 8, 3));
+        let report1 = {
+            while e.step().unwrap() {}
+            e.cancel(0); // already finished
+            e.run().unwrap()
+        };
+        assert_eq!(report1.outcomes, vec![(0, RequestOutcome::Completed)]);
+        assert_eq!(report1.metrics.cancelled_requests, 0);
+    }
+
+    #[test]
+    fn mid_flight_checkpoint_restores_bit_identically() {
+        let dir = std::env::temp_dir().join(format!("o4g-engine-ckpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = EngineConfig {
+            max_batch: 4,
+            block_size: 4,
+            total_blocks: 64,
+            max_seq_len: 128,
+            prefill_budget: 16,
+            faults: crate::engine::FaultPlan::NONE,
+            ..Default::default()
+        };
+        let add_all = |e: &mut Engine<SimBackend>| {
+            for i in 0..6 {
+                let mut r = req(i, 12, 20);
+                r.prompt = vec![i as u32 + 1; 12];
+                r.sampling.temperature = 0.8;
+                r.sampling.top_k = 32;
+                r.sampling.seed = 13;
+                if i == 5 {
+                    r.arrival = 1e7; // stays pending across the snapshot
+                }
+                e.add_request(r);
+            }
+        };
+        let m = by_name("Llama-2-7B-GPTQ").unwrap();
+
+        // Reference: uninterrupted run.
+        let mut reference = Engine::new(cfg, SimBackend::new(m, OptConfig::BASELINE, 4));
+        add_all(&mut reference);
+        let want = reference.run().unwrap();
+
+        // Checkpointed run: same workload, snapshot every 3 steps.
+        let mut live = Engine::new(cfg, SimBackend::new(m, OptConfig::BASELINE, 4));
+        live.enable_checkpoints(&dir, 3);
+        add_all(&mut live);
+        // Drive a prefix of the run (guaranteed mid-flight: request 5
+        // is still pending, most of 0..5 still decoding), then abandon
+        // the engine — simulating a crash after its last commit.
+        for _ in 0..7 {
+            assert!(live.step().unwrap());
+        }
+        assert!(live.metrics.checkpoints_written >= 2);
+        drop(live);
+
+        // Restore and finish; completed tokens must match the
+        // reference bit-for-bit, and the auditor must stay green.
+        let mut restored =
+            Engine::<SimBackend>::restore(cfg, SimBackend::new(m, OptConfig::BASELINE, 4), &dir)
+                .unwrap();
+        assert!(restored.metrics.restored_requests > 0);
+        let got = restored.run().unwrap();
+        restored.audit().unwrap();
+        let key = |r: &EngineReport| {
+            let mut t: Vec<(usize, Vec<u32>)> =
+                r.outputs.iter().map(|o| (o.id, o.tokens.clone())).collect();
+            t.sort();
+            t
+        };
+        assert_eq!(key(&got), key(&want), "restored run must replay bit-identically");
+        assert_eq!(got.outcomes, want.outcomes);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restore_without_snapshots_is_an_error() {
+        let dir = std::env::temp_dir().join(format!("o4g-engine-empty-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = by_name("Llama-2-7B-GPTQ").unwrap();
+        let err = Engine::<SimBackend>::restore(
+            EngineConfig::default(),
+            SimBackend::new(m, OptConfig::BASELINE, 4),
+            &dir,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("no snapshot"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_geometry() {
+        let dir = std::env::temp_dir().join(format!("o4g-engine-fp-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = EngineConfig {
+            max_batch: 4,
+            total_blocks: 256,
+            faults: crate::engine::FaultPlan::NONE,
+            ..Default::default()
+        };
+        let m = by_name("Llama-2-7B-GPTQ").unwrap();
+        let mut e = Engine::new(cfg, SimBackend::new(m, OptConfig::BASELINE, 4));
+        e.enable_checkpoints(&dir, 1);
+        e.add_request(req(0, 8, 6));
+        assert!(e.step().unwrap());
+        assert_eq!(e.metrics.checkpoints_written, 1);
+        let bad_cfg = EngineConfig { total_blocks: 128, ..cfg };
+        let err = Engine::<SimBackend>::restore(
+            bad_cfg,
+            SimBackend::new(m, OptConfig::BASELINE, 4),
+            &dir,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("config mismatch"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn crash_seams_kill_the_run_and_restore_recovers() {
+        let dir = std::env::temp_dir().join(format!("o4g-engine-crash-{}", std::process::id()));
+        for (plan, expect_snapshot) in [
+            (
+                crate::engine::FaultPlan {
+                    seed: 5,
+                    crash_after: 1.0,
+                    ..crate::engine::FaultPlan::NONE
+                },
+                true,
+            ),
+            (
+                crate::engine::FaultPlan {
+                    seed: 5,
+                    crash_before: 1.0,
+                    ..crate::engine::FaultPlan::NONE
+                },
+                false,
+            ),
+        ] {
+            let _ = std::fs::remove_dir_all(&dir);
+            let m = by_name("Llama-2-7B-GPTQ").unwrap();
+            let cfg = EngineConfig { max_batch: 4, total_blocks: 256, faults: plan, ..Default::default() };
+            let mut e = Engine::new(cfg, SimBackend::new(m, OptConfig::BASELINE, 4));
+            e.enable_checkpoints(&dir, 2);
+            for i in 0..3 {
+                e.add_request(req(i, 8, 12));
+            }
+            let err = e.run().unwrap_err().to_string();
+            assert!(err.contains("injected crash"), "{err}");
+            assert_eq!(
+                e.metrics.checkpoints_written > 0,
+                expect_snapshot,
+                "crash_after commits first, crash_before dies first"
+            );
+            if expect_snapshot {
+                // Restart with a crash-free plan resumes from the commit.
+                let clean = EngineConfig { faults: crate::engine::FaultPlan::NONE, ..cfg };
+                let mut restored = Engine::<SimBackend>::restore(
+                    clean,
+                    SimBackend::new(m, OptConfig::BASELINE, 4),
+                    &dir,
+                )
+                .unwrap();
+                let report = restored.run().unwrap();
+                assert_eq!(report.outputs.len(), 3);
+                restored.audit().unwrap();
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

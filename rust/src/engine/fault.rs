@@ -9,23 +9,31 @@
 //! process (request sampling streams are never touched, which is what
 //! keeps completed-request tokens bit-identical to a fault-free run).
 //!
-//! The five seams (see the table in `engine/mod.rs`):
+//! The seams (see the table in `engine/mod.rs`):
 //!
-//! | seam            | injects                                    | recovery                         |
-//! |-----------------|--------------------------------------------|----------------------------------|
-//! | `StepTransient` | `Backend::step` fails retryably            | bounded backoff + preempt/retry  |
-//! | `StepPermanent` | `Backend::step` fails terminally           | batch resolves `Failed`          |
-//! | `SpillOut`      | swap-out spill write fails                 | demote to discard-and-recompute  |
-//! | `SpillIn`       | swap-in restore fails                      | drop spill, recompute from zero  |
-//! | `Alloc`         | block allocation / append refused          | defer admission / preempt self   |
+//! | seam                | injects                                    | recovery                         |
+//! |---------------------|--------------------------------------------|----------------------------------|
+//! | `StepTransient`     | `Backend::step` fails retryably            | bounded backoff + preempt/retry  |
+//! | `StepPermanent`     | `Backend::step` fails terminally           | batch resolves `Failed`          |
+//! | `SpillOut`          | swap-out spill write fails                 | demote to discard-and-recompute  |
+//! | `SpillIn`           | swap-in restore fails                      | drop spill, recompute from zero  |
+//! | `Alloc`             | block allocation / append refused          | defer admission / preempt self   |
+//! | `MidLayerPoison`    | NaN-poisons one attention tile *inside* `CpuBackend::step` | non-finite logits surface as a terminal step error |
+//! | `CrashBeforeCommit` | process death at a checkpoint boundary, **before** the snapshot commits | `Engine::restore` from the previous snapshot |
+//! | `CrashAfterCommit`  | process death **after** the snapshot commits | `Engine::restore` from the just-committed snapshot |
 //!
 //! Faults are injected *engine-side*, before the backend call they
 //! model would run, so backend state (the paged pool, the spill map,
 //! the virtual clock) is never half-mutated by a failed operation.
+//! `MidLayerPoison` is the deliberate exception: it corrupts state
+//! *inside* the backend pass to prove the detection layers (the
+//! non-finite logit check, parity tests, the post-drain auditor) catch
+//! in-flight corruption loudly.  The crash seams model process death at
+//! the checkpoint boundary — kill-point testing for `engine::persist`.
 //!
 //! The default plan comes from `OPT4GPTQ_FAULTS` (resolved through
 //! [`crate::envcfg`], warn-once like every other override) with spec
-//! syntax `seed=42,step=0.05,step_perm=0.01,spill_out=0.1,spill_in=0.1,alloc=0.05`
+//! syntax `seed=42,step=0.05,step_perm=0.01,spill_out=0.1,spill_in=0.1,alloc=0.05,poison=0.01,crash_before=0.01,crash_after=0.01`
 //! — every key optional, unknown keys rejected.
 
 use std::sync::OnceLock;
@@ -46,15 +54,31 @@ pub enum FaultSeam {
     SpillIn,
     /// A block allocation (admission headroom or decode append) is refused.
     Alloc,
+    /// One attention tile inside `CpuBackend::step` is NaN-poisoned
+    /// mid-layer (corruption *inside* the backend pass, not at a seam).
+    MidLayerPoison,
+    /// The process dies at a checkpoint boundary **before** the snapshot
+    /// commits (the atomic rename never happens).
+    CrashBeforeCommit,
+    /// The process dies **after** the snapshot commits (restore resumes
+    /// from the state just persisted).
+    CrashAfterCommit,
 }
 
+/// Number of fault seams (the draw/fired array width a checkpoint
+/// persists).
+pub const N_SEAMS: usize = 8;
+
 impl FaultSeam {
-    const ALL: [FaultSeam; 5] = [
+    pub const ALL: [FaultSeam; N_SEAMS] = [
         FaultSeam::StepTransient,
         FaultSeam::StepPermanent,
         FaultSeam::SpillOut,
         FaultSeam::SpillIn,
         FaultSeam::Alloc,
+        FaultSeam::MidLayerPoison,
+        FaultSeam::CrashBeforeCommit,
+        FaultSeam::CrashAfterCommit,
     ];
 
     fn index(self) -> usize {
@@ -64,11 +88,14 @@ impl FaultSeam {
             FaultSeam::SpillOut => 2,
             FaultSeam::SpillIn => 3,
             FaultSeam::Alloc => 4,
+            FaultSeam::MidLayerPoison => 5,
+            FaultSeam::CrashBeforeCommit => 6,
+            FaultSeam::CrashAfterCommit => 7,
         }
     }
 
-    /// Per-seam salt so the five decision streams are independent even
-    /// under one seed.
+    /// Per-seam salt so the decision streams are independent even under
+    /// one seed.
     fn salt(self) -> u64 {
         [
             0x7374_6570_5f74_7261, // "step_tra"
@@ -76,12 +103,24 @@ impl FaultSeam {
             0x7370_696c_6c5f_6f75, // "spill_ou"
             0x7370_696c_6c5f_696e, // "spill_in"
             0x616c_6c6f_635f_5f5f, // "alloc___"
+            0x706f_6973_6f6e_5f5f, // "poison__"
+            0x6372_6173_685f_6263, // "crash_bc"
+            0x6372_6173_685f_6163, // "crash_ac"
         ][self.index()]
     }
 
     /// The spec key naming this seam in `OPT4GPTQ_FAULTS`.
     pub fn spec_key(self) -> &'static str {
-        ["step", "step_perm", "spill_out", "spill_in", "alloc"][self.index()]
+        [
+            "step",
+            "step_perm",
+            "spill_out",
+            "spill_in",
+            "alloc",
+            "poison",
+            "crash_before",
+            "crash_after",
+        ][self.index()]
     }
 }
 
@@ -102,6 +141,13 @@ pub struct FaultPlan {
     pub spill_in: f64,
     /// P(allocation refusal) per admission/append allocation.
     pub alloc: f64,
+    /// P(one attention tile NaN-poisoned inside the backend pass) per
+    /// engine step.
+    pub mid_layer_poison: f64,
+    /// P(process death before a checkpoint commits) per checkpoint.
+    pub crash_before: f64,
+    /// P(process death after a checkpoint commits) per checkpoint.
+    pub crash_after: f64,
 }
 
 impl FaultPlan {
@@ -113,6 +159,9 @@ impl FaultPlan {
         spill_out: 0.0,
         spill_in: 0.0,
         alloc: 0.0,
+        mid_layer_poison: 0.0,
+        crash_before: 0.0,
+        crash_after: 0.0,
     };
 
     fn probability(&self, seam: FaultSeam) -> f64 {
@@ -122,6 +171,9 @@ impl FaultPlan {
             FaultSeam::SpillOut => self.spill_out,
             FaultSeam::SpillIn => self.spill_in,
             FaultSeam::Alloc => self.alloc,
+            FaultSeam::MidLayerPoison => self.mid_layer_poison,
+            FaultSeam::CrashBeforeCommit => self.crash_before,
+            FaultSeam::CrashAfterCommit => self.crash_after,
         }
     }
 
@@ -164,10 +216,13 @@ impl FaultPlan {
                 "spill_out" => plan.spill_out = p,
                 "spill_in" => plan.spill_in = p,
                 "alloc" => plan.alloc = p,
+                "poison" => plan.mid_layer_poison = p,
+                "crash_before" => plan.crash_before = p,
+                "crash_after" => plan.crash_after = p,
                 other => {
                     return Err(format!(
                         "unknown fault spec key {other:?} (valid: seed, step, step_perm, \
-                         spill_out, spill_in, alloc)"
+                         spill_out, spill_in, alloc, poison, crash_before, crash_after)"
                     ))
                 }
             }
@@ -201,8 +256,8 @@ pub fn fault_plan_default() -> FaultPlan {
 #[derive(Debug, Clone)]
 pub struct FaultSchedule {
     plan: FaultPlan,
-    draws: [u64; 5],
-    fired: [u64; 5],
+    draws: [u64; N_SEAMS],
+    fired: [u64; N_SEAMS],
 }
 
 impl FaultSchedule {
@@ -212,7 +267,7 @@ impl FaultSchedule {
     }
 
     pub fn new(plan: FaultPlan) -> FaultSchedule {
-        FaultSchedule { plan, draws: [0; 5], fired: [0; 5] }
+        FaultSchedule { plan, draws: [0; N_SEAMS], fired: [0; N_SEAMS] }
     }
 
     pub fn plan(&self) -> &FaultPlan {
@@ -259,6 +314,20 @@ impl FaultSchedule {
     /// Total faults fired across all seams.
     pub fn total_fired(&self) -> u64 {
         self.fired.iter().sum()
+    }
+
+    /// The per-seam (draws, fired) counters — persisted by checkpoints
+    /// so a restored engine continues the exact same decision streams
+    /// (draw `i` at a seam is pure in `(seed, seam, i)`, so replay only
+    /// needs `i` back).
+    pub fn draw_state(&self) -> ([u64; N_SEAMS], [u64; N_SEAMS]) {
+        (self.draws, self.fired)
+    }
+
+    /// Restore persisted [`Self::draw_state`] counters.
+    pub fn set_draw_state(&mut self, draws: [u64; N_SEAMS], fired: [u64; N_SEAMS]) {
+        self.draws = draws;
+        self.fired = fired;
     }
 }
 
@@ -322,7 +391,8 @@ mod tests {
     #[test]
     fn spec_parses_every_key() {
         let p = FaultPlan::parse(
-            "seed=42, step=0.05, step_perm=0.01, spill_out=0.1, spill_in=0.2, alloc=0.3",
+            "seed=42, step=0.05, step_perm=0.01, spill_out=0.1, spill_in=0.2, alloc=0.3, \
+             poison=0.4, crash_before=0.5, crash_after=0.6",
         )
         .unwrap();
         assert_eq!(p.seed, 42);
@@ -331,7 +401,39 @@ mod tests {
         assert_eq!(p.spill_out, 0.1);
         assert_eq!(p.spill_in, 0.2);
         assert_eq!(p.alloc, 0.3);
+        assert_eq!(p.mid_layer_poison, 0.4);
+        assert_eq!(p.crash_before, 0.5);
+        assert_eq!(p.crash_after, 0.6);
         assert!(!p.is_none());
+        for seam in FaultSeam::ALL {
+            assert!(
+                p.probability(seam) > 0.0,
+                "{seam:?} (key {:?}) did not get a probability",
+                seam.spec_key()
+            );
+        }
+    }
+
+    #[test]
+    fn draw_state_roundtrip_resumes_the_stream() {
+        // A schedule rebuilt from persisted counters must make the exact
+        // decisions the original would have made next — the property a
+        // crash/restore cycle needs for bit-identical fault replay.
+        let plan = FaultPlan { seed: 0xc4a5, step_transient: 0.4, spill_in: 0.3, ..FaultPlan::NONE };
+        let mut live = FaultSchedule::new(plan);
+        for _ in 0..137 {
+            live.fire(FaultSeam::StepTransient);
+            live.fire(FaultSeam::SpillIn);
+        }
+        let (draws, fired) = live.draw_state();
+        let mut restored = FaultSchedule::new(plan);
+        restored.set_draw_state(draws, fired);
+        for i in 0..200 {
+            for seam in FaultSeam::ALL {
+                assert_eq!(live.fire(seam), restored.fire(seam), "draw {i} at {seam:?}");
+            }
+        }
+        assert_eq!(live.draw_state(), restored.draw_state());
     }
 
     #[test]

@@ -348,7 +348,7 @@ fn kv4_dequant_row(packed: &[u8], scale: f32, zero: f32, dst: &mut [f32]) {
 
 /// One side of a [`KvSpill`]: the packed payload of the spilled blocks,
 /// in table order, shaped exactly like the pool side it came from.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum SpillSide {
     F32(Vec<f32>),
     F16(Vec<u16>),
@@ -371,7 +371,7 @@ impl SpillSide {
 /// dtype: spill volume shrinks with the dtype exactly as residency
 /// does, and restore is a copy, never a requantization (so a
 /// swap-out/swap-in round trip is bit-exact at every dtype).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct KvSpill {
     dtype: KvDtype,
     n_blocks: usize,
@@ -392,6 +392,24 @@ impl KvSpill {
     /// Host-side bytes this spill occupies (both sides).
     pub fn bytes(&self) -> usize {
         self.k.bytes() + self.v.bytes()
+    }
+
+    /// The K side's packed payload (checkpoint serialization reads the
+    /// spill through these instead of re-deriving the pool layout).
+    pub fn k(&self) -> &SpillSide {
+        &self.k
+    }
+
+    /// The V side's packed payload.
+    pub fn v(&self) -> &SpillSide {
+        &self.v
+    }
+
+    /// Reassemble a spill from persisted parts (the checkpoint restore
+    /// path); shapes are validated when the spill is restored into a
+    /// pool, exactly as for a freshly-spilled one.
+    pub fn from_parts(dtype: KvDtype, n_blocks: usize, k: SpillSide, v: SpillSide) -> KvSpill {
+        KvSpill { dtype, n_blocks, k, v }
     }
 }
 

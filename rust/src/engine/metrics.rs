@@ -28,7 +28,7 @@ impl Quantiles {
 }
 
 /// Aggregated over one engine run.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Metrics {
     /// Virtual (SimBackend) or wall (PjrtBackend) seconds elapsed.
     pub elapsed: f64,
@@ -84,6 +84,9 @@ pub struct Metrics {
     /// Requests cancelled past their deadline
     /// ([`super::RequestOutcome::TimedOut`]).
     pub timed_out_requests: usize,
+    /// Requests cooperatively cancelled through `Engine::cancel`
+    /// ([`super::RequestOutcome::Cancelled`]).
+    pub cancelled_requests: usize,
     /// Requests resolved as [`super::RequestOutcome::Failed`] by a
     /// permanent (or retry-exhausted) backend error.
     pub failed_requests: usize,
@@ -93,6 +96,12 @@ pub struct Metrics {
     /// Swap spill writes/restores that failed and were recovered by
     /// demoting the victim to recompute.
     pub spill_faults: usize,
+    /// Snapshots committed (atomic rename completed) over the run.
+    pub checkpoints_written: usize,
+    /// In-flight requests rehydrated from a snapshot by `Engine::restore`
+    /// (pending + waiting + prefilling + running + swapped; completed
+    /// requests are carried over but not counted here).
+    pub restored_requests: usize,
     /// Output tokens delivered by *completed* requests only — tokens
     /// generated for requests that later timed out, failed or were
     /// preempt-discarded never count.  `output_tokens` is raw

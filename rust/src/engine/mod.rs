@@ -87,6 +87,9 @@
 //! * **`TimedOut`** — [`request::Request::deadline`] passed while
 //!   pending, waiting, swapped, or mid-generation; the engine cancels
 //!   it wherever it is and reclaims blocks and spill entries in full.
+//! * **`Cancelled`** — a front-end abort through
+//!   [`engine::Engine::cancel`], drained at the next step boundary;
+//!   identical reclamation to the deadline path, but caller-initiated.
 //! * **`Failed { reason }`** — a permanent backend error, or transient
 //!   retries exhausted.
 //!
@@ -101,8 +104,13 @@
 //! | `SpillOut`                | before `Backend::swap_out`            | victim demoted to discard-and-recompute          |
 //! | `SpillIn`                 | before `Backend::swap_in`             | spill dropped, blocks freed, recompute from zero |
 //! | `Alloc`                   | admission headroom / decode append    | admission deferred (engine backs off) / appender preempted |
+//! | `MidLayerPoison`          | *inside* the backend forward pass     | one query tile NaN-poisoned between QKV and attention; the backend's finite-logits check fails the step `Permanent` — caught loudly, never silently sampled |
+//! | `CrashBeforeCommit`       | checkpoint due, before the write      | process dies; restart resumes from the *previous* snapshot |
+//! | `CrashAfterCommit`        | checkpoint committed (renamed)        | process dies; restart resumes from the snapshot just written |
 //!
-//! Faults fire *before* the backend call they model, so no backend
+//! Faults fire *before* the backend call they model (`MidLayerPoison`
+//! excepted — its whole point is corrupting state mid-forward and
+//! proving the backend's own output check catches it), so no backend
 //! state is half-mutated; completed-request tokens stay bit-identical
 //! to a fault-free run (pinned by `serve_chaos.rs` fault storms and the
 //! `properties.rs` trace-replay property).  After every drain,
@@ -110,6 +118,34 @@
 //! ([`block_manager::BlockManager`] cross-check), no orphaned spill
 //! entries, and every freed pool block poisoned-or-never-written
 //! ([`kv::PagedKvCache::audit`]).
+//!
+//! **Crash-consistent checkpoint/restart.** With checkpointing enabled
+//! ([`engine::Engine::enable_checkpoints`]; `serve --checkpoint-dir`),
+//! every N-th successful step commits the complete engine state to a
+//! snapshot file through [`persist`] — sequences with their exact
+//! prefill/decode cursors and sampler RNG streams, queue order, block
+//! refcounts + prefix index + free-list order, the **packed** K/V
+//! payload of every live block at any [`kv::KvDtype`], host-side spill
+//! entries, outcomes/outputs/metrics, and the fault schedule's draw
+//! counters:
+//!
+//! ```text
+//!   step ▸ drain ─▶ [crash_before?] ─▶ write snap-NNNNNN.tmp
+//!                                         │ fsync + rename (atomic)
+//!                       prune old ◀── commit ─▶ [crash_after?]
+//!
+//!   restart: Engine::restore(dir)
+//!     └─ newest snapshot that parses clean (CRC per record + END
+//!        marker; torn/corrupt tails fall back to the previous commit)
+//!     └─ resumes mid-prompt / mid-decode → tokens bit-identical to an
+//!        uninterrupted run (pinned by `serve_chaos.rs` kill matrix)
+//! ```
+//!
+//! The same snapshot doubles as **cross-run prefix persistence**: a
+//! fresh `serve --restore` process rehydrates computed shared-prefix
+//! blocks (index, computed flags, packed K/V), so new requests over the
+//! same system prompt skip their cached span without re-prefilling.
+//! `OPT4GPTQ_PERSIST=0` disables checkpointing without a rebuild.
 //!
 //! Backends:
 //!
@@ -133,6 +169,7 @@ pub mod engine;
 pub mod fault;
 pub mod kv;
 pub mod metrics;
+pub mod persist;
 pub mod request;
 pub mod sampler;
 pub mod scheduler;
@@ -146,6 +183,7 @@ pub use fault::{fault_plan_default, FaultPlan, FaultSchedule, FaultSeam};
 pub use kv::{KvDtype, KvSpill, PagedKvCache};
 pub use engine::{Engine, EngineReport};
 pub use metrics::{Metrics, Quantiles};
+pub use persist::{ConfigFingerprint, EngineSnapshot};
 pub use request::{FinishReason, Request, RequestOutcome, RequestOutput, SamplingParams};
 pub use scheduler::{PrefillChunk, ScheduledWork, Scheduler, SchedulerConfig};
 pub use sequence::{SeqState, Sequence};
@@ -235,6 +273,25 @@ pub fn swap_preempt_default() -> bool {
     crate::envcfg::env_override(&SWAP_ENV, "OPT4GPTQ_SWAP", |raw| {
         crate::envcfg::parse_bool(raw)
             .map_err(|e| format!("OPT4GPTQ_SWAP: {e} (swap preemption stays on)"))
+    })
+    .value()
+    .copied()
+    .unwrap_or(true)
+}
+
+static PERSIST_ENV: std::sync::OnceLock<crate::envcfg::EnvOverride<bool>> =
+    std::sync::OnceLock::new();
+
+/// Whether checkpoint persistence is enabled: on unless the
+/// `OPT4GPTQ_PERSIST=0` escape hatch is set (chaos/CI runs that want
+/// the kill matrix without disk writes, or serving boxes with no
+/// scratch space).  [`engine::Engine::enable_checkpoints`] becomes a
+/// no-op when this is off.  Resolved warn-once through
+/// [`crate::envcfg`].
+pub fn persist_default() -> bool {
+    crate::envcfg::env_override(&PERSIST_ENV, "OPT4GPTQ_PERSIST", |raw| {
+        crate::envcfg::parse_bool(raw)
+            .map_err(|e| format!("OPT4GPTQ_PERSIST: {e} (checkpoint persistence stays on)"))
     })
     .value()
     .copied()

@@ -1,0 +1,1302 @@
+//! Crash-consistent on-disk engine snapshots.
+//!
+//! Binary sibling of the line-based [`crate::runtime::manifest`]: the
+//! same commit discipline (write everything, verify on read, atomic
+//! rename), but length-prefixed CRC records instead of text lines,
+//! because the payload includes packed K/V block contents.
+//!
+//! ## File format
+//!
+//! ```text
+//! magic    "O4GSNAP1"                      (8 bytes)
+//! version  u32 LE                          (currently 1)
+//! records  [len: u32 LE][crc32: u32 LE][payload: len bytes]*
+//! ```
+//!
+//! Every record's payload starts with a one-byte type tag:
+//!
+//! | tag | record     | contents                                                   |
+//! |-----|------------|------------------------------------------------------------|
+//! | 1   | `CONFIG`   | geometry fingerprint (restore refuses a mismatched engine) |
+//! | 2   | `META`     | clock, retry/stall streaks                                 |
+//! | 3   | `SEQ`      | one [`Sequence`] + its sampler RNG state (one per seq)     |
+//! | 4   | `PENDING`  | one not-yet-arrived [`Request`] + RNG state                |
+//! | 5   | `QUEUES`   | waiting/running/prefilling membership, exact order         |
+//! | 6   | `SCHED`    | scheduler counters + fault-schedule draw state             |
+//! | 7   | `BLOCKS`   | full [`BlockManagerState`] (refcounts, free order, prefix index, tables, swaps) |
+//! | 8   | `OUTCOMES` | resolved `(id, RequestOutcome)` pairs, resolution order    |
+//! | 9   | `OUTPUTS`  | completed [`RequestOutput`]s                               |
+//! | 10  | `METRICS`  | the whole [`Metrics`] struct                               |
+//! | 11  | `KV`       | live block ids + their **packed** pool payload ([`KvSpill`]) |
+//! | 12  | `SPILL`    | one swapped-out sequence's host-side spill (one per seq)   |
+//! | 13  | `END`      | commit marker — a file without it is torn, even at a record boundary |
+//!
+//! A torn write (truncated tail, flipped byte) fails the length bound,
+//! the CRC, or the missing-`END` check; [`load_latest`] then falls back
+//! to the newest older snapshot that parses clean.  Snapshot files are
+//! numbered `snap-NNNNNN.bin`, written as `.tmp` + fsync + atomic
+//! rename, and pruned to the last [`KEEP_SNAPSHOTS`].
+//!
+//! The payload is engine-complete: [`crate::engine::Engine::restore`]
+//! resumes mid-prompt and mid-decode bit-identically, and a *fresh*
+//! `serve --restore` run rehydrates computed shared-prefix blocks so
+//! new requests over the same system prompt skip their cached span
+//! without re-prefilling (cross-run prefix persistence).
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use super::block_manager::{BlockId, BlockManagerState};
+use super::fault::N_SEAMS;
+use super::kv::{KvDtype, KvSpill, SpillSide};
+use super::metrics::Metrics;
+use super::request::{FinishReason, Request, RequestOutcome, RequestOutput, SamplingParams};
+use super::sequence::{SeqState, Sequence};
+use super::EngineConfig;
+
+const MAGIC: &[u8; 8] = b"O4GSNAP1";
+const VERSION: u32 = 1;
+/// Snapshots retained after a successful commit (older ones pruned).
+pub const KEEP_SNAPSHOTS: usize = 4;
+
+const TAG_CONFIG: u8 = 1;
+const TAG_META: u8 = 2;
+const TAG_SEQ: u8 = 3;
+const TAG_PENDING: u8 = 4;
+const TAG_QUEUES: u8 = 5;
+const TAG_SCHED: u8 = 6;
+const TAG_BLOCKS: u8 = 7;
+const TAG_OUTCOMES: u8 = 8;
+const TAG_OUTPUTS: u8 = 9;
+const TAG_METRICS: u8 = 10;
+const TAG_KV: u8 = 11;
+const TAG_SPILL: u8 = 12;
+const TAG_END: u8 = 13;
+
+/// CRC-32 (IEEE 802.3, reflected) — in-crate, bitwise; snapshot records
+/// are small enough that a table is not worth the bytes.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Geometry the restoring engine must match exactly: block tables,
+/// free-list replay and packed payloads are only meaningful against the
+/// same pool shape.  The fault plan is deliberately **not** part of the
+/// fingerprint — a restored run typically uses a crash-free plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConfigFingerprint {
+    pub max_batch: usize,
+    pub block_size: usize,
+    pub total_blocks: usize,
+    pub max_seq_len: usize,
+    pub prefill_budget: usize,
+    pub prefix_skip: bool,
+    pub swap_preempt: bool,
+    pub kv_dtype: KvDtype,
+    pub max_waiting: usize,
+}
+
+impl ConfigFingerprint {
+    pub fn of(cfg: &EngineConfig) -> ConfigFingerprint {
+        ConfigFingerprint {
+            max_batch: cfg.max_batch,
+            block_size: cfg.block_size,
+            total_blocks: cfg.total_blocks,
+            max_seq_len: cfg.max_seq_len,
+            prefill_budget: cfg.prefill_budget,
+            prefix_skip: cfg.prefix_skip,
+            swap_preempt: cfg.swap_preempt,
+            kv_dtype: cfg.kv_dtype,
+            max_waiting: cfg.max_waiting,
+        }
+    }
+}
+
+/// One sequence plus the sampler RNG stream that continues it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeqSnap {
+    pub seq: Sequence,
+    pub rng: ([u64; 4], Option<f64>),
+}
+
+/// One not-yet-arrived request plus its (still virgin) RNG stream.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PendingSnap {
+    pub req: Request,
+    pub rng: ([u64; 4], Option<f64>),
+}
+
+/// Scheduler counters + the fault schedule's replayable draw state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SchedSnap {
+    pub preemption_count: usize,
+    pub prefill_tokens_skipped: usize,
+    pub swap_out_count: usize,
+    pub swap_out_mid_prefill: usize,
+    pub swap_out_mid_decode: usize,
+    pub swap_in_count: usize,
+    pub swap_restored_tokens: usize,
+    pub shed_count: usize,
+    pub fault_draws: [u64; N_SEAMS],
+    pub fault_fired: [u64; N_SEAMS],
+}
+
+/// Everything [`crate::engine::Engine`] needs to resume exactly where a
+/// quiescent step boundary left off (see module docs for the record
+/// map).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineSnapshot {
+    pub config: ConfigFingerprint,
+    pub clock: f64,
+    pub consecutive_step_failures: u32,
+    pub fault_stalls: usize,
+    /// Every sequence the scheduler has seen (finished ones included —
+    /// their ids must stay burned), sorted by id.
+    pub sequences: Vec<SeqSnap>,
+    /// Requests whose arrival the clock has not reached, sorted by id.
+    pub pending: Vec<PendingSnap>,
+    pub waiting: Vec<usize>,
+    pub running: Vec<usize>,
+    pub prefilling: Vec<usize>,
+    pub sched: SchedSnap,
+    pub blocks: BlockManagerState,
+    /// Terminal outcomes, resolution order.
+    pub outcomes: Vec<(usize, RequestOutcome)>,
+    pub outputs: Vec<RequestOutput>,
+    pub metrics: Metrics,
+    /// Live (refcount > 0) block ids, ascending — the rows `kv_payload`
+    /// covers, in order.
+    pub kv_blocks: Vec<BlockId>,
+    /// Packed pool payload of `kv_blocks` (None for virtual backends).
+    pub kv_payload: Option<KvSpill>,
+    /// Swapped-out sequences' host-side spills: (seq id, spilled block
+    /// count, payload — None when the backend prices bytes only).
+    pub spills: Vec<(usize, usize, Option<KvSpill>)>,
+}
+
+// ---------------------------------------------------------------- writer
+
+struct Buf(Vec<u8>);
+
+impl Buf {
+    fn new() -> Buf {
+        Buf(Vec::new())
+    }
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn bool(&mut self, v: bool) {
+        self.0.push(v as u8);
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn us(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    fn i64(&mut self, v: i64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.f64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+    fn opt_u32(&mut self, v: Option<u32>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.u32(x);
+            }
+            None => self.u8(0),
+        }
+    }
+    fn opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.u64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+    fn str(&mut self, s: &str) {
+        self.us(s.len());
+        self.0.extend_from_slice(s.as_bytes());
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.us(b.len());
+        self.0.extend_from_slice(b);
+    }
+    fn vec_u32(&mut self, v: &[u32]) {
+        self.us(v.len());
+        for &x in v {
+            self.u32(x);
+        }
+    }
+    fn vec_us(&mut self, v: &[usize]) {
+        self.us(v.len());
+        for &x in v {
+            self.us(x);
+        }
+    }
+    fn vec_f64(&mut self, v: &[f64]) {
+        self.us(v.len());
+        for &x in v {
+            self.f64(x);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- reader
+
+struct Cur<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+type PErr = String;
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, p: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8], PErr> {
+        if self.p + n > self.b.len() {
+            return Err(format!("short read: need {n} bytes at offset {}", self.p));
+        }
+        let s = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(s)
+    }
+    fn done(&self) -> bool {
+        self.p == self.b.len()
+    }
+    fn u8(&mut self) -> Result<u8, PErr> {
+        Ok(self.take(1)?[0])
+    }
+    fn bool(&mut self) -> Result<bool, PErr> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(format!("bad bool byte {v}")),
+        }
+    }
+    fn u32(&mut self) -> Result<u32, PErr> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, PErr> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn us(&mut self) -> Result<usize, PErr> {
+        Ok(self.u64()? as usize)
+    }
+    fn i64(&mut self) -> Result<i64, PErr> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32, PErr> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+    fn f64(&mut self) -> Result<f64, PErr> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn opt_f64(&mut self) -> Result<Option<f64>, PErr> {
+        Ok(if self.bool()? { Some(self.f64()?) } else { None })
+    }
+    fn opt_u32(&mut self) -> Result<Option<u32>, PErr> {
+        Ok(if self.bool()? { Some(self.u32()?) } else { None })
+    }
+    fn opt_u64(&mut self) -> Result<Option<u64>, PErr> {
+        Ok(if self.bool()? { Some(self.u64()?) } else { None })
+    }
+    /// Bounded length prefix: a corrupt length must fail here, not OOM.
+    fn len(&mut self) -> Result<usize, PErr> {
+        let n = self.us()?;
+        if n > self.b.len() - self.p.min(self.b.len()) {
+            return Err(format!("length {n} exceeds remaining payload"));
+        }
+        Ok(n)
+    }
+    fn str(&mut self) -> Result<String, PErr> {
+        let n = self.len()?;
+        String::from_utf8(self.take(n)?.to_vec()).map_err(|e| format!("bad utf8: {e}"))
+    }
+    fn bytes(&mut self) -> Result<Vec<u8>, PErr> {
+        let n = self.len()?;
+        Ok(self.take(n)?.to_vec())
+    }
+    fn vec_u32(&mut self) -> Result<Vec<u32>, PErr> {
+        let n = self.len()?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+    fn vec_us(&mut self) -> Result<Vec<usize>, PErr> {
+        let n = self.len()?;
+        (0..n).map(|_| self.us()).collect()
+    }
+    fn vec_f64(&mut self) -> Result<Vec<f64>, PErr> {
+        let n = self.len()?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+}
+
+// ------------------------------------------------- component encodings
+
+fn put_sampling(b: &mut Buf, s: &SamplingParams) {
+    b.f32(s.temperature);
+    b.us(s.top_k);
+    b.us(s.max_tokens);
+    b.opt_u32(s.stop_token);
+    b.u64(s.seed);
+}
+
+fn get_sampling(c: &mut Cur<'_>) -> Result<SamplingParams, PErr> {
+    Ok(SamplingParams {
+        temperature: c.f32()?,
+        top_k: c.us()?,
+        max_tokens: c.us()?,
+        stop_token: c.opt_u32()?,
+        seed: c.u64()?,
+    })
+}
+
+fn put_rng(b: &mut Buf, rng: &([u64; 4], Option<f64>)) {
+    for &w in &rng.0 {
+        b.u64(w);
+    }
+    b.opt_f64(rng.1);
+}
+
+fn get_rng(c: &mut Cur<'_>) -> Result<([u64; 4], Option<f64>), PErr> {
+    let mut s = [0u64; 4];
+    for w in &mut s {
+        *w = c.u64()?;
+    }
+    if s.iter().all(|&x| x == 0) {
+        return Err("all-zero RNG state".into());
+    }
+    Ok((s, c.opt_f64()?))
+}
+
+fn put_seq(b: &mut Buf, s: &SeqSnap) {
+    let q = &s.seq;
+    b.us(q.id);
+    b.vec_u32(&q.prompt);
+    b.vec_u32(&q.generated);
+    put_sampling(b, &q.sampling);
+    b.u8(q.state.to_tag());
+    b.f64(q.arrival);
+    b.i64(q.priority as i64);
+    b.opt_f64(q.deadline);
+    b.opt_f64(q.admitted_time);
+    b.opt_f64(q.first_token_time);
+    b.opt_f64(q.finish_time);
+    b.us(q.preemptions);
+    b.us(q.cached_len);
+    b.us(q.prefill_pos);
+    put_rng(b, &s.rng);
+}
+
+fn get_seq(c: &mut Cur<'_>) -> Result<SeqSnap, PErr> {
+    let id = c.us()?;
+    let prompt = c.vec_u32()?;
+    let generated = c.vec_u32()?;
+    let sampling = get_sampling(c)?;
+    let tag = c.u8()?;
+    let state = SeqState::from_tag(tag).ok_or_else(|| format!("bad SeqState tag {tag}"))?;
+    Ok(SeqSnap {
+        seq: Sequence {
+            id,
+            prompt,
+            generated,
+            sampling,
+            state,
+            arrival: c.f64()?,
+            priority: c.i64()? as i32,
+            deadline: c.opt_f64()?,
+            admitted_time: c.opt_f64()?,
+            first_token_time: c.opt_f64()?,
+            finish_time: c.opt_f64()?,
+            preemptions: c.us()?,
+            cached_len: c.us()?,
+            prefill_pos: c.us()?,
+        },
+        rng: get_rng(c)?,
+    })
+}
+
+fn put_outcome(b: &mut Buf, o: &RequestOutcome) {
+    match o {
+        RequestOutcome::Completed => b.u8(0),
+        RequestOutcome::Rejected { reason } => {
+            b.u8(1);
+            b.str(reason);
+        }
+        RequestOutcome::TimedOut => b.u8(2),
+        RequestOutcome::Cancelled => b.u8(3),
+        RequestOutcome::Failed { reason } => {
+            b.u8(4);
+            b.str(reason);
+        }
+    }
+}
+
+fn get_outcome(c: &mut Cur<'_>) -> Result<RequestOutcome, PErr> {
+    Ok(match c.u8()? {
+        0 => RequestOutcome::Completed,
+        1 => RequestOutcome::Rejected { reason: c.str()? },
+        2 => RequestOutcome::TimedOut,
+        3 => RequestOutcome::Cancelled,
+        4 => RequestOutcome::Failed { reason: c.str()? },
+        t => return Err(format!("bad RequestOutcome tag {t}")),
+    })
+}
+
+fn put_spill_side(b: &mut Buf, s: &SpillSide) {
+    match s {
+        SpillSide::F32(v) => {
+            b.u8(0);
+            b.us(v.len());
+            for &x in v {
+                b.f32(x);
+            }
+        }
+        SpillSide::F16(v) => {
+            b.u8(1);
+            b.us(v.len());
+            for &x in v {
+                b.0.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        SpillSide::Kv4 { packed, scale, zero } => {
+            b.u8(2);
+            b.bytes(packed);
+            b.us(scale.len());
+            for &x in scale {
+                b.f32(x);
+            }
+            b.us(zero.len());
+            for &x in zero {
+                b.f32(x);
+            }
+        }
+    }
+}
+
+fn get_spill_side(c: &mut Cur<'_>) -> Result<SpillSide, PErr> {
+    Ok(match c.u8()? {
+        0 => {
+            let n = c.len()?;
+            SpillSide::F32((0..n).map(|_| c.f32()).collect::<Result<_, _>>()?)
+        }
+        1 => {
+            let n = c.len()?;
+            SpillSide::F16(
+                (0..n)
+                    .map(|_| c.take(2).map(|s| u16::from_le_bytes(s.try_into().unwrap())))
+                    .collect::<Result<_, _>>()?,
+            )
+        }
+        2 => {
+            let packed = c.bytes()?;
+            let ns = c.len()?;
+            let scale = (0..ns).map(|_| c.f32()).collect::<Result<_, _>>()?;
+            let nz = c.len()?;
+            let zero = (0..nz).map(|_| c.f32()).collect::<Result<_, _>>()?;
+            SpillSide::Kv4 { packed, scale, zero }
+        }
+        t => return Err(format!("bad SpillSide tag {t}")),
+    })
+}
+
+fn put_kv_spill(b: &mut Buf, s: &KvSpill) {
+    b.str(s.dtype().name());
+    b.us(s.n_blocks());
+    put_spill_side(b, s.k());
+    put_spill_side(b, s.v());
+}
+
+fn get_kv_spill(c: &mut Cur<'_>) -> Result<KvSpill, PErr> {
+    let name = c.str()?;
+    let dtype = KvDtype::parse(&name).ok_or_else(|| format!("bad KV dtype {name:?}"))?;
+    let n_blocks = c.us()?;
+    let k = get_spill_side(c)?;
+    let v = get_spill_side(c)?;
+    Ok(KvSpill::from_parts(dtype, n_blocks, k, v))
+}
+
+fn put_opt_kv_spill(b: &mut Buf, s: &Option<KvSpill>) {
+    match s {
+        Some(x) => {
+            b.u8(1);
+            put_kv_spill(b, x);
+        }
+        None => b.u8(0),
+    }
+}
+
+fn get_opt_kv_spill(c: &mut Cur<'_>) -> Result<Option<KvSpill>, PErr> {
+    Ok(if c.bool()? { Some(get_kv_spill(c)?) } else { None })
+}
+
+// ------------------------------------------------------ (de)serialization
+
+fn record(out: &mut Vec<u8>, tag: u8, body: impl FnOnce(&mut Buf)) {
+    let mut b = Buf::new();
+    b.u8(tag);
+    body(&mut b);
+    out.extend_from_slice(&(b.0.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(&b.0).to_le_bytes());
+    out.extend_from_slice(&b.0);
+}
+
+impl EngineSnapshot {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        let fp = &self.config;
+        record(&mut out, TAG_CONFIG, |b| {
+            b.us(fp.max_batch);
+            b.us(fp.block_size);
+            b.us(fp.total_blocks);
+            b.us(fp.max_seq_len);
+            b.us(fp.prefill_budget);
+            b.bool(fp.prefix_skip);
+            b.bool(fp.swap_preempt);
+            b.str(fp.kv_dtype.name());
+            b.us(fp.max_waiting);
+        });
+        record(&mut out, TAG_META, |b| {
+            b.f64(self.clock);
+            b.u32(self.consecutive_step_failures);
+            b.us(self.fault_stalls);
+        });
+        for s in &self.sequences {
+            record(&mut out, TAG_SEQ, |b| put_seq(b, s));
+        }
+        for p in &self.pending {
+            record(&mut out, TAG_PENDING, |b| {
+                b.us(p.req.id);
+                b.vec_u32(&p.req.prompt);
+                put_sampling(b, &p.req.sampling);
+                b.f64(p.req.arrival);
+                b.i64(p.req.priority as i64);
+                b.opt_f64(p.req.deadline);
+                put_rng(b, &p.rng);
+            });
+        }
+        record(&mut out, TAG_QUEUES, |b| {
+            b.vec_us(&self.waiting);
+            b.vec_us(&self.running);
+            b.vec_us(&self.prefilling);
+        });
+        record(&mut out, TAG_SCHED, |b| {
+            let s = &self.sched;
+            b.us(s.preemption_count);
+            b.us(s.prefill_tokens_skipped);
+            b.us(s.swap_out_count);
+            b.us(s.swap_out_mid_prefill);
+            b.us(s.swap_out_mid_decode);
+            b.us(s.swap_in_count);
+            b.us(s.swap_restored_tokens);
+            b.us(s.shed_count);
+            for &d in &s.fault_draws {
+                b.u64(d);
+            }
+            for &f in &s.fault_fired {
+                b.u64(f);
+            }
+        });
+        record(&mut out, TAG_BLOCKS, |b| {
+            let st = &self.blocks;
+            b.us(st.block_size);
+            b.us(st.blocks.len());
+            for &(rc, hash, computed) in &st.blocks {
+                b.us(rc);
+                b.opt_u64(hash);
+                b.bool(computed);
+            }
+            b.vec_us(&st.free);
+            b.us(st.prefix_index.len());
+            for &(h, blk) in &st.prefix_index {
+                b.u64(h);
+                b.us(blk);
+            }
+            b.us(st.tables.len());
+            for (id, table) in &st.tables {
+                b.us(*id);
+                b.vec_us(table);
+            }
+            b.us(st.swapped.len());
+            for &(id, n) in &st.swapped {
+                b.us(id);
+                b.us(n);
+            }
+            b.us(st.prefix_hits);
+        });
+        record(&mut out, TAG_OUTCOMES, |b| {
+            b.us(self.outcomes.len());
+            for (id, o) in &self.outcomes {
+                b.us(*id);
+                put_outcome(b, o);
+            }
+        });
+        record(&mut out, TAG_OUTPUTS, |b| {
+            b.us(self.outputs.len());
+            for o in &self.outputs {
+                b.us(o.id);
+                b.us(o.prompt_len);
+                b.vec_u32(&o.tokens);
+                b.u8(match o.finish {
+                    FinishReason::MaxTokens => 0,
+                    FinishReason::StopToken => 1,
+                    FinishReason::LengthCap => 2,
+                });
+                b.f64(o.ttft);
+                b.f64(o.latency);
+                b.us(o.preemptions);
+            }
+        });
+        record(&mut out, TAG_METRICS, |b| {
+            let m = &self.metrics;
+            b.f64(m.elapsed);
+            b.us(m.prompt_tokens);
+            b.us(m.output_tokens);
+            b.us(m.engine_steps);
+            b.us(m.prefill_steps);
+            b.us(m.decode_steps);
+            b.us(m.preemptions);
+            b.us(m.prefill_chunks);
+            b.us(m.prefill_tokens_skipped);
+            b.us(m.decode_batch_sum);
+            b.vec_f64(&m.latencies);
+            b.vec_f64(&m.ttfts);
+            b.vec_f64(&m.queue_times);
+            b.vec_f64(&m.tpots);
+            b.us(m.swap_outs);
+            b.us(m.swap_ins);
+            b.us(m.swap_restored_tokens);
+            b.us(m.swap_spilled_bytes);
+            b.us(m.kv_pool_bytes);
+            b.us(m.kv_bytes_per_token);
+            b.us(m.kv_spill_peak_bytes);
+            b.us(m.shed_requests);
+            b.us(m.rejected_requests);
+            b.us(m.timed_out_requests);
+            b.us(m.cancelled_requests);
+            b.us(m.failed_requests);
+            b.us(m.step_retries);
+            b.us(m.spill_faults);
+            b.us(m.checkpoints_written);
+            b.us(m.restored_requests);
+            b.us(m.goodput_tokens);
+        });
+        record(&mut out, TAG_KV, |b| {
+            b.vec_us(&self.kv_blocks);
+            put_opt_kv_spill(b, &self.kv_payload);
+        });
+        for (id, n, payload) in &self.spills {
+            record(&mut out, TAG_SPILL, |b| {
+                b.us(*id);
+                b.us(*n);
+                put_opt_kv_spill(b, payload);
+            });
+        }
+        record(&mut out, TAG_END, |_| {});
+        out
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Result<EngineSnapshot, PErr> {
+        if data.len() < MAGIC.len() + 4 {
+            return Err("file shorter than the header".into());
+        }
+        if &data[..8] != MAGIC {
+            return Err("bad magic (not a snapshot file)".into());
+        }
+        let version = u32::from_le_bytes(data[8..12].try_into().unwrap());
+        if version != VERSION {
+            return Err(format!("unsupported snapshot version {version}"));
+        }
+
+        let mut config = None;
+        let mut meta = None;
+        let mut sequences = Vec::new();
+        let mut pending = Vec::new();
+        let mut queues = None;
+        let mut sched = None;
+        let mut blocks = None;
+        let mut outcomes = None;
+        let mut outputs = None;
+        let mut metrics = None;
+        let mut kv = None;
+        let mut spills = Vec::new();
+        let mut ended = false;
+
+        let mut rest = &data[12..];
+        while !rest.is_empty() {
+            if ended {
+                return Err("trailing bytes after END record".into());
+            }
+            if rest.len() < 8 {
+                return Err("torn record header".into());
+            }
+            let len = u32::from_le_bytes(rest[..4].try_into().unwrap()) as usize;
+            let crc = u32::from_le_bytes(rest[4..8].try_into().unwrap());
+            if rest.len() < 8 + len {
+                return Err(format!("torn record: {len} payload bytes, {} present", rest.len() - 8));
+            }
+            let payload = &rest[8..8 + len];
+            if crc32(payload) != crc {
+                return Err("record CRC mismatch (corrupt write)".into());
+            }
+            rest = &rest[8 + len..];
+
+            let mut c = Cur::new(payload);
+            let tag = c.u8()?;
+            match tag {
+                TAG_CONFIG => {
+                    config = Some(ConfigFingerprint {
+                        max_batch: c.us()?,
+                        block_size: c.us()?,
+                        total_blocks: c.us()?,
+                        max_seq_len: c.us()?,
+                        prefill_budget: c.us()?,
+                        prefix_skip: c.bool()?,
+                        swap_preempt: c.bool()?,
+                        kv_dtype: {
+                            let name = c.str()?;
+                            KvDtype::parse(&name)
+                                .ok_or_else(|| format!("bad KV dtype {name:?}"))?
+                        },
+                        max_waiting: c.us()?,
+                    });
+                }
+                TAG_META => meta = Some((c.f64()?, c.u32()?, c.us()?)),
+                TAG_SEQ => sequences.push(get_seq(&mut c)?),
+                TAG_PENDING => {
+                    let id = c.us()?;
+                    let prompt = c.vec_u32()?;
+                    let sampling = get_sampling(&mut c)?;
+                    pending.push(PendingSnap {
+                        req: Request {
+                            id,
+                            prompt,
+                            sampling,
+                            arrival: c.f64()?,
+                            priority: c.i64()? as i32,
+                            deadline: c.opt_f64()?,
+                        },
+                        rng: get_rng(&mut c)?,
+                    });
+                }
+                TAG_QUEUES => queues = Some((c.vec_us()?, c.vec_us()?, c.vec_us()?)),
+                TAG_SCHED => {
+                    let mut s = SchedSnap {
+                        preemption_count: c.us()?,
+                        prefill_tokens_skipped: c.us()?,
+                        swap_out_count: c.us()?,
+                        swap_out_mid_prefill: c.us()?,
+                        swap_out_mid_decode: c.us()?,
+                        swap_in_count: c.us()?,
+                        swap_restored_tokens: c.us()?,
+                        shed_count: c.us()?,
+                        fault_draws: [0; N_SEAMS],
+                        fault_fired: [0; N_SEAMS],
+                    };
+                    for d in &mut s.fault_draws {
+                        *d = c.u64()?;
+                    }
+                    for f in &mut s.fault_fired {
+                        *f = c.u64()?;
+                    }
+                    sched = Some(s);
+                }
+                TAG_BLOCKS => {
+                    let block_size = c.us()?;
+                    let nb = c.len()?;
+                    let mut bl = Vec::with_capacity(nb);
+                    for _ in 0..nb {
+                        bl.push((c.us()?, c.opt_u64()?, c.bool()?));
+                    }
+                    let free = c.vec_us()?;
+                    let npi = c.len()?;
+                    let mut prefix_index = Vec::with_capacity(npi);
+                    for _ in 0..npi {
+                        prefix_index.push((c.u64()?, c.us()?));
+                    }
+                    let nt = c.len()?;
+                    let mut tables = Vec::with_capacity(nt);
+                    for _ in 0..nt {
+                        tables.push((c.us()?, c.vec_us()?));
+                    }
+                    let nsw = c.len()?;
+                    let mut swapped = Vec::with_capacity(nsw);
+                    for _ in 0..nsw {
+                        swapped.push((c.us()?, c.us()?));
+                    }
+                    blocks = Some(BlockManagerState {
+                        block_size,
+                        blocks: bl,
+                        free,
+                        prefix_index,
+                        tables,
+                        swapped,
+                        prefix_hits: c.us()?,
+                    });
+                }
+                TAG_OUTCOMES => {
+                    let n = c.len()?;
+                    let mut v = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let id = c.us()?;
+                        v.push((id, get_outcome(&mut c)?));
+                    }
+                    outcomes = Some(v);
+                }
+                TAG_OUTPUTS => {
+                    let n = c.len()?;
+                    let mut v = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        v.push(RequestOutput {
+                            id: c.us()?,
+                            prompt_len: c.us()?,
+                            tokens: c.vec_u32()?,
+                            finish: match c.u8()? {
+                                0 => FinishReason::MaxTokens,
+                                1 => FinishReason::StopToken,
+                                2 => FinishReason::LengthCap,
+                                t => return Err(format!("bad FinishReason tag {t}")),
+                            },
+                            ttft: c.f64()?,
+                            latency: c.f64()?,
+                            preemptions: c.us()?,
+                        });
+                    }
+                    outputs = Some(v);
+                }
+                TAG_METRICS => {
+                    metrics = Some(Metrics {
+                        elapsed: c.f64()?,
+                        prompt_tokens: c.us()?,
+                        output_tokens: c.us()?,
+                        engine_steps: c.us()?,
+                        prefill_steps: c.us()?,
+                        decode_steps: c.us()?,
+                        preemptions: c.us()?,
+                        prefill_chunks: c.us()?,
+                        prefill_tokens_skipped: c.us()?,
+                        decode_batch_sum: c.us()?,
+                        latencies: c.vec_f64()?,
+                        ttfts: c.vec_f64()?,
+                        queue_times: c.vec_f64()?,
+                        tpots: c.vec_f64()?,
+                        swap_outs: c.us()?,
+                        swap_ins: c.us()?,
+                        swap_restored_tokens: c.us()?,
+                        swap_spilled_bytes: c.us()?,
+                        kv_pool_bytes: c.us()?,
+                        kv_bytes_per_token: c.us()?,
+                        kv_spill_peak_bytes: c.us()?,
+                        shed_requests: c.us()?,
+                        rejected_requests: c.us()?,
+                        timed_out_requests: c.us()?,
+                        cancelled_requests: c.us()?,
+                        failed_requests: c.us()?,
+                        step_retries: c.us()?,
+                        spill_faults: c.us()?,
+                        checkpoints_written: c.us()?,
+                        restored_requests: c.us()?,
+                        goodput_tokens: c.us()?,
+                    });
+                }
+                TAG_KV => kv = Some((c.vec_us()?, get_opt_kv_spill(&mut c)?)),
+                TAG_SPILL => {
+                    let id = c.us()?;
+                    let n = c.us()?;
+                    spills.push((id, n, get_opt_kv_spill(&mut c)?));
+                }
+                TAG_END => ended = true,
+                t => return Err(format!("unknown record tag {t}")),
+            }
+            if tag != TAG_END && !c.done() {
+                return Err(format!("record tag {tag} has {} trailing bytes", payload.len() - c.p));
+            }
+        }
+        if !ended {
+            return Err("missing END record (torn snapshot)".into());
+        }
+
+        let (clock, consecutive_step_failures, fault_stalls) =
+            meta.ok_or("missing META record")?;
+        let (waiting, running, prefilling) = queues.ok_or("missing QUEUES record")?;
+        let (kv_blocks, kv_payload) = kv.ok_or("missing KV record")?;
+        Ok(EngineSnapshot {
+            config: config.ok_or("missing CONFIG record")?,
+            clock,
+            consecutive_step_failures,
+            fault_stalls,
+            sequences,
+            pending,
+            waiting,
+            running,
+            prefilling,
+            sched: sched.ok_or("missing SCHED record")?,
+            blocks: blocks.ok_or("missing BLOCKS record")?,
+            outcomes: outcomes.ok_or("missing OUTCOMES record")?,
+            outputs: outputs.ok_or("missing OUTPUTS record")?,
+            metrics: metrics.ok_or("missing METRICS record")?,
+            kv_blocks,
+            kv_payload,
+            spills,
+        })
+    }
+}
+
+// ------------------------------------------------------ file management
+
+fn snapshot_path(dir: &Path, seq: u64) -> PathBuf {
+    dir.join(format!("snap-{seq:06}.bin"))
+}
+
+/// (seq, path) of every `snap-NNNNNN.bin` in `dir`, ascending by seq.
+fn list_snapshots(dir: &Path) -> Vec<(u64, PathBuf)> {
+    let Ok(rd) = fs::read_dir(dir) else { return Vec::new() };
+    let mut out: Vec<(u64, PathBuf)> = rd
+        .flatten()
+        .filter_map(|e| {
+            let name = e.file_name().into_string().ok()?;
+            let seq = name.strip_prefix("snap-")?.strip_suffix(".bin")?.parse().ok()?;
+            Some((seq, e.path()))
+        })
+        .collect();
+    out.sort_unstable_by_key(|&(seq, _)| seq);
+    out
+}
+
+/// The sequence number the next snapshot in `dir` should use.
+pub fn next_seq(dir: &Path) -> u64 {
+    list_snapshots(dir).last().map_or(0, |&(seq, _)| seq + 1)
+}
+
+/// Commit one snapshot: serialize, write `snap-NNNNNN.tmp`, fsync, and
+/// atomically rename to `.bin` — a crash at any point leaves either the
+/// previous snapshots untouched or a stray `.tmp` that the reader never
+/// looks at.  Older snapshots beyond [`KEEP_SNAPSHOTS`] are pruned
+/// after the rename.
+pub fn write_snapshot(dir: &Path, seq: u64, snap: &EngineSnapshot) -> std::io::Result<PathBuf> {
+    fs::create_dir_all(dir)?;
+    let bytes = snap.to_bytes();
+    let tmp = dir.join(format!("snap-{seq:06}.tmp"));
+    {
+        let mut f = fs::File::create(&tmp)?;
+        f.write_all(&bytes)?;
+        f.sync_all()?;
+    }
+    let path = snapshot_path(dir, seq);
+    fs::rename(&tmp, &path)?;
+    let existing = list_snapshots(dir);
+    if existing.len() > KEEP_SNAPSHOTS {
+        for (_, old) in &existing[..existing.len() - KEEP_SNAPSHOTS] {
+            let _ = fs::remove_file(old);
+        }
+    }
+    Ok(path)
+}
+
+/// Load the newest snapshot in `dir` that parses clean, skipping (and
+/// reporting on total failure) torn or corrupt trailing files —
+/// crash-during-commit recovery falls back to the previous commit.
+/// `Ok(None)` when the directory holds no snapshot files at all.
+pub fn load_latest(dir: &Path) -> Result<Option<(u64, EngineSnapshot)>, PErr> {
+    let mut files = list_snapshots(dir);
+    files.reverse();
+    if files.is_empty() {
+        return Ok(None);
+    }
+    let mut errors = Vec::new();
+    for (seq, path) in files {
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) => {
+                errors.push(format!("{}: {e}", path.display()));
+                continue;
+            }
+        };
+        match EngineSnapshot::from_bytes(&bytes) {
+            Ok(snap) => {
+                if !errors.is_empty() {
+                    eprintln!(
+                        "opt4gptq: falling back to snapshot {seq}: {}",
+                        errors.join("; ")
+                    );
+                }
+                return Ok(Some((seq, snap)));
+            }
+            Err(e) => errors.push(format!("{}: {e}", path.display())),
+        }
+    }
+    Err(format!("no valid snapshot in {}: {}", dir.display(), errors.join("; ")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sampling() -> SamplingParams {
+        SamplingParams { temperature: 0.9, top_k: 24, max_tokens: 32, stop_token: Some(7), seed: 3 }
+    }
+
+    fn snap() -> EngineSnapshot {
+        let seq = Sequence {
+            id: 4,
+            prompt: vec![1, 2, 3, 4, 5],
+            generated: vec![9, 8],
+            sampling: sampling(),
+            state: SeqState::Running,
+            arrival: 0.25,
+            priority: -2,
+            deadline: Some(9.5),
+            admitted_time: Some(0.5),
+            first_token_time: Some(1.0),
+            finish_time: None,
+            preemptions: 1,
+            cached_len: 2,
+            prefill_pos: 6,
+        };
+        let mut swapped_seq = seq.clone();
+        swapped_seq.id = 5;
+        swapped_seq.state = SeqState::Swapped;
+        EngineSnapshot {
+            config: ConfigFingerprint {
+                max_batch: 4,
+                block_size: 4,
+                total_blocks: 24,
+                max_seq_len: 128,
+                prefill_budget: 8,
+                prefix_skip: true,
+                swap_preempt: true,
+                kv_dtype: KvDtype::Kv4,
+                max_waiting: usize::MAX,
+            },
+            clock: 12.75,
+            consecutive_step_failures: 2,
+            fault_stalls: 1,
+            sequences: vec![
+                SeqSnap { seq, rng: ([1, 2, 3, 4], Some(0.5)) },
+                SeqSnap { seq: swapped_seq, rng: ([5, 6, 7, 8], None) },
+            ],
+            pending: vec![PendingSnap {
+                req: Request {
+                    id: 9,
+                    prompt: vec![4, 4, 4],
+                    sampling: sampling(),
+                    arrival: 40.0,
+                    priority: 3,
+                    deadline: None,
+                },
+                rng: ([9, 0, 0, 1], None),
+            }],
+            waiting: vec![5],
+            running: vec![4],
+            prefilling: vec![],
+            sched: SchedSnap {
+                preemption_count: 3,
+                prefill_tokens_skipped: 2,
+                swap_out_count: 1,
+                swap_out_mid_prefill: 0,
+                swap_out_mid_decode: 1,
+                swap_in_count: 0,
+                swap_restored_tokens: 0,
+                shed_count: 0,
+                fault_draws: [1, 2, 3, 4, 5, 6, 7, 8],
+                fault_fired: [0, 1, 0, 1, 0, 1, 0, 1],
+            },
+            blocks: BlockManagerState {
+                block_size: 4,
+                blocks: vec![(1, Some(0xfeed), true), (0, None, false), (2, None, true)],
+                free: vec![1],
+                prefix_index: vec![(0xfeed, 0)],
+                tables: vec![(4, vec![0, 2, 2])],
+                swapped: vec![(5, 2)],
+                prefix_hits: 6,
+            },
+            outcomes: vec![
+                (2, RequestOutcome::Completed),
+                (1, RequestOutcome::Rejected { reason: "shed".into() }),
+                (3, RequestOutcome::Cancelled),
+                (6, RequestOutcome::Failed { reason: "ecc".into() }),
+                (7, RequestOutcome::TimedOut),
+            ],
+            outputs: vec![RequestOutput {
+                id: 2,
+                prompt_len: 5,
+                tokens: vec![11, 12, 13],
+                finish: FinishReason::StopToken,
+                ttft: 0.5,
+                latency: 2.0,
+                preemptions: 0,
+            }],
+            metrics: Metrics {
+                elapsed: 12.75,
+                prompt_tokens: 40,
+                output_tokens: 17,
+                latencies: vec![2.0],
+                ttfts: vec![0.5],
+                checkpoints_written: 2,
+                cancelled_requests: 1,
+                ..Default::default()
+            },
+            kv_blocks: vec![0, 2],
+            kv_payload: Some(KvSpill::from_parts(
+                KvDtype::Kv4,
+                2,
+                SpillSide::Kv4 { packed: vec![0xAB; 16], scale: vec![0.5; 4], zero: vec![0.0; 4] },
+                SpillSide::Kv4 { packed: vec![0xCD; 16], scale: vec![1.5; 4], zero: vec![2.0; 4] },
+            )),
+            spills: vec![(
+                5,
+                2,
+                Some(KvSpill::from_parts(
+                    KvDtype::Kv4,
+                    2,
+                    SpillSide::Kv4 { packed: vec![1; 8], scale: vec![0.25; 2], zero: vec![0.1; 2] },
+                    SpillSide::Kv4 { packed: vec![2; 8], scale: vec![0.75; 2], zero: vec![0.2; 2] },
+                )),
+            )],
+        }
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard IEEE test vector.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_bit_exactly() {
+        let s = snap();
+        let bytes = s.to_bytes();
+        let back = EngineSnapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(s, back);
+        // All three SpillSide encodings roundtrip too.
+        for side in [
+            SpillSide::F32(vec![1.0, -2.5, f32::MIN_POSITIVE]),
+            SpillSide::F16(vec![0x3C00, 0x8000, 0x7BFF]),
+            SpillSide::Kv4 { packed: vec![9, 9], scale: vec![0.5], zero: vec![-1.0] },
+        ] {
+            let mut b = Buf::new();
+            put_spill_side(&mut b, &side);
+            let mut c = Cur::new(&b.0);
+            assert_eq!(get_spill_side(&mut c).unwrap(), side);
+            assert!(c.done());
+        }
+    }
+
+    #[test]
+    fn truncated_tail_is_rejected() {
+        let bytes = snap().to_bytes();
+        // Any truncation (even at a record boundary: END goes missing)
+        // must fail to parse.
+        for cut in [bytes.len() - 1, bytes.len() - 13, bytes.len() / 2, 13] {
+            assert!(
+                EngineSnapshot::from_bytes(&bytes[..cut]).is_err(),
+                "truncation at {cut}/{} must be torn",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn flipped_byte_is_rejected() {
+        let good = snap().to_bytes();
+        // Flip one byte in the last quarter (tail records) and in the
+        // middle; CRC or structure must catch every single-byte flip.
+        for pos in [good.len() - 2, good.len() - 20, good.len() / 2, 20] {
+            let mut bad = good.clone();
+            bad[pos] ^= 0x41;
+            assert!(
+                EngineSnapshot::from_bytes(&bad).is_err(),
+                "flip at {pos}/{} must be detected",
+                good.len()
+            );
+        }
+    }
+
+    #[test]
+    fn commit_fallback_skips_torn_tail_snapshot() {
+        let dir = std::env::temp_dir().join(format!("o4g-persist-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        assert!(load_latest(&dir).unwrap().is_none(), "empty dir has no snapshot");
+
+        let s = snap();
+        write_snapshot(&dir, 0, &s).unwrap();
+        assert_eq!(next_seq(&dir), 1);
+        let (seq, back) = load_latest(&dir).unwrap().unwrap();
+        assert_eq!((seq, &back), (0, &s));
+
+        // A newer snapshot normally wins...
+        let mut s1 = s.clone();
+        s1.clock = 99.0;
+        write_snapshot(&dir, 1, &s1).unwrap();
+        assert_eq!(load_latest(&dir).unwrap().unwrap().0, 1);
+
+        // ...but a torn newer commit falls back to the previous one.
+        let p1 = snapshot_path(&dir, 1);
+        let bytes = fs::read(&p1).unwrap();
+        fs::write(&p1, &bytes[..bytes.len() - 7]).unwrap();
+        let (seq, back) = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(seq, 0);
+        assert_eq!(back.clock, s.clock);
+
+        // A corrupt (bit-flipped) newer commit falls back the same way.
+        let mut flipped = bytes.clone();
+        let n = flipped.len();
+        flipped[n - 9] ^= 0xFF;
+        fs::write(&p1, &flipped).unwrap();
+        assert_eq!(load_latest(&dir).unwrap().unwrap().0, 0);
+
+        // All snapshots corrupt -> hard error, not silent empty state.
+        let p0 = snapshot_path(&dir, 0);
+        let b0 = fs::read(&p0).unwrap();
+        fs::write(&p0, &b0[..10]).unwrap();
+        assert!(load_latest(&dir).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn old_snapshots_are_pruned() {
+        let dir = std::env::temp_dir().join(format!("o4g-prune-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let s = snap();
+        for seq in 0..(KEEP_SNAPSHOTS as u64 + 3) {
+            write_snapshot(&dir, seq, &s).unwrap();
+        }
+        let left = list_snapshots(&dir);
+        assert_eq!(left.len(), KEEP_SNAPSHOTS);
+        assert_eq!(left.last().unwrap().0, KEEP_SNAPSHOTS as u64 + 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

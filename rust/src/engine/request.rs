@@ -20,7 +20,7 @@ impl Default for SamplingParams {
 }
 
 /// An inference request submitted to the engine.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Request {
     pub id: usize,
     pub prompt: Vec<u32>,
@@ -74,6 +74,11 @@ pub enum RequestOutcome {
     /// The request's deadline passed before completion; cancelled with
     /// full block/spill reclamation.
     TimedOut,
+    /// Cooperatively cancelled through [`Engine::cancel`](crate::engine::Engine::cancel)
+    /// (front-end abort); drained at the next step boundary wherever the
+    /// request is — pending, waiting, swapped, or mid-generation — with
+    /// full block/spill reclamation, exactly like the deadline path.
+    Cancelled,
     /// A permanent backend error, or transient step retries exhausted.
     Failed {
         reason: String,
@@ -87,13 +92,14 @@ impl RequestOutcome {
             RequestOutcome::Completed => "completed",
             RequestOutcome::Rejected { .. } => "rejected",
             RequestOutcome::TimedOut => "timed-out",
+            RequestOutcome::Cancelled => "cancelled",
             RequestOutcome::Failed { .. } => "failed",
         }
     }
 }
 
 /// Completed request, as returned by [`crate::engine::Engine`].
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RequestOutput {
     pub id: usize,
     pub prompt_len: usize,
@@ -131,6 +137,7 @@ mod tests {
         assert_eq!(RequestOutcome::Completed.label(), "completed");
         assert_eq!(RequestOutcome::Rejected { reason: "x".into() }.label(), "rejected");
         assert_eq!(RequestOutcome::TimedOut.label(), "timed-out");
+        assert_eq!(RequestOutcome::Cancelled.label(), "cancelled");
         assert_eq!(RequestOutcome::Failed { reason: "y".into() }.label(), "failed");
     }
 }

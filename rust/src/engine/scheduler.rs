@@ -347,6 +347,40 @@ impl Scheduler {
         std::mem::take(&mut self.rejected)
     }
 
+    /// Exact queue membership, in stored order, for checkpointing:
+    /// `(waiting, running, prefilling)`.  Waiting order is re-derived by
+    /// the deterministic admission sort anyway, but running/prefilling
+    /// order is load-bearing (decode batch layout, chunk rotation), so
+    /// all three round-trip verbatim.  Refuses while undrained
+    /// rejections exist — a snapshot must not silently drop them.
+    pub fn export_queues(&self) -> Result<(Vec<usize>, Vec<usize>, Vec<usize>), String> {
+        if !self.rejected.is_empty() {
+            return Err("cannot snapshot with undrained rejections".into());
+        }
+        Ok((self.waiting.clone(), self.running.clone(), self.prefilling.clone()))
+    }
+
+    /// Rehydrate queue membership from a snapshot (the restore path).
+    /// The caller installs `seqs` and `blocks` first; membership is
+    /// validated against them via [`Scheduler::check_invariants`].
+    pub fn import_queues(
+        &mut self,
+        waiting: Vec<usize>,
+        running: Vec<usize>,
+        prefilling: Vec<usize>,
+    ) -> Result<(), String> {
+        for &id in waiting.iter().chain(&running).chain(&prefilling) {
+            if !self.seqs.contains_key(&id) {
+                return Err(format!("snapshot queues reference unknown seq {id}"));
+            }
+        }
+        self.waiting = waiting;
+        self.running = running;
+        self.prefilling = prefilling;
+        self.check_invariants()
+            .map_err(|e| format!("snapshot scheduler state invalid: {e}"))
+    }
+
     /// Retire a sequence from every queue with full block/spill
     /// reclamation — the deadline-cancel and permanent-failure path.
     /// The engine drains the resulting block/sequence releases to the

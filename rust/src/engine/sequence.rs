@@ -25,8 +25,35 @@ pub enum SeqState {
     Finished,
 }
 
+impl SeqState {
+    /// Stable on-disk tag (checkpoint record format; never reorder —
+    /// snapshots persist these values).
+    pub fn to_tag(self) -> u8 {
+        match self {
+            SeqState::Waiting => 0,
+            SeqState::Prefilling => 1,
+            SeqState::Running => 2,
+            SeqState::Preempted => 3,
+            SeqState::Swapped => 4,
+            SeqState::Finished => 5,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<SeqState> {
+        Some(match tag {
+            0 => SeqState::Waiting,
+            1 => SeqState::Prefilling,
+            2 => SeqState::Running,
+            3 => SeqState::Preempted,
+            4 => SeqState::Swapped,
+            5 => SeqState::Finished,
+            _ => return None,
+        })
+    }
+}
+
 /// A request plus its generation state.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Sequence {
     pub id: usize,
     pub prompt: Vec<u32>,
@@ -285,6 +312,21 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn state_tags_roundtrip() {
+        for st in [
+            SeqState::Waiting,
+            SeqState::Prefilling,
+            SeqState::Running,
+            SeqState::Preempted,
+            SeqState::Swapped,
+            SeqState::Finished,
+        ] {
+            assert_eq!(SeqState::from_tag(st.to_tag()), Some(st));
+        }
+        assert_eq!(SeqState::from_tag(99), None);
     }
 
     #[test]

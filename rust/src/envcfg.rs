@@ -163,4 +163,50 @@ mod tests {
         });
         assert_eq!(*b, EnvOverride::Unset);
     }
+
+    #[test]
+    fn composed_invalid_and_valid_overrides_resolve_independently() {
+        // One process, several knobs set at once, some invalid: each
+        // cell resolves (and warns) on its own — an invalid
+        // OPT4GPTQ_FAULTS spec must not disturb a valid OPT4GPTQ_KV, and
+        // each invalid knob warns exactly once even when re-read.  Uses
+        // test-local cells + test-only variable names with the *real*
+        // production parsers so the composition is faithful.
+        static FAULTS_CELL: OnceLock<EnvOverride<crate::engine::FaultPlan>> = OnceLock::new();
+        static KV_CELL: OnceLock<EnvOverride<crate::engine::KvDtype>> = OnceLock::new();
+        static PERSIST_CELL: OnceLock<EnvOverride<bool>> = OnceLock::new();
+        std::env::set_var("OPT4GPTQ_TEST_COMPOSED_FAULTS", "seed=x,step=banana");
+        std::env::set_var("OPT4GPTQ_TEST_COMPOSED_KV", "kv4");
+        std::env::set_var("OPT4GPTQ_TEST_COMPOSED_PERSIST", "maybe");
+
+        let faults = env_override(&FAULTS_CELL, "OPT4GPTQ_TEST_COMPOSED_FAULTS", |raw| {
+            crate::engine::FaultPlan::parse(raw)
+        });
+        assert_eq!(*faults, EnvOverride::Invalid, "bad fault spec must resolve Invalid");
+
+        let kv = env_override(&KV_CELL, "OPT4GPTQ_TEST_COMPOSED_KV", |raw| {
+            crate::engine::KvDtype::parse(raw).ok_or_else(|| format!("bad dtype {raw:?}"))
+        });
+        assert_eq!(
+            kv.value(),
+            Some(&crate::engine::KvDtype::Kv4),
+            "a sibling knob's invalid value must not poison this one"
+        );
+
+        let persist =
+            env_override(&PERSIST_CELL, "OPT4GPTQ_TEST_COMPOSED_PERSIST", parse_bool);
+        assert_eq!(*persist, EnvOverride::Invalid);
+        // The caller's default applies for invalid knobs.
+        assert!(*persist.value().unwrap_or(&true));
+
+        // Re-reads hit the cache: parse never runs again (no second
+        // warning), and the resolutions stay what they were.
+        let faults2 = env_override(&FAULTS_CELL, "OPT4GPTQ_TEST_COMPOSED_FAULTS", |_| {
+            panic!("cached resolution must not re-parse")
+        });
+        assert_eq!(*faults2, EnvOverride::Invalid);
+        std::env::remove_var("OPT4GPTQ_TEST_COMPOSED_FAULTS");
+        std::env::remove_var("OPT4GPTQ_TEST_COMPOSED_KV");
+        std::env::remove_var("OPT4GPTQ_TEST_COMPOSED_PERSIST");
+    }
 }

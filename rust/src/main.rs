@@ -61,13 +61,24 @@ fn usage() {
             [--max-waiting N]  (bounded waiting queue: shed the least
              valuable fresh request past N waiters)
             [--faults SPEC]  (seeded fault injection, e.g.
-             seed=42,step=0.05,spill_out=0.1,spill_in=0.1,alloc=0.05)
+             seed=42,step=0.05,spill_out=0.1,spill_in=0.1,alloc=0.05;
+             poison/crash_before/crash_after add mid-layer corruption
+             and checkpoint-bracketing kill points)
+            [--checkpoint-dir DIR]  (crash-consistent snapshots of the
+             full engine state, atomic-rename commits)
+            [--checkpoint-every N]  (steps between commits; default 8)
+            [--restore]  (resume from the newest valid snapshot in
+             --checkpoint-dir instead of starting the trace fresh;
+             also rehydrates computed prefix blocks for new requests)
+            [--cancel ID,ID,...]  (cooperatively cancel these request
+             ids at the first step boundary — front-end abort demo)
             (cpu: in-crate fused-kernel transformer over paged KV;
              pjrt: --artifacts DIR, needs the `pjrt` build feature;
              OPT4GPTQ_PREFIX_SKIP=0 forces cached-prefix recompute;
              OPT4GPTQ_SWAP=0 flips the default to discard-and-recompute;
              OPT4GPTQ_KV=f32|f16|kv4 overrides the KV dtype default;
-             OPT4GPTQ_FAULTS=SPEC sets the fault-plan default)
+             OPT4GPTQ_FAULTS=SPEC sets the fault-plan default;
+             OPT4GPTQ_PERSIST=0 disables checkpoint persistence)
   simulate  --model NAME --requests N [--opt baseline|smb|vml|ila|opt4gptq]
   kernel    --m M --k K --n N [--group G]
   accuracy  --model NAME [--split arc_c|arc_e]
@@ -186,6 +197,13 @@ fn serve_with<B: Backend>(backend: B, args: &Args, whole_prompt_only: bool) -> o
         },
         None => default_cfg.faults,
     };
+    let checkpoint_dir = args.get("checkpoint-dir").map(str::to_string);
+    let checkpoint_every = args.get_usize("checkpoint-every", 8);
+    let restore = args.switch("restore");
+    if (restore || args.get("checkpoint-every").is_some()) && checkpoint_dir.is_none() {
+        eprintln!("--restore / --checkpoint-every need --checkpoint-dir DIR");
+        std::process::exit(2);
+    }
     if whole_prompt_only {
         // Unbounded: the budget is shared across same-step admissions,
         // so anything finite could still split a second prompt.  Swap
@@ -218,53 +236,87 @@ fn serve_with<B: Backend>(backend: B, args: &Args, whole_prompt_only: bool) -> o
             faults.alloc,
         );
     }
-    let mut engine = Engine::new(
-        EngineConfig {
-            max_batch,
-            max_seq_len,
-            total_blocks,
-            block_size,
-            prefill_budget,
-            prefix_skip,
-            swap_preempt,
-            kv_dtype,
-            max_waiting,
-            faults,
-        },
-        backend,
-    );
-
-    let mut trace = RequestTrace::generate_with(
-        n,
-        42,
-        opt4gptq::trace::sharegpt::TraceConfig {
-            prompt_max: 48,
-            response_max: 32,
-            vocab,
-            ..Default::default()
-        },
-    );
-    if arrival_rate > 0.0 {
-        trace = trace.with_arrivals(arrival_rate, 42);
-        println!("arrivals: Poisson at {arrival_rate} req/s (virtual clock)");
+    let engine_cfg = EngineConfig {
+        max_batch,
+        max_seq_len,
+        total_blocks,
+        block_size,
+        prefill_budget,
+        prefix_skip,
+        swap_preempt,
+        kv_dtype,
+        max_waiting,
+        faults,
+    };
+    let mut engine = if restore {
+        let dir = checkpoint_dir.as_deref().unwrap();
+        let e = Engine::restore(engine_cfg, backend, std::path::Path::new(dir))?;
+        println!(
+            "restored from {dir}/: {} in-flight requests at clock {:.3}s \
+             ({} checkpoints committed so far, {} prompt tokens already prefix-skipped)",
+            e.metrics.restored_requests,
+            e.clock,
+            e.metrics.checkpoints_written,
+            e.scheduler.prefill_tokens_skipped,
+        );
+        e
+    } else {
+        Engine::new(engine_cfg, backend)
+    };
+    if let Some(dir) = checkpoint_dir.as_deref() {
+        engine.enable_checkpoints(dir, checkpoint_every);
+        println!(
+            "checkpointing to {dir}/ every {checkpoint_every} steps \
+             (atomic commits; OPT4GPTQ_PERSIST=0 disables)"
+        );
     }
-    for r in &trace.requests {
-        let mut req = Request::new(
-            r.id,
-            r.prompt.clone(),
-            SamplingParams {
-                max_tokens: r.response_len.min(max_tokens),
-                temperature,
-                top_k: 40,
-                seed: r.id as u64,
+
+    if !restore {
+        // A restored engine resumes the snapshot's own trace — its
+        // requests (pending ones included) travel inside the snapshot.
+        let mut trace = RequestTrace::generate_with(
+            n,
+            42,
+            opt4gptq::trace::sharegpt::TraceConfig {
+                prompt_max: 48,
+                response_max: 32,
+                vocab,
                 ..Default::default()
             },
         );
-        req.arrival = r.arrival;
-        if deadline_secs > 0.0 {
-            req.deadline = Some(r.arrival + deadline_secs);
+        if arrival_rate > 0.0 {
+            trace = trace.with_arrivals(arrival_rate, 42);
+            println!("arrivals: Poisson at {arrival_rate} req/s (virtual clock)");
         }
-        engine.add_request(req);
+        for r in &trace.requests {
+            let mut req = Request::new(
+                r.id,
+                r.prompt.clone(),
+                SamplingParams {
+                    max_tokens: r.response_len.min(max_tokens),
+                    temperature,
+                    top_k: 40,
+                    seed: r.id as u64,
+                    ..Default::default()
+                },
+            );
+            req.arrival = r.arrival;
+            if deadline_secs > 0.0 {
+                req.deadline = Some(r.arrival + deadline_secs);
+            }
+            engine.add_request(req);
+        }
+    }
+    if let Some(spec) = args.get("cancel") {
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            match part.trim().parse::<usize>() {
+                Ok(id) => engine.cancel(id),
+                Err(_) => {
+                    eprintln!("--cancel expects comma-separated request ids, got {part:?}");
+                    std::process::exit(2);
+                }
+            }
+        }
     }
     let report = engine.run()?;
     let count = |f: fn(&RequestOutcome) -> bool| {
@@ -272,9 +324,12 @@ fn serve_with<B: Backend>(backend: B, args: &Args, whole_prompt_only: bool) -> o
     };
     let completed = count(|o| matches!(o, RequestOutcome::Completed));
     println!(
-        "served {n} requests: {completed} completed, {} rejected/shed, {} timed out, {} failed",
+        "served {} requests: {completed} completed, {} rejected/shed, {} timed out, \
+         {} cancelled, {} failed",
+        report.outcomes.len(),
         count(|o| matches!(o, RequestOutcome::Rejected { .. })),
         count(|o| matches!(o, RequestOutcome::TimedOut)),
+        count(|o| matches!(o, RequestOutcome::Cancelled)),
         count(|o| matches!(o, RequestOutcome::Failed { .. })),
     );
     for (id, outcome) in &report.outcomes {
@@ -286,7 +341,26 @@ fn serve_with<B: Backend>(backend: B, args: &Args, whole_prompt_only: bool) -> o
             RequestOutcome::TimedOut => {
                 println!("  request {id}: {} (deadline {deadline_secs}s)", outcome.label());
             }
+            RequestOutcome::Cancelled => {
+                println!("  request {id}: {} (front-end abort)", outcome.label());
+            }
         }
+    }
+    // Stable per-request digests so a restored run can be diffed against
+    // an uninterrupted one from the terminal (the CI restart smoke greps
+    // these lines).
+    let mut outputs: Vec<_> = report.outputs.iter().collect();
+    outputs.sort_by_key(|o| o.id);
+    for o in &outputs {
+        println!(
+            "  request {}: {} tokens, digest {:016x}",
+            o.id,
+            o.tokens.len(),
+            token_digest(&o.tokens)
+        );
+    }
+    if report.metrics.checkpoints_written > 0 {
+        println!("checkpoints committed: {}", report.metrics.checkpoints_written);
     }
     println!(
         "throughput: {:.1} tok/s gen ({:.1} tok/s goodput), {:.1} tok/s total, mean latency {:.3}s, mean TTFT {:.3}s, mean batch {:.2}",
@@ -338,6 +412,21 @@ fn serve_with<B: Backend>(backend: B, args: &Args, whole_prompt_only: bool) -> o
         report.metrics.prefix_skip_rate() * 100.0
     );
     Ok(())
+}
+
+/// FNV-1a 64 over the little-endian token bytes: a short stable
+/// fingerprint of one request's generated tokens, printed by `serve` so
+/// crash/restore runs can be diffed against uninterrupted ones without
+/// dumping whole token streams.
+fn token_digest(tokens: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
 }
 
 fn cmd_simulate(args: &Args) -> opt4gptq::Result<()> {

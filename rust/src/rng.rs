@@ -55,6 +55,19 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0xA24B_AED4_963E_E407))
     }
 
+    /// Full generator state (xoshiro words + Box–Muller spare) — what a
+    /// checkpoint must persist for a restored stream to continue
+    /// bit-identically mid-sequence.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.gauss_spare)
+    }
+
+    /// Rebuild a generator from persisted [`Self::state`] output.
+    pub fn from_state(s: [u64; 4], gauss_spare: Option<f64>) -> Rng {
+        assert!(s.iter().any(|&x| x != 0), "xoshiro state must be nonzero");
+        Rng { s, gauss_spare }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)

@@ -269,6 +269,249 @@ fn fault_storm_with_permanent_faults_deadlines_and_shedding_types_every_outcome(
     e.audit().unwrap();
 }
 
+/// Fresh scratch directory for snapshot tests (unique per test + pid so
+/// parallel test binaries cannot collide; wiped on entry so a previous
+/// failed run's leftovers cannot leak in).
+fn snap_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("o4g-chaos-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn sorted_tokens(report: &opt4gptq::engine::EngineReport) -> Vec<(usize, Vec<u32>)> {
+    let mut toks: Vec<(usize, Vec<u32>)> =
+        report.outputs.iter().map(|o| (o.id, o.tokens.clone())).collect();
+    toks.sort();
+    toks
+}
+
+#[test]
+fn kill_point_matrix_restores_bit_identically() {
+    // Crash at both checkpoint-bracketing seams × every KV dtype ×
+    // both preemption modes, on the full swap storm.  Phase A commits
+    // snapshots and hard-dies mid-flight (the engine is just dropped);
+    // phase B restores under an always-firing crash plan and is killed
+    // at the seam (crash_before dies with nothing new committed,
+    // crash_after right after a commit); phase C restores crash-free
+    // and must finish with tokens bit-identical to an uninterrupted
+    // run — whichever snapshot generation it came back from.
+    for kv_dtype in KvDtype::ALL {
+        for swap_preempt in [true, false] {
+            let (reference, _) = run(storm_cfg(swap_preempt, kv_dtype));
+            for (seam, plan) in [
+                ("crash_before", FaultPlan { seed: 11, crash_before: 1.0, ..FaultPlan::NONE }),
+                ("crash_after", FaultPlan { seed: 11, crash_after: 1.0, ..FaultPlan::NONE }),
+            ] {
+                let mode = if swap_preempt { "swap" } else { "recompute" };
+                let tag = format!("{seam}-{kv_dtype}-{mode}");
+                let dir = snap_dir(&format!("kill-{tag}"));
+                {
+                    let mut e = Engine::new(storm_cfg(swap_preempt, kv_dtype), backend());
+                    e.enable_checkpoints(&dir, 2);
+                    for r in requests() {
+                        e.add_request(r);
+                    }
+                    for _ in 0..7 {
+                        assert!(e.step().unwrap(), "[{tag}] storm finished suspiciously early");
+                    }
+                    assert!(e.metrics.checkpoints_written > 0, "[{tag}] no snapshot committed");
+                }
+                {
+                    let cfg =
+                        EngineConfig { faults: plan, ..storm_cfg(swap_preempt, kv_dtype) };
+                    let mut e = Engine::restore(cfg, backend(), &dir).unwrap();
+                    e.enable_checkpoints(&dir, 2);
+                    let err = e.run().unwrap_err().to_string();
+                    assert!(err.contains("injected crash"), "[{tag}] unexpected error: {err}");
+                }
+                let mut e =
+                    Engine::restore(storm_cfg(swap_preempt, kv_dtype), backend(), &dir).unwrap();
+                e.enable_checkpoints(&dir, 2);
+                let report = e.run().unwrap();
+                assert_eq!(
+                    sorted_tokens(&report),
+                    reference,
+                    "[{tag}] restored run diverged from the uninterrupted one"
+                );
+                e.audit().unwrap();
+                let _ = std::fs::remove_dir_all(&dir);
+            }
+        }
+    }
+}
+
+#[test]
+fn torn_or_corrupt_tail_snapshot_falls_back_to_an_older_valid_one() {
+    // The atomic tmp-write + rename makes a torn committed snapshot
+    // "impossible", so simulate a filesystem that lied about
+    // durability: truncate the newest snapshot mid-record, then flip a
+    // payload byte in the next one.  Restore must reject each damaged
+    // generation (CRC / missing END record) and rehydrate the newest
+    // *valid* snapshot — finishing bit-identical either way, just
+    // replaying a little more work.
+    let kv_dtype = KvDtype::Kv4;
+    let (reference, _) = run(storm_cfg(true, kv_dtype));
+    let dir = snap_dir("torn");
+    {
+        let mut e = Engine::new(storm_cfg(true, kv_dtype), backend());
+        e.enable_checkpoints(&dir, 2);
+        for r in requests() {
+            e.add_request(r);
+        }
+        for _ in 0..8 {
+            assert!(e.step().unwrap());
+        }
+        assert!(e.metrics.checkpoints_written >= 3, "need several snapshot generations");
+    }
+    let mut snaps: Vec<std::path::PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|entry| entry.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "bin"))
+        .collect();
+    snaps.sort();
+    assert!(snaps.len() >= 3);
+
+    // Torn write: drop the END record (9 trailing bytes) of the newest.
+    let newest = &snaps[snaps.len() - 1];
+    let bytes = std::fs::read(newest).unwrap();
+    std::fs::write(newest, &bytes[..bytes.len() - 9]).unwrap();
+    let mut e = Engine::restore(storm_cfg(true, kv_dtype), backend(), &dir).unwrap();
+    let report = e.run().unwrap();
+    assert_eq!(
+        sorted_tokens(&report),
+        reference,
+        "fallback restore (torn tail) diverged from the uninterrupted run"
+    );
+    e.audit().unwrap();
+
+    // Silent bit rot: flip one payload byte mid-file in the next-newest.
+    let rotted = &snaps[snaps.len() - 2];
+    let mut bytes = std::fs::read(rotted).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x41;
+    std::fs::write(rotted, &bytes).unwrap();
+    let mut e = Engine::restore(storm_cfg(true, kv_dtype), backend(), &dir).unwrap();
+    let report = e.run().unwrap();
+    assert_eq!(
+        sorted_tokens(&report),
+        reference,
+        "fallback restore (bit rot) diverged from the uninterrupted run"
+    );
+    e.audit().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mid_layer_poison_is_caught_loudly_at_every_dtype() {
+    // An always-firing MidLayerPoison plan NaN-corrupts one attention
+    // tile *inside* every forward pass.  The NaN propagates through
+    // the causal attention of the next layer into the sampled logits,
+    // where the backend's output check turns it into a terminal step
+    // error — every request must resolve as a typed Failed naming the
+    // detector, never as silent token garbage, and the drained pool
+    // must still audit clean (poisoned K/V never outlives its batch).
+    for kv_dtype in KvDtype::ALL {
+        let plan = FaultPlan { seed: 5, mid_layer_poison: 1.0, ..FaultPlan::NONE };
+        let mut e =
+            Engine::new(EngineConfig { faults: plan, ..roomy_cfg(kv_dtype) }, backend());
+        for r in requests() {
+            e.add_request(r);
+        }
+        let report = e.run().unwrap();
+        assert!(
+            report.outputs.is_empty(),
+            "[{kv_dtype}] poisoned batches must not complete: {:?}",
+            report.outputs.iter().map(|o| o.id).collect::<Vec<_>>()
+        );
+        assert_eq!(report.outcomes.len(), N_REQ);
+        for (id, outcome) in &report.outcomes {
+            match outcome {
+                RequestOutcome::Failed { reason } => assert!(
+                    reason.contains("non-finite logits"),
+                    "[{kv_dtype}] req {id} failed for the wrong reason: {reason}"
+                ),
+                other => panic!("[{kv_dtype}] req {id}: expected Failed, got {other:?}"),
+            }
+        }
+        e.audit().unwrap();
+    }
+}
+
+#[test]
+fn restore_rehydrates_computed_prefix_blocks_across_runs() {
+    // Cross-run prefix persistence: run 1 serves two requests sharing a
+    // 16-token system prompt with checkpointing on and dies mid-decode
+    // (the shared blocks are computed and referenced, so their packed
+    // K/V payloads travel in the snapshot).  Run 2 restores into a
+    // fresh engine and submits a *new* request with the same system
+    // prompt: its whole shared span must be served from the rehydrated
+    // blocks — skipped outright, zero re-prefill — and its tokens must
+    // match a fresh single-run reference exactly (the rehydrated K/V
+    // is bit-exact, not merely shape-compatible).
+    let kv_dtype = KvDtype::F32;
+    let shared: Vec<u32> = (0..16u32).map(|j| (j * 7 + 3) % 256).collect(); // 4 full blocks
+    let mk = |id: usize, tail_seed: u32| {
+        let mut prompt = shared.clone();
+        prompt.extend((0..8u32).map(|j| (tail_seed + j * 5) % 256));
+        Request::new(
+            id,
+            prompt,
+            SamplingParams {
+                max_tokens: 8,
+                temperature: 0.9,
+                top_k: 24,
+                seed: 3,
+                ..Default::default()
+            },
+        )
+    };
+    let mut reference = Engine::new(roomy_cfg(kv_dtype), backend());
+    for i in 0..2 {
+        reference.add_request(mk(i, 100 + i as u32 * 40));
+    }
+    reference.add_request(mk(7, 210));
+    let ref_report = reference.run().unwrap();
+    assert_eq!(ref_report.outputs.len(), 3);
+
+    let dir = snap_dir("prefix");
+    {
+        let mut e = Engine::new(roomy_cfg(kv_dtype), backend());
+        e.enable_checkpoints(&dir, 1);
+        for i in 0..2 {
+            e.add_request(mk(i, 100 + i as u32 * 40));
+        }
+        // Step past the prefills into decode, then hard-die: the last
+        // snapshot holds both sequences mid-generation with the shared
+        // blocks computed.
+        for _ in 0..4 {
+            assert!(e.step().unwrap());
+        }
+        assert!(e.metrics.checkpoints_written > 0);
+    }
+    let mut e = Engine::restore(roomy_cfg(kv_dtype), backend(), &dir).unwrap();
+    let skipped_at_restore = e.scheduler.prefill_tokens_skipped;
+    let hits_at_restore = e.scheduler.blocks.prefix_hits;
+    e.add_request(mk(7, 210));
+    let report = e.run().unwrap();
+    assert_eq!(report.outputs.len(), 3, "both restored requests + the new one must finish");
+    assert!(
+        e.scheduler.blocks.prefix_hits > hits_at_restore,
+        "the new request must hit the rehydrated prefix blocks"
+    );
+    assert_eq!(
+        e.scheduler.prefill_tokens_skipped - skipped_at_restore,
+        shared.len(),
+        "the whole shared span must be skipped, not re-prefilled"
+    );
+    assert_eq!(
+        sorted_tokens(&report),
+        sorted_tokens(&ref_report),
+        "tokens served through rehydrated prefix K/V diverged from a fresh run"
+    );
+    e.audit().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn storm_spill_volume_shrinks_with_the_dtype() {
     // The same storm (same schedule, same evictions — the scheduler is
