@@ -34,11 +34,25 @@
 
 use opt4gptq::benchkit::{bench, fmt_duration, Stats, Table};
 use opt4gptq::gptq::{
-    available_kernels, fused_threads, gemm_f32, gemm_fused, gemv_f32, gemv_fused,
-    gemv_fused_prepared_threads, gemv_fused_threads, gemv_fused_with, quantize_rtn, Kernel,
-    KernelDispatch, Matrix, PreparedTensor, QuantizedTensor,
+    available_kernels, fused_threads, gemm_f32, gemm_fused_opt, gemv_f32, gemv_fused_opt,
+    quantize_rtn, FusedInput, FusedOpts, Kernel, KernelDispatch, Matrix, PreparedTensor,
+    QuantizedTensor,
 };
 use opt4gptq::rng::Rng;
+
+/// Collapsed-surface shorthand: auto kernel + auto split on a raw tensor.
+fn gemv_auto(x: &[f32], q: &QuantizedTensor) -> Vec<f32> {
+    gemv_fused_opt(x, FusedInput::Raw(q), FusedOpts::default())
+}
+
+fn gemm_auto(x: &Matrix, q: &QuantizedTensor) -> Matrix {
+    gemm_fused_opt(x, FusedInput::Raw(q), FusedOpts::default())
+}
+
+/// Auto kernel, forced worker count.
+fn gemv_threads(x: &[f32], q: &QuantizedTensor, threads: usize) -> Vec<f32> {
+    gemv_fused_opt(x, FusedInput::Raw(q), FusedOpts { kernel: None, threads: Some(threads) })
+}
 
 struct Case {
     label: &'static str,
@@ -183,9 +197,9 @@ fn main() {
 
         // Correctness first: a fast wrong kernel is not a speedup.
         let (want, got) = if case.m == 1 {
-            (gemv_f32(x.row(0), &q), gemv_fused(x.row(0), &q))
+            (gemv_f32(x.row(0), &q), gemv_auto(x.row(0), &q))
         } else {
-            (gemm_f32(&x, &q).data, gemm_fused(&x, &q).data)
+            (gemm_f32(&x, &q).data, gemm_auto(&x, &q).data)
         };
         let max_diff =
             want.iter().zip(&got).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
@@ -203,11 +217,11 @@ fn main() {
         };
         let fused = if case.m == 1 {
             bench(&format!("fused  {}", case.label), 1, iters, || {
-                std::hint::black_box(gemv_fused(x.row(0), &q));
+                std::hint::black_box(gemv_auto(x.row(0), &q));
             })
         } else {
             bench(&format!("fused  {}", case.label), 1, iters, || {
-                std::hint::black_box(gemm_fused(&x, &q));
+                std::hint::black_box(gemm_auto(&x, &q));
             })
         };
 
@@ -274,7 +288,7 @@ fn main() {
             1,
             face_iters,
             || {
-                std::hint::black_box(gemv_fused_with(&x, &q, kernel, 1));
+                std::hint::black_box(gemv_fused_opt(&x, FusedInput::Raw(&q), FusedOpts { kernel: Some(kernel), threads: Some(1) }));
             },
         );
         kernel_json.push(format!(
@@ -308,7 +322,7 @@ fn main() {
             1,
             face_iters,
             || {
-                std::hint::black_box(gemv_fused_prepared_threads(&x, &prep, 1));
+                std::hint::black_box(gemv_fused_opt(&x, FusedInput::Prepared(&prep), FusedOpts { kernel: None, threads: Some(1) }));
             },
         );
         kernel_json.push(format!(
@@ -354,18 +368,18 @@ fn main() {
 
     // Bit-exactness first (always checkable): a racy fast path is not a
     // speedup.  Force 2 workers for the parity check even on one core.
-    let serial_y = gemv_fused_threads(&x, &q, 1);
-    let parallel_y = gemv_fused_threads(&x, &q, workers.max(2));
+    let serial_y = gemv_threads(&x, &q, 1);
+    let parallel_y = gemv_threads(&x, &q, workers.max(2));
     assert_eq!(serial_y, parallel_y, "column split changed the numerics");
 
     let parallel_json;
     if workers > 1 {
         let serial = bench(&format!("fused serial   M=1 {k}x{n} g{group}"), 2, face_iters, || {
-            std::hint::black_box(gemv_fused_threads(&x, &q, 1));
+            std::hint::black_box(gemv_threads(&x, &q, 1));
         });
         let parallel =
             bench(&format!("fused parallel M=1 {k}x{n} g{group} (t={workers})"), 2, face_iters, || {
-                std::hint::black_box(gemv_fused_threads(&x, &q, workers));
+                std::hint::black_box(gemv_threads(&x, &q, workers));
             });
         // Best-of-N comparison: scheduling noise must not fail the floor.
         let par_speedup = serial.min / parallel.min;

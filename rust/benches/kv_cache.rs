@@ -42,6 +42,26 @@ fn backend() -> CpuBackend {
     .expect("backend config")
 }
 
+/// Same dims under grouped-query attention: 4 Q heads share 1 KV head
+/// (`kv_dim` 32 vs 128) with RoPE on — the pool rows this walk reads
+/// are 4× narrower at f32/f16 and carry the same per-row kv4 header.
+fn gqa_backend() -> CpuBackend {
+    CpuBackend::new(CpuModelConfig {
+        max_seq: 512,
+        d_model: D_MODEL,
+        n_layers: N_LAYERS,
+        n_heads: 4,
+        n_kv_heads: 1,
+        rope: true,
+        d_ff: 256,
+        ..opt4gptq::models::TINY_GQA
+    })
+    .expect("gqa backend config")
+}
+
+/// `kv_dim` of [`gqa_backend`]'s shape (1 KV head × d_head 32).
+const GQA_KV_DIM: usize = D_MODEL / 4;
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     println!(
@@ -104,6 +124,53 @@ fn main() {
     }
     out.print();
 
+    // The same walk at the GQA shape: every Q head reads the one shared
+    // KV head's slice, so the context bytes streamed per step shrink by
+    // the group ratio.  Wall-clock — reported, not gated.
+    let mut gqa_out = Table::new(
+        "attention block walk, GQA 4q/1kv + RoPE (CpuBackend wall clock)",
+        &["dtype", "ctx", "decode p50", "tok/s", "pool bytes", "B/token"],
+    );
+    for dtype in KvDtype::ALL {
+        let mut be = gqa_backend();
+        be.bind_kv(table_blocks.len(), BLOCK_SIZE, dtype);
+        let (logits, _) = be
+            .prefill(PrefillDesc {
+                seq_id: 0,
+                tokens: &prompt,
+                start: 0,
+                is_last: true,
+                block_table: &table_blocks,
+            })
+            .expect("gqa prefill");
+        if !logits.iter().all(|v| v.is_finite()) {
+            failures.push(format!("gqa {dtype}: prefill produced non-finite logits"));
+        }
+        let desc = DecodeDesc { seq_id: 0, context_len: ctx, token: 7, block_table: &table_blocks };
+        let stats = bench(&format!("kv_walk gqa {dtype} ctx {ctx}"), 1, iters, || {
+            std::hint::black_box(be.decode(&[desc]).expect("gqa decode").0);
+        });
+        let tok_per_s = 1.0 / stats.p50;
+        let pool_bytes = be.kv().bytes();
+        let bytes_per_token = be.kv().bytes_per_token();
+        gqa_out.row(vec![
+            dtype.to_string(),
+            format!("{ctx}"),
+            fmt_duration(stats.p50),
+            format!("{tok_per_s:.0}"),
+            format!("{pool_bytes}"),
+            format!("{bytes_per_token}"),
+        ]);
+        json_rows.push(format!(
+            "    {{\"label\": \"kv_walk gqa {dtype}\", \"dtype\": \"{dtype}\", \
+             \"ctx\": {ctx}, \"walk_p50_ns_ungated\": {:.0}, \
+             \"walk_tok_per_s\": {tok_per_s:.1}, \"pool_bytes\": {pool_bytes}, \
+             \"bytes_per_token\": {bytes_per_token}}}",
+            stats.p50 * 1e9,
+        ));
+    }
+    gqa_out.print();
+
     // Capacity: tokens a fixed budget keeps resident, per dtype.  Pure
     // layout arithmetic — deterministic across machines, so the floors
     // hold in smoke mode too and CI can gate the row at 1%.
@@ -128,6 +195,37 @@ fn main() {
          \"speedup_capacity_f16\": {cap_f16:.3}, \"speedup_capacity_kv4\": {cap_kv4:.3}}}"
     ));
 
+    // GQA capacity: the same budget with kv_dim-wide rows (32 vs 128).
+    // The gated multiplier is resident tokens at the GQA shape over the
+    // MHA shape *at equal dtype* — the paper's GQA memory win, layout
+    // arithmetic only.  Floor 1.9× at every dtype (kv4's per-row
+    // scale/zero header dilutes the 4× row shrink to ~3×).
+    let gqa_tokens_of = |d: KvDtype| BUDGET_BYTES / (2 * N_LAYERS * d.row_bytes(GQA_KV_DIM));
+    let (g32, g16, g4) =
+        (gqa_tokens_of(KvDtype::F32), gqa_tokens_of(KvDtype::F16), gqa_tokens_of(KvDtype::Kv4));
+    let gqa_f32 = g32 as f64 / t32 as f64;
+    let gqa_f16 = g16 as f64 / t16 as f64;
+    let gqa_kv4 = g4 as f64 / t4 as f64;
+    println!(
+        "capacity at {} KiB, GQA kv_dim {GQA_KV_DIM}: f32 {g32} tokens ({gqa_f32:.2}x MHA), \
+         f16 {g16} ({gqa_f16:.2}x), kv4 {g4} ({gqa_kv4:.2}x)",
+        BUDGET_BYTES / 1024
+    );
+    for (name, mult) in [("f32", gqa_f32), ("f16", gqa_f16), ("kv4", gqa_kv4)] {
+        if mult < 1.9 {
+            failures.push(format!(
+                "GQA {name} capacity {mult:.3}x MHA is below the 1.9x floor"
+            ));
+        }
+    }
+    json_rows.push(format!(
+        "    {{\"label\": \"kv_capacity gqa\", \"budget_bytes\": {BUDGET_BYTES}, \
+         \"d_model\": {D_MODEL}, \"kv_dim\": {GQA_KV_DIM}, \"n_layers\": {N_LAYERS}, \
+         \"tokens_gqa_f32\": {g32}, \"tokens_gqa_f16\": {g16}, \"tokens_gqa_kv4\": {g4}, \
+         \"speedup_capacity_gqa_f32\": {gqa_f32:.3}, \"speedup_capacity_gqa_f16\": {gqa_f16:.3}, \
+         \"speedup_capacity_gqa_kv4\": {gqa_kv4:.3}}}"
+    ));
+
     let json = format!(
         "{{\n  \"bench\": \"kv_cache\",\n  \"smoke\": {smoke},\n  \
          \"block_size\": {BLOCK_SIZE},\n  \"cases\": [\n{}\n  ]\n}}\n",
@@ -137,7 +235,10 @@ fn main() {
     println!("\nwrote BENCH_kv_cache.json ({} rows)", json_rows.len());
 
     if failures.is_empty() {
-        println!("\nshape check: OK (capacity floors f16 >= 1.9x, kv4 >= 3.5x; walks finite)");
+        println!(
+            "\nshape check: OK (capacity floors f16 >= 1.9x, kv4 >= 3.5x, \
+             GQA >= 1.9x MHA at every dtype; walks finite)"
+        );
     } else {
         println!("\nshape check FAILED:");
         for f in &failures {

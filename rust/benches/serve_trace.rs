@@ -48,12 +48,14 @@ fn trace(n: usize) -> RequestTrace {
 
 fn run(
     trace: &RequestTrace,
+    model_name: &str,
     swap_preempt: bool,
     kv_dtype: KvDtype,
 ) -> (Vec<(usize, Vec<u32>)>, EngineReport) {
-    let model = by_name("Llama-2-7B-GPTQ").unwrap();
+    let model = by_name(model_name).unwrap();
     let mut e = Engine::new(
         EngineConfig {
+            model: *model,
             max_batch: MAX_BATCH,
             block_size: 16,
             total_blocks: 48,
@@ -107,8 +109,8 @@ fn main() {
     );
 
     let t = trace(n);
-    let (swap_toks, swap) = run(&t, true, KvDtype::F32);
-    let (rec_toks, rec) = run(&t, false, KvDtype::F32);
+    let (swap_toks, swap) = run(&t, "Llama-2-7B-GPTQ", true, KvDtype::F32);
+    let (rec_toks, rec) = run(&t, "Llama-2-7B-GPTQ", false, KvDtype::F32);
     assert_eq!(
         swap_toks, rec_toks,
         "swap and recompute replays must generate bit-identical tokens"
@@ -181,7 +183,7 @@ fn main() {
     let f32_spilled = swap.metrics.swap_spilled_bytes;
     let mut spill_rows: Vec<(KvDtype, usize)> = vec![(KvDtype::F32, f32_spilled)];
     for kv_dtype in [KvDtype::F16, KvDtype::Kv4] {
-        let (toks, rep) = run(&t, true, kv_dtype);
+        let (toks, rep) = run(&t, "Llama-2-7B-GPTQ", true, kv_dtype);
         assert_eq!(
             toks, swap_toks,
             "{kv_dtype}: the sim backend's tokens must not depend on the KV dtype"
@@ -217,6 +219,37 @@ fn main() {
         spill_rows[2].1,
         block_bytes(KvDtype::F16) as f64 / block_bytes(KvDtype::F32) as f64,
         block_bytes(KvDtype::Kv4) as f64 / block_bytes(KvDtype::F32) as f64,
+    ));
+
+    // Informational GQA row (ungated, baseline untouched): the same
+    // pressured swap replay on the paper's GQA checkpoint
+    // (Meta-Llama-3-8B, 32 Q heads over 8 KV heads).  Spilled blocks
+    // carry kv_dim-wide rows, so the accounted bytes per swapped block
+    // are 4× smaller than the MHA checkpoint's at equal dtype.
+    let gqa_name = "Meta-Llama-3-8B-GPTQ";
+    let (_, gqa) = run(&t, gqa_name, true, KvDtype::F32);
+    let gqa_model = by_name(gqa_name).unwrap();
+    let gqa_block_bytes = KvDtype::F32.block_bytes(16, gqa_model.n_layers, gqa_model.kv_dim());
+    println!(
+        "GQA checkpoint ({gqa_name}, {}q/{}kv): {:.1} tok/s, spill {:.1} KiB \
+         ({} B/block vs MHA's {})",
+        gqa_model.n_heads,
+        gqa_model.n_kv_heads,
+        gqa.metrics.throughput(),
+        gqa.metrics.swap_spilled_bytes as f64 / 1024.0,
+        gqa_block_bytes,
+        block_bytes(KvDtype::F32),
+    );
+    json_rows.push(format!(
+        "    {{\"label\": \"serve_trace gqa swap\", \"model\": \"{gqa_name}\", \
+         \"n_heads\": {}, \"n_kv_heads\": {}, \
+         \"tokens_per_s_ungated\": {:.3}, \"swap_spilled_bytes\": {}, \
+         \"kv_block_bytes_f32\": {gqa_block_bytes}, \"mha_kv_block_bytes_f32\": {}}}",
+        gqa_model.n_heads,
+        gqa_model.n_kv_heads,
+        gqa.metrics.throughput(),
+        gqa.metrics.swap_spilled_bytes,
+        block_bytes(KvDtype::F32),
     ));
 
     let json = format!(

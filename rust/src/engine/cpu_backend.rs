@@ -4,9 +4,9 @@
 //! Unlike [`super::backend::SimBackend`] (virtual clock, synthesized
 //! logits) and the PJRT path (external AOT artifacts), [`CpuBackend`]
 //! executes genuine math end-to-end with no artifacts and no external
-//! crates: embeddings → `n_layers` pre-norm blocks (multi-head causal
-//! attention over a **paged** KV cache + SiLU-gated MLP) → quantized
-//! lm_head.  Every projection is a 4-bit GPTQ tensor evaluated through
+//! crates: embeddings → `n_layers` pre-norm blocks (causal attention
+//! over a **paged** KV cache + SiLU-gated MLP) → quantized lm_head.
+//! Every projection is a 4-bit GPTQ tensor evaluated through
 //! [`crate::gptq::fused`] — decode steps exercise the `M = batch` fused
 //! GEMM path, prefills the `M = prompt_len` path, and the per-layer
 //! output projection carries a real act-order (`b_q_perm`) checkpoint so
@@ -16,8 +16,24 @@
 //! lane width the resolved dispatch streams — is computed once at model
 //! build, never on the serve path.
 //!
+//! The architecture comes from the unified
+//! [`crate::models::ModelConfig`] registry (`serve --model`,
+//! `OPT4GPTQ_MODEL`): **grouped-query attention** when `n_kv_heads <
+//! n_heads` (the K/V projections and the paged pool are `kv_dim =
+//! n_kv_heads · d_head` wide; Q head `h` reads KV head `h /
+//! gqa_ratio` during the tile walk, at every [`KvDtype`]) and
+//! **rotary position embeddings** when `cfg.rope` (applied at append
+//! time: K rows are rotated by their absolute position *before*
+//! `kv.write`, so the cache stores pre-rotated keys and a Q copy is
+//! rotated per pass — a pure function of `(position, values)`, which
+//! keeps chunked prefill, prefix skip and swap replay bit-identical).
+//! With `n_kv_heads == n_heads` and RoPE off the code runs the exact
+//! pre-registry FP operation sequence (learned additive positions,
+//! full-width K/V rows), so every golden recorded against the old
+//! `tiny-mha` model stays valid bit for bit.
+//!
 //! KV layout: a [`PagedKvCache`] pool `[n_blocks × n_layers × block_size
-//! × d_model]` per cache side — dtype-parameterized ([`KvDtype`]: f32,
+//! × kv_dim]` per cache side — dtype-parameterized ([`KvDtype`]: f32,
 //! f16, or 4-bit `kv4`), addressed exclusively through the block tables
 //! the engine hands down in [`PrefillDesc`]/[`DecodeDesc`] — the same
 //! tables [`super::block_manager::BlockManager`] allocates, so a
@@ -25,11 +41,17 @@
 //! walks the table block-by-block: each (block, layer) tile is
 //! dequantized **once per pass** into a reused scratch tile (the
 //! SMB-Opt pattern applied to the cache; the f32 pool borrows the tile
-//! zero-copy), then every head reads from the scratch.  Blocks the
-//! allocator retires come back through [`Backend::release_blocks`];
-//! debug builds poison them — NaN fill for f32/f16, the reserved NaN
-//! scale pattern for kv4 — so a read through a stale table fails parity
-//! tests loudly at every dtype.
+//! zero-copy), then every head reads from the scratch.  The
+//! per-sequence block walks of a batch are independent, so the batch is
+//! split across **scoped threads** (the same machinery as the fused
+//! GEMM column split, worker count from the shared `hw_threads`
+//! resolution) in contiguous row ranges — bit-identical to the serial
+//! walk because no row's arithmetic changes, engaged only past a work
+//! floor so tiny batches stay spawn-free.  Blocks the allocator retires
+//! come back through [`Backend::release_blocks`]; debug builds poison
+//! them — NaN fill for f32/f16, the reserved NaN scale pattern for kv4
+//! — so a read through a stale table fails parity tests loudly at every
+//! dtype.
 //!
 //! The engine's scheduler/block-manager/sampler stack drives this backend
 //! exactly as it drives the simulated one; `rust/tests/backend_integration.rs`
@@ -55,47 +77,12 @@ use super::kv::{KvDtype, KvSpill, PagedKvCache};
 /// before/without an engine calling [`Backend::bind_kv`].
 pub const DEFAULT_BLOCK_SIZE: usize = 16;
 
-/// Architecture of the tiny executable model (all dims kernel-aligned:
-/// multiples of 8 for the packed layout, `group_size` dividing both
-/// `d_model` and `d_ff`).
-#[derive(Debug, Clone, Copy)]
-pub struct CpuModelConfig {
-    pub vocab: usize,
-    pub d_model: usize,
-    pub n_layers: usize,
-    pub n_heads: usize,
-    pub d_ff: usize,
-    pub group_size: usize,
-    pub max_seq: usize,
-    /// Max sequences decoded together (a compute-batch cap; KV capacity
-    /// is whatever the bound block pool holds, not `max_batch × max_seq`).
-    pub max_batch: usize,
-    /// Weight-synthesis seed: two backends with the same config produce
-    /// bit-identical logits.
-    pub seed: u64,
-}
-
-impl Default for CpuModelConfig {
-    fn default() -> Self {
-        CpuModelConfig {
-            vocab: 256, // byte tokenizer range
-            d_model: 64,
-            n_layers: 2,
-            n_heads: 4,
-            d_ff: 128,
-            group_size: 32,
-            max_seq: 256,
-            max_batch: 8,
-            seed: 0x0c17_0b0d,
-        }
-    }
-}
-
-impl CpuModelConfig {
-    pub fn d_head(&self) -> usize {
-        self.d_model / self.n_heads
-    }
-}
+/// The executable model configuration is the unified registry type —
+/// the historical name is kept as an alias so backend-centric call
+/// sites keep reading naturally (`CpuModelConfig::default()` is
+/// `models::default_model()`, i.e. `tiny-mha` unless `OPT4GPTQ_MODEL`
+/// says otherwise).
+pub type CpuModelConfig = crate::models::ModelConfig;
 
 /// One transformer block's quantized projections.  Each is a
 /// [`PreparedTensor`]: the vector-friendly swizzled prepack the active
@@ -142,6 +129,10 @@ pub struct CpuBackend {
     /// corruption must be caught by this backend's own output
     /// validation, not by any engine seam check.
     poison_armed: bool,
+    /// Test hook: pin the attention block-walk worker count (bypassing
+    /// the `attention_workers` heuristic) so parallel-vs-serial bitwise
+    /// tests can force both paths deterministically.
+    att_workers_override: Option<usize>,
 }
 
 fn quantized(rng: &mut Rng, k: usize, n: usize, g: usize, std: f32) -> PreparedTensor {
@@ -151,19 +142,23 @@ fn quantized(rng: &mut Rng, k: usize, n: usize, g: usize, std: f32) -> PreparedT
 
 impl CpuBackend {
     pub fn new(cfg: CpuModelConfig) -> Result<CpuBackend> {
-        if cfg.d_model % cfg.n_heads.max(1) != 0 || cfg.n_heads == 0 {
-            bail!("d_model {} must split evenly over {} heads", cfg.d_model, cfg.n_heads);
+        // Registry-wide kernel constraints first (d_model % n_heads,
+        // n_heads % n_kv_heads, group divisibility, even RoPE d_head)…
+        if let Err(e) = cfg.validate() {
+            bail!("model config {:?}: {e}", cfg.name);
         }
-        for (name, dim) in [("vocab", cfg.vocab), ("d_model", cfg.d_model), ("d_ff", cfg.d_ff)] {
+        // …then the executable-path extras the packed layout needs.
+        for (name, dim) in [
+            ("vocab", cfg.vocab),
+            ("d_model", cfg.d_model),
+            ("d_ff", cfg.d_ff),
+            ("kv_dim", cfg.kv_dim()),
+        ] {
             if dim == 0 || dim % 8 != 0 {
                 bail!("{name} = {dim} must be a non-zero multiple of 8 (packed layout)");
             }
         }
-        if cfg.group_size == 0
-            || cfg.group_size % 8 != 0
-            || cfg.d_model % cfg.group_size != 0
-            || cfg.d_ff % cfg.group_size != 0
-        {
+        if cfg.group_size % 8 != 0 {
             bail!(
                 "group size {} must be a multiple of 8 dividing d_model {} and d_ff {}",
                 cfg.group_size,
@@ -177,8 +172,12 @@ impl CpuBackend {
 
         let mut rng = Rng::new(cfg.seed);
         let d = cfg.d_model;
+        let kv_dim = cfg.kv_dim();
         let proj_std = 1.0 / (d as f32).sqrt();
         let embed = Matrix::from_vec(cfg.vocab, d, rng.normal_vec_f32(cfg.vocab * d, 0.5));
+        // The learned-position table is always drawn — keeping the RNG
+        // stream identical whether RoPE is on or off — but only *added*
+        // when `!cfg.rope` (see `forward`).
         let pos = Matrix::from_vec(cfg.max_seq, d, rng.normal_vec_f32(cfg.max_seq * d, 0.1));
 
         let mut layers = Vec::with_capacity(cfg.n_layers);
@@ -195,8 +194,11 @@ impl CpuBackend {
             ));
             layers.push(LayerWeights {
                 wq: quantized(&mut rng, d, d, cfg.group_size, proj_std),
-                wk: quantized(&mut rng, d, d, cfg.group_size, proj_std),
-                wv: quantized(&mut rng, d, d, cfg.group_size, proj_std),
+                // K/V project to kv_dim: `n_kv_heads · d_head` — full
+                // width for MHA (identical RNG draws to the
+                // pre-registry model), narrower under GQA.
+                wk: quantized(&mut rng, d, kv_dim, cfg.group_size, proj_std),
+                wv: quantized(&mut rng, d, kv_dim, cfg.group_size, proj_std),
                 wo,
                 w_gate: quantized(&mut rng, d, cfg.d_ff, cfg.group_size, proj_std),
                 w_up: quantized(&mut rng, d, cfg.d_ff, cfg.group_size, proj_std),
@@ -221,17 +223,19 @@ impl CpuBackend {
             // Directly-driven backends (tests, benches) honor the
             // OPT4GPTQ_KV default so the CI dtype matrix reaches them;
             // an engine's bind_kv re-pools with its configured dtype.
+            // Row width is kv_dim — the GQA pool shrink.
             kv: PagedKvCache::with_dtype(
                 0,
                 DEFAULT_BLOCK_SIZE,
                 cfg.n_layers,
-                d,
+                kv_dim,
                 super::kv_dtype_default(),
             ),
             spill: std::collections::HashMap::new(),
             spill_bytes: 0,
             spill_peak_bytes: 0,
             poison_armed: false,
+            att_workers_override: None,
         })
     }
 
@@ -239,6 +243,13 @@ impl CpuBackend {
     /// sharing through this).
     pub fn kv(&self) -> &PagedKvCache {
         &self.kv
+    }
+
+    /// Pin the attention block-walk worker count (tests only): `Some(1)`
+    /// forces the serial walk, `Some(n)` forces an `n`-way row split
+    /// regardless of the work-floor heuristic.
+    pub fn set_att_workers(&mut self, workers: Option<usize>) {
+        self.att_workers_override = workers;
     }
 
     /// Check a span's tokens and table before any math runs.
@@ -300,23 +311,31 @@ impl CpuBackend {
 
         let mut h = Matrix::zeros(t, d);
         for (i, &(_, pos, tok)) in rows.iter().enumerate() {
-            for c in 0..d {
-                h.data[i * d + c] = self.embed.at(tok as usize, c) + self.pos.at(pos, c);
+            let row = &mut h.data[i * d..(i + 1) * d];
+            row.copy_from_slice(self.embed.row(tok as usize));
+            if !cfg.rope {
+                // Learned additive positions (the pre-registry model);
+                // under RoPE position enters through the Q/K rotation
+                // instead, so the embedding is position-free.
+                for (c, hv) in row.iter_mut().enumerate() {
+                    *hv += self.pos.at(pos, c);
+                }
             }
         }
 
-        // Reused scratch tiles for the attention block walk: each
-        // (block, layer) K/V tile is dequantized into these once per
-        // pass (the f32 pool bypasses them with a zero-copy borrow).
-        // Allocated once per forward, never per block.
-        let mut k_tile = vec![0.0f32; self.kv.tile_len()];
-        let mut v_tile = vec![0.0f32; self.kv.tile_len()];
         let poison = std::mem::take(&mut self.poison_armed);
+        // Batch-parallel attention: split the independent per-sequence
+        // block walks across scoped threads once the batch is wide
+        // enough and the score work passes the floor (score elements ~
+        // sum of context lengths × d_model).
+        let att_work: usize = rows.iter().map(|&(_, pos, _)| pos + 1).sum::<usize>() * d;
+        let workers =
+            self.att_workers_override.unwrap_or_else(|| attention_workers(t, att_work));
 
         for li in 0..cfg.n_layers {
             // ---- attention ----
             let a = rmsnorm_rows(&h);
-            let (mut qm, km, vm) = {
+            let (mut qm, mut km, vm) = {
                 let lw = &self.layers[li];
                 (
                     gemm_fused_prepared(&a, &lw.wq),
@@ -331,27 +350,31 @@ impl CpuBackend {
                 // finite check in `step` fails the batch loudly — and
                 // because only an activation (never the K/V pool) is
                 // poisoned, the cache stays clean and the post-drain
-                // audit passes after the failure is reclaimed.
+                // audit passes after the failure is reclaimed.  Applied
+                // before the RoPE rotation (NaN survives rotation), so
+                // the fault fires identically with RoPE on.
                 let tile = &mut qm.data[..d];
                 tile.fill(f32::NAN);
+            }
+            if cfg.rope {
+                // Rotate at append time: K rows by their absolute
+                // position *before* kv.write (the cache stores
+                // pre-rotated keys — a pure function of (position,
+                // values), so chunked prefill, prefix skip and swap
+                // replay stay bit-identical), and the Q rows in place
+                // for this pass's score walk.
+                let kvd = cfg.kv_dim();
+                let hd = cfg.d_head();
+                for (i, &(_, pos, _)) in rows.iter().enumerate() {
+                    rope_rotate_row(&mut km.data[i * kvd..(i + 1) * kvd], hd, pos);
+                    rope_rotate_row(&mut qm.data[i * d..(i + 1) * d], hd, pos);
+                }
             }
             for (i, &(si, pos, _)) in rows.iter().enumerate() {
                 self.kv.write(spans[si].table, pos, li, km.row(i), vm.row(i));
             }
             let mut att = Matrix::zeros(t, d);
-            for (i, &(si, pos, _)) in rows.iter().enumerate() {
-                attend(
-                    &cfg,
-                    &self.kv,
-                    spans[si].table,
-                    li,
-                    qm.row(i),
-                    pos + 1,
-                    &mut att.data[i * d..(i + 1) * d],
-                    &mut k_tile,
-                    &mut v_tile,
-                );
-            }
+            attend_batch(&cfg, &self.kv, spans, &rows, &qm, li, &mut att, workers);
             let o = gemm_fused_prepared(&att, &self.layers[li].wo);
             add_assign(&mut h, &o);
 
@@ -388,7 +411,7 @@ impl Backend for CpuBackend {
             total_blocks,
             block_size,
             self.cfg.n_layers,
-            self.cfg.d_model,
+            self.cfg.kv_dim(),
             dtype,
         );
         self.spill.clear();
@@ -592,6 +615,120 @@ fn add_assign(a: &mut Matrix, b: &Matrix) {
     }
 }
 
+/// Rotate one `d_head`-wide chunk in place by RoPE angle(s) for
+/// absolute position `pos` (half-split pairing: lane `i` rotates with
+/// lane `i + d_head/2`, frequency `10000^(-2i/d_head)` — the
+/// Llama/GPT-NeoX convention).
+fn rope_rotate_head(chunk: &mut [f32], pos: usize) {
+    let hd = chunk.len();
+    let half = hd / 2;
+    for i in 0..half {
+        let freq = 10000f32.powf(-((2 * i) as f32) / hd as f32);
+        let theta = pos as f32 * freq;
+        let (sin, cos) = theta.sin_cos();
+        let a = chunk[i];
+        let b = chunk[i + half];
+        chunk[i] = a * cos - b * sin;
+        chunk[i + half] = b * cos + a * sin;
+    }
+}
+
+/// Apply [`rope_rotate_head`] to every `d_head`-wide head chunk of a
+/// projected Q or K row (row length must be a multiple of `hd`).
+fn rope_rotate_row(row: &mut [f32], hd: usize, pos: usize) {
+    for chunk in row.chunks_exact_mut(hd) {
+        rope_rotate_head(chunk, pos);
+    }
+}
+
+/// Work floor (in score elements ≈ Σ context × d_model) below which the
+/// attention block walk stays serial — thread spawn overhead dwarfs the
+/// math for single decodes and short prompts.
+const ATT_MIN_WORK: usize = 1 << 16;
+
+/// Worker count for the batch-parallel attention walk: serial for
+/// single-row batches or sub-floor work, otherwise the shared
+/// `hw_threads` resolution capped by the row count.
+fn attention_workers(rows: usize, score_elems: usize) -> usize {
+    if rows < 2 || score_elems < ATT_MIN_WORK {
+        1
+    } else {
+        crate::gptq::fused::hw_threads().min(rows)
+    }
+}
+
+/// Run [`attend`] for every row of the batch, splitting the independent
+/// per-sequence block walks across scoped threads in contiguous row
+/// ranges (the same machinery as the fused GEMM column split).  Each
+/// worker owns its output rows via `split_at_mut` and its own scratch
+/// tiles; no row's arithmetic changes, so the result is bit-identical
+/// to the serial walk at any worker count.
+#[allow(clippy::too_many_arguments)]
+fn attend_batch(
+    cfg: &CpuModelConfig,
+    kv: &PagedKvCache,
+    spans: &[SeqSpan<'_>],
+    rows: &[(usize, usize, u32)],
+    qm: &Matrix,
+    layer: usize,
+    att: &mut Matrix,
+    workers: usize,
+) {
+    let d = cfg.d_model;
+    let t = rows.len();
+    let workers = workers.max(1).min(t.max(1));
+    if workers <= 1 {
+        let mut k_tile = vec![0.0f32; kv.tile_len()];
+        let mut v_tile = vec![0.0f32; kv.tile_len()];
+        for (i, &(si, pos, _)) in rows.iter().enumerate() {
+            attend(
+                cfg,
+                kv,
+                spans[si].table,
+                layer,
+                qm.row(i),
+                pos + 1,
+                &mut att.data[i * d..(i + 1) * d],
+                &mut k_tile,
+                &mut v_tile,
+            );
+        }
+        return;
+    }
+    let base = t / workers;
+    let extra = t % workers;
+    std::thread::scope(|s| {
+        let mut rest: &mut [f32] = &mut att.data;
+        let mut row0 = 0usize;
+        for w in 0..workers {
+            let take = base + usize::from(w < extra);
+            let (chunk, tail) = rest.split_at_mut(take * d);
+            rest = tail;
+            let r0 = row0;
+            row0 += take;
+            s.spawn(move || {
+                let mut k_tile = vec![0.0f32; kv.tile_len()];
+                let mut v_tile = vec![0.0f32; kv.tile_len()];
+                for j in 0..take {
+                    let i = r0 + j;
+                    let (si, pos, _) = rows[i];
+                    attend(
+                        cfg,
+                        kv,
+                        spans[si].table,
+                        layer,
+                        qm.row(i),
+                        pos + 1,
+                        &mut chunk[j * d..(j + 1) * d],
+                        &mut k_tile,
+                        &mut v_tile,
+                    );
+                }
+            });
+        }
+    });
+}
+
 /// Multi-head causal attention for one query row over the cached
 /// `0..ctx` positions addressed through `table`, walking the paged pool
 /// block-by-block; accumulates into `out` (zeroed by the caller).
@@ -604,6 +741,11 @@ fn add_assign(a: &mut Matrix, b: &Matrix) {
 /// borrow, and the per-output-element FP operation sequence is exactly
 /// the pre-tile per-head walk's, so f32 logits stay bit-identical to the
 /// seed backend.
+///
+/// **GQA**: cached rows are `kv_dim = n_kv_heads · d_head` wide; Q head
+/// `h` reads KV head `h / gqa_ratio`.  With `n_kv_heads == n_heads` the
+/// ratio is 1 and every index reduces to the full-width MHA walk —
+/// the identical slice offsets, so the same FP sequence bit for bit.
 #[allow(clippy::too_many_arguments)]
 fn attend(
     cfg: &CpuModelConfig,
@@ -616,9 +758,10 @@ fn attend(
     k_tile: &mut [f32],
     v_tile: &mut [f32],
 ) {
-    let d = cfg.d_model;
     let hd = cfg.d_head();
     let nh = cfg.n_heads;
+    let kvd = cfg.kv_dim();
+    let group = cfg.gqa_ratio();
     let scale = 1.0 / (hd as f32).sqrt();
     let bs = kv.block_size();
     // Per-head score rows, position-major within a head: head `h`'s
@@ -638,11 +781,11 @@ fn attend(
             if p >= ctx {
                 break 'k_walk;
             }
-            let krow = &kt[pb * d..pb * d + d];
+            let krow = &kt[pb * kvd..pb * kvd + kvd];
             for head in 0..nh {
-                let hoff = head * hd;
-                let qh = &qv[hoff..hoff + hd];
-                let kh = &krow[hoff..hoff + hd];
+                let qh = &qv[head * hd..head * hd + hd];
+                let koff = (head / group) * hd;
+                let kh = &krow[koff..koff + hd];
                 let s = qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
                 scores[head * ctx + p] = s;
                 maxs[head] = maxs[head].max(s);
@@ -671,12 +814,12 @@ fn attend(
             if p >= ctx {
                 break 'v_walk;
             }
-            let vrow = &vt[pb * d..pb * d + d];
+            let vrow = &vt[pb * kvd..pb * kvd + kvd];
             for head in 0..nh {
-                let hoff = head * hd;
                 let w = scores[head * ctx + p] * invs[head];
-                let oh = &mut out[hoff..hoff + hd];
-                let vh = &vrow[hoff..hoff + hd];
+                let oh = &mut out[head * hd..head * hd + hd];
+                let voff = (head / group) * hd;
+                let vh = &vrow[voff..voff + hd];
                 for (o, &vv) in oh.iter_mut().zip(vh) {
                     *o += w * vv;
                 }
@@ -911,7 +1054,10 @@ mod tests {
         // Rebinding with a compressed dtype re-pools at the new width.
         be.bind_kv(32, 4, KvDtype::Kv4);
         assert_eq!(be.kv().dtype(), KvDtype::Kv4);
-        assert_eq!(be.kv().bytes(), 32 * KvDtype::Kv4.block_bytes(4, 2, 64));
+        assert_eq!(
+            be.kv().bytes(),
+            32 * KvDtype::Kv4.block_bytes(4, be.cfg.n_layers, be.cfg.kv_dim())
+        );
     }
 
     #[test]
@@ -1018,7 +1164,7 @@ mod tests {
             b.bind_kv(8, DEFAULT_BLOCK_SIZE, dtype);
             b.prefill(prefill_desc(&prompt, &[0, 1])).unwrap();
             let bytes = b.swap_out(0, &[0, 1]).unwrap();
-            assert_eq!(bytes, 2 * dtype.block_bytes(DEFAULT_BLOCK_SIZE, 2, 64));
+            assert_eq!(bytes, 2 * dtype.block_bytes(DEFAULT_BLOCK_SIZE, b.cfg.n_layers, b.cfg.kv_dim()));
             assert_eq!(b.kv_stats().unwrap().spill_bytes, bytes);
             b.release_blocks(&[0, 1]); // poison the originals
             b.swap_in(0, &[3, 5]).unwrap(); // restore elsewhere
@@ -1178,5 +1324,195 @@ mod tests {
         let lo = l.iter().cloned().fold(f32::INFINITY, f32::min);
         let hi = l.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         assert!(hi - lo > 0.05, "logit range {} too flat", hi - lo);
+    }
+
+    #[test]
+    fn attend_matches_a_naive_softmax_reference() {
+        // Independent recomputation of attend's math (no tiles, no
+        // streaming max, plain per-position softmax) — pins the
+        // semantics at both an MHA and a GQA geometry; the tolerance
+        // absorbs the different summation order.
+        for cfg in [crate::models::TINY_MHA, crate::models::TINY_GQA] {
+            let bs = 4;
+            let mut kv = PagedKvCache::with_dtype(3, bs, 1, cfg.kv_dim(), KvDtype::F32);
+            let table = [2, 0, 1];
+            let ctx = 11;
+            let mut rng = Rng::new(7);
+            let mut krows: Vec<Vec<f32>> = Vec::new();
+            let mut vrows: Vec<Vec<f32>> = Vec::new();
+            for p in 0..ctx {
+                let k = rng.normal_vec_f32(cfg.kv_dim(), 1.0);
+                let v = rng.normal_vec_f32(cfg.kv_dim(), 1.0);
+                kv.write(&table, p, 0, &k, &v);
+                krows.push(k);
+                vrows.push(v);
+            }
+            let q = rng.normal_vec_f32(cfg.d_model, 1.0);
+            let mut out = vec![0.0f32; cfg.d_model];
+            let mut kt = vec![0.0f32; kv.tile_len()];
+            let mut vt = vec![0.0f32; kv.tile_len()];
+            attend(&cfg, &kv, &table, 0, &q, ctx, &mut out, &mut kt, &mut vt);
+            let hd = cfg.d_head();
+            for head in 0..cfg.n_heads {
+                let qh = &q[head * hd..(head + 1) * hd];
+                let koff = (head / cfg.gqa_ratio()) * hd;
+                let scores: Vec<f32> = (0..ctx)
+                    .map(|p| {
+                        let kh = &krows[p][koff..koff + hd];
+                        qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>()
+                            / (hd as f32).sqrt()
+                    })
+                    .collect();
+                let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let exps: Vec<f32> = scores.iter().map(|s| (s - m).exp()).collect();
+                let denom: f32 = exps.iter().sum();
+                for c in 0..hd {
+                    let want: f32 = (0..ctx)
+                        .map(|p| exps[p] / denom * vrows[p][koff + c])
+                        .sum();
+                    let got = out[head * hd + c];
+                    assert!(
+                        (want - got).abs() < 1e-4,
+                        "{}: head {head} lane {c}: got {got}, reference {want}",
+                        cfg.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gqa_attention_equals_mha_with_duplicated_kv_heads() {
+        // The GQA reduction pin: Q head `h` reading shared KV head
+        // `h / gqa_ratio` must equal plain MHA over a cache whose rows
+        // duplicate that shared head to full width — value-identical
+        // inputs per head, identical FP sequence, so bitwise equal.
+        let mha = crate::models::TINY_MHA;
+        let gqa = CpuModelConfig { n_kv_heads: 1, ..mha };
+        let bs = 4;
+        let table = [0, 1];
+        let ctx = 7;
+        let mut kv_g = PagedKvCache::with_dtype(2, bs, 1, gqa.kv_dim(), KvDtype::F32);
+        let mut kv_m = PagedKvCache::with_dtype(2, bs, 1, mha.kv_dim(), KvDtype::F32);
+        let mut rng = Rng::new(42);
+        for p in 0..ctx {
+            let k1 = rng.normal_vec_f32(gqa.kv_dim(), 1.0);
+            let v1 = rng.normal_vec_f32(gqa.kv_dim(), 1.0);
+            kv_g.write(&table, p, 0, &k1, &v1);
+            let k4: Vec<f32> = k1.iter().cycle().take(mha.kv_dim()).cloned().collect();
+            let v4: Vec<f32> = v1.iter().cycle().take(mha.kv_dim()).cloned().collect();
+            kv_m.write(&table, p, 0, &k4, &v4);
+        }
+        let q = rng.normal_vec_f32(mha.d_model, 1.0);
+        let mut out_g = vec![0.0f32; mha.d_model];
+        let mut out_m = vec![0.0f32; mha.d_model];
+        let mut kt_g = vec![0.0f32; kv_g.tile_len()];
+        let mut vt_g = vec![0.0f32; kv_g.tile_len()];
+        let mut kt_m = vec![0.0f32; kv_m.tile_len()];
+        let mut vt_m = vec![0.0f32; kv_m.tile_len()];
+        attend(&gqa, &kv_g, &table, 0, &q, ctx, &mut out_g, &mut kt_g, &mut vt_g);
+        attend(&mha, &kv_m, &table, 0, &q, ctx, &mut out_m, &mut kt_m, &mut vt_m);
+        assert_eq!(out_g, out_m, "GQA must equal MHA over duplicated KV heads, bit for bit");
+    }
+
+    #[test]
+    fn rope_rotation_is_position_zero_identity_and_norm_preserving() {
+        let before: Vec<f32> = (0..16).map(|i| (i as f32) * 0.25 - 2.0).collect();
+        let mut at0 = before.clone();
+        rope_rotate_head(&mut at0, 0);
+        assert_eq!(at0, before, "position 0 must be the identity rotation");
+        let mut at5 = before.clone();
+        rope_rotate_head(&mut at5, 5);
+        assert_ne!(at5, before, "a nonzero position must actually rotate");
+        let n_before: f32 = before.iter().map(|x| x * x).sum();
+        let n_after: f32 = at5.iter().map(|x| x * x).sum();
+        assert!(
+            (n_before - n_after).abs() < 1e-3 * n_before.max(1.0),
+            "rotation must preserve the norm: {n_before} vs {n_after}"
+        );
+        // Row form: each head chunk rotates independently — a row of
+        // two identical chunks stays two identical chunks.
+        let mut row: Vec<f32> = before.iter().chain(before.iter()).cloned().collect();
+        rope_rotate_row(&mut row, 16, 5);
+        assert_eq!(&row[..16], &row[16..], "head chunks must rotate independently");
+        assert_eq!(&row[..16], &at5[..], "row form must match the head form");
+    }
+
+    #[test]
+    fn tiny_gqa_serves_finite_discriminating_logits_at_every_dtype() {
+        // End-to-end at the GQA + RoPE registry entry: pool rows are
+        // kv_dim (= 16) wide — a quarter of the MHA pool — and the walk
+        // must stay numerically healthy at every cache dtype.
+        let prompt: Vec<u32> = (0..24).map(|i| ((i * 13 + 5) % 256) as u32).collect();
+        for dtype in KvDtype::ALL {
+            let mut be = CpuBackend::new(crate::models::TINY_GQA).unwrap();
+            be.bind_kv(16, DEFAULT_BLOCK_SIZE, dtype);
+            assert_eq!(
+                be.kv().bytes(),
+                16 * dtype.block_bytes(DEFAULT_BLOCK_SIZE, be.cfg.n_layers, be.cfg.kv_dim()),
+                "{dtype}: pool must be sized by kv_dim, not d_model"
+            );
+            let (l, _) = be.prefill(prefill_desc(&prompt, &[0, 1])).unwrap();
+            assert!(l.iter().all(|v| v.is_finite()), "{dtype}: non-finite logits at tiny-gqa");
+            let lo = l.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = l.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert!(hi - lo > 0.05, "{dtype}: tiny-gqa logit range {} too flat", hi - lo);
+        }
+    }
+
+    #[test]
+    fn batch_parallel_attention_is_bit_identical_to_serial() {
+        // The scoped-thread row split must not change any row's
+        // arithmetic: a forced 4-way split reproduces the forced-serial
+        // walk bit for bit, at an MHA and a GQA + RoPE geometry, for
+        // both a batched prefill and a batched decode.
+        for cfg in [crate::models::TINY_MHA, crate::models::TINY_GQA] {
+            let mut serial = CpuBackend::new(cfg).unwrap();
+            let mut parallel = CpuBackend::new(cfg).unwrap();
+            serial.set_att_workers(Some(1));
+            parallel.set_att_workers(Some(4));
+            let prompts: Vec<Vec<u32>> = (0..3)
+                .map(|s| (0..20).map(|i| ((i * 7 + s * 31 + 3) % 256) as u32).collect())
+                .collect();
+            let tables: [&[BlockId]; 3] = [&[0, 1], &[2, 3], &[4, 5]];
+            let prefills: Vec<PrefillDesc<'_>> = prompts
+                .iter()
+                .zip(&tables)
+                .enumerate()
+                .map(|(s, (p, t))| PrefillDesc {
+                    seq_id: s,
+                    tokens: p,
+                    start: 0,
+                    is_last: true,
+                    block_table: *t,
+                })
+                .collect();
+            let out_s = serial.step(&prefills, &[]).unwrap();
+            let out_p = parallel.step(&prefills, &[]).unwrap();
+            assert_eq!(
+                out_s.prefill_logits, out_p.prefill_logits,
+                "{}: parallel prefill walk diverged from serial",
+                cfg.name
+            );
+            let decodes: Vec<DecodeDesc<'_>> = (0..3)
+                .map(|s| DecodeDesc {
+                    seq_id: s,
+                    context_len: 20,
+                    token: (s * 17 + 1) as u32,
+                    block_table: tables[s],
+                })
+                .collect();
+            let (ds, _) = serial.decode(&decodes).unwrap();
+            let (dp, _) = parallel.decode(&decodes).unwrap();
+            assert_eq!(ds, dp, "{}: parallel decode walk diverged from serial", cfg.name);
+        }
+    }
+
+    #[test]
+    fn attention_worker_heuristic_guards_tiny_batches() {
+        assert_eq!(attention_workers(1, usize::MAX), 1, "single row stays serial");
+        assert_eq!(attention_workers(8, 10), 1, "sub-floor work stays serial");
+        let w = attention_workers(4, ATT_MIN_WORK);
+        assert!((1..=4).contains(&w), "workers must be capped by the row count, got {w}");
     }
 }

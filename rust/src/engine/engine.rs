@@ -499,9 +499,7 @@ impl<B: Backend> Engine<B> {
     /// Rehydrate this (freshly constructed) engine from a snapshot.
     fn apply_snapshot(&mut self, snap: EngineSnapshot) -> std::result::Result<(), String> {
         let fp = ConfigFingerprint::of(&self.cfg);
-        if snap.config != fp {
-            return Err(format!("config mismatch: snapshot {:?} vs engine {:?}", snap.config, fp));
-        }
+        snap.config.check(&fp).map_err(|e| e.to_string())?;
         self.clock = snap.clock;
         self.consecutive_step_failures = snap.consecutive_step_failures;
         self.fault_stalls = snap.fault_stalls;
@@ -1040,6 +1038,7 @@ mod tests {
             let be = SimBackend::new(m, OptConfig::BASELINE, 4);
             let mut e = Engine::new(
                 EngineConfig {
+                    model: Default::default(),
                     max_batch: 4,
                     block_size: 4,
                     total_blocks: 40,
@@ -1407,6 +1406,27 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("config mismatch"), "{err}");
+        // Restoring under a *different model* must be refused with a
+        // message that names both registry entries, so the operator can
+        // see which `--model` the snapshot wants.
+        let other = if cfg.model == crate::models::TINY_GQA {
+            crate::models::TINY_MHA
+        } else {
+            crate::models::TINY_GQA
+        };
+        let bad_model = EngineConfig { model: other, ..cfg };
+        let err = Engine::<SimBackend>::restore(
+            bad_model,
+            SimBackend::new(m, OptConfig::BASELINE, 4),
+            &dir,
+        )
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("config mismatch"), "{msg}");
+        assert!(
+            msg.contains(cfg.model.name) && msg.contains(other.name),
+            "mismatch message must name both models: {msg}"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

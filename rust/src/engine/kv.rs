@@ -418,7 +418,9 @@ impl KvSpill {
 pub struct PagedKvCache {
     block_size: usize,
     n_layers: usize,
-    /// Values per (position, layer) row — `d_model` for MHA backends.
+    /// Values per (position, layer) row — the model's `kv_dim =
+    /// n_kv_heads · d_head` (equal to `d_model` only for MHA; GQA
+    /// backends shrink every row by the Q/KV group ratio).
     d: usize,
     n_blocks: usize,
     dtype: KvDtype,

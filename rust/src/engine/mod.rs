@@ -183,14 +183,35 @@ pub use fault::{fault_plan_default, FaultPlan, FaultSchedule, FaultSeam};
 pub use kv::{KvDtype, KvSpill, PagedKvCache};
 pub use engine::{Engine, EngineReport};
 pub use metrics::{Metrics, Quantiles};
-pub use persist::{ConfigFingerprint, EngineSnapshot};
+pub use persist::{ConfigFingerprint, ConfigMismatch, EngineSnapshot};
 pub use request::{FinishReason, Request, RequestOutcome, RequestOutput, SamplingParams};
 pub use scheduler::{PrefillChunk, ScheduledWork, Scheduler, SchedulerConfig};
 pub use sequence::{SeqState, Sequence};
 
 /// Engine-level configuration (vLLM flag analogues).
+///
+/// The executable model shape comes from the unified
+/// [`crate::models::ModelConfig`] registry ([`EngineConfig::model`],
+/// `serve --model`, `OPT4GPTQ_MODEL`).  The two tiny executable entries
+/// (bytes/token = `2 · n_layers · row_bytes(kv_dim)`):
+///
+/// | name       | layers | heads | kv heads | RoPE | kv_dim | bytes/token f32/f16/kv4 |
+/// |------------|--------|-------|----------|------|--------|-------------------------|
+/// | `tiny-mha` | 2      | 4     | 4        | no   | 64     | 1024 / 512 / 160        |
+/// | `tiny-gqa` | 2      | 4     | 1        | yes  | 16     | 256 / 128 / 64          |
+///
+/// plus six `mini-*` Llama/Qwen-shaped entries (see `models::REGISTRY`).
+/// The GQA pool shrink (4× at f32/f16, 2.5× at kv4 — the kv4 row pays a
+/// fixed 8-byte scale/zero header) multiplies with the KV-dtype shrink:
+/// the co-optimization axis the paper argues for.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineConfig {
+    /// The model configuration the backend executes — carried here so
+    /// engine snapshots fingerprint the *model* as well as the pool
+    /// geometry (a `--restore` under a different model is rejected with
+    /// a typed error naming both configs).  Default:
+    /// [`crate::models::default_model`] (`tiny-mha`, or `OPT4GPTQ_MODEL`).
+    pub model: crate::models::ModelConfig,
     /// Maximum sequences decoded together (the paper uses batch 32).
     pub max_batch: usize,
     /// KV block size in tokens (vLLM default 16).
@@ -323,6 +344,7 @@ pub fn kv_dtype_default() -> KvDtype {
 impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
+            model: crate::models::ModelConfig::default(),
             max_batch: 32,
             block_size: 16,
             total_blocks: 4096,

@@ -9,7 +9,8 @@
 //!
 //! ```text
 //! magic    "O4GSNAP1"                      (8 bytes)
-//! version  u32 LE                          (currently 1)
+//! version  u32 LE                          (currently 2: v2 added the
+//!                                           model config to TAG_CONFIG)
 //! records  [len: u32 LE][crc32: u32 LE][payload: len bytes]*
 //! ```
 //!
@@ -56,7 +57,7 @@ use super::sequence::{SeqState, Sequence};
 use super::EngineConfig;
 
 const MAGIC: &[u8; 8] = b"O4GSNAP1";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 /// Snapshots retained after a successful commit (older ones pruned).
 pub const KEEP_SNAPSHOTS: usize = 4;
 
@@ -94,6 +95,10 @@ pub fn crc32(data: &[u8]) -> u32 {
 /// fingerprint — a restored run typically uses a crash-free plan.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ConfigFingerprint {
+    /// Full model shape (registry name + dims + RoPE + weight seed):
+    /// KV rows are `kv_dim`-wide and logits are seed-derived, so a
+    /// snapshot is only replayable against the exact same model.
+    pub model: crate::models::ModelConfig,
     pub max_batch: usize,
     pub block_size: usize,
     pub total_blocks: usize,
@@ -108,6 +113,7 @@ pub struct ConfigFingerprint {
 impl ConfigFingerprint {
     pub fn of(cfg: &EngineConfig) -> ConfigFingerprint {
         ConfigFingerprint {
+            model: cfg.model,
             max_batch: cfg.max_batch,
             block_size: cfg.block_size,
             total_blocks: cfg.total_blocks,
@@ -119,7 +125,52 @@ impl ConfigFingerprint {
             max_waiting: cfg.max_waiting,
         }
     }
+
+    /// Typed restore gate: a snapshot taken under one config must not
+    /// be rehydrated into an engine running another.  Model mismatches
+    /// are called out by registry name — the common operator error is
+    /// `--restore` with a different `--model`.
+    pub fn check(&self, engine: &ConfigFingerprint) -> Result<(), ConfigMismatch> {
+        if self == engine {
+            Ok(())
+        } else {
+            Err(ConfigMismatch { snapshot: *self, engine: *engine })
+        }
+    }
 }
+
+/// Restore refused: the snapshot's [`ConfigFingerprint`] differs from
+/// the engine's.  Carries both sides so callers (and the CLI) can say
+/// exactly which config the snapshot wants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConfigMismatch {
+    pub snapshot: ConfigFingerprint,
+    pub engine: ConfigFingerprint,
+}
+
+impl std::fmt::Display for ConfigMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.snapshot.model != self.engine.model {
+            write!(
+                f,
+                "config mismatch: snapshot was taken under model `{}` ({:?}) but the engine \
+                 is configured for model `{}` ({:?}); rerun with the snapshot's model",
+                self.snapshot.model.name,
+                self.snapshot.model,
+                self.engine.model.name,
+                self.engine.model,
+            )
+        } else {
+            write!(
+                f,
+                "config mismatch: snapshot {:?} vs engine {:?}",
+                self.snapshot, self.engine
+            )
+        }
+    }
+}
+
+impl std::error::Error for ConfigMismatch {}
 
 /// One sequence plus the sampler RNG stream that continues it.
 #[derive(Debug, Clone, PartialEq)]
@@ -587,6 +638,19 @@ impl EngineSnapshot {
             b.bool(fp.swap_preempt);
             b.str(fp.kv_dtype.name());
             b.us(fp.max_waiting);
+            let m = &fp.model;
+            b.str(m.name);
+            b.us(m.n_layers);
+            b.us(m.d_model);
+            b.us(m.n_heads);
+            b.us(m.n_kv_heads);
+            b.us(m.d_ff);
+            b.us(m.vocab);
+            b.us(m.group_size);
+            b.bool(m.rope);
+            b.us(m.max_seq);
+            b.us(m.max_batch);
+            b.u64(m.seed);
         });
         record(&mut out, TAG_META, |b| {
             b.f64(self.clock);
@@ -777,20 +841,51 @@ impl EngineSnapshot {
             let tag = c.u8()?;
             match tag {
                 TAG_CONFIG => {
+                    let max_batch = c.us()?;
+                    let block_size = c.us()?;
+                    let total_blocks = c.us()?;
+                    let max_seq_len = c.us()?;
+                    let prefill_budget = c.us()?;
+                    let prefix_skip = c.bool()?;
+                    let swap_preempt = c.bool()?;
+                    let kv_dtype = {
+                        let name = c.str()?;
+                        KvDtype::parse(&name).ok_or_else(|| format!("bad KV dtype {name:?}"))?
+                    };
+                    let max_waiting = c.us()?;
+                    // Model shape: the registry name pins the &'static
+                    // label; the dims travel alongside so a snapshot
+                    // under a seed-overridden config round-trips exactly.
+                    let model = {
+                        let name = c.str()?;
+                        let base = crate::models::static_by_name(&name)
+                            .ok_or_else(|| format!("unknown model config {name:?} in snapshot"))?;
+                        crate::models::ModelConfig {
+                            name: base.name,
+                            n_layers: c.us()?,
+                            d_model: c.us()?,
+                            n_heads: c.us()?,
+                            n_kv_heads: c.us()?,
+                            d_ff: c.us()?,
+                            vocab: c.us()?,
+                            group_size: c.us()?,
+                            rope: c.bool()?,
+                            max_seq: c.us()?,
+                            max_batch: c.us()?,
+                            seed: c.u64()?,
+                        }
+                    };
                     config = Some(ConfigFingerprint {
-                        max_batch: c.us()?,
-                        block_size: c.us()?,
-                        total_blocks: c.us()?,
-                        max_seq_len: c.us()?,
-                        prefill_budget: c.us()?,
-                        prefix_skip: c.bool()?,
-                        swap_preempt: c.bool()?,
-                        kv_dtype: {
-                            let name = c.str()?;
-                            KvDtype::parse(&name)
-                                .ok_or_else(|| format!("bad KV dtype {name:?}"))?
-                        },
-                        max_waiting: c.us()?,
+                        model,
+                        max_batch,
+                        block_size,
+                        total_blocks,
+                        max_seq_len,
+                        prefill_budget,
+                        prefix_skip,
+                        swap_preempt,
+                        kv_dtype,
+                        max_waiting,
                     });
                 }
                 TAG_META => meta = Some((c.f64()?, c.u32()?, c.us()?)),
@@ -1090,6 +1185,10 @@ mod tests {
         swapped_seq.state = SeqState::Swapped;
         EngineSnapshot {
             config: ConfigFingerprint {
+                model: crate::models::ModelConfig {
+                    seed: 0x5eed,
+                    ..crate::models::TINY_GQA
+                },
                 max_batch: 4,
                 block_size: 4,
                 total_blocks: 24,

@@ -18,4 +18,4 @@ pub mod accuracy;
 pub mod numerics;
 
 pub use accuracy::{evaluate, AccuracyResult};
-pub use numerics::{gemv_f16_variant, kv_dtype_drift, VariantNumerics};
+pub use numerics::{gemv_f16_variant, kv_dtype_drift, kv_dtype_drift_at, VariantNumerics};

@@ -133,15 +133,27 @@ pub fn gemv_f16_variant(
 ///
 /// Drift is `max_i |a_i - b_i| / max(max_i |a_i|, 1e-6)`, maximised over
 /// the prefill logits and every decode step's logits.
+///
+/// Runs at the process-default model config; [`kv_dtype_drift_at`] pins
+/// the same bounds at an explicit config (the GQA+RoPE leg).
 pub fn kv_dtype_drift(dtype: KvDtype) -> f64 {
+    kv_dtype_drift_at(CpuModelConfig::default(), dtype)
+}
+
+/// [`kv_dtype_drift`] at an explicit model config — GQA shapes share KV
+/// heads across Q heads and RoPE rotates rows before the pool write, so
+/// the compression-drift pins have to hold there too, not just at the
+/// MHA default.
+pub fn kv_dtype_drift_at(cfg: CpuModelConfig, dtype: KvDtype) -> f64 {
     const BLOCK: usize = 16;
-    let backend = || CpuBackend::new(CpuModelConfig::default()).unwrap();
+    let vocab = cfg.vocab as u32;
+    let backend = move || CpuBackend::new(cfg).unwrap();
     let mut base = backend();
     base.bind_kv(8, BLOCK, KvDtype::F32);
     let mut test = backend();
     test.bind_kv(8, BLOCK, dtype);
 
-    let prompt: Vec<u32> = (0..48).map(|i| ((i * 29 + 7) % 256) as u32).collect();
+    let prompt: Vec<u32> = (0..48u32).map(|i| (i * 29 + 7) % vocab).collect();
     let table: Vec<usize> = (0..5).collect(); // 80 positions: 48 + 16 decodes
     let prefill = |be: &mut CpuBackend| {
         be.prefill(PrefillDesc {
@@ -275,6 +287,26 @@ mod tests {
         let kv4 = kv_dtype_drift(KvDtype::Kv4);
         assert!(kv4 >= f16, "4-bit KV ({kv4}) should drift at least as much as f16 ({f16})");
         assert!(kv4 <= 0.35, "kv4 relative logit drift {kv4} exceeds the 0.35 pin");
+    }
+
+    #[test]
+    fn kv_dtype_drift_pins_hold_under_gqa_rope() {
+        // Same pins at the tiny-gqa registry entry (1 KV head shared by
+        // 4 Q heads, RoPE on): sharing rows and pre-rotating K must not
+        // widen the compression drift envelope.  f32 stays *exactly*
+        // zero — GQA indexing and RoPE are pool-dtype-independent.
+        let gqa = crate::models::TINY_GQA;
+        assert_eq!(
+            kv_dtype_drift_at(gqa, KvDtype::F32),
+            0.0,
+            "f32 pool must be bit-identical under GQA+RoPE"
+        );
+        let f16 = kv_dtype_drift_at(gqa, KvDtype::F16);
+        assert!(f16 > 0.0, "f16 KV should measurably round under GQA");
+        assert!(f16 <= 1e-2, "GQA f16 relative logit drift {f16} exceeds the 1e-2 pin");
+        let kv4 = kv_dtype_drift_at(gqa, KvDtype::Kv4);
+        assert!(kv4 >= f16, "GQA 4-bit KV ({kv4}) should drift at least as much as f16 ({f16})");
+        assert!(kv4 <= 0.35, "GQA kv4 relative logit drift {kv4} exceeds the 0.35 pin");
     }
 
     #[test]

@@ -67,6 +67,15 @@
 //!   via `split_at_mut`); `gemm` workers fill thread-local `[M, slab]`
 //!   tiles merged after the join.
 //!
+//! The public surface is **two entry points** — [`gemv_fused_opt`] /
+//! [`gemm_fused_opt`], one per rank, taking a [`FusedInput`] (`Raw`
+//! storage-layout tensor or `Prepared` prepack) and [`FusedOpts`]
+//! kernel/thread overrides (`None` = the process-wide defaults) — plus
+//! the two hot serve-path names [`gemv_fused_prepared`] /
+//! [`gemm_fused_prepared`] kept as `#[inline]` wrappers.  The former
+//! 10-way `{gemv,gemm}_fused{,_threads,_with,_prepared,_prepared_threads}`
+//! combinatorial surface is gone.
+//!
 //! Parity with the oracle across shapes, groups, batch sizes, act-order
 //! and **every dispatchable kernel** is pinned by `rust/tests/parity.rs`;
 //! speed is measured by `rust/benches/fused_gemm.rs` (≥10× over the
@@ -231,7 +240,9 @@ pub fn fused_threads(mb: usize, k: usize, n: usize) -> usize {
 /// `available_parallelism` is a syscall, and it used to run once per
 /// projection per token on the decode path.  `OPT4GPTQ_THREADS` (≥ 1)
 /// overrides detection for benchmarking; invalid values fall back.
-fn hw_threads() -> usize {
+/// `pub(crate)` so the engine's batch-parallel attention walk shares
+/// the same resolution (one worker-pool width per process).
+pub(crate) fn hw_threads() -> usize {
     static HW: OnceLock<usize> = OnceLock::new();
     *HW.get_or_init(|| {
         std::env::var("OPT4GPTQ_THREADS")
@@ -242,35 +253,85 @@ fn hw_threads() -> usize {
     })
 }
 
-/// `y[N] = x[K] · deq(Q)[K, N]` — fused single-row (decode) GEMV through
-/// the dispatched kernel, auto-parallel over columns when warranted.
-pub fn gemv_fused(x: &[f32], q: &QuantizedTensor) -> Vec<f32> {
-    gemv_fused_with(x, q, simd::active_kernel(), fused_threads(1, q.k, q.n))
+/// Per-call options for the collapsed fused entry points
+/// ([`gemv_fused_opt`] / [`gemm_fused_opt`]): each `None` axis means
+/// "the process-wide default" — the dispatched kernel and the
+/// [`fused_threads`] auto split.  Results are bit-identical across
+/// thread counts by construction, and kernel-equivalent only to oracle
+/// tolerance.
+#[derive(Clone, Copy, Default)]
+pub struct FusedOpts {
+    /// Kernel override (parity tests, benches, the CI forced-kernel
+    /// matrix).  Panics if the host cannot run it, or if the input is a
+    /// [`FusedInput::Prepared`] tensor prepacked for a different
+    /// kernel.
+    pub kernel: Option<Kernel>,
+    /// Worker count for the column split (`Some(1)` = serial).
+    pub threads: Option<usize>,
 }
 
-/// [`gemv_fused`] with an explicit worker count (`1` = serial; the
-/// result is bit-identical across counts).
-pub fn gemv_fused_threads(x: &[f32], q: &QuantizedTensor, threads: usize) -> Vec<f32> {
-    gemv_fused_with(x, q, simd::active_kernel(), threads)
+/// The weight operand of a collapsed fused call.
+#[derive(Clone, Copy)]
+pub enum FusedInput<'a> {
+    /// A storage-layout [`QuantizedTensor`], streamed as-is (no aligned
+    /// prepack — the oracle-interchange format).
+    Raw(&'a QuantizedTensor),
+    /// A [`PreparedTensor`] in the single layout the dispatched kernel
+    /// wants — the serve path.
+    Prepared(&'a PreparedTensor),
 }
 
-/// [`gemv_fused`] with the kernel *and* worker count forced — the entry
-/// point the parity tests and benches use to pin every dispatch path.
-/// Panics if `kernel` is not available on this host.
-pub fn gemv_fused_with(x: &[f32], q: &QuantizedTensor, kernel: Kernel, threads: usize) -> Vec<f32> {
-    assert!(simd::supports(kernel), "kernel '{kernel}' is not available on this host");
-    gemv_run(x, &KernelCall { q, swz: None, kernel }, threads)
+impl<'a> FusedInput<'a> {
+    /// Resolve the operand + `opts` into one kernel invocation.
+    fn resolve(&self, opts: FusedOpts) -> KernelCall<'a> {
+        match *self {
+            FusedInput::Raw(q) => {
+                let kernel = opts.kernel.unwrap_or_else(simd::active_kernel);
+                assert!(
+                    simd::supports(kernel),
+                    "kernel '{kernel}' is not available on this host"
+                );
+                KernelCall { q, swz: None, kernel }
+            }
+            FusedInput::Prepared(p) => {
+                if let Some(kernel) = opts.kernel {
+                    assert_eq!(
+                        kernel,
+                        simd::active_kernel(),
+                        "a PreparedTensor is prepacked for the dispatched kernel; \
+                         force other kernels through FusedInput::Raw"
+                    );
+                }
+                p.call()
+            }
+        }
+    }
+
+    /// `(K, N)` of the packed operand.
+    fn dims(&self) -> (usize, usize) {
+        match *self {
+            FusedInput::Raw(q) => (q.k, q.n),
+            FusedInput::Prepared(p) => (p.q.k, p.q.n),
+        }
+    }
 }
 
-/// [`gemv_fused`] over a [`PreparedTensor`]: the swizzled prepack (when
-/// built) feeds the SIMD kernel aligned streaming loads.
+/// `y[N] = x[K] · deq(Q)[K, N]` — fused single-row (decode) GEMV.  The
+/// one GEMV entry point: operand layout via [`FusedInput`], kernel and
+/// worker count via [`FusedOpts`] (default = dispatched kernel, auto
+/// column split).
+pub fn gemv_fused_opt(x: &[f32], input: FusedInput<'_>, opts: FusedOpts) -> Vec<f32> {
+    let call = input.resolve(opts);
+    let (k, n) = input.dims();
+    let threads = opts.threads.unwrap_or_else(|| fused_threads(1, k, n));
+    gemv_run(x, &call, threads)
+}
+
+/// Hot legacy name: [`gemv_fused_opt`] over a [`PreparedTensor`] with
+/// default options — the serve-path decode projection.
+#[inline]
 pub fn gemv_fused_prepared(x: &[f32], p: &PreparedTensor) -> Vec<f32> {
-    gemv_run(x, &p.call(), fused_threads(1, p.q.k, p.q.n))
-}
-
-/// [`gemv_fused_prepared`] with an explicit worker count (benching).
-pub fn gemv_fused_prepared_threads(x: &[f32], p: &PreparedTensor, threads: usize) -> Vec<f32> {
-    gemv_run(x, &p.call(), threads)
+    gemv_fused_opt(x, FusedInput::Prepared(p), FusedOpts::default())
 }
 
 fn gemv_run(x: &[f32], call: &KernelCall<'_>, threads: usize) -> Vec<f32> {
@@ -291,28 +352,20 @@ fn gemv_run(x: &[f32], call: &KernelCall<'_>, threads: usize) -> Vec<f32> {
     y
 }
 
-/// `Y[M, N] = X[M, K] · deq(Q)` — fused batched (prefill) GEMM through
-/// the dispatched kernel, auto-parallel over columns when warranted.
-pub fn gemm_fused(x: &Matrix, q: &QuantizedTensor) -> Matrix {
-    gemm_fused_with(x, q, simd::active_kernel(), fused_threads(x.rows, q.k, q.n))
+/// `Y[M, N] = X[M, K] · deq(Q)` — fused batched (prefill) GEMM; the one
+/// GEMM entry point (see [`gemv_fused_opt`]).
+pub fn gemm_fused_opt(x: &Matrix, input: FusedInput<'_>, opts: FusedOpts) -> Matrix {
+    let call = input.resolve(opts);
+    let (k, n) = input.dims();
+    let threads = opts.threads.unwrap_or_else(|| fused_threads(x.rows, k, n));
+    gemm_run(x, &call, threads)
 }
 
-/// [`gemm_fused`] with an explicit worker count (`1` = serial; the
-/// result is bit-identical across counts).
-pub fn gemm_fused_threads(x: &Matrix, q: &QuantizedTensor, threads: usize) -> Matrix {
-    gemm_fused_with(x, q, simd::active_kernel(), threads)
-}
-
-/// [`gemm_fused`] with the kernel *and* worker count forced (see
-/// [`gemv_fused_with`]).  Panics if `kernel` is unavailable here.
-pub fn gemm_fused_with(x: &Matrix, q: &QuantizedTensor, kernel: Kernel, threads: usize) -> Matrix {
-    assert!(simd::supports(kernel), "kernel '{kernel}' is not available on this host");
-    gemm_run(x, &KernelCall { q, swz: None, kernel }, threads)
-}
-
-/// [`gemm_fused`] over a [`PreparedTensor`] (see [`gemv_fused_prepared`]).
+/// Hot legacy name: [`gemm_fused_opt`] over a [`PreparedTensor`] with
+/// default options — every `CpuBackend` projection runs through here.
+#[inline]
 pub fn gemm_fused_prepared(x: &Matrix, p: &PreparedTensor) -> Matrix {
-    gemm_run(x, &p.call(), fused_threads(x.rows, p.q.k, p.q.n))
+    gemm_fused_opt(x, FusedInput::Prepared(p), FusedOpts::default())
 }
 
 fn gemm_run(x: &Matrix, call: &KernelCall<'_>, threads: usize) -> Matrix {
@@ -581,13 +634,38 @@ mod tests {
         a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
     }
 
+    // Compact call forms over the collapsed two-entry-point surface.
+    fn gemv(x: &[f32], q: &QuantizedTensor) -> Vec<f32> {
+        gemv_fused_opt(x, FusedInput::Raw(q), FusedOpts::default())
+    }
+    fn gemv_k(x: &[f32], q: &QuantizedTensor, kernel: Kernel, threads: usize) -> Vec<f32> {
+        gemv_fused_opt(
+            x,
+            FusedInput::Raw(q),
+            FusedOpts { kernel: Some(kernel), threads: Some(threads) },
+        )
+    }
+    fn gemv_t(x: &[f32], q: &QuantizedTensor, threads: usize) -> Vec<f32> {
+        gemv_fused_opt(x, FusedInput::Raw(q), FusedOpts { kernel: None, threads: Some(threads) })
+    }
+    fn gemm(x: &Matrix, q: &QuantizedTensor) -> Matrix {
+        gemm_fused_opt(x, FusedInput::Raw(q), FusedOpts::default())
+    }
+    fn gemm_k(x: &Matrix, q: &QuantizedTensor, kernel: Kernel, threads: usize) -> Matrix {
+        gemm_fused_opt(
+            x,
+            FusedInput::Raw(q),
+            FusedOpts { kernel: Some(kernel), threads: Some(threads) },
+        )
+    }
+
     #[test]
     fn gemv_matches_oracle() {
         for (k, n, g, seed) in [(64, 8, 32, 1), (128, 24, 64, 2), (256, 32, 128, 3)] {
             let q = random_quantized(k, n, g, seed);
             let mut rng = Rng::new(seed + 100);
             let x = rng.normal_vec_f32(k, 1.0);
-            let got = gemv_fused(&x, &q);
+            let got = gemv(&x, &q);
             let want = gemv_f32(&x, &q);
             assert!(
                 max_abs_diff(&got, &want) < 1e-3,
@@ -602,7 +680,7 @@ mod tests {
         let q = random_quantized(128, 16, 32, 7);
         let mut rng = Rng::new(8);
         let x = rng.normal_vec_f32(128, 1.0);
-        let y = gemv_fused(&x, &q);
+        let y = gemv(&x, &q);
         let wq = dequantize(&q);
         for col in 0..q.n {
             let mut expect = 0.0f32;
@@ -620,7 +698,7 @@ mod tests {
         // 1, exactly M_BLOCK, and a ragged tail past two blocks.
         for m in [1, M_BLOCK, 2 * M_BLOCK + 3] {
             let x = Matrix::from_vec(m, 64, rng.normal_vec_f32(m * 64, 1.0));
-            let got = gemm_fused(&x, &q);
+            let got = gemm(&x, &q);
             let want = gemm_f32(&x, &q);
             assert!(
                 max_abs_diff(&got.data, &want.data) < 1e-3,
@@ -641,13 +719,13 @@ mod tests {
         let xm = Matrix::from_vec(11, 256, rng.normal_vec_f32(11 * 256, 1.0));
         let want_m = gemm_f32(&xm, &q);
         for kernel in simd::available_kernels() {
-            let got = gemv_fused_with(&x, &q, kernel, 1);
+            let got = gemv_k(&x, &q, kernel, 1);
             assert!(
                 max_abs_diff(&got, &want) < 1e-3,
                 "kernel {kernel}: gemv diff {}",
                 max_abs_diff(&got, &want)
             );
-            let got_m = gemm_fused_with(&xm, &q, kernel, 1);
+            let got_m = gemm_k(&xm, &q, kernel, 1);
             assert!(
                 max_abs_diff(&got_m.data, &want_m.data) < 1e-3,
                 "kernel {kernel}: gemm diff {}",
@@ -663,17 +741,17 @@ mod tests {
         let q = random_quantized(256, 64, 64, 51);
         let mut rng = Rng::new(52);
         let x = rng.normal_vec_f32(256, 1.0);
-        let plain = gemv_fused(&x, &q);
+        let plain = gemv(&x, &q);
         let p = PreparedTensor::new(q.clone());
         assert_eq!(plain, gemv_fused_prepared(&x, &p), "gemv prepared path diverged");
         let xm = Matrix::from_vec(9, 256, rng.normal_vec_f32(9 * 256, 1.0));
         assert_eq!(
-            gemm_fused(&xm, &q).data,
+            gemm(&xm, &q).data,
             gemm_fused_prepared(&xm, &p).data,
             "gemm prepared path diverged"
         );
         // Prepared + explicit threads too (the bench path).
-        assert_eq!(plain, gemv_fused_prepared_threads(&x, &p, 2));
+        assert_eq!(plain, gemv_fused_opt(&x, FusedInput::Prepared(&p), FusedOpts { kernel: None, threads: Some(2) }));
     }
 
     #[test]
@@ -724,19 +802,19 @@ mod tests {
         let x = rng.normal_vec_f32(256, 1.0);
         let xm = Matrix::from_vec(11, 256, rng.normal_vec_f32(11 * 256, 1.0));
         for kernel in simd::available_kernels() {
-            let serial = gemv_fused_with(&x, &q, kernel, 1);
+            let serial = gemv_k(&x, &q, kernel, 1);
             for threads in [2, 3, 5, 8] {
                 assert_eq!(
                     serial,
-                    gemv_fused_with(&x, &q, kernel, threads),
+                    gemv_k(&x, &q, kernel, threads),
                     "gemv kernel={kernel} threads={threads}"
                 );
             }
-            let serial_m = gemm_fused_with(&xm, &q, kernel, 1);
+            let serial_m = gemm_k(&xm, &q, kernel, 1);
             for threads in [2, 4, 7] {
                 assert_eq!(
                     serial_m.data,
-                    gemm_fused_with(&xm, &q, kernel, threads).data,
+                    gemm_k(&xm, &q, kernel, threads).data,
                     "gemm kernel={kernel} threads={threads}"
                 );
             }
@@ -750,9 +828,9 @@ mod tests {
         rng.shuffle(&mut perm);
         let q = random_quantized(128, 264, 64, 32).with_perm(perm);
         let x = rng.normal_vec_f32(128, 1.0);
-        let serial = gemv_fused_threads(&x, &q, 1);
+        let serial = gemv_t(&x, &q, 1);
         // 264 % 8 == 0: the split engages and must stay aligned.
-        assert_eq!(serial, gemv_fused_threads(&x, &q, 4));
+        assert_eq!(serial, gemv_t(&x, &q, 4));
         assert!(max_abs_diff(&serial, &gemv_f32(&x, &q)) < 1e-3);
     }
 
@@ -763,7 +841,7 @@ mod tests {
         let x = rng.normal_vec_f32(64, 1.0);
         // More workers than nibble-words of output: must clamp, not hang
         // or emit empty slabs.
-        assert_eq!(gemv_fused_threads(&x, &q, 1), gemv_fused_threads(&x, &q, 64));
+        assert_eq!(gemv_t(&x, &q, 1), gemv_t(&x, &q, 64));
     }
 
     #[test]
@@ -808,7 +886,7 @@ mod tests {
         );
         assert!(q.perm.is_some());
         let x = rng.normal_vec_f32(64, 1.0);
-        let got = gemv_fused(&x, &q);
+        let got = gemv(&x, &q);
         let want = gemv_f32(&x, &q);
         assert!(max_abs_diff(&got, &want) < 1e-3);
     }
@@ -820,9 +898,9 @@ mod tests {
         rng.shuffle(&mut perm);
         let q = random_quantized(128, 16, 64, 13).with_perm(perm);
         let x = rng.normal_vec_f32(128, 1.0);
-        assert!(max_abs_diff(&gemv_fused(&x, &q), &gemv_f32(&x, &q)) < 1e-3);
+        assert!(max_abs_diff(&gemv(&x, &q), &gemv_f32(&x, &q)) < 1e-3);
         let xm = Matrix::from_vec(5, 128, rng.normal_vec_f32(5 * 128, 1.0));
-        let got = gemm_fused(&xm, &q);
+        let got = gemm(&xm, &q);
         let want = gemm_f32(&xm, &q);
         assert!(max_abs_diff(&got.data, &want.data) < 1e-3);
     }
@@ -831,7 +909,7 @@ mod tests {
     fn zero_activation_gives_zero_output() {
         let q = random_quantized(64, 8, 64, 6);
         for kernel in simd::available_kernels() {
-            let y = gemv_fused_with(&vec![0.0; 64], &q, kernel, 1);
+            let y = gemv_k(&vec![0.0; 64], &q, kernel, 1);
             assert!(y.iter().all(|&v| v == 0.0), "kernel {kernel}");
         }
     }
@@ -840,7 +918,7 @@ mod tests {
     fn no_rows_is_fine() {
         let q = random_quantized(64, 8, 64, 9);
         let x = Matrix::zeros(0, 64);
-        let out = gemm_fused(&x, &q);
+        let out = gemm(&x, &q);
         assert_eq!(out.rows, 0);
     }
 }

@@ -28,9 +28,8 @@ pub mod quantize;
 pub mod simd;
 
 pub use fused::{
-    fused_threads, gemm_fused, gemm_fused_prepared, gemm_fused_threads, gemm_fused_with,
-    gemv_fused, gemv_fused_prepared, gemv_fused_prepared_threads, gemv_fused_threads,
-    gemv_fused_with, PreparedTensor,
+    fused_threads, gemm_fused_opt, gemm_fused_prepared, gemv_fused_opt, gemv_fused_prepared,
+    FusedInput, FusedOpts, PreparedTensor,
 };
 pub use gemm::{dequantize, gemm_f32, gemv_f32};
 pub use pack::{

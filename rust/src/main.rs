@@ -50,6 +50,9 @@ fn usage() {
     eprintln!(
         "usage: opt4gptq <serve|simulate|kernel|accuracy|quantize> [options]
   serve     --backend cpu|pjrt --requests N --max-tokens N [--temperature T]
+            [--model NAME]  (named config from the model registry, e.g.
+             tiny-mha|tiny-gqa|mini-llama2-7b; GQA entries shrink the
+             KV pool to n_kv_heads·d_head per row and turn on RoPE)
             [--blocks N --block-size N]  (paged-KV pool geometry)
             [--prefill-budget N]  (prefill chunk tokens per mixed step)
             [--arrival-rate R]  (Poisson arrivals, req/s; 0 = all at t=0)
@@ -77,6 +80,7 @@ fn usage() {
              OPT4GPTQ_PREFIX_SKIP=0 forces cached-prefix recompute;
              OPT4GPTQ_SWAP=0 flips the default to discard-and-recompute;
              OPT4GPTQ_KV=f32|f16|kv4 overrides the KV dtype default;
+             OPT4GPTQ_MODEL=NAME overrides the model-config default;
              OPT4GPTQ_FAULTS=SPEC sets the fault-plan default;
              OPT4GPTQ_PERSIST=0 disables checkpoint persistence)
   simulate  --model NAME --requests N [--opt baseline|smb|vml|ila|opt4gptq]
@@ -100,16 +104,37 @@ fn parse_opt(s: &str) -> OptConfig {
 fn cmd_serve(args: &Args) -> opt4gptq::Result<()> {
     match args.get_or("backend", "cpu") {
         "cpu" => {
-            let cfg = CpuModelConfig {
-                seed: args.get_u64("seed", CpuModelConfig::default().seed),
-                ..Default::default()
+            // `--model` beats `OPT4GPTQ_MODEL` beats tiny-mha; unknown
+            // flag values are hard errors (env values only warn — the
+            // flag is deliberate, the env may be inherited).
+            let base: &opt4gptq::models::ModelConfig = match args.get("model") {
+                Some(name) => match opt4gptq::models::registry_by_name(name) {
+                    Some(m) => m,
+                    None => {
+                        eprintln!(
+                            "unknown --model {name:?} (registry: {})",
+                            opt4gptq::models::registry_names().join("|")
+                        );
+                        std::process::exit(2);
+                    }
+                },
+                None => opt4gptq::models::default_model(),
             };
+            let cfg = CpuModelConfig { seed: args.get_u64("seed", base.seed), ..*base };
             println!(
-                "cpu backend: in-crate fused-kernel transformer (vocab={} layers={} d_model={} group={})",
-                cfg.vocab, cfg.n_layers, cfg.d_model, cfg.group_size
+                "cpu backend: model `{}` — in-crate fused-kernel transformer \
+                 (vocab={} layers={} d_model={} heads={}q/{}kv rope={} group={})",
+                cfg.name,
+                cfg.vocab,
+                cfg.n_layers,
+                cfg.d_model,
+                cfg.n_heads,
+                cfg.n_kv_heads,
+                if cfg.rope { "on" } else { "off" },
+                cfg.group_size
             );
             let backend = CpuBackend::new(cfg)?;
-            serve_with(backend, args, false)
+            serve_with(backend, cfg, args, false)
         }
         "pjrt" => cmd_serve_pjrt(args),
         other => {
@@ -132,7 +157,9 @@ fn cmd_serve_pjrt(args: &Args) -> opt4gptq::Result<()> {
     );
     // Dense-lane HLO artifacts execute whole prompts only: no chunk
     // resumption, no cached-prefix skipping (the backend bails on both).
-    serve_with(backend, args, true)
+    // The model fingerprint is the process default — PJRT dims live in
+    // the compiled artifacts, not the registry.
+    serve_with(backend, CpuModelConfig::default(), args, true)
 }
 
 #[cfg(not(feature = "pjrt"))]
@@ -151,7 +178,12 @@ fn cmd_serve_pjrt(_args: &Args) -> opt4gptq::Result<()> {
 /// backends that cannot resume chunks or skip cached prefixes (PJRT's
 /// dense-lane artifacts): the budget is raised past any prompt and
 /// prefix skip is forced off, whatever the flags/env say.
-fn serve_with<B: Backend>(backend: B, args: &Args, whole_prompt_only: bool) -> opt4gptq::Result<()> {
+fn serve_with<B: Backend>(
+    backend: B,
+    model: CpuModelConfig,
+    args: &Args,
+    whole_prompt_only: bool,
+) -> opt4gptq::Result<()> {
     let n = args.get_usize("requests", 8);
     let max_tokens = args.get_usize("max-tokens", 16);
     let temperature = args.get_f64("temperature", 0.0) as f32;
@@ -237,6 +269,7 @@ fn serve_with<B: Backend>(backend: B, args: &Args, whole_prompt_only: bool) -> o
         );
     }
     let engine_cfg = EngineConfig {
+        model,
         max_batch,
         max_seq_len,
         total_blocks,

@@ -1,39 +1,148 @@
-//! Architectures of the six GPTQ models the paper evaluates.
+//! The unified model-config registry: every transformer shape in the
+//! repo — the six paper checkpoints, the executable tiny configs, and
+//! the scaled-down Llama-shaped minis — is one [`ModelConfig`].
 //!
-//! The throughput/latency figures' per-model variation is driven entirely
-//! by the transformer dimensions (which GEMM shapes run, how many times,
-//! per token); we reproduce those dims exactly from the public model
-//! cards.  Weights are *not* needed for the performance study — the
-//! executable tiny model used by the PJRT path is described by the AOT
-//! manifest instead (see [`crate::runtime`]).
+//! Before this module unified them, the repo carried **two** config
+//! types: `engine::cpu_backend::CpuModelConfig` (executable, but MHA
+//! with learned positions only) and `models::ModelSpec` (the paper's
+//! GQA dims, never executed).  [`ModelConfig`] merges them: it carries
+//! the architecture (`n_kv_heads` for grouped-query attention, `rope`
+//! for rotary embeddings) *and* the execution envelope
+//! (`max_seq`/`max_batch`/`seed`), so the same value drives
+//! `engine::CpuBackend` weight synthesis, `engine::backend::SimBackend`
+//! perf modeling, `PagedKvCache` pool sizing (`kv_dim = n_kv_heads ·
+//! d_head` — the GQA pool shrink), and the `serve --model` CLI.
+//!
+//! # Named registry (executable configs)
+//!
+//! Resolved by [`registry_by_name`] / `serve --model <name>` /
+//! `OPT4GPTQ_MODEL` (warn-once fallback to `tiny-mha` on unknown
+//! values, like `OPT4GPTQ_KERNEL`/`OPT4GPTQ_KV`).  Pool bytes/token is
+//! `2 · n_layers · row_bytes(kv_dim)` (both cache sides, all layers):
+//!
+//! | name               | heads | kv heads | RoPE | kv_dim | bytes/token f32 | f16 | kv4 |
+//! |--------------------|-------|----------|------|--------|-----------------|-----|-----|
+//! | `tiny-mha`         | 4     | 4        | no   | 64     | 1024            | 512 | 160 |
+//! | `tiny-gqa`         | 4     | 1        | yes  | 16     | 256             | 128 | 64  |
+//! | `mini-qwen-4b`     | 4     | 4        | yes  | 64     | 1024            | 512 | 160 |
+//! | `mini-qwen-1.8b`   | 4     | 4        | yes  | 64     | 1024            | 512 | 160 |
+//! | `mini-llama-13b`   | 4     | 4        | yes  | 64     | 1024            | 512 | 160 |
+//! | `mini-codellama-7b`| 4     | 4        | yes  | 64     | 1024            | 512 | 160 |
+//! | `mini-llama2-7b`   | 4     | 4        | yes  | 64     | 1024            | 512 | 160 |
+//! | `mini-llama3-8b`   | 4     | 1        | yes  | 16     | 256             | 128 | 64  |
+//!
+//! `tiny-mha` is bit-for-bit the pre-registry `CpuModelConfig::default()`
+//! (MHA, learned positions), so every golden recorded against it stays
+//! valid.  `tiny-gqa` is the same envelope with `n_kv_heads = 1` and
+//! RoPE on — the 4× KV-pool shrink the `kv_cache` bench gates.  The
+//! `mini-*` entries scale each paper checkpoint down to the executable
+//! tiny envelope while preserving its GQA ratio (`mini-llama3-8b` keeps
+//! Llama-3's 4:1 grouping; the rest are 1:1).
+//!
+//! Every named config (registry **and** paper specs) is checked against
+//! the kernel constraints at registry load: `d_model % n_heads == 0`,
+//! `n_heads % n_kv_heads == 0`, the GPTQ group size dividing both GEMM
+//! K-dims (`d_model`, `d_ff`), and an even `d_head` wherever RoPE is on
+//! (rotation works on lane pairs).
+//!
+//! The paper checkpoints ([`PAPER_MODELS`]) drive the perf study via
+//! `SimBackend`; weights are *not* needed there — per-token GEMM shapes
+//! and byte traffic ([`ModelConfig::layer_gemms`]) are what the figures
+//! consume.
+
+use std::sync::OnceLock;
 
 use crate::dcusim::kernels::KernelParams;
+use crate::envcfg::{env_override, EnvOverride};
 
-/// Transformer architecture (decoder-only, Llama/Qwen style).
+/// One transformer shape (decoder-only, Llama/Qwen style) plus its
+/// execution envelope.  See the module docs for the named registry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct ModelSpec {
+pub struct ModelConfig {
     pub name: &'static str,
     pub n_layers: usize,
     pub d_model: usize,
     pub n_heads: usize,
-    /// KV heads (GQA when < n_heads, e.g. Llama-3).
+    /// KV heads (grouped-query attention when < n_heads, e.g. Llama-3).
+    /// Sizes the K/V projections and the paged pool: `kv_dim =
+    /// n_kv_heads · d_head`.
     pub n_kv_heads: usize,
-    pub d_head: usize,
     pub d_ff: usize,
     pub vocab: usize,
-    /// GPTQ group size of the public checkpoints (128 for all six).
+    /// GPTQ group size of the checkpoints (128 for all six paper
+    /// models; 32 for the tiny configs so two groups fit in `d_model`).
     pub group_size: usize,
+    /// Rotary position embeddings, applied at K/V-append time.  Off =
+    /// the pre-registry learned-position model (additive table).
+    pub rope: bool,
+    /// Longest sequence the executable backend admits.
+    pub max_seq: usize,
+    /// Widest batch the executable backend admits.
+    pub max_batch: usize,
+    /// Weight-synthesis RNG seed (`CpuBackend` derives every tensor
+    /// from it; same seed + same dims ⇒ bit-identical weights).
+    pub seed: u64,
 }
 
-impl ModelSpec {
+/// The old name for the executable config, kept as an alias so call
+/// sites read naturally next to `SimBackend`'s perf-model usage.
+pub type ModelSpec = ModelConfig;
+
+impl ModelConfig {
+    /// Per-head width, derived: every named config keeps
+    /// `d_model = n_heads · d_head` exactly.
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Width of one K (or V) row — what the paged pool stores per
+    /// position per layer.  Equals `d_model` for MHA, shrinks by the
+    /// GQA ratio below it.
     pub fn kv_dim(&self) -> usize {
-        self.n_kv_heads * self.d_head
+        self.n_kv_heads * self.d_head()
+    }
+
+    /// Q heads per KV head (1 for MHA).
+    pub fn gqa_ratio(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    /// Kernel-constraint check run over every named config at registry
+    /// load (and by `CpuBackend::new` before synthesizing weights).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_heads == 0 || self.d_model % self.n_heads != 0 {
+            return Err(format!(
+                "d_model {} must be a positive multiple of n_heads {}",
+                self.d_model, self.n_heads
+            ));
+        }
+        if self.n_kv_heads == 0 || self.n_heads % self.n_kv_heads != 0 {
+            return Err(format!(
+                "n_heads {} must be a positive multiple of n_kv_heads {}",
+                self.n_heads, self.n_kv_heads
+            ));
+        }
+        if self.group_size == 0
+            || self.d_model % self.group_size != 0
+            || self.d_ff % self.group_size != 0
+        {
+            return Err(format!(
+                "group size {} must divide both GEMM K-dims (d_model {}, d_ff {})",
+                self.group_size, self.d_model, self.d_ff
+            ));
+        }
+        if self.rope && self.d_head() % 2 != 0 {
+            return Err(format!(
+                "RoPE rotates lane pairs: d_head {} must be even",
+                self.d_head()
+            ));
+        }
+        Ok(())
     }
 
     /// Approximate parameter count (billions), for reporting.
     pub fn params_b(&self) -> f64 {
-        let attn = self.d_model * self.d_model * 2
-            + self.d_model * self.kv_dim() * 2;
+        let attn = self.d_model * self.d_model * 2 + self.d_model * self.kv_dim() * 2;
         let mlp = 3 * self.d_model * self.d_ff;
         let emb = 2 * self.vocab * self.d_model;
         (self.n_layers * (attn + mlp) + emb) as f64 / 1e9
@@ -45,13 +154,13 @@ impl ModelSpec {
         let d = self.d_model;
         let g = self.group_size;
         vec![
-            KernelParams { m, k: d, n: d, group_size: g },            // wq
+            KernelParams { m, k: d, n: d, group_size: g },             // wq
             KernelParams { m, k: d, n: self.kv_dim(), group_size: g }, // wk
             KernelParams { m, k: d, n: self.kv_dim(), group_size: g }, // wv
-            KernelParams { m, k: d, n: d, group_size: g },            // wo
-            KernelParams { m, k: d, n: self.d_ff, group_size: g },    // gate
-            KernelParams { m, k: d, n: self.d_ff, group_size: g },    // up
-            KernelParams { m, k: self.d_ff, n: d, group_size: g },    // down
+            KernelParams { m, k: d, n: d, group_size: g },             // wo
+            KernelParams { m, k: d, n: self.d_ff, group_size: g },     // gate
+            KernelParams { m, k: d, n: self.d_ff, group_size: g },     // up
+            KernelParams { m, k: self.d_ff, n: d, group_size: g },     // down
         ]
     }
 
@@ -61,42 +170,158 @@ impl ModelSpec {
     }
 }
 
+/// The default executable config — bit-for-bit the pre-registry
+/// `CpuModelConfig::default()`, so every golden recorded before the
+/// registry stays valid.
+pub const TINY_MHA: ModelConfig = ModelConfig {
+    name: "tiny-mha",
+    n_layers: 2,
+    d_model: 64,
+    n_heads: 4,
+    n_kv_heads: 4,
+    d_ff: 128,
+    vocab: 256,
+    group_size: 32,
+    rope: false,
+    max_seq: 256,
+    max_batch: 8,
+    seed: 0x0c17_0b0d,
+};
+
+/// `tiny-mha`'s envelope with grouped-query attention (4 Q heads onto
+/// 1 KV head — a 4× pool shrink) and RoPE on.
+pub const TINY_GQA: ModelConfig = ModelConfig {
+    name: "tiny-gqa",
+    n_kv_heads: 1,
+    rope: true,
+    ..TINY_MHA
+};
+
+const fn mini(name: &'static str, n_kv_heads: usize) -> ModelConfig {
+    ModelConfig { name, n_kv_heads, rope: true, ..TINY_MHA }
+}
+
+/// The executable named registry (`serve --model`, `OPT4GPTQ_MODEL`).
+/// Validated against the kernel constraints on first resolution — see
+/// [`registry`].
+pub const REGISTRY: [ModelConfig; 8] = [
+    TINY_MHA,
+    TINY_GQA,
+    // The six paper checkpoints scaled to the tiny executable envelope,
+    // preserving each one's GQA grouping (see PAPER_MODELS below).
+    mini("mini-qwen-4b", 4),
+    mini("mini-qwen-1.8b", 4),
+    mini("mini-llama-13b", 4),
+    mini("mini-codellama-7b", 4),
+    mini("mini-llama2-7b", 4),
+    mini("mini-llama3-8b", 1),
+];
+
+/// The registry, kernel-constraint-checked (registry **and** paper
+/// specs) exactly once per process.
+pub fn registry() -> &'static [ModelConfig] {
+    static CHECKED: OnceLock<()> = OnceLock::new();
+    CHECKED.get_or_init(|| {
+        for m in REGISTRY.iter().chain(PAPER_MODELS.iter()) {
+            if let Err(e) = m.validate() {
+                panic!("model config {:?} violates kernel constraints: {e}", m.name);
+            }
+        }
+    });
+    &REGISTRY
+}
+
+/// Resolve an executable registry name (`tiny-mha`, `tiny-gqa`, ...).
+pub fn registry_by_name(name: &str) -> Option<&'static ModelConfig> {
+    registry().iter().find(|m| m.name == name)
+}
+
+/// Every name [`registry_by_name`] accepts, for error messages.
+pub fn registry_names() -> Vec<&'static str> {
+    registry().iter().map(|m| m.name).collect()
+}
+
+/// Resolve any named config — executable registry first, then the
+/// paper checkpoints (snapshot fingerprints round-trip through this).
+pub fn static_by_name(name: &str) -> Option<&'static ModelConfig> {
+    registry_by_name(name).or_else(|| by_name(name))
+}
+
+static MODEL_ENV: OnceLock<EnvOverride<&'static ModelConfig>> = OnceLock::new();
+
+/// The process-default executable config: `OPT4GPTQ_MODEL` if set to a
+/// registry name, else [`TINY_MHA`].  Unknown values warn once on
+/// stderr and fall back — the same graceful-degradation contract as
+/// `OPT4GPTQ_KERNEL` / `OPT4GPTQ_KV`.
+pub fn default_model() -> &'static ModelConfig {
+    env_override(&MODEL_ENV, "OPT4GPTQ_MODEL", |raw| {
+        registry_by_name(raw).ok_or_else(|| {
+            format!(
+                "OPT4GPTQ_MODEL={raw:?} is not a registered model config (expected {}|auto); \
+                 falling back to tiny-mha",
+                registry_names().join("|")
+            )
+        })
+    })
+    .value()
+    .copied()
+    .unwrap_or(&TINY_MHA)
+}
+
+impl Default for ModelConfig {
+    /// The process default (env-overridable) — every test or bench that
+    /// spreads `..Default::default()` follows `OPT4GPTQ_MODEL`, which
+    /// is what the CI model-shape matrix flips.
+    fn default() -> Self {
+        *default_model()
+    }
+}
+
 /// The six models of the paper's evaluation, in the paper's order
 /// (Figures 2–3 and Tables I–II iterate Qwen-4B, Qwen-1.8B, LLaMa-13B,
-/// CodeLlama-7B, Llama-2-7B, Meta-Llama-3-8B).
+/// CodeLlama-7B, Llama-2-7B, Meta-Llama-3-8B).  All keep `d_head =
+/// d_model / n_heads = 128`; the execution envelope is nominal (these
+/// drive `SimBackend` perf modeling, not weight synthesis).
 pub const PAPER_MODELS: [ModelSpec; 6] = [
     ModelSpec {
         name: "Qwen1.5-4B-Chat-GPTQ-Int4",
         n_layers: 40, d_model: 2560, n_heads: 20, n_kv_heads: 20,
-        d_head: 128, d_ff: 6912, vocab: 151936, group_size: 128,
+        d_ff: 6912, vocab: 151936, group_size: 128,
+        rope: true, max_seq: 4096, max_batch: 64, seed: 0x0c17_0b0d,
     },
     ModelSpec {
         name: "Qwen1.5-1.8B-Chat-GPTQ-Int4",
         n_layers: 24, d_model: 2048, n_heads: 16, n_kv_heads: 16,
-        d_head: 128, d_ff: 5504, vocab: 151936, group_size: 128,
+        d_ff: 5504, vocab: 151936, group_size: 128,
+        rope: true, max_seq: 4096, max_batch: 64, seed: 0x0c17_0b0d,
     },
     ModelSpec {
         name: "LLaMa-13B-GPTQ",
         n_layers: 40, d_model: 5120, n_heads: 40, n_kv_heads: 40,
-        d_head: 128, d_ff: 13824, vocab: 32000, group_size: 128,
+        d_ff: 13824, vocab: 32000, group_size: 128,
+        rope: true, max_seq: 4096, max_batch: 64, seed: 0x0c17_0b0d,
     },
     ModelSpec {
         name: "CodeLlama-7B-GPTQ",
         n_layers: 32, d_model: 4096, n_heads: 32, n_kv_heads: 32,
-        d_head: 128, d_ff: 11008, vocab: 32016, group_size: 128,
+        d_ff: 11008, vocab: 32016, group_size: 128,
+        rope: true, max_seq: 4096, max_batch: 64, seed: 0x0c17_0b0d,
     },
     ModelSpec {
         name: "Llama-2-7B-GPTQ",
         n_layers: 32, d_model: 4096, n_heads: 32, n_kv_heads: 32,
-        d_head: 128, d_ff: 11008, vocab: 32000, group_size: 128,
+        d_ff: 11008, vocab: 32000, group_size: 128,
+        rope: true, max_seq: 4096, max_batch: 64, seed: 0x0c17_0b0d,
     },
     ModelSpec {
         name: "Meta-Llama-3-8B-GPTQ",
         n_layers: 32, d_model: 4096, n_heads: 32, n_kv_heads: 8,
-        d_head: 128, d_ff: 14336, vocab: 128256, group_size: 128,
+        d_ff: 14336, vocab: 128256, group_size: 128,
+        rope: true, max_seq: 4096, max_batch: 64, seed: 0x0c17_0b0d,
     },
 ];
 
+/// Resolve a paper-checkpoint name (perf figures, `simulate`/`accuracy`).
 pub fn by_name(name: &str) -> Option<&'static ModelSpec> {
     PAPER_MODELS.iter().find(|m| m.name == name)
 }
@@ -144,6 +369,7 @@ mod tests {
         let m = by_name("Meta-Llama-3-8B-GPTQ").unwrap();
         assert_eq!(m.n_kv_heads, 8);
         assert_eq!(m.kv_dim(), 1024);
+        assert_eq!(m.gqa_ratio(), 4);
     }
 
     #[test]
@@ -163,5 +389,66 @@ mod tests {
                 assert!(work(m13) > work(m), "{}", m.name);
             }
         }
+    }
+
+    #[test]
+    fn every_named_config_passes_the_load_time_constraint_check() {
+        // `registry()` panics on the first violation; resolving it (and
+        // every name) is the assertion.
+        for m in registry() {
+            assert!(registry_by_name(m.name).is_some(), "{} must resolve", m.name);
+            m.validate().unwrap_or_else(|e| panic!("{}: {e}", m.name));
+        }
+        for m in PAPER_MODELS.iter() {
+            assert!(static_by_name(m.name).is_some(), "{} must resolve", m.name);
+        }
+        assert!(registry_by_name("Llama-2-7B-GPTQ").is_none(), "paper specs are not servable");
+    }
+
+    #[test]
+    fn tiny_mha_is_the_pre_registry_default_shape() {
+        // The golden contract: `tiny-mha` must keep the exact dims +
+        // seed the pre-registry `CpuModelConfig::default()` carried, or
+        // every recorded token/logit golden silently re-bases.
+        let m = TINY_MHA;
+        assert_eq!(
+            (m.vocab, m.d_model, m.n_layers, m.n_heads, m.n_kv_heads, m.d_ff, m.group_size),
+            (256, 64, 2, 4, 4, 128, 32)
+        );
+        assert_eq!((m.max_seq, m.max_batch, m.seed), (256, 8, 0x0c17_0b0d));
+        assert!(!m.rope);
+        assert_eq!(m.kv_dim(), m.d_model, "MHA stores full-width K/V rows");
+    }
+
+    #[test]
+    fn tiny_gqa_shrinks_the_pool_by_the_head_ratio() {
+        let m = TINY_GQA;
+        assert!(m.rope);
+        assert_eq!(m.gqa_ratio(), 4);
+        assert_eq!(m.kv_dim(), 16);
+        assert_eq!(m.d_head(), TINY_MHA.d_head(), "GQA shares KV heads, not narrower ones");
+        // The capacity multiplier the kv_cache bench gates (≥ 1.9× at
+        // equal dtype) in its pure-arithmetic form.
+        for dtype in crate::engine::KvDtype::ALL {
+            let mha = dtype.row_bytes(TINY_MHA.kv_dim());
+            let gqa = dtype.row_bytes(m.kv_dim());
+            assert!(
+                mha as f64 / gqa as f64 >= 1.9,
+                "{dtype}: {mha}B vs {gqa}B per row is under the 1.9x floor"
+            );
+        }
+    }
+
+    #[test]
+    fn invalid_shapes_are_rejected_with_the_violated_constraint() {
+        let bad_heads = ModelConfig { n_heads: 3, ..TINY_MHA };
+        assert!(bad_heads.validate().unwrap_err().contains("n_heads"));
+        let bad_kv = ModelConfig { n_kv_heads: 3, ..TINY_MHA };
+        assert!(bad_kv.validate().unwrap_err().contains("n_kv_heads"));
+        let bad_group = ModelConfig { group_size: 48, ..TINY_MHA };
+        assert!(bad_group.validate().unwrap_err().contains("group size"));
+        // d_head 64/4 = 16 is even; force odd via n_heads 64 → d_head 1.
+        let odd_head = ModelConfig { n_heads: 64, n_kv_heads: 64, rope: true, ..TINY_MHA };
+        assert!(odd_head.validate().unwrap_err().contains("even"));
     }
 }

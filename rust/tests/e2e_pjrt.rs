@@ -102,6 +102,7 @@ fn pjrt_generation_is_deterministic() {
         let tok = ByteTokenizer;
         let mut engine = Engine::new(
             EngineConfig {
+                model: Default::default(),
                 max_batch: backend.max_batch(),
                 max_seq_len: backend.max_seq_len(),
                 block_size: 16,

@@ -31,10 +31,28 @@
 //!   mapping have no rounding to hide behind there.
 
 use opt4gptq::gptq::{
-    available_kernels, gemm_f32, gemm_fused_with, gemv_f32, gemv_fused_with, kernel_registry,
-    pack, supports, Kernel, Matrix, QuantizedTensor,
+    available_kernels, gemm_f32, gemm_fused_opt, gemv_f32, gemv_fused_opt, kernel_registry,
+    pack, supports, FusedInput, FusedOpts, Kernel, Matrix, QuantizedTensor,
 };
 use opt4gptq::rng::Rng;
+
+/// Collapsed-surface shorthand: force `kernel` and `threads` on a raw
+/// tensor (what the old `gemv_fused_with` / `gemm_fused_with` did).
+fn gemv_with(x: &[f32], q: &QuantizedTensor, kernel: Kernel, threads: usize) -> Vec<f32> {
+    gemv_fused_opt(
+        x,
+        FusedInput::Raw(q),
+        FusedOpts { kernel: Some(kernel), threads: Some(threads) },
+    )
+}
+
+fn gemm_with(x: &Matrix, q: &QuantizedTensor, kernel: Kernel, threads: usize) -> Matrix {
+    gemm_fused_opt(
+        x,
+        FusedInput::Raw(q),
+        FusedOpts { kernel: Some(kernel), threads: Some(threads) },
+    )
+}
 
 const KS: [usize; 3] = [64, 128, 4096];
 const NS: [usize; 4] = [8, 32, 40, 256];
@@ -148,7 +166,7 @@ fn fused_gemv_matches_oracle_over_sweep_per_kernel() {
         // One oracle evaluation per shape; every dispatch path must hit it.
         let want = gemv_f32(&x, &q);
         for &kernel in &kernels {
-            let got = gemv_fused_with(&x, &q, kernel, 1);
+            let got = gemv_with(&x, &q, kernel, 1);
             assert_close(
                 &got,
                 &want,
@@ -177,7 +195,7 @@ fn fused_gemm_matches_oracle_over_sweep_per_kernel() {
             let x = Matrix::from_vec(m, k, rng.normal_vec_f32(m * k, std));
             let want = gemm_f32(&x, &q);
             for &kernel in &kernels {
-                let got = gemm_fused_with(&x, &q, kernel, 1);
+                let got = gemm_with(&x, &q, kernel, 1);
                 assert_close(
                     &got.data,
                     &want.data,
@@ -201,9 +219,9 @@ fn fused_gemm_rows_equal_fused_gemv_rows_per_kernel() {
         let q = synth_tensor(128, 32, 64, act_order, &mut rng);
         let x = Matrix::from_vec(11, 128, rng.normal_vec_f32(11 * 128, 0.1));
         for kernel in available_kernels() {
-            let out = gemm_fused_with(&x, &q, kernel, 1);
+            let out = gemm_with(&x, &q, kernel, 1);
             for mi in 0..x.rows {
-                let y = gemv_fused_with(x.row(mi), &q, kernel, 1);
+                let y = gemv_with(x.row(mi), &q, kernel, 1);
                 assert_eq!(out.row(mi), &y[..], "row {mi} act_order={act_order} kernel={kernel}");
             }
         }
@@ -218,20 +236,20 @@ fn scalar_path_is_bit_stable_across_threads() {
     let mut rng = Rng::new(0x5ca1a7);
     let q = synth_tensor(256, 640, 64, false, &mut rng);
     let x = rng.normal_vec_f32(256, 0.1);
-    let serial = gemv_fused_with(&x, &q, Kernel::Scalar, 1);
+    let serial = gemv_with(&x, &q, Kernel::Scalar, 1);
     for threads in [2, 3, 7, 16] {
         assert_eq!(
             serial,
-            gemv_fused_with(&x, &q, Kernel::Scalar, threads),
+            gemv_with(&x, &q, Kernel::Scalar, threads),
             "scalar gemv changed under threads={threads}"
         );
     }
     let xm = Matrix::from_vec(13, 256, rng.normal_vec_f32(13 * 256, 0.1));
-    let serial_m = gemm_fused_with(&xm, &q, Kernel::Scalar, 1);
+    let serial_m = gemm_with(&xm, &q, Kernel::Scalar, 1);
     for threads in [2, 5] {
         assert_eq!(
             serial_m.data,
-            gemm_fused_with(&xm, &q, Kernel::Scalar, threads).data,
+            gemm_with(&xm, &q, Kernel::Scalar, threads).data,
             "scalar gemm changed under threads={threads}"
         );
     }
@@ -285,7 +303,7 @@ fn kernels_agree_bitwise_on_exactly_representable_data() {
         for kernel in available_kernels() {
             for threads in [1, 3] {
                 assert_eq!(
-                    gemv_fused_with(&x, &q, kernel, threads),
+                    gemv_with(&x, &q, kernel, threads),
                     expect,
                     "kernel={kernel} threads={threads} act_order={act_order}"
                 );
@@ -306,6 +324,6 @@ fn sparse_activations_agree_with_oracle_per_kernel() {
     }
     let want = gemv_f32(&x, &q);
     for kernel in available_kernels() {
-        assert_close(&gemv_fused_with(&x, &q, kernel, 1), &want, &format!("sparse {kernel}"));
+        assert_close(&gemv_with(&x, &q, kernel, 1), &want, &format!("sparse {kernel}"));
     }
 }

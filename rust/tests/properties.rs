@@ -320,6 +320,7 @@ fn prop_trace_replay_matches_serial() {
             // Batched replay under block pressure.
             let mut e = Engine::new(
                 EngineConfig {
+                    model: Default::default(),
                     max_batch: *max_batch,
                     block_size: 4,
                     total_blocks: *total_blocks,
@@ -370,6 +371,7 @@ fn prop_trace_replay_matches_serial() {
             for (i, &(plen, gen, priority, _)) in reqs.iter().enumerate() {
                 let mut solo = Engine::new(
                     EngineConfig {
+                        model: Default::default(),
                         max_batch: 1,
                         block_size: 4,
                         total_blocks: 256,

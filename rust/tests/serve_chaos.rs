@@ -33,8 +33,15 @@ const N_REQ: usize = 6;
 const PLEN: usize = 24; // 6 blocks of 4
 const GEN: usize = 32; // grows each sequence to 14 blocks
 
+/// The storm's model shape: the process default (so the CI model-shape
+/// matrix flips this whole file between tiny-mha and tiny-gqa via
+/// `OPT4GPTQ_MODEL`), capped to a 4-wide batch.
+fn model() -> CpuModelConfig {
+    CpuModelConfig { max_batch: 4, ..Default::default() }
+}
+
 fn backend() -> CpuBackend {
-    CpuBackend::new(CpuModelConfig { max_batch: 4, ..Default::default() }).unwrap()
+    CpuBackend::new(model()).unwrap()
 }
 
 fn requests() -> Vec<Request> {
@@ -79,6 +86,7 @@ fn run(cfg: EngineConfig) -> (Vec<(usize, Vec<u32>)>, Engine<CpuBackend>) {
 
 fn storm_cfg(swap_preempt: bool, kv_dtype: KvDtype) -> EngineConfig {
     EngineConfig {
+        model: model(),
         max_batch: 4,
         block_size: 4,
         total_blocks: 24,
@@ -99,6 +107,7 @@ fn storm_cfg(swap_preempt: bool, kv_dtype: KvDtype) -> EngineConfig {
 
 fn roomy_cfg(kv_dtype: KvDtype) -> EngineConfig {
     EngineConfig {
+        model: model(),
         max_batch: 4,
         block_size: 4,
         total_blocks: 512,
@@ -153,13 +162,14 @@ fn swap_storm_is_bit_identical_to_unpreempted_run() {
             swapped, reference,
             "[{kv_dtype}] swap-preempted replay diverged from the unpreempted run"
         );
-        // Swap traffic must be accounted in packed bytes: with 4-token
-        // blocks and the default tiny model (2 layers, d_model 64),
-        // every swapped block moves exactly block_bytes of payload.
+        // Swap traffic must be accounted in packed bytes: every swapped
+        // block moves exactly block_bytes of payload, with rows sized by
+        // the model's kv_dim (narrower under GQA, not d_model).
+        let m = model();
         let spilled = e.metrics.swap_spilled_bytes;
         assert!(spilled > 0, "[{kv_dtype}] spill volume must be accounted");
         assert_eq!(
-            spilled % kv_dtype.block_bytes(4, 2, 64),
+            spilled % kv_dtype.block_bytes(4, m.n_layers, m.kv_dim()),
             0,
             "[{kv_dtype}] spill volume must be whole packed blocks"
         );
@@ -513,6 +523,97 @@ fn restore_rehydrates_computed_prefix_blocks_across_runs() {
 }
 
 #[test]
+fn gqa_swap_storm_and_kill_points_replay_bit_identically() {
+    // The swap storm and the checkpoint kill-point matrix again, pinned
+    // to the tiny-gqa registry entry (1 KV head shared by 4 Q heads,
+    // RoPE on) regardless of OPT4GPTQ_MODEL.  GQA rows are 4x narrower
+    // (kv_dim 16 vs 64) and K is stored pre-rotated, so this leg proves
+    // swap spill, recompute replay and snapshot restore stay
+    // bit-identical when the spilled payload is a shared rotated row —
+    // at every pool dtype.
+    let gqa = CpuModelConfig { max_batch: 4, ..opt4gptq::models::TINY_GQA };
+    let gqa_backend = || CpuBackend::new(gqa).unwrap();
+    let gqa_cfg = |swap: bool, kv_dtype: KvDtype| EngineConfig {
+        model: gqa,
+        ..storm_cfg(swap, kv_dtype)
+    };
+    let gqa_run = |cfg: EngineConfig| -> (Vec<(usize, Vec<u32>)>, Engine<CpuBackend>) {
+        let mut e = Engine::new(cfg, gqa_backend());
+        for r in requests() {
+            e.add_request(r);
+        }
+        let report = e.run().unwrap();
+        assert_eq!(report.outputs.len(), N_REQ, "[gqa] every request must complete");
+        e.scheduler.check_invariants().unwrap();
+        (sorted_tokens(&report), e)
+    };
+    for kv_dtype in KvDtype::ALL {
+        let (reference, ref_e) = gqa_run(EngineConfig { model: gqa, ..roomy_cfg(kv_dtype) });
+        assert_eq!(
+            ref_e.scheduler.preemption_count, 0,
+            "[gqa {kv_dtype}] the reference run must not preempt"
+        );
+        let (swapped, e) = gqa_run(gqa_cfg(true, kv_dtype));
+        assert!(e.scheduler.swap_out_count > 0, "[gqa {kv_dtype}] storm must force swap-outs");
+        let spilled = e.metrics.swap_spilled_bytes;
+        let pb = kv_dtype.block_bytes(4, gqa.n_layers, gqa.kv_dim());
+        assert!(
+            spilled > 0 && spilled % pb == 0,
+            "[gqa {kv_dtype}] spill volume {spilled} not whole kv_dim-sized blocks of {pb}"
+        );
+        assert_eq!(
+            swapped, reference,
+            "[gqa {kv_dtype}] swap-preempted replay diverged from the unpreempted run"
+        );
+        let (recomputed, e2) = gqa_run(gqa_cfg(false, kv_dtype));
+        assert!(e2.scheduler.preemption_count > 0, "[gqa {kv_dtype}] storm must still preempt");
+        assert_eq!(
+            recomputed, reference,
+            "[gqa {kv_dtype}] recompute-preempted replay diverged from the unpreempted run"
+        );
+        e2.audit().unwrap();
+    }
+    // Kill-point crash matrix at kv4 (the densest packed payload), swap
+    // mode, both checkpoint-bracketing seams.
+    let kv_dtype = KvDtype::Kv4;
+    let (reference, _) = gqa_run(gqa_cfg(true, kv_dtype));
+    for (seam, plan) in [
+        ("crash_before", FaultPlan { seed: 11, crash_before: 1.0, ..FaultPlan::NONE }),
+        ("crash_after", FaultPlan { seed: 11, crash_after: 1.0, ..FaultPlan::NONE }),
+    ] {
+        let dir = snap_dir(&format!("gqa-kill-{seam}"));
+        {
+            let mut e = Engine::new(gqa_cfg(true, kv_dtype), gqa_backend());
+            e.enable_checkpoints(&dir, 2);
+            for r in requests() {
+                e.add_request(r);
+            }
+            for _ in 0..7 {
+                assert!(e.step().unwrap(), "[gqa {seam}] storm finished suspiciously early");
+            }
+            assert!(e.metrics.checkpoints_written > 0, "[gqa {seam}] no snapshot committed");
+        }
+        {
+            let cfg = EngineConfig { faults: plan, ..gqa_cfg(true, kv_dtype) };
+            let mut e = Engine::restore(cfg, gqa_backend(), &dir).unwrap();
+            e.enable_checkpoints(&dir, 2);
+            let err = e.run().unwrap_err().to_string();
+            assert!(err.contains("injected crash"), "[gqa {seam}] unexpected error: {err}");
+        }
+        let mut e = Engine::restore(gqa_cfg(true, kv_dtype), gqa_backend(), &dir).unwrap();
+        e.enable_checkpoints(&dir, 2);
+        let report = e.run().unwrap();
+        assert_eq!(
+            sorted_tokens(&report),
+            reference,
+            "[gqa {seam}] restored run diverged from the uninterrupted one"
+        );
+        e.audit().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
 fn storm_spill_volume_shrinks_with_the_dtype() {
     // The same storm (same schedule, same evictions — the scheduler is
     // dtype-blind) must move proportionally fewer spill bytes as the
@@ -521,8 +622,9 @@ fn storm_spill_volume_shrinks_with_the_dtype() {
         .into_iter()
         .map(|kv_dtype| run(storm_cfg(true, kv_dtype)).1.metrics.swap_spilled_bytes)
         .collect();
+    let m = model();
     let per_block: Vec<usize> =
-        KvDtype::ALL.into_iter().map(|d| d.block_bytes(4, 2, 64)).collect();
+        KvDtype::ALL.into_iter().map(|d| d.block_bytes(4, m.n_layers, m.kv_dim())).collect();
     // Exact proportionality can only be asserted if the eviction
     // schedules coincide, which dtype-driven token divergence may break;
     // blocks-moved is schedule-dependent, bytes-per-block is not.  So
